@@ -1,0 +1,13 @@
+//! Ablation benches (DESIGN.md §5): discard-ordering, locality-aware
+//! decomposition, RBF vs NN derivation.
+use marrow::bench::eval::ablations;
+use marrow::bench::harness::Timer;
+
+fn main() {
+    let r = Timer::new(0, 1).time("ablations", || {
+        println!("{}", ablations::discard_ordering().expect("ablation 1"));
+        println!("{}", ablations::locality().expect("ablation 2"));
+        println!("{}", ablations::interpolation().expect("ablation 3"));
+    });
+    println!("[bench] {}", r.row());
+}

@@ -1,0 +1,11 @@
+//! Regenerates Fig 11 (FFT 128 MB under CPU load fluctuations).
+use marrow::bench::eval::fig11;
+use marrow::bench::harness::Timer;
+
+fn main() {
+    let r = Timer::new(0, 1).time("fig11 regeneration", || {
+        let report = fig11::report().expect("fig11");
+        println!("{report}");
+    });
+    println!("[bench] {}", r.row());
+}

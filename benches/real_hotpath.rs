@@ -1,0 +1,101 @@
+//! Real-mode hot-path microbenchmarks (the perf-pass instrument):
+//! PJRT executable-cache behaviour, per-launch overhead across chunk sizes,
+//! and end-to-end request throughput vs a direct single-executable loop.
+//!
+//! Requires `make artifacts`. Results feed EXPERIMENTS.md §Perf.
+
+use marrow::bench::harness::{fmt_time, BenchResult, Timer};
+use marrow::bench::workloads;
+use marrow::data::image::randn_vec;
+use marrow::data::vector::VectorArg;
+use marrow::platform::cpu::FissionLevel;
+use marrow::platform::device::i7_hd7950;
+use marrow::runtime::artifacts::Manifest;
+use marrow::runtime::client::{literal_f32, RtClient};
+use marrow::runtime::exec::RequestArgs;
+use marrow::scheduler::real::RealScheduler;
+use marrow::tuner::profile::FrameworkConfig;
+
+fn main() {
+    let manifest = match Manifest::load_default() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping real_hotpath: {e}");
+            return;
+        }
+    };
+    let client = RtClient::cpu().expect("pjrt client");
+    let mut results: Vec<BenchResult> = Vec::new();
+    let timer = Timer::new(2, 10);
+
+    // 1. Compile cost (cold) vs cache hit (warm) for the saxpy artifact.
+    let info = &manifest.family("saxpy").unwrap()[0];
+    let cold = Timer::new(0, 3).time("compile saxpy_n4096 (uncached)", || {
+        let _ = client.compile_file(&info.file).unwrap();
+    });
+    results.push(cold);
+    let _ = client.executable(info).unwrap();
+    results.push(timer.time("executable cache hit", || {
+        let _ = client.executable(info).unwrap();
+    }));
+
+    // 2. Per-launch overhead across the chunk menu: same 262,144 elements
+    //    as 64 x 4k, 8 x 32k, 1 x 262k launches.
+    let n: usize = 262_144;
+    let x = randn_vec(1, n);
+    let y = randn_vec(2, n);
+    for info in manifest.family("saxpy").unwrap() {
+        let chunk = info.chunk_units as usize;
+        let launches = n / chunk;
+        let exe = client.executable(info).unwrap();
+        results.push(timer.time(
+            &format!("saxpy 262k via {launches} x {chunk}-elem launches"),
+            || {
+                for c in 0..launches {
+                    let xs =
+                        literal_f32(&x[c * chunk..(c + 1) * chunk], &[chunk as u64]).unwrap();
+                    let ys =
+                        literal_f32(&y[c * chunk..(c + 1) * chunk], &[chunk as u64]).unwrap();
+                    let al = literal_f32(&[2.0], &[1]).unwrap();
+                    let _ = client.run(&exe, &[al, xs, ys]).unwrap();
+                }
+            },
+        ));
+    }
+
+    // 3. End-to-end request through the full scheduler stack.
+    let bench = workloads::saxpy(n as u64);
+    let args = RequestArgs {
+        vectors: vec![
+            VectorArg::partitioned_f32("x", x.clone(), 1),
+            VectorArg::partitioned_f32("y", y.clone(), 1),
+        ],
+        scalars: vec![2.0],
+    };
+    let cfg = FrameworkConfig {
+        fission: FissionLevel::L2,
+        overlap: vec![2],
+        wgs: 256,
+        cpu_share: 0.25,
+    };
+    let machine = i7_hd7950(1);
+    results.push(timer.time("saxpy 262k full scheduler request", || {
+        let mut s = RealScheduler::new(machine.clone(), &client, &manifest);
+        let _ = s.run_request(&bench.sct, &args, n as u64, &cfg).unwrap();
+    }));
+
+    println!("\n{}", BenchResult::header());
+    println!("{}", "-".repeat(94));
+    for r in &results {
+        println!("{}", r.row());
+    }
+    println!(
+        "\nthroughput (median, full request): {:.1} Melem/s",
+        n as f64 / results.last().unwrap().median_s / 1e6
+    );
+    println!(
+        "compile-once amortization: cold compile {} vs cache hit {}",
+        fmt_time(results[0].median_s),
+        fmt_time(results[1].median_s)
+    );
+}

@@ -1,0 +1,11 @@
+//! Regenerates Table 2 + Fig 5 + Fig 6 (CPU-only fission study, Section 4.1).
+use marrow::bench::eval::table2;
+use marrow::bench::harness::Timer;
+
+fn main() {
+    let r = Timer::new(0, 1).time("table2 regeneration", || {
+        let report = table2::report().expect("table2");
+        println!("{report}");
+    });
+    println!("[bench] {}", r.row());
+}

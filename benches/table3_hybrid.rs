@@ -1,0 +1,11 @@
+//! Regenerates Table 3 + Fig 7 + Fig 8 (hybrid CPU+GPU study, Section 4.2).
+use marrow::bench::eval::table3;
+use marrow::bench::harness::Timer;
+
+fn main() {
+    let r = Timer::new(0, 1).time("table3 regeneration", || {
+        let report = table3::report().expect("table3");
+        println!("{report}");
+    });
+    println!("[bench] {}", r.row());
+}

@@ -1,0 +1,11 @@
+//! Regenerates Table 4 (maxDev calibration over 500 stable executions).
+use marrow::bench::eval::table4;
+use marrow::bench::harness::Timer;
+
+fn main() {
+    let r = Timer::new(0, 1).time("table4 regeneration", || {
+        let report = table4::report(table4::RUNS).expect("table4");
+        println!("{report}");
+    });
+    println!("[bench] {}", r.row());
+}

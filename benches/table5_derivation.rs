@@ -1,0 +1,12 @@
+//! Regenerates Table 5 + Fig 9 + Fig 10 (profile construction vs KB
+//! derivation over 8 images).
+use marrow::bench::eval::table5;
+use marrow::bench::harness::Timer;
+
+fn main() {
+    let r = Timer::new(0, 1).time("table5 regeneration", || {
+        let report = table5::report().expect("table5");
+        println!("{report}");
+    });
+    println!("[bench] {}", r.row());
+}

@@ -1,0 +1,70 @@
+//! Adaptive load-balancing demo (the Fig 11 scenario, simulated clock):
+//! an FFT workload runs steadily until an external application floods the
+//! CPU with compute threads; the monitor detects the unbalance and the
+//! adaptive binary search shifts work to the GPU.
+//!
+//! Run with: `cargo run --release --example adaptive_load`.
+
+use marrow::balance::LoadBalancer;
+use marrow::bench::workloads;
+use marrow::platform::device::i7_hd7950;
+use marrow::scheduler::SimEnv;
+use marrow::sim::cpuload::LoadProfile;
+use marrow::sim::machine::SimMachine;
+use marrow::tuner::builder::{build_profile, TunerOpts};
+
+fn main() -> marrow::Result<()> {
+    let b = workloads::fft(128);
+
+    // Profile under stable load.
+    let mut env = SimEnv::new(SimMachine::new(i7_hd7950(1), 99));
+    env.copy_bytes = b.copy_bytes;
+    let profile = build_profile(
+        &mut env,
+        &b.sct,
+        &b.workload,
+        b.total_units,
+        &TunerOpts::default(),
+    )?;
+    let mut cfg = profile.config.clone();
+    println!(
+        "profiled distribution: GPU {:.1}% / CPU {:.1}% (fission {}, overlap {:?})",
+        100.0 * cfg.gpu_share(),
+        100.0 * cfg.cpu_share,
+        cfg.fission.label(),
+        cfg.overlap
+    );
+
+    // Re-run with a load spike at run 15: 9 external compute threads.
+    let sim = SimMachine::new(i7_hd7950(1), 100).with_load(LoadProfile::step_at(15, 9));
+    let mut env = SimEnv::new(sim);
+    env.copy_bytes = b.copy_bytes;
+    let mut lb = LoadBalancer::new(0.85, cfg.cpu_share);
+
+    println!("\n run | GPU share | exec time | event");
+    println!("-----+-----------+-----------+-------");
+    for run in 0..60u64 {
+        let ops = lb.balance_ops;
+        let out = lb.step(&mut env, &b.sct, b.total_units, &mut cfg)?;
+        let event = if run == 15 {
+            "<- load spike (9 threads)"
+        } else if lb.balance_ops > ops {
+            "<- balance op"
+        } else {
+            ""
+        };
+        if run % 3 == 0 || !event.is_empty() {
+            println!(
+                " {run:>3} |   {:>5.1}%  | {:>7.2}ms | {event}",
+                100.0 * cfg.gpu_share(),
+                out.total * 1e3
+            );
+        }
+    }
+    println!(
+        "\n{} balance operations, {} unbalanced runs out of 60",
+        lb.balance_ops, lb.unbalanced_runs
+    );
+    println!("adaptive_load OK");
+    Ok(())
+}

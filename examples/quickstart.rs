@@ -1,0 +1,70 @@
+//! Quickstart: build a Saxpy SCT, execute it on the real PJRT runtime under
+//! a hybrid CPU/GPU partition plan, and verify the numerics.
+//!
+//! Run with: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use marrow::bench::workloads;
+use marrow::data::image::randn_vec;
+use marrow::data::vector::VectorArg;
+use marrow::platform::cpu::FissionLevel;
+use marrow::platform::device::i7_hd7950;
+use marrow::runtime::artifacts::Manifest;
+use marrow::runtime::client::RtClient;
+use marrow::runtime::exec::RequestArgs;
+use marrow::scheduler::real::RealScheduler;
+use marrow::tuner::profile::FrameworkConfig;
+
+fn main() -> marrow::Result<()> {
+    let n: usize = 1 << 18; // 262,144 elements
+    let alpha = 2.5f32;
+
+    // 1. Host data.
+    let x = randn_vec(1, n);
+    let y = randn_vec(2, n);
+
+    // 2. The SCT: a Map skeleton over the saxpy kernel (Section 2.1).
+    let bench = workloads::saxpy(n as u64);
+
+    // 3. Runtime: PJRT CPU client + AOT artifact manifest.
+    let manifest = Manifest::load_default()?;
+    let client = RtClient::cpu()?;
+    println!("platform: {}", client.platform());
+
+    // 4. A hybrid framework configuration (fission L2, overlap 2, 25% CPU —
+    //    in production this comes from the tuner/KB; see `marrow profile`).
+    let cfg = FrameworkConfig {
+        fission: FissionLevel::L2,
+        overlap: vec![2],
+        wgs: 256,
+        cpu_share: 0.25,
+    };
+
+    // 5. Execute the request.
+    let mut sched = RealScheduler::new(i7_hd7950(1), &client, &manifest);
+    let args = RequestArgs {
+        vectors: vec![
+            VectorArg::partitioned_f32("x", x.clone(), 1),
+            VectorArg::partitioned_f32("y", y.clone(), 1),
+        ],
+        scalars: vec![alpha as f64],
+    };
+    let out = sched.run_request(&bench.sct, &args, n as u64, &cfg)?;
+
+    // 6. Verify against the host computation.
+    let got = out.outputs[0].as_f32()?;
+    assert_eq!(got.len(), n);
+    let mut max_err = 0.0f32;
+    for i in 0..n {
+        let want = alpha * x[i] + y[i];
+        max_err = max_err.max((got[i] - want).abs());
+    }
+    println!(
+        "saxpy n={n}: total {:.3} ms over {} slots ({} chunk launches), max |err| = {max_err:.2e}",
+        out.exec.total * 1e3,
+        out.exec.slot_times.len(),
+        sched.launches,
+    );
+    assert!(max_err < 1e-4, "numerics mismatch");
+    println!("quickstart OK");
+    Ok(())
+}

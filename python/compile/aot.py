@@ -1,0 +1,263 @@
+"""AOT pipeline: lower every (L2 entry, chunk shape) pair to HLO text.
+
+Emits HLO *text* (NOT `lowered.compiler_ir("hlo")` protos and NOT
+`.serialize()`): jax >= 0.5 emits HloModuleProtos with 64-bit instruction
+ids that the Rust side's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Also emits `artifacts/manifest.json`, the contract between the Python
+compile path and the Rust runtime: for each artifact its input/output
+specs, the chunk size in elementary partitioning units, and the analytic
+flop/byte counts the L3 cost model uses.
+
+Python runs ONLY here (build time); the Rust binary is self-contained once
+`make artifacts` has run.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import nbody
+
+FFT_N = 512
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32 if dtype == "f32" else jnp.int32)
+
+
+def _io(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def flops_filter(rows, w):
+    # hash (2x ~12 ops) + log/sqrt/cos (~30) + solarize (2) + mirror (0 flops)
+    return int(60 * rows * w)
+
+
+def artifact_entries():
+    """Yield (artifact_name, fn, example_args, manifest_entry)."""
+    entries = []
+
+    # --- saxpy: 1-D map, epu = 1 element -----------------------------------
+    for n in (4096, 32768, 262144):
+        name = f"saxpy_n{n}"
+        entries.append(
+            (
+                name,
+                model.saxpy_chunk,
+                (spec((1,)), spec((n,)), spec((n,))),
+                {
+                    "family": "saxpy",
+                    "inputs": [_io("alpha", (1,)), _io("x", (n,)), _io("y", (n,))],
+                    "outputs": [_io("out", (n,))],
+                    "chunk_units": n,  # epu = 1 element
+                    "flops": 2 * n,
+                    "bytes": 12 * n,
+                },
+            )
+        )
+
+    # --- filter pipeline: 2-D rows, epu = 1 image line ---------------------
+    for rows in (8, 64):
+        for w in (256, 512, 1024):
+            name = f"filter_pipeline_r{rows}_w{w}"
+            entries.append(
+                (
+                    name,
+                    model.filter_pipeline_chunk,
+                    (spec((rows, w)), spec((1,), "i32"), spec((1,), "i32"), spec((1,))),
+                    {
+                        "family": "filter_pipeline",
+                        "inputs": [
+                            _io("img", (rows, w)),
+                            _io("seed", (1,), "i32"),
+                            _io("row_off", (1,), "i32"),
+                            _io("thresh", (1,)),
+                        ],
+                        "outputs": [_io("out", (rows, w))],
+                        "chunk_units": rows,  # epu = 1 line
+                        "flops": flops_filter(rows, w),
+                        "bytes": 8 * rows * w,
+                    },
+                )
+            )
+
+    # --- individual filters (locality ablation + unit composition tests) ---
+    rows, w = 8, 512
+    entries.append(
+        (
+            f"gaussian_noise_r{rows}_w{w}",
+            model.gaussian_noise_chunk,
+            (spec((rows, w)), spec((1,), "i32"), spec((1,), "i32")),
+            {
+                "family": "gaussian_noise",
+                "inputs": [
+                    _io("img", (rows, w)),
+                    _io("seed", (1,), "i32"),
+                    _io("row_off", (1,), "i32"),
+                ],
+                "outputs": [_io("out", (rows, w))],
+                "chunk_units": rows,
+                "flops": int(44 * rows * w),
+                "bytes": 8 * rows * w,
+            },
+        )
+    )
+    entries.append(
+        (
+            f"solarize_r{rows}_w{w}",
+            model.solarize_chunk,
+            (spec((rows, w)), spec((1,))),
+            {
+                "family": "solarize",
+                "inputs": [_io("img", (rows, w)), _io("thresh", (1,))],
+                "outputs": [_io("out", (rows, w))],
+                "chunk_units": rows,
+                "flops": 2 * rows * w,
+                "bytes": 8 * rows * w,
+            },
+        )
+    )
+    entries.append(
+        (
+            f"mirror_r{rows}_w{w}",
+            model.mirror_chunk,
+            (spec((rows, w)),),
+            {
+                "family": "mirror",
+                "inputs": [_io("img", (rows, w))],
+                "outputs": [_io("out", (rows, w))],
+                "chunk_units": rows,
+                "flops": 0,
+                "bytes": 8 * rows * w,
+            },
+        )
+    )
+
+    # --- fft roundtrip: epu = 1 whole FFT -----------------------------------
+    n = FFT_N
+    lg = n.bit_length() - 1
+    for batch in (4, 32):
+        name = f"fft_roundtrip_b{batch}_n{n}"
+        entries.append(
+            (
+                name,
+                model.fft_roundtrip_chunk,
+                (spec((batch, n)), spec((batch, n))),
+                {
+                    "family": "fft_roundtrip",
+                    "inputs": [_io("re", (batch, n)), _io("im", (batch, n))],
+                    "outputs": [_io("re", (batch, n)), _io("im", (batch, n))],
+                    "chunk_units": batch,  # epu = 1 FFT
+                    "flops": 2 * batch * 5 * n * lg,  # fwd + inv
+                    "bytes": 16 * batch * n,
+                },
+            )
+        )
+
+    # --- nbody: COPY-mode full set + per-partition chunk --------------------
+    for total, chunk in ((512, 128), (2048, 256)):
+        name = f"nbody_accel_N{total}_c{chunk}"
+
+        def make_fn(c):
+            def fn(pos, offset):
+                return nbody.nbody_accel(pos, offset, c)
+
+            return fn
+
+        entries.append(
+            (
+                name,
+                jax.jit(make_fn(chunk)),
+                (spec((total, 4)), spec((1,), "i32")),
+                {
+                    "family": "nbody_accel",
+                    "inputs": [_io("pos", (total, 4)), _io("offset", (1,), "i32")],
+                    "outputs": [_io("acc", (chunk, 3))],
+                    "chunk_units": chunk,  # epu = 1 body
+                    "flops": 20 * chunk * total,
+                    "bytes": 16 * total + 12 * chunk,
+                },
+            )
+        )
+
+    # --- segmentation: epu = 1 XY plane (depth-major storage) ----------------
+    h, w2 = 32, 32
+    for d in (8, 64):
+        name = f"segmentation_d{d}_h{h}_w{w2}"
+        entries.append(
+            (
+                name,
+                model.segmentation_chunk,
+                (spec((d, h, w2)), spec((2,))),
+                {
+                    "family": "segmentation",
+                    "inputs": [_io("vol", (d, h, w2)), _io("thresholds", (2,))],
+                    "outputs": [_io("out", (d, h, w2))],
+                    "chunk_units": d,  # epu = 1 plane
+                    "flops": 2 * h * w2 * d,
+                    "bytes": 8 * h * w2 * d,
+                },
+            )
+        )
+
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser(description="AOT-lower Marrow kernels to HLO text")
+    ap.add_argument("--out-dir", default=None, help="artifacts directory")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+
+    repo_root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    out_dir = args.out_dir or os.path.join(repo_root, "artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"format": 1, "artifacts": []}
+    for name, fn, example_args, meta in artifact_entries():
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = dict(meta)
+        entry["name"] = name
+        entry["file"] = fname
+        entry["sha256"] = hashlib.sha256(text.encode()).hexdigest()
+        manifest["artifacts"].append(entry)
+        print(f"  lowered {name:34s} -> {fname} ({len(text)} chars)")
+
+    man_path = os.path.join(out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {man_path} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

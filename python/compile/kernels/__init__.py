@@ -1,0 +1,6 @@
+"""L1 Pallas kernels for the Marrow benchmark suite.
+
+Each module exposes the Pallas (interpret=True) implementation of one of the
+paper's five benchmark kernels; `ref.py` holds the pure-jnp oracles the
+pytest suite checks them against.
+"""

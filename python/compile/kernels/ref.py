@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth.
+
+Each `ref_*` mirrors the semantics of the corresponding Pallas kernel using
+only jax.numpy (no pallas), so pytest can assert_allclose(kernel, ref).
+The gaussian-noise oracle reimplements the same counter-based hash so the
+two are bit-comparable (the RNG is part of the kernel's contract).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+_TWO_PI = 6.283185307179586
+
+
+# --- saxpy -----------------------------------------------------------------
+
+def ref_saxpy(alpha, x, y):
+    return alpha[0] * x + y
+
+
+# --- filters ---------------------------------------------------------------
+
+def _hash_u32(x):
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _uniform01(bits):
+    return (bits >> 8).astype(jnp.float32) / jnp.float32(1 << 24) + jnp.float32(
+        1.0 / (1 << 25)
+    )
+
+
+def ref_gaussian_noise(img, seed, row_offset=0, sigma=8.0):
+    h, w = img.shape
+    off = jnp.asarray(row_offset).reshape(-1)[0] if hasattr(row_offset, "shape") else row_offset
+    row_ids = (
+        jax.lax.broadcasted_iota(jnp.uint32, (h, w), 0)
+        + jnp.uint32(off)
+    )
+    col_ids = jax.lax.broadcasted_iota(jnp.uint32, (h, w), 1)
+    pix = row_ids * jnp.uint32(65521) + col_ids
+    s = seed[0].astype(jnp.uint32)
+    u1 = _uniform01(_hash_u32(pix ^ s))
+    u2 = _uniform01(_hash_u32(pix + s * jnp.uint32(2654435761)))
+    noise = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(jnp.float32(_TWO_PI) * u2)
+    return jnp.clip(img + noise * jnp.float32(sigma), 0.0, 255.0)
+
+
+def ref_solarize(img, thresh):
+    return jnp.where(img > thresh[0], 255.0 - img, img)
+
+
+def ref_mirror(img):
+    return img[:, ::-1]
+
+
+def ref_filter_pipeline(img, seed, thresh, row_offset=0, sigma=8.0):
+    return ref_mirror(
+        ref_solarize(ref_gaussian_noise(img, seed, row_offset, sigma), thresh)
+    )
+
+
+# --- fft -------------------------------------------------------------------
+
+def ref_fft(re, im):
+    z = jnp.fft.fft(re.astype(jnp.complex64) + 1j * im.astype(jnp.complex64))
+    return jnp.real(z).astype(jnp.float32), jnp.imag(z).astype(jnp.float32)
+
+
+def ref_ifft(re, im):
+    z = jnp.fft.ifft(re.astype(jnp.complex64) + 1j * im.astype(jnp.complex64))
+    return jnp.real(z).astype(jnp.float32), jnp.imag(z).astype(jnp.float32)
+
+
+# --- nbody -----------------------------------------------------------------
+
+def ref_nbody_accel(pos, offset, chunk, eps=1e-3):
+    start = int(np.asarray(offset)[0])
+    mine = pos[start : start + chunk]
+    d = pos[None, :, :3] - mine[:, None, :3]
+    r2 = jnp.sum(d * d, axis=-1) + jnp.float32(eps * eps)
+    inv_r3 = r2 ** jnp.float32(-1.5)
+    w = pos[None, :, 3] * inv_r3
+    return jnp.sum(d * w[..., None], axis=1)
+
+
+# --- segmentation ----------------------------------------------------------
+
+def ref_segmentation(vol, thresholds):
+    lo, hi = thresholds[0], thresholds[1]
+    return jnp.where(vol < lo, 0.0, jnp.where(vol > hi, 255.0, 128.0))

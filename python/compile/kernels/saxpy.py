@@ -1,0 +1,43 @@
+"""SAXPY Pallas kernel: out = alpha * x + y  (BLAS level-1).
+
+Paper mapping (Section 4, "Saxpy"): embarrassingly parallel Map benchmark,
+one element per thread, no partitioning restrictions (epu = 1).
+
+TPU adaptation: the OpenCL work-group over a 1-D range becomes a Pallas grid
+over VMEM-resident blocks; BLOCK elements per grid step keeps the block well
+under VMEM while remaining vector-unit friendly.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 1-D block: 2048 f32 = 8 KiB per operand block in VMEM — small enough that
+# double buffering of (x, y, out) blocks is trivially resident.
+BLOCK = 2048
+
+
+def _saxpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...] + y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def saxpy(alpha, x, y):
+    """alpha: f32[1]; x, y: f32[n] with n % BLOCK == 0 or n < BLOCK."""
+    n = x.shape[0]
+    block = min(BLOCK, n)
+    grid = (n + block - 1) // block
+    return pl.pallas_call(
+        _saxpy_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # alpha broadcast to all steps
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(alpha, x, y)

@@ -1,0 +1,46 @@
+"""3-D gray-scale segmentation Pallas kernel.
+
+Paper mapping (Section 4, "Segmentation"): transform a 3-D gray-scale image,
+mapping every voxel to white, gray or black. No algorithmic dependencies
+between voxels, but the elementary partitioning unit is one full XY plane so
+partitioning happens along the depth dimension only.
+
+Storage adaptation: the paper partitions "over the last dimension"; we store
+the volume depth-major — f32[d, h, w] — so one epu unit (an XY plane) is a
+contiguous slab and the Rust runtime can slice partitions without gathers.
+
+Voxels are f32 in [0, 255]; thresholds t_low/t_high are partition-invariant
+values in a COPY-mode f32[2] vector: v < t_low -> 0 (black),
+v > t_high -> 255 (white), else 128 (gray).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEPTH_BLOCK = 8  # XY planes per grid step; one plane is the epu
+
+
+def _segmentation_kernel(t_ref, x_ref, o_ref):
+    x = x_ref[...]
+    lo, hi = t_ref[0], t_ref[1]
+    o_ref[...] = jnp.where(x < lo, 0.0, jnp.where(x > hi, 255.0, 128.0))
+
+
+@jax.jit
+def segmentation(vol, thresholds):
+    """vol: f32[d, h, w]; thresholds: f32[2] = (t_low, t_high)."""
+    d, h, w = vol.shape
+    db = min(DEPTH_BLOCK, d)
+    grid = (d + db - 1) // db
+    return pl.pallas_call(
+        _segmentation_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((db, h, w), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((db, h, w), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, h, w), vol.dtype),
+        interpret=True,
+    )(thresholds, vol)

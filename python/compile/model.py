@@ -1,0 +1,89 @@
+"""L2 — JAX compositions of the L1 Pallas kernels (the paper's SCTs).
+
+Each entry point here corresponds to the compute body of one Marrow skeleton
+computational tree, expressed over one *chunk* (the static-shaped unit the
+Rust L3 coordinator launches). aot.py lowers every (entry, chunk shape) pair
+to an HLO-text artifact; the Rust runtime executes a partition as a sequence
+of chunk launches (Section 3.1's SPMD extension with the chunk playing the
+role of the work-group).
+
+The filter pipeline is deliberately composed *inside one jit* so the three
+kernels lower into a single fused HLO module — that is the locality-aware
+domain decomposition of Section 3.1: intermediate images persist in device
+memory between consecutive kernels, with zero host round-trips. aot.py also
+lowers the three filters separately for the `ablation_locality` bench, which
+measures the cost of re-partitioning between kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import fft as fft_k
+from compile.kernels import filters, nbody, saxpy, segmentation
+
+
+# --- Map: SAXPY -------------------------------------------------------------
+
+@jax.jit
+def saxpy_chunk(alpha, x, y):
+    """alpha: f32[1]; x, y: f32[n] -> f32[n]."""
+    return saxpy.saxpy(alpha, x, y)
+
+
+# --- Pipeline: Gaussian Noise -> Solarize -> Mirror -------------------------
+
+@jax.jit
+def filter_pipeline_chunk(img, seed, row_off, thresh):
+    """img: f32[rows, w]; seed, row_off: i32[1]; thresh: f32[1]."""
+    x = filters.gaussian_noise(img, seed, row_off)
+    x = filters.solarize(x, thresh)
+    return filters.mirror(x)
+
+
+@jax.jit
+def gaussian_noise_chunk(img, seed, row_off):
+    return filters.gaussian_noise(img, seed, row_off)
+
+
+@jax.jit
+def solarize_chunk(img, thresh):
+    return filters.solarize(img, thresh)
+
+
+@jax.jit
+def mirror_chunk(img):
+    return filters.mirror(img)
+
+
+# --- Pipeline: FFT -> IFFT ---------------------------------------------------
+
+@jax.jit
+def fft_roundtrip_chunk(re, im):
+    """re, im: f32[batch, n] -> (f32[batch, n], f32[batch, n]).
+
+    The paper pipelines FFT with its inversion; the roundtrip output should
+    reproduce the input (the pytest suite checks both the forward stage and
+    the roundtrip identity).
+    """
+    fr, fi = fft_k.fft(re, im)
+    return fft_k.ifft(fr, fi)
+
+
+@jax.jit
+def fft_forward_chunk(re, im):
+    return fft_k.fft(re, im)
+
+
+# --- Loop body: N-Body -------------------------------------------------------
+
+def nbody_accel_chunk(pos, offset, chunk):
+    """pos: f32[n, 4]; offset: i32[1] -> f32[chunk, 3]. chunk is static."""
+    return nbody.nbody_accel(pos, offset, chunk)
+
+
+# --- Map: Segmentation -------------------------------------------------------
+
+@jax.jit
+def segmentation_chunk(vol, thresholds):
+    """vol: f32[h, w, d]; thresholds: f32[2] -> f32[h, w, d]."""
+    return segmentation.segmentation(vol, thresholds)

@@ -1,0 +1,86 @@
+"""AOT pipeline tests: manifest consistency and HLO-text well-formedness.
+
+These run the actual lowering for a small subset (fast) and, when
+`artifacts/manifest.json` already exists (after `make artifacts`), validate
+the full manifest against the generator's declared entries.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+ARTIFACTS = os.path.join(REPO_ROOT, "artifacts")
+
+
+class TestEntries:
+    def test_entry_names_unique(self):
+        names = [name for name, *_ in aot.artifact_entries()]
+        assert len(names) == len(set(names))
+
+    def test_every_entry_has_cost_model_fields(self):
+        for name, _, _, meta in aot.artifact_entries():
+            assert meta["flops"] >= 0, name
+            assert meta["bytes"] > 0, name
+            assert meta["chunk_units"] > 0, name
+            assert meta["family"], name
+
+    def test_input_specs_match_example_args(self):
+        for name, _, example_args, meta in aot.artifact_entries():
+            assert len(example_args) == len(meta["inputs"]), name
+            for arg, decl in zip(example_args, meta["inputs"]):
+                assert tuple(decl["shape"]) == arg.shape, name
+
+    def test_families_cover_all_five_benchmarks(self):
+        fams = {meta["family"] for _, _, _, meta in aot.artifact_entries()}
+        assert {
+            "saxpy",
+            "filter_pipeline",
+            "fft_roundtrip",
+            "nbody_accel",
+            "segmentation",
+        } <= fams
+
+
+class TestLowering:
+    def test_lower_saxpy_to_hlo_text(self):
+        import jax
+
+        for name, fn, example_args, _ in aot.artifact_entries():
+            if name == "saxpy_n4096":
+                text = aot.to_hlo_text(jax.jit(fn).lower(*example_args))
+                assert "HloModule" in text
+                assert "ROOT" in text
+                return
+        pytest.fail("saxpy_n4096 entry missing")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestManifest:
+    def setup_method(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            self.manifest = json.load(f)
+
+    def test_format_version(self):
+        assert self.manifest["format"] == 1
+
+    def test_all_files_exist_and_hash(self):
+        import hashlib
+
+        for a in self.manifest["artifacts"]:
+            path = os.path.join(ARTIFACTS, a["file"])
+            assert os.path.exists(path), a["name"]
+            with open(path) as f:
+                text = f.read()
+            assert hashlib.sha256(text.encode()).hexdigest() == a["sha256"], a["name"]
+
+    def test_manifest_covers_generator_entries(self):
+        declared = {name for name, *_ in aot.artifact_entries()}
+        built = {a["name"] for a in self.manifest["artifacts"]}
+        assert declared == built

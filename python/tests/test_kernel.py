@@ -1,0 +1,278 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+hypothesis sweeps shapes/values; every kernel is asserted allclose against
+its ref.py oracle. Tolerances: exact elementwise kernels are compared at
+float32 ulp scale; fft/nbody accumulate rounding and get wider (but still
+tight) bounds.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fft, filters, nbody, ref, saxpy, segmentation
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def f32(x):
+    return jnp.asarray(x, jnp.float32)
+
+
+def rand_img(rng, h, w):
+    return f32(rng.uniform(0.0, 255.0, size=(h, w)))
+
+
+# --- saxpy ------------------------------------------------------------------
+
+
+class TestSaxpy:
+    @given(
+        n=st.sampled_from([1, 7, 128, 2048, 4096, 6144]),
+        alpha=st.floats(-10, 10, allow_nan=False, width=32),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, n, alpha, seed):
+        rng = np.random.default_rng(seed)
+        a = f32([alpha])
+        x = f32(rng.normal(size=n))
+        y = f32(rng.normal(size=n))
+        got = saxpy.saxpy(a, x, y)
+        want = ref.ref_saxpy(a, x, y)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-5)
+
+    def test_zero_alpha_is_identity_on_y(self):
+        rng = np.random.default_rng(0)
+        y = f32(rng.normal(size=2048))
+        x = f32(rng.normal(size=2048))
+        np.testing.assert_array_equal(saxpy.saxpy(f32([0.0]), x, y), y)
+
+    def test_block_boundary_sizes(self):
+        rng = np.random.default_rng(1)
+        for n in (saxpy.BLOCK, 2 * saxpy.BLOCK, 3 * saxpy.BLOCK):
+            x = f32(rng.normal(size=n))
+            y = f32(rng.normal(size=n))
+            np.testing.assert_allclose(
+                saxpy.saxpy(f32([1.5]), x, y),
+                ref.ref_saxpy(f32([1.5]), x, y),
+                rtol=1e-5,
+                atol=1e-4,
+            )
+
+
+# --- filters ----------------------------------------------------------------
+
+
+class TestFilters:
+    @given(
+        h=st.sampled_from([8, 16, 24, 64]),
+        w=st.sampled_from([32, 256, 512]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_gaussian_noise_matches_ref(self, h, w, seed):
+        rng = np.random.default_rng(seed)
+        img = rand_img(rng, h, w)
+        s = jnp.asarray([seed % 65536], jnp.int32)
+        got = filters.gaussian_noise(img, s)
+        want = ref.ref_gaussian_noise(img, s)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+    def test_gaussian_noise_deterministic(self):
+        rng = np.random.default_rng(3)
+        img = rand_img(rng, 16, 64)
+        s = jnp.asarray([42], jnp.int32)
+        a = filters.gaussian_noise(img, s)
+        b = filters.gaussian_noise(img, s)
+        np.testing.assert_array_equal(a, b)
+
+    def test_gaussian_noise_seed_sensitivity(self):
+        rng = np.random.default_rng(4)
+        img = rand_img(rng, 16, 64)
+        a = filters.gaussian_noise(img, jnp.asarray([1], jnp.int32))
+        b = filters.gaussian_noise(img, jnp.asarray([2], jnp.int32))
+        assert not np.allclose(a, b)
+
+    def test_gaussian_noise_stays_in_range(self):
+        rng = np.random.default_rng(5)
+        img = rand_img(rng, 32, 128)
+        out = np.asarray(filters.gaussian_noise(img, jnp.asarray([9], jnp.int32)))
+        assert out.min() >= 0.0 and out.max() <= 255.0
+
+    def test_gaussian_noise_row_offset_partition_consistency(self):
+        """Computing rows [8:16) as a standalone chunk with row_offset=8 must
+        equal rows [8:16) of the full-image run — the property that makes the
+        kernel safe under the paper's line-partitioned decomposition."""
+        rng = np.random.default_rng(6)
+        img = rand_img(rng, 16, 64)
+        s = jnp.asarray([11], jnp.int32)
+        whole = np.asarray(filters.gaussian_noise(img, s))
+        part = np.asarray(filters.gaussian_noise(img[8:16], s, jnp.asarray([8], jnp.int32)))
+        np.testing.assert_array_equal(whole[8:16], part)
+
+    @given(
+        h=st.sampled_from([8, 16]),
+        w=st.sampled_from([64, 512]),
+        t=st.floats(0, 255, width=32),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_solarize_matches_ref(self, h, w, t, seed):
+        rng = np.random.default_rng(seed)
+        img = rand_img(rng, h, w)
+        th = f32([t])
+        np.testing.assert_array_equal(
+            filters.solarize(img, th), ref.ref_solarize(img, th)
+        )
+
+    def test_solarize_involution_above_threshold(self):
+        # solarize(solarize(x)) == x when 255-x stays above the threshold
+        img = f32(np.full((8, 64), 200.0))
+        th = f32([100.0])
+        once = filters.solarize(img, th)  # -> 55, below threshold
+        np.testing.assert_array_equal(np.asarray(once), np.full((8, 64), 55.0))
+
+    @given(h=st.sampled_from([8, 16, 32]), w=st.sampled_from([31, 64, 512]))
+    def test_mirror_matches_ref(self, h, w):
+        rng = np.random.default_rng(h * 1000 + w)
+        img = rand_img(rng, h, w)
+        np.testing.assert_array_equal(filters.mirror(img), ref.ref_mirror(img))
+
+    def test_mirror_is_involution(self):
+        rng = np.random.default_rng(7)
+        img = rand_img(rng, 16, 128)
+        np.testing.assert_array_equal(filters.mirror(filters.mirror(img)), img)
+
+
+# --- fft ---------------------------------------------------------------------
+
+
+class TestFFT:
+    @given(
+        batch=st.sampled_from([1, 2, 4, 8]),
+        n=st.sampled_from([8, 64, 256, 512]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_forward_matches_ref(self, batch, n, seed):
+        rng = np.random.default_rng(seed)
+        re = f32(rng.normal(size=(batch, n)))
+        im = f32(rng.normal(size=(batch, n)))
+        fr, fi = fft.fft(re, im)
+        rr, ri = ref.ref_fft(re, im)
+        np.testing.assert_allclose(fr, rr, atol=n * 2e-6 + 1e-4)
+        np.testing.assert_allclose(fi, ri, atol=n * 2e-6 + 1e-4)
+
+    @given(
+        batch=st.sampled_from([1, 4]),
+        n=st.sampled_from([64, 512]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_roundtrip_identity(self, batch, n, seed):
+        rng = np.random.default_rng(seed)
+        re = f32(rng.normal(size=(batch, n)))
+        im = f32(rng.normal(size=(batch, n)))
+        fr, fi = fft.fft(re, im)
+        ir, ii = fft.ifft(fr, fi)
+        np.testing.assert_allclose(ir, re, atol=1e-4)
+        np.testing.assert_allclose(ii, im, atol=1e-4)
+
+    def test_impulse_is_flat_spectrum(self):
+        re = np.zeros((1, 64), np.float32)
+        re[0, 0] = 1.0
+        fr, fi = fft.fft(f32(re), f32(np.zeros((1, 64))))
+        np.testing.assert_allclose(fr, np.ones((1, 64)), atol=1e-5)
+        np.testing.assert_allclose(fi, np.zeros((1, 64)), atol=1e-5)
+
+    def test_linearity(self):
+        rng = np.random.default_rng(8)
+        a = f32(rng.normal(size=(2, 128)))
+        b = f32(rng.normal(size=(2, 128)))
+        z = f32(np.zeros((2, 128)))
+        fa, _ = fft.fft(a, z)
+        fb, _ = fft.fft(b, z)
+        fab, _ = fft.fft(a + b, z)
+        np.testing.assert_allclose(fab, fa + fb, atol=1e-3)
+
+    def test_parseval(self):
+        rng = np.random.default_rng(9)
+        re = f32(rng.normal(size=(1, 512)))
+        im = f32(rng.normal(size=(1, 512)))
+        fr, fi = fft.fft(re, im)
+        t = float(np.sum(np.square(re) + np.square(im)))
+        s = float(np.sum(np.square(np.asarray(fr)) + np.square(np.asarray(fi)))) / 512
+        assert abs(t - s) / t < 1e-4
+
+
+# --- nbody -------------------------------------------------------------------
+
+
+class TestNBody:
+    @given(
+        n=st.sampled_from([128, 256, 512]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_full(self, n, seed):
+        rng = np.random.default_rng(seed)
+        pos = f32(rng.uniform(-1, 1, size=(n, 4)))
+        pos = pos.at[:, 3].set(f32(rng.uniform(0.5, 2.0, size=n)))
+        off = jnp.asarray([0], jnp.int32)
+        got = nbody.nbody_accel(pos, off, n)
+        want = ref.ref_nbody_accel(pos, off, n)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-2)
+
+    def test_partition_chunks_tile_the_full_result(self):
+        """Union of per-chunk results == whole-set result (Section 3.1)."""
+        rng = np.random.default_rng(10)
+        n, c = 512, 128
+        pos = f32(rng.uniform(-1, 1, size=(n, 4))).at[:, 3].set(1.0)
+        whole = np.asarray(nbody.nbody_accel(pos, jnp.asarray([0], jnp.int32), n))
+        for k in range(n // c):
+            part = np.asarray(
+                nbody.nbody_accel(pos, jnp.asarray([k * c], jnp.int32), c)
+            )
+            np.testing.assert_allclose(part, whole[k * c : (k + 1) * c], rtol=1e-5)
+
+    def test_two_body_symmetry(self):
+        pos = f32([[1.0, 0, 0, 1.0], [-1.0, 0, 0, 1.0]])
+        acc = np.asarray(nbody.nbody_accel(pos, jnp.asarray([0], jnp.int32), 2))
+        np.testing.assert_allclose(acc[0], -acc[1], atol=1e-6)
+        assert acc[0][0] < 0  # attracted towards the other body
+
+    def test_far_body_negligible(self):
+        pos = f32([[0, 0, 0, 1.0], [1e3, 0, 0, 1e-6]])
+        acc = np.asarray(nbody.nbody_accel(pos, jnp.asarray([0], jnp.int32), 1))
+        assert np.abs(acc).max() < 1e-9
+
+
+# --- segmentation -------------------------------------------------------------
+
+
+class TestSegmentation:
+    @given(
+        d=st.sampled_from([1, 4, 8, 16, 64]),
+        lo=st.floats(1, 120, width=32),
+        hi=st.floats(130, 254, width=32),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, d, lo, hi, seed):
+        rng = np.random.default_rng(seed)
+        vol = f32(rng.uniform(0, 255, size=(d, 16, 16)))
+        th = f32([lo, hi])
+        np.testing.assert_array_equal(
+            segmentation.segmentation(vol, th), ref.ref_segmentation(vol, th)
+        )
+
+    def test_output_alphabet(self):
+        rng = np.random.default_rng(11)
+        vol = f32(rng.uniform(0, 255, size=(8, 32, 32)))
+        out = np.unique(np.asarray(segmentation.segmentation(vol, f32([85, 170]))))
+        assert set(out.tolist()) <= {0.0, 128.0, 255.0}
+
+    def test_idempotent(self):
+        rng = np.random.default_rng(12)
+        vol = f32(rng.uniform(0, 255, size=(8, 16, 16)))
+        th = f32([85, 170])
+        once = segmentation.segmentation(vol, th)
+        twice = segmentation.segmentation(once, th)
+        np.testing.assert_array_equal(once, twice)

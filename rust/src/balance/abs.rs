@@ -1,0 +1,138 @@
+//! Adaptive Binary Search (Section 3.3.1).
+//!
+//! A modified binary search for the load-balancing process: transfers a
+//! percentage of the workload from the worst to the best performing device
+//! type. Unlike the profiling-time search, the optimum may move (the CPUs'
+//! load fluctuates), so the inspected interval may *shift sideways*; and to
+//! speed up the shifting phase, the transferable partition **doubles** after
+//! more than 2 consecutive shifts in the same direction.
+
+/// Adaptive binary search over the CPU share in [0, 1].
+#[derive(Clone, Debug)]
+pub struct AdaptiveBinarySearch {
+    share: f64,
+    /// Current transferable fraction (the search step is transferable/2).
+    transferable: f64,
+    last_dir: i8,
+    same_dir_count: u32,
+    /// Minimum step (resolution floor).
+    pub min_step: f64,
+    /// Initial transferable fraction after a (re)start.
+    pub initial_transferable: f64,
+}
+
+impl AdaptiveBinarySearch {
+    pub fn new(current_share: f64) -> AdaptiveBinarySearch {
+        AdaptiveBinarySearch {
+            share: current_share.clamp(0.0, 1.0),
+            transferable: 0.25,
+            last_dir: 0,
+            same_dir_count: 0,
+            min_step: 1.0 / 512.0,
+            initial_transferable: 0.25,
+        }
+    }
+
+    /// Keep the search anchored at an externally-maintained share (no-op
+    /// feedback while the system is balanced).
+    pub fn track(&mut self, share: f64) {
+        self.share = share.clamp(0.0, 1.0);
+    }
+
+    /// Propose the next CPU share given the per-device-type completion
+    /// times of the last (unbalanced) execution.
+    pub fn propose(&mut self, cpu_time: f64, gpu_time: f64) -> f64 {
+        // Move work away from the worst performer.
+        let dir: i8 = if cpu_time > gpu_time { -1 } else { 1 };
+        if dir == self.last_dir {
+            self.same_dir_count += 1;
+            if self.same_dir_count > 2 {
+                // Shifting phase: the optimum left the interval — double the
+                // transferable partition to converge towards it faster.
+                self.transferable = (self.transferable * 2.0).min(1.0);
+            }
+        } else {
+            // Direction change: back to standard halving.
+            self.same_dir_count = 1;
+            if self.last_dir != 0 {
+                self.transferable = (self.transferable / 2.0).max(self.min_step);
+            }
+        }
+        self.last_dir = dir;
+        let step = (self.transferable / 2.0).max(self.min_step);
+        self.share = (self.share + dir as f64 * step).clamp(0.0, 1.0);
+        self.share
+    }
+
+    pub fn share(&self) -> f64 {
+        self.share
+    }
+
+    pub fn transferable(&self) -> f64 {
+        self.transferable
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Simulated environment: completion times for a share under device
+    /// rates; optimum at rc/(rc+rg).
+    fn times(share: f64, rc: f64, rg: f64) -> (f64, f64) {
+        (share / rc, (1.0 - share) / rg)
+    }
+
+    #[test]
+    fn converges_when_optimum_in_interval() {
+        let (rc, rg) = (1.0, 3.0);
+        let mut abs = AdaptiveBinarySearch::new(0.4);
+        let mut s = 0.4;
+        for _ in 0..40 {
+            let (ct, gt) = times(s, rc, rg);
+            s = abs.propose(ct, gt);
+        }
+        assert!((s - 0.25).abs() < 0.02, "share {s}");
+    }
+
+    #[test]
+    fn shifting_phase_doubles_transferable() {
+        // Optimum far to the right of the current share: monotone shifts.
+        let mut abs = AdaptiveBinarySearch::new(0.05);
+        let t0 = abs.transferable();
+        for _ in 0..5 {
+            abs.propose(0.01, 1.0); // CPU far faster: push share up
+        }
+        assert!(
+            abs.transferable() > t0,
+            "transferable should grow in shifting phase"
+        );
+    }
+
+    #[test]
+    fn adapts_to_moved_optimum() {
+        // Start balanced at 0.25 for rates (1,3); then CPU loses half its
+        // speed (load spike) -> new optimum 1/7 ~ 0.143.
+        let mut abs = AdaptiveBinarySearch::new(0.25);
+        let mut s = 0.25;
+        for _ in 0..12 {
+            let (ct, gt) = times(s, 1.0, 3.0);
+            s = abs.propose(ct, gt);
+        }
+        for _ in 0..40 {
+            let (ct, gt) = times(s, 0.5, 3.0);
+            s = abs.propose(ct, gt);
+        }
+        assert!((s - 1.0 / 7.0).abs() < 0.04, "share {s}");
+    }
+
+    #[test]
+    fn clamps_to_unit_interval() {
+        let mut abs = AdaptiveBinarySearch::new(0.01);
+        for _ in 0..50 {
+            let s = abs.propose(10.0, 0.1); // CPU always slower
+            assert!((0.0..=1.0).contains(&s));
+        }
+        assert!(abs.share() < 0.01);
+    }
+}

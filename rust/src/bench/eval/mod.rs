@@ -1,0 +1,16 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (Section 4). Each module prints the same rows/series the paper reports;
+//! all run in Simulated mode (the testbed substitution, DESIGN.md §1.1) and
+//! state so in their headers. Absolute numbers differ from the authors'
+//! hardware; the *shape* (who wins, rough factors, crossovers) is the
+//! reproduction target.
+
+pub mod ablations;
+pub mod fig11;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+
+/// Shared seed so every eval is reproducible run-to-run.
+pub const EVAL_SEED: u64 = 0x3A77;

@@ -1,0 +1,172 @@
+//! Table 2 + Fig 5 + Fig 6: CPU-only executions on the 4x Opteron 6272
+//! testbed — best fission configuration vs no fission (Section 4.1).
+
+use crate::bench::harness::Table;
+use crate::bench::workloads::{self, Benchmark};
+use crate::platform::cpu::{CpuPlatform, FissionLevel};
+use crate::platform::device::opteron_6272_quad;
+use crate::scheduler::{ExecEnv, SimEnv};
+use crate::sim::machine::SimMachine;
+use crate::tuner::profile::FrameworkConfig;
+use crate::bench::eval::EVAL_SEED;
+use crate::error::Result;
+
+/// One Table-2 row.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub benchmark: String,
+    pub best_level: FissionLevel,
+    pub subdevices: u32,
+    pub t_best: f64,
+    pub t_nofission: f64,
+}
+
+impl Row {
+    pub fn speedup(&self) -> f64 {
+        self.t_nofission / self.t_best
+    }
+}
+
+/// Time one benchmark at a fission level (mean of `reps` sim executions).
+fn time_at_level(env: &mut SimEnv, b: &Benchmark, level: FissionLevel, reps: u32) -> Result<f64> {
+    env.copy_bytes = b.copy_bytes;
+    let cfg = FrameworkConfig::cpu_only(level);
+    let mut t = 0.0;
+    for _ in 0..reps {
+        t += env.execute(&b.sct, b.total_units, &cfg)?.total;
+    }
+    Ok(t / reps as f64)
+}
+
+/// Fission sweep for one benchmark: time per supported level (Fig 5 data).
+pub fn fission_sweep(b: &Benchmark, seed: u64) -> Result<Vec<(FissionLevel, f64)>> {
+    let mut env = SimEnv::new(SimMachine::new(opteron_6272_quad(), seed));
+    let plat = CpuPlatform::new(env.machine().cpu.clone());
+    let mut out = Vec::new();
+    for level in plat.configurations() {
+        out.push((level, time_at_level(&mut env, b, level, 3)?));
+    }
+    Ok(out)
+}
+
+/// Compute all Table-2 rows.
+pub fn rows() -> Result<Vec<Row>> {
+    let plat = CpuPlatform::new(opteron_6272_quad().cpu);
+    let mut rows = Vec::new();
+    for b in workloads::table2_suite() {
+        let sweep = fission_sweep(&b, EVAL_SEED)?;
+        let (best_level, t_best) = sweep
+            .iter()
+            .filter(|(l, _)| *l != FissionLevel::NoFission)
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .copied()
+            .unwrap();
+        let t_nofission = sweep
+            .iter()
+            .find(|(l, _)| *l == FissionLevel::NoFission)
+            .unwrap()
+            .1;
+        rows.push(Row {
+            benchmark: b.name.clone(),
+            best_level,
+            subdevices: plat.subdevice_count(best_level),
+            t_best,
+            t_nofission,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render Table 2 (+ Fig 6 speedups as the last column).
+pub fn report() -> Result<String> {
+    let mut t = Table::new(
+        "Table 2 — CPU-only executions (4x Opteron 6272, simulated clock)",
+        &[
+            "benchmark",
+            "fission",
+            "subdevices",
+            "time (s)",
+            "no-fission (s)",
+            "fig6 speedup",
+        ],
+    );
+    for r in rows()? {
+        t.row(vec![
+            r.benchmark.clone(),
+            r.best_level.label().to_string(),
+            r.subdevices.to_string(),
+            format!("{:.3}", r.t_best),
+            format!("{:.3}", r.t_nofission),
+            format!("{:.2}x", r.speedup()),
+        ]);
+    }
+    let mut out = t.render();
+
+    // Fig 5: execution times across fission configurations, FFT 256 MB.
+    let fft = workloads::fft(256);
+    let mut f5 = Table::new(
+        "Fig 5 — fission sweep, FFT 256 MB",
+        &["fission level", "subdevices", "time (s)"],
+    );
+    let plat = CpuPlatform::new(opteron_6272_quad().cpu);
+    for (level, time) in fission_sweep(&fft, EVAL_SEED)? {
+        f5.row(vec![
+            level.label().to_string(),
+            plat.subdevice_count(level).to_string(),
+            format!("{time:.3}"),
+        ]);
+    }
+    out.push_str(&f5.render());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fission_always_helps_on_the_numa_box() {
+        // Fig 6 shape: every benchmark speeds up with the best fission level.
+        for r in rows().unwrap() {
+            assert!(
+                r.speedup() > 1.0,
+                "{}: fission {} not faster ({} vs {})",
+                r.benchmark,
+                r.best_level.label(),
+                r.t_best,
+                r.t_nofission
+            );
+        }
+    }
+
+    #[test]
+    fn speedups_in_paper_regime() {
+        // Paper range: ~1.15x (small filter) to ~4x (FFT/NBody/saxpy).
+        let rs = rows().unwrap();
+        let max_sp = rs.iter().map(Row::speedup).fold(0.0, f64::max);
+        let min_sp = rs.iter().map(Row::speedup).fold(f64::INFINITY, f64::min);
+        assert!(max_sp > 2.0, "max speedup {max_sp} too small");
+        assert!(max_sp < 10.0, "max speedup {max_sp} implausible");
+        assert!(min_sp > 1.0 && min_sp < 2.0, "min speedup {min_sp}");
+    }
+
+    #[test]
+    fn best_level_is_l2_or_l3_mostly() {
+        // Table 2: best levels are L2 (majority) and L3 — affinity domains
+        // with meaningful shared cache, not L1 or NUMA.
+        let rs = rows().unwrap();
+        let good = rs
+            .iter()
+            .filter(|r| {
+                matches!(r.best_level, FissionLevel::L2 | FissionLevel::L3)
+            })
+            .count();
+        assert!(
+            good * 2 > rs.len(),
+            "L2/L3 should dominate: {:?}",
+            rs.iter()
+                .map(|r| (r.benchmark.clone(), r.best_level.label()))
+                .collect::<Vec<_>>()
+        );
+    }
+}

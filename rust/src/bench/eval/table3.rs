@@ -1,0 +1,192 @@
+//! Table 3 + Fig 7 + Fig 8: hybrid CPU+GPU executions on the i7-3930K +
+//! HD 7950 testbed vs GPU-only baselines (Section 4.2).
+
+use crate::bench::eval::EVAL_SEED;
+use crate::bench::harness::Table;
+use crate::bench::workloads::{self, Benchmark};
+use crate::error::Result;
+use crate::platform::cpu::CpuPlatform;
+use crate::platform::device::i7_hd7950;
+use crate::scheduler::{ExecEnv, SimEnv};
+use crate::sim::machine::SimMachine;
+use crate::tuner::builder::{build_profile, TunerOpts};
+use crate::tuner::profile::{FrameworkConfig, Profile};
+
+/// One Table-3 row (for a given GPU count).
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub benchmark: String,
+    pub gpus: usize,
+    /// GPU-only baseline time (s).
+    pub baseline: f64,
+    /// Profiled hybrid configuration and its time.
+    pub profile: Profile,
+    pub parallelism: u32,
+}
+
+impl Row {
+    /// Fig 7 / Fig 8 speedup of CPU+GPU over GPU-only.
+    pub fn speedup(&self) -> f64 {
+        self.baseline / self.profile.best_time
+    }
+}
+
+/// GPU-only baseline: best overlap with zero CPU share.
+fn gpu_baseline(env: &mut SimEnv, b: &Benchmark) -> Result<f64> {
+    env.copy_bytes = b.copy_bytes;
+    let n = env.machine().gpus.len();
+    let mut best = f64::INFINITY;
+    for o in 1..=8u32 {
+        let cfg = FrameworkConfig {
+            fission: crate::platform::cpu::FissionLevel::L3,
+            overlap: vec![o; n],
+            wgs: 256,
+            cpu_share: 0.0,
+        };
+        let mut t = 0.0;
+        for _ in 0..3 {
+            t += env.execute(&b.sct, b.total_units, &cfg)?.total;
+        }
+        best = best.min(t / 3.0);
+    }
+    Ok(best)
+}
+
+/// Compute the rows for one GPU count.
+pub fn rows(n_gpus: usize) -> Result<Vec<Row>> {
+    let machine = i7_hd7950(n_gpus);
+    let cpu_plat = CpuPlatform::new(machine.cpu.clone());
+    let mut out = Vec::new();
+    for b in workloads::table3_suite() {
+        let mut env = SimEnv::new(SimMachine::new(machine.clone(), EVAL_SEED ^ n_gpus as u64));
+        env.copy_bytes = b.copy_bytes;
+        let baseline = gpu_baseline(&mut env, &b)?;
+        let profile = build_profile(
+            &mut env,
+            &b.sct,
+            &b.workload,
+            b.total_units,
+            &TunerOpts::default(),
+        )?;
+        let parallelism = profile.config.parallelism(&cpu_plat);
+        out.push(Row {
+            benchmark: b.name.clone(),
+            gpus: n_gpus,
+            baseline,
+            profile,
+            parallelism,
+        });
+    }
+    Ok(out)
+}
+
+/// Render Table 3 for both GPU counts + Fig 7/8 speedup series.
+pub fn report() -> Result<String> {
+    let mut out = String::new();
+    for n in [1usize, 2] {
+        let mut t = Table::new(
+            &format!("Table 3 — CPU+{n} GPU executions (i7-3930K + HD 7950, simulated clock)"),
+            &[
+                "benchmark",
+                "GPU-only (s)",
+                "hybrid (s)",
+                "fission/overlap",
+                "parallelism",
+                "GPU/CPU split",
+                &format!("fig{} speedup", if n == 1 { 7 } else { 8 }),
+            ],
+        );
+        for r in rows(n)? {
+            let c = &r.profile.config;
+            t.row(vec![
+                r.benchmark.clone(),
+                format!("{:.3}", r.baseline),
+                format!("{:.3}", r.profile.best_time),
+                format!(
+                    "{}/{}",
+                    if c.cpu_share > 0.0 { c.fission.label() } else { "-" },
+                    c.overlap.first().copied().unwrap_or(0)
+                ),
+                r.parallelism.to_string(),
+                format!(
+                    "{:.1}/{:.1}",
+                    100.0 * c.gpu_share(),
+                    100.0 * c.cpu_share
+                ),
+                format!("{:.2}x", r.speedup()),
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows1() -> Vec<Row> {
+        rows(1).unwrap()
+    }
+
+    #[test]
+    fn hybrid_beats_or_matches_gpu_only() {
+        // Fig 7 shape: speedup >= ~1 everywhere; NBody is the exception
+        // allowed to sit at 1.0.
+        for r in rows1() {
+            assert!(
+                r.speedup() > 0.97,
+                "{}: hybrid {} worse than baseline {}",
+                r.benchmark,
+                r.profile.best_time,
+                r.baseline
+            );
+        }
+    }
+
+    #[test]
+    fn communication_bound_benchmarks_gain_most() {
+        // Saxpy/segmentation should show clear gains with 1 GPU.
+        let rs = rows1();
+        let saxpy_gain = rs
+            .iter()
+            .filter(|r| r.benchmark.starts_with("saxpy"))
+            .map(Row::speedup)
+            .fold(0.0, f64::max);
+        assert!(saxpy_gain > 1.15, "saxpy max speedup {saxpy_gain}");
+    }
+
+    #[test]
+    fn nbody_goes_all_gpu() {
+        // Table 3: NBody distribution is 100/0 — global-sync loop makes CPU
+        // participation net-negative.
+        for r in rows1().iter().filter(|r| r.benchmark.starts_with("nbody")) {
+            assert!(
+                r.profile.config.cpu_share < 0.05,
+                "{}: cpu share {}",
+                r.benchmark,
+                r.profile.config.cpu_share
+            );
+        }
+    }
+
+    #[test]
+    fn cpu_share_shrinks_with_more_gpus() {
+        // Paper: "the load assigned to the CPU is inversely proportional to
+        // the number of GPUs" — compare suite-average shares.
+        let avg = |rs: &[Row]| {
+            let xs: Vec<f64> = rs
+                .iter()
+                .filter(|r| !r.benchmark.starts_with("nbody"))
+                .map(|r| r.profile.config.cpu_share)
+                .collect();
+            xs.iter().sum::<f64>() / xs.len() as f64
+        };
+        let a1 = avg(&rows1());
+        let a2 = avg(&rows(2).unwrap());
+        assert!(
+            a2 < a1 + 0.02,
+            "avg cpu share should not grow with GPUs: {a1} -> {a2}"
+        );
+    }
+}

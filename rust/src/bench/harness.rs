@@ -1,0 +1,181 @@
+//! Wall-clock timing harness — the offline stand-in for criterion.
+//!
+//! Warmup + fixed-iteration measurement with median/p95 reporting, and an
+//! aligned-table reporter shared by every `benches/*.rs` target.
+
+use std::time::Instant;
+
+use crate::util::stats::{max, mean, median, min, percentile};
+
+/// One measured benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}",
+            self.name,
+            self.iters,
+            fmt_time(self.median_s),
+            fmt_time(self.mean_s),
+            fmt_time(self.p95_s)
+        )
+    }
+
+    pub fn header() -> String {
+        format!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}",
+            "benchmark", "iters", "median", "mean", "p95"
+        )
+    }
+}
+
+/// Human time formatting (s / ms / µs / ns).
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// The measurement driver.
+pub struct Timer {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Timer {
+            warmup: 2,
+            iters: 10,
+        }
+    }
+}
+
+impl Timer {
+    pub fn new(warmup: usize, iters: usize) -> Timer {
+        Timer { warmup, iters }
+    }
+
+    /// Time a closure; the closure must perform one full operation.
+    pub fn time<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_s: mean(&samples),
+            median_s: median(&samples),
+            p95_s: percentile(&samples, 95.0),
+            min_s: min(&samples),
+            max_s: max(&samples),
+        }
+    }
+}
+
+/// Fixed-width table printer for eval outputs.
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub widths: Vec<usize>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            widths: columns.iter().map(|c| c.len().max(8)).collect(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        for (w, c) in self.widths.iter_mut().zip(&cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n=== {} ===\n", self.title));
+        let hdr: Vec<String> = self
+            .columns
+            .iter()
+            .zip(&self.widths)
+            .map(|(c, w)| format!("{c:<w$}"))
+            .collect();
+        out.push_str(&hdr.join("  "));
+        out.push('\n');
+        out.push_str(&"-".repeat(hdr.join("  ").len()));
+        out.push('\n');
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .zip(&self.widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            out.push_str(&cells.join("  "));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_produces_ordered_stats() {
+        let t = Timer::new(1, 8);
+        let r = t.time("spin", || {
+            std::hint::black_box((0..2000).sum::<u64>());
+        });
+        assert!(r.min_s <= r.median_s);
+        assert!(r.median_s <= r.p95_s + 1e-12);
+        assert!(r.p95_s <= r.max_s + 1e-12);
+        assert_eq!(r.iters, 8);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["xx".into(), "123456789".into()]);
+        let s = t.render();
+        assert!(s.contains("=== T ==="));
+        assert!(s.contains("123456789"));
+    }
+}

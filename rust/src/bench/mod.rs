@@ -1,0 +1,13 @@
+//! Benchmark harness and paper-evaluation regeneration (Section 4).
+//!
+//! [`workloads`] builds the five paper benchmarks as SCTs; [`harness`] is the
+//! offline criterion replacement; [`eval`] regenerates every table and
+//! figure of the paper's evaluation (Table 2-5, Fig 5-11) plus the ablation
+//! studies called out in DESIGN.md §5.
+
+pub mod eval;
+pub mod harness;
+pub mod workloads;
+
+pub use harness::{BenchResult, Timer};
+pub use workloads::Benchmark;

@@ -1,0 +1,264 @@
+//! The five paper benchmarks (Section 4) as Marrow SCTs.
+//!
+//! Cost metadata (flops/bytes per epu unit, passes, COPY sizes) mirrors the
+//! analytic counts the AOT manifest records for the real artifacts, so the
+//! simulator and the real runtime price the same computation consistently.
+
+use crate::data::workload::Workload;
+use crate::platform::occupancy::KernelFootprint;
+use crate::sct::{KernelSpec, ParamSpec, Sct};
+use crate::data::vector::ScalarTrait;
+
+/// A benchmark instance: the SCT, its workload characterization, the domain
+/// size in epu units, and COPY-mode bytes.
+#[derive(Clone, Debug)]
+pub struct Benchmark {
+    pub name: String,
+    pub sct: Sct,
+    pub workload: Workload,
+    pub total_units: u64,
+    pub copy_bytes: f64,
+}
+
+fn fp(regs: u32, local_base: u64) -> KernelFootprint {
+    KernelFootprint {
+        local_mem_base: local_base,
+        local_mem_per_thread: 0,
+        regs_per_thread: regs,
+    }
+}
+
+/// Saxpy (Map): `alpha*x + y` over `n` single-precision elements; epu = 1
+/// element, one element per thread, no partitioning restrictions.
+pub fn saxpy(n: u64) -> Benchmark {
+    let mut k = KernelSpec::new(
+        "saxpy",
+        vec![
+            ParamSpec::ScalarF32(ScalarTrait::Bound),
+            ParamSpec::VecIn,
+            ParamSpec::VecIn,
+        ],
+        1,
+    );
+    k.flops_per_unit = 2.0;
+    k.bytes_per_unit = 12.0;
+    k.passes = 1.0;
+    k.footprint = fp(16, 0);
+    Benchmark {
+        name: format!("saxpy {n}"),
+        sct: Sct::map(Sct::kernel(k)),
+        workload: Workload::d1(n),
+        total_units: n,
+        copy_bytes: 0.0,
+    }
+}
+
+/// Filter Pipeline: Gaussian Noise -> Solarize -> Mirror over an `h x w`
+/// image; epu = 1 image line, 2 pixels per thread (Section 4).
+///
+/// `fused = true` builds the locality-aware single-leaf SCT (one fused HLO
+/// artifact, intermediates persisted); `fused = false` builds the 3-stage
+/// Pipeline of separate kernels (the ablation path: each stage re-traverses
+/// memory).
+pub fn filter_pipeline(h: u64, w: u64, fused: bool) -> Benchmark {
+    let mk = |family: &str, flops_px: f64, passes: f64| {
+        let mut k = KernelSpec::new(
+            family,
+            match family {
+                "gaussian_noise" => vec![
+                    ParamSpec::VecIn,
+                    ParamSpec::ScalarI32(ScalarTrait::Bound), // seed
+                    ParamSpec::ScalarI32(ScalarTrait::Offset), // row_off
+                ],
+                "solarize" => vec![ParamSpec::VecIn, ParamSpec::ScalarF32(ScalarTrait::Bound)],
+                "mirror" => vec![ParamSpec::VecIn],
+                _ => vec![
+                    ParamSpec::VecIn,
+                    ParamSpec::ScalarI32(ScalarTrait::Bound), // seed
+                    ParamSpec::ScalarI32(ScalarTrait::Offset), // row_off
+                    ParamSpec::ScalarF32(ScalarTrait::Bound), // thresh
+                ],
+            },
+            w,
+        );
+        k.flops_per_unit = flops_px * w as f64;
+        k.bytes_per_unit = 8.0 * w as f64;
+        k.passes = passes;
+        k.work_per_thread = 2;
+        k.footprint = fp(32, 0);
+        k
+    };
+    let sct = if fused {
+        Sct::kernel(mk("filter_pipeline", 60.0, 3.0))
+    } else {
+        Sct::pipeline(vec![
+            Sct::kernel(mk("gaussian_noise", 44.0, 1.0)),
+            Sct::kernel(mk("solarize", 2.0, 1.0)),
+            Sct::kernel(mk("mirror", 0.0, 1.0)),
+        ])
+    };
+    Benchmark {
+        name: format!("filter_pipeline {h}x{w}"),
+        sct,
+        workload: Workload::d2(h, w),
+        total_units: h,
+        copy_bytes: 0.0,
+    }
+}
+
+/// FFT (Pipeline): fixed-size FFTs pipelined with their inversion, adapted
+/// from SHOC; epu = one whole FFT (the paper's 512 KiB units map to our
+/// 512-point complex FFTs — DESIGN.md §1.2). `mib` is the data-set size.
+pub fn fft(mib: u64) -> Benchmark {
+    const FFT_BYTES: u64 = 512 * 8; // 512 complex points, f32 re+im
+    let n_ffts = mib * 1024 * 1024 / FFT_BYTES;
+    let stages = 9.0; // log2(512)
+    let mut k = KernelSpec::new(
+        "fft_roundtrip",
+        vec![ParamSpec::VecIn, ParamSpec::VecIn],
+        1024, // 512 re + 512 im elements per unit
+    );
+    k.flops_per_unit = 2.0 * 5.0 * 512.0 * stages; // fwd + inv
+    k.bytes_per_unit = FFT_BYTES as f64 * 2.0;
+    // The butterfly stages run out of local memory (VMEM on the TPU
+    // adaptation); only the forward and inverse kernels traverse DRAM.
+    k.passes = 2.0;
+    k.footprint = fp(64, 4096); // butterfly staging buffer
+    Benchmark {
+        name: format!("fft {mib}MB"),
+        sct: Sct::pipeline(vec![Sct::kernel(k)]),
+        workload: Workload::d1(mib * 1024 * 1024),
+        total_units: n_ffts,
+        copy_bytes: 0.0,
+    }
+}
+
+/// NBody (Loop): direct-sum over `n` bodies for `iters` iterations; the
+/// whole body set is COPY-replicated, distribution is at body level, with a
+/// global synchronization point per iteration (Section 4).
+pub fn nbody(n: u64, iters: u32) -> Benchmark {
+    let mut k = KernelSpec::new(
+        "nbody_accel",
+        vec![
+            ParamSpec::VecCopy,
+            ParamSpec::ScalarI32(ScalarTrait::Offset),
+        ],
+        1,
+    );
+    k.flops_per_unit = 20.0 * n as f64;
+    k.bytes_per_unit = 12.0 + 16.0; // acc out + body row in (amortized)
+    k.passes = 1.0;
+    k.footprint = fp(40, 16 * 1024); // body tile in local memory
+    Benchmark {
+        name: format!("nbody {n}"),
+        sct: Sct::for_loop(Sct::kernel(k), iters, true),
+        workload: Workload::d1(n),
+        total_units: n,
+        copy_bytes: 16.0 * n as f64,
+    }
+}
+
+/// Segmentation (Map): 3-D gray-scale thresholding; epu = one XY plane of
+/// 256x256 voxels, partitioning along the last dimension only (Section 4).
+pub fn segmentation(mib: u64) -> Benchmark {
+    const PLANE: u64 = 256 * 256; // voxels per plane
+    let planes = (mib * 1024 * 1024 / (PLANE * 4)).max(1);
+    let mut k = KernelSpec::new(
+        "segmentation",
+        vec![ParamSpec::VecIn, ParamSpec::VecCopy],
+        PLANE,
+    );
+    k.flops_per_unit = 2.0 * PLANE as f64;
+    k.bytes_per_unit = 8.0 * PLANE as f64;
+    k.passes = 1.0;
+    k.footprint = fp(12, 0);
+    Benchmark {
+        name: format!("segmentation {mib}MB"),
+        sct: Sct::map(Sct::kernel(k)),
+        workload: Workload::d3(256, 256, planes),
+        total_units: planes,
+        copy_bytes: 0.0,
+    }
+}
+
+/// Table 2 / Section 4.1 parameterizations (CPU-only study).
+pub fn table2_suite() -> Vec<Benchmark> {
+    let mut v = Vec::new();
+    for s in [1024u64, 2048, 4096, 8192] {
+        v.push(filter_pipeline(s, s, true));
+    }
+    for mb in [128u64, 256, 512] {
+        v.push(fft(mb));
+    }
+    for n in [8192u64, 16384, 32768, 65536] {
+        v.push(nbody(n, 20));
+    }
+    for n in [1_000_000u64, 10_000_000, 50_000_000] {
+        v.push(saxpy(n));
+    }
+    for mb in [1u64, 8, 60] {
+        v.push(segmentation(mb));
+    }
+    v
+}
+
+/// Table 3 / Section 4.2 parameterizations (hybrid study).
+pub fn table3_suite() -> Vec<Benchmark> {
+    let mut v = Vec::new();
+    for s in [2048u64, 4096, 8192] {
+        v.push(filter_pipeline(s, s, true));
+    }
+    for mb in [128u64, 256, 512] {
+        v.push(fft(mb));
+    }
+    for n in [16384u64, 32768, 65536] {
+        v.push(nbody(n, 20));
+    }
+    for n in [1_000_000u64, 10_000_000, 100_000_000] {
+        v.push(saxpy(n));
+    }
+    for mb in [1u64, 8, 60] {
+        v.push(segmentation(mb));
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suites_cover_all_families() {
+        let names: Vec<String> = table2_suite().iter().map(|b| b.name.clone()).collect();
+        for fam in ["saxpy", "filter_pipeline", "fft", "nbody", "segmentation"] {
+            assert!(
+                names.iter().any(|n| n.starts_with(fam)),
+                "missing {fam} in {names:?}"
+            );
+        }
+        assert_eq!(table2_suite().len(), 17);
+        assert_eq!(table3_suite().len(), 15);
+    }
+
+    #[test]
+    fn fft_units_match_dataset_size() {
+        let b = fft(128);
+        assert_eq!(b.total_units, 128 * 1024 * 1024 / 4096);
+    }
+
+    #[test]
+    fn nbody_is_global_sync_loop() {
+        let b = nbody(16384, 20);
+        assert_eq!(b.sct.sync_points(), 20);
+        assert!(b.copy_bytes > 0.0);
+    }
+
+    #[test]
+    fn fused_and_staged_filters_have_same_units() {
+        let f = filter_pipeline(2048, 2048, true);
+        let s = filter_pipeline(2048, 2048, false);
+        assert_eq!(f.total_units, s.total_units);
+        assert_eq!(s.sct.kernels().len(), 3);
+        assert_eq!(f.sct.kernels().len(), 1);
+    }
+}

@@ -1,0 +1,122 @@
+//! Command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `command [--flag value] [--switch] positional...` with typed
+//! accessors and generated usage text.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: the first non-flag token is the command; `--k v`
+    /// pairs are flags; `--k` followed by another `--` token (or nothing)
+    /// is a switch.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let tokens: Vec<String> = argv.into_iter().collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), tokens[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.switches.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                if out.command.is_none() {
+                    out.command = Some(t.clone());
+                } else {
+                    out.positional.push(t.clone());
+                }
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{name} expects a number, got '{v}'"))),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn command_flags_switches() {
+        let a = parse("run --bench saxpy --n 1000000 extra --verbose");
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.get("bench"), Some("saxpy"));
+        assert_eq!(a.get_u64("n", 0).unwrap(), 1_000_000);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn adjacent_switches() {
+        let a = parse("x --a --b --c v");
+        assert!(a.has("a") && a.has("b"));
+        assert_eq!(a.get("c"), Some("v"));
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("x --n notanumber");
+        assert!(a.get_u64("n", 0).is_err());
+        assert!(a.get_f64("n", 0.0).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_u64("n", 42).unwrap(), 42);
+        assert_eq!(a.get_or("mode", "sim"), "sim");
+    }
+}

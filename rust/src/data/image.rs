@@ -1,0 +1,78 @@
+//! Synthetic data generators for the five paper benchmarks.
+//!
+//! Everything is seeded through [`crate::util::rng::Rng`] so experiment runs
+//! are reproducible bit-for-bit.
+
+use crate::util::rng::Rng;
+
+/// Gray-scale image in [0, 255], row-major `h*w` f32.
+pub fn image(seed: u64, h: usize, w: usize) -> Vec<f32> {
+    // Smooth gradient + seeded speckle: cheap but non-trivial content so
+    // filters act on realistic value distributions.
+    let mut rng = Rng::new(seed);
+    let mut img = Vec::with_capacity(h * w);
+    for r in 0..h {
+        for c in 0..w {
+            let base = 127.0
+                + 80.0 * ((r as f32 / h.max(1) as f32) * std::f32::consts::PI).sin()
+                + 40.0 * ((c as f32 / w.max(1) as f32) * 2.0 * std::f32::consts::PI).cos();
+            let speckle = (rng.f32() - 0.5) * 30.0;
+            img.push((base + speckle).clamp(0.0, 255.0));
+        }
+    }
+    img
+}
+
+/// 3-D volume in [0, 255], `h*w*d` f32 (x-major like the kernels expect).
+pub fn volume(seed: u64, h: usize, w: usize, d: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0x5e6);
+    (0..h * w * d).map(|_| rng.f32() * 255.0).collect()
+}
+
+/// Random float vector with N(0, 1) entries.
+pub fn randn_vec(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+/// Body set for NBody: `n` rows of (x, y, z, m), positions in a unit cube,
+/// masses in [0.5, 2).
+pub fn bodies(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n * 4);
+    for _ in 0..n {
+        out.push(rng.range_f64(-1.0, 1.0) as f32);
+        out.push(rng.range_f64(-1.0, 1.0) as f32);
+        out.push(rng.range_f64(-1.0, 1.0) as f32);
+        out.push(rng.range_f64(0.5, 2.0) as f32);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_in_range_and_deterministic() {
+        let a = image(1, 16, 32);
+        let b = image(1, 16, 32);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 512);
+        assert!(a.iter().all(|&v| (0.0..=255.0).contains(&v)));
+    }
+
+    #[test]
+    fn bodies_layout() {
+        let b = bodies(2, 8);
+        assert_eq!(b.len(), 32);
+        for i in 0..8 {
+            assert!(b[i * 4 + 3] >= 0.5 && b[i * 4 + 3] < 2.0);
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        assert_ne!(randn_vec(1, 16), randn_vec(2, 16));
+    }
+}

@@ -1,0 +1,8 @@
+//! Host-side data containers and synthetic workload generators.
+
+pub mod image;
+pub mod vector;
+pub mod workload;
+
+pub use vector::{ArgValue, Merge, ScalarTrait, Transfer, VectorArg};
+pub use workload::Workload;

@@ -1,0 +1,180 @@
+//! `Vector` data containers and kernel argument values (Section 2.1 / 3.4).
+//!
+//! Marrow classifies kernel parameters as vectors or scalars, mutable or
+//! immutable, partitionable or COPY. Partition-sensitive scalars can carry
+//! the `Size` / `Offset` traits, instantiated by the runtime with the
+//! current partition's size/offset. Multi-device executions produce partial
+//! results combined by *merging* functions.
+
+use crate::error::{Error, Result};
+
+/// Data-transfer mode of a vector argument (Section 3.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transfer {
+    /// Partitioned across devices under the locality-aware decomposition.
+    Partition,
+    /// Replicated integrally to every device (global snapshot semantics).
+    Copy,
+}
+
+/// Partition-sensitive scalar traits (Section 3.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScalarTrait {
+    /// Plain partition-invariant value.
+    Bound,
+    /// Instantiated with the size (in elements) of the current partition.
+    Size,
+    /// Instantiated with the offset (in epu units) of the current partition.
+    Offset,
+    /// Instantiated with `base + partition offset` — used to decorrelate
+    /// per-partition RNG streams (gaussian noise kernel).
+    SeededOffset,
+}
+
+/// Predefined merging functions for partial scalar results (Section 3.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Merge {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    /// Concatenate partition outputs in partition order (vector results).
+    Concat,
+}
+
+impl Merge {
+    /// Fold two f32 partial results.
+    pub fn fold(self, a: f32, b: f32) -> f32 {
+        match self {
+            Merge::Add => a + b,
+            Merge::Sub => a - b,
+            Merge::Mul => a * b,
+            Merge::Div => a / b,
+            Merge::Concat => a, // not meaningful for scalars
+        }
+    }
+}
+
+/// Host-side typed buffer.
+#[derive(Clone, Debug)]
+pub enum ArgValue {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl ArgValue {
+    pub fn len(&self) -> usize {
+        match self {
+            ArgValue::F32(v) => v.len(),
+            ArgValue::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            ArgValue::F32(v) => Ok(v),
+            _ => Err(Error::Spec("expected f32 buffer".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            ArgValue::I32(v) => Ok(v),
+            _ => Err(Error::Spec("expected i32 buffer".into())),
+        }
+    }
+
+    /// Slice a sub-range (element granularity).
+    pub fn slice(&self, start: usize, len: usize) -> ArgValue {
+        match self {
+            ArgValue::F32(v) => ArgValue::F32(v[start..start + len].to_vec()),
+            ArgValue::I32(v) => ArgValue::I32(v[start..start + len].to_vec()),
+        }
+    }
+}
+
+/// A vector argument to an execution request: the host object plus its
+/// data-management contract.
+#[derive(Clone, Debug)]
+pub struct VectorArg {
+    pub name: String,
+    pub value: ArgValue,
+    pub transfer: Transfer,
+    /// Row size in elements: an epu unit of this vector spans
+    /// `elems_per_unit` consecutive elements (e.g. one image line = width).
+    pub elems_per_unit: u64,
+}
+
+impl VectorArg {
+    pub fn partitioned_f32(name: &str, data: Vec<f32>, elems_per_unit: u64) -> VectorArg {
+        VectorArg {
+            name: name.to_string(),
+            value: ArgValue::F32(data),
+            transfer: Transfer::Partition,
+            elems_per_unit,
+        }
+    }
+
+    pub fn copied_f32(name: &str, data: Vec<f32>) -> VectorArg {
+        VectorArg {
+            name: name.to_string(),
+            value: ArgValue::F32(data),
+            transfer: Transfer::Copy,
+            elems_per_unit: 1,
+        }
+    }
+
+    /// Number of epu units this vector holds.
+    pub fn units(&self) -> u64 {
+        self.value.len() as u64 / self.elems_per_unit.max(1)
+    }
+
+    /// Slice the units [start, start+len) (Partition mode only).
+    pub fn slice_units(&self, start: u64, len: u64) -> Result<ArgValue> {
+        if self.transfer != Transfer::Partition {
+            return Err(Error::Spec(format!(
+                "vector '{}' is COPY mode; cannot slice",
+                self.name
+            )));
+        }
+        let epu = self.elems_per_unit as usize;
+        Ok(self.value.slice(start as usize * epu, len as usize * epu))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn units_respect_elems_per_unit() {
+        let v = VectorArg::partitioned_f32("img", vec![0.0; 64 * 128], 128);
+        assert_eq!(v.units(), 64);
+    }
+
+    #[test]
+    fn slice_units_extracts_rows() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let v = VectorArg::partitioned_f32("m", data, 4);
+        let s = v.slice_units(1, 2).unwrap();
+        assert_eq!(s.as_f32().unwrap(), &[4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn copy_mode_rejects_slicing() {
+        let v = VectorArg::copied_f32("all", vec![1.0; 8]);
+        assert!(v.slice_units(0, 1).is_err());
+    }
+
+    #[test]
+    fn merge_folds() {
+        assert_eq!(Merge::Add.fold(2.0, 3.0), 5.0);
+        assert_eq!(Merge::Mul.fold(2.0, 3.0), 6.0);
+        assert_eq!(Merge::Sub.fold(2.0, 3.0), -1.0);
+        assert_eq!(Merge::Div.fold(6.0, 3.0), 2.0);
+    }
+}

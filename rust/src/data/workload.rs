@@ -1,0 +1,134 @@
+//! Workload characterization (profile field (b) of Section 3.2.1).
+//!
+//! A workload is characterized by its number of dimensions, the number of
+//! elements per dimension and whether it carries single- or double-precision
+//! floating point data. The knowledge base interpolates over the feature
+//! vector produced by [`Workload::features`].
+
+use crate::util::json::Json;
+
+/// Characterization of one submitted workload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Workload {
+    /// Elements per dimension (len = dimensionality of the work space).
+    pub dims: Vec<u64>,
+    /// Double-precision data? (all paper benchmarks are single.)
+    pub double_precision: bool,
+}
+
+impl Workload {
+    pub fn d1(n: u64) -> Workload {
+        Workload {
+            dims: vec![n],
+            double_precision: false,
+        }
+    }
+
+    pub fn d2(h: u64, w: u64) -> Workload {
+        Workload {
+            dims: vec![h, w],
+            double_precision: false,
+        }
+    }
+
+    pub fn d3(h: u64, w: u64, d: u64) -> Workload {
+        Workload {
+            dims: vec![h, w, d],
+            double_precision: false,
+        }
+    }
+
+    /// Dimensionality of the computation's work space.
+    pub fn dimensionality(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total number of elements.
+    pub fn elems(&self) -> u64 {
+        self.dims.iter().product()
+    }
+
+    /// Feature vector for interpolation. Dimensions are log2-scaled so that
+    /// the RBF metric treats 1024→2048 and 4096→8192 as equally distant —
+    /// workload behaviour is scale-multiplicative, not additive.
+    pub fn features(&self) -> Vec<f64> {
+        self.dims
+            .iter()
+            .map(|&d| (d.max(1) as f64).log2())
+            .collect()
+    }
+
+    /// Stable identifier for KB keys, e.g. `2d:2048x2048:f32`.
+    pub fn id(&self) -> String {
+        let dims = self
+            .dims
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("x");
+        format!(
+            "{}d:{}:{}",
+            self.dims.len(),
+            dims,
+            if self.double_precision { "f64" } else { "f32" }
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "dims",
+                Json::arr(self.dims.iter().map(|&d| Json::num(d as f64)).collect()),
+            ),
+            ("double_precision", Json::Bool(self.double_precision)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> crate::Result<Workload> {
+        let dims = v
+            .get("dims")?
+            .as_arr()
+            .ok_or_else(|| crate::Error::Kb("dims not array".into()))?
+            .iter()
+            .filter_map(|d| d.as_u64())
+            .collect();
+        Ok(Workload {
+            dims,
+            double_precision: v
+                .get("double_precision")?
+                .as_bool()
+                .unwrap_or(false),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_distinguish_shape_and_precision() {
+        assert_eq!(Workload::d2(2048, 1024).id(), "2d:2048x1024:f32");
+        let mut w = Workload::d1(100);
+        w.double_precision = true;
+        assert_eq!(w.id(), "1d:100:f64");
+    }
+
+    #[test]
+    fn features_are_log_scaled() {
+        let f = Workload::d2(1024, 4096).features();
+        assert_eq!(f, vec![10.0, 12.0]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let w = Workload::d3(32, 32, 512);
+        let j = w.to_json();
+        assert_eq!(Workload::from_json(&j).unwrap(), w);
+    }
+
+    #[test]
+    fn elems_product() {
+        assert_eq!(Workload::d3(4, 5, 6).elems(), 120);
+    }
+}

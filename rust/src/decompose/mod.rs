@@ -1,0 +1,364 @@
+//! Locality-aware domain decomposition (Section 3.1).
+//!
+//! The data-set is decomposed into partitions adjustable to the best
+//! work-group size of each device; every vector communicated between
+//! consecutive kernels must see an *identical* partitioning so data persists
+//! in device memory with no inter-device movement. The partitioner therefore
+//! works with a global vision of the SCT: the partition quantum is the least
+//! common multiple of every kernel's granularity constraint plus the AOT
+//! chunk-menu constraint (static HLO shapes; DESIGN.md §1.2).
+
+use crate::error::{Error, Result};
+use crate::sct::Sct;
+
+/// One parallel execution slot of the machine (Section 3.2.2: fission
+/// sub-devices and GPU overlap slots all count towards the SCT's level of
+/// coarse parallelism).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ExecSlot {
+    /// Fission sub-device `idx` of the CPU device.
+    CpuSub { idx: u32 },
+    /// Overlap slot `slot` of GPU `gpu`.
+    GpuSlot { gpu: u32, slot: u32 },
+}
+
+impl ExecSlot {
+    pub fn is_cpu(&self) -> bool {
+        matches!(self, ExecSlot::CpuSub { .. })
+    }
+}
+
+/// A contiguous range of epu units assigned to one execution slot.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Partition {
+    pub slot: ExecSlot,
+    pub start_unit: u64,
+    pub units: u64,
+}
+
+/// The decomposition of one execution request across the machine.
+#[derive(Clone, Debug)]
+pub struct PartitionPlan {
+    pub partitions: Vec<Partition>,
+    /// Quantum every partition is a multiple of (epu units).
+    pub quantum: u64,
+    /// Fraction of units that went to GPU slots.
+    pub gpu_share: f64,
+}
+
+impl PartitionPlan {
+    pub fn total_units(&self) -> u64 {
+        self.partitions.iter().map(|p| p.units).sum()
+    }
+
+    pub fn cpu_units(&self) -> u64 {
+        self.partitions
+            .iter()
+            .filter(|p| p.slot.is_cpu())
+            .map(|p| p.units)
+            .sum()
+    }
+
+    pub fn gpu_units(&self) -> u64 {
+        self.total_units() - self.cpu_units()
+    }
+
+    /// Non-empty partitions (slots can receive zero units when the workload
+    /// is smaller than slots x quantum).
+    pub fn active(&self) -> impl Iterator<Item = &Partition> {
+        self.partitions.iter().filter(|p| p.units > 0)
+    }
+}
+
+/// Decomposition inputs: how many parallel executions of each type, their
+/// weights, and the CPU/GPU split.
+#[derive(Clone, Debug)]
+pub struct DecomposeConfig {
+    /// Number of CPU fission sub-devices participating.
+    pub cpu_subdevices: u32,
+    /// Overlap factor per GPU (one entry per GPU).
+    pub gpu_overlap: Vec<u32>,
+    /// Static relative weights per GPU (Section 3.2, SHOC-derived).
+    pub gpu_weights: Vec<f64>,
+    /// Fraction of units assigned to the CPU device type [0, 1].
+    pub cpu_share: f64,
+    /// Work-group size used for quantum computation on GPU kernels.
+    pub wgs: u32,
+    /// Extra granularity from the AOT chunk menu (units per smallest chunk).
+    pub chunk_quantum: u64,
+}
+
+/// Decompose `total_units` of an SCT's domain across the machine.
+///
+/// Guarantees (property-tested):
+///  * partitions tile [0, total_units) contiguously without gaps/overlap;
+///  * every partition size is a multiple of the quantum (the last CPU
+///    partition absorbs the remainder when `total_units` itself is not);
+///  * the realized GPU share is the closest quantum-aligned value to the
+///    requested split.
+pub fn decompose(sct: &Sct, total_units: u64, cfg: &DecomposeConfig) -> Result<PartitionPlan> {
+    if cfg.gpu_overlap.len() != cfg.gpu_weights.len() {
+        return Err(Error::Decompose(
+            "gpu_overlap and gpu_weights length mismatch".into(),
+        ));
+    }
+    if !(0.0..=1.0).contains(&cfg.cpu_share) {
+        return Err(Error::Decompose(format!(
+            "cpu_share {} out of [0,1]",
+            cfg.cpu_share
+        )));
+    }
+    let quantum = sct.quantum_units(cfg.wgs).max(1) * cfg.chunk_quantum.max(1)
+        / gcd(sct.quantum_units(cfg.wgs).max(1), cfg.chunk_quantum.max(1));
+    if total_units == 0 {
+        return Err(Error::Decompose("empty workload".into()));
+    }
+
+    let n_gpu_slots: u32 = cfg.gpu_overlap.iter().sum();
+    let has_gpu = n_gpu_slots > 0;
+    let has_cpu = cfg.cpu_subdevices > 0;
+    if !has_gpu && !has_cpu {
+        return Err(Error::Decompose("no execution slots".into()));
+    }
+
+    // Round the CPU total to the quantum grid.
+    let cpu_share = if has_gpu { cfg.cpu_share } else { 1.0 };
+    let gpu_share = if has_cpu { 1.0 - cpu_share } else { 1.0 };
+    let mut gpu_total = round_to(total_units as f64 * gpu_share, quantum);
+    gpu_total = gpu_total.min(total_units / quantum * quantum);
+    let cpu_total = total_units - gpu_total;
+
+    let mut partitions = Vec::new();
+    let mut cursor = 0u64;
+
+    // GPU partitions first (matches the paper's tables: GPU gets the head
+    // of the domain), split per device by the static weights, then evenly
+    // across that device's overlap slots.
+    if has_gpu && gpu_total > 0 {
+        let mut remaining = gpu_total;
+        for (g, (&overlap, &weight)) in
+            cfg.gpu_overlap.iter().zip(&cfg.gpu_weights).enumerate()
+        {
+            let dev_units = if g + 1 == cfg.gpu_overlap.len() {
+                remaining
+            } else {
+                round_to(gpu_total as f64 * weight, quantum).min(remaining)
+            };
+            remaining -= dev_units;
+            // Split across overlap slots on the quantum grid.
+            let mut left = dev_units;
+            for slot in 0..overlap {
+                let share = if slot + 1 == overlap {
+                    left
+                } else {
+                    round_to(dev_units as f64 / overlap as f64, quantum).min(left)
+                };
+                partitions.push(Partition {
+                    slot: ExecSlot::GpuSlot {
+                        gpu: g as u32,
+                        slot,
+                    },
+                    start_unit: cursor,
+                    units: share,
+                });
+                cursor += share;
+                left -= share;
+            }
+        }
+    }
+
+    // CPU partitions: even quantum-aligned split across sub-devices; the
+    // last sub-device absorbs the remainder (including any sub-quantum tail
+    // of the whole domain).
+    if has_cpu {
+        let mut left = cpu_total;
+        for idx in 0..cfg.cpu_subdevices {
+            let share = if idx + 1 == cfg.cpu_subdevices {
+                left
+            } else {
+                round_to(cpu_total as f64 / cfg.cpu_subdevices as f64, quantum).min(left)
+            };
+            partitions.push(Partition {
+                slot: ExecSlot::CpuSub { idx },
+                start_unit: cursor,
+                units: share,
+            });
+            cursor += share;
+            left -= share;
+        }
+    } else if cpu_total > 0 {
+        return Err(Error::Decompose(
+            "workload residue with no CPU sub-devices".into(),
+        ));
+    }
+
+    debug_assert_eq!(cursor, total_units);
+    let plan = PartitionPlan {
+        gpu_share: gpu_total as f64 / total_units as f64,
+        partitions,
+        quantum,
+    };
+    Ok(plan)
+}
+
+fn round_to(x: f64, q: u64) -> u64 {
+    let q = q.max(1);
+    ((x / q as f64).round() as u64) * q
+}
+
+fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sct::{KernelSpec, ParamSpec, Sct};
+    use crate::util::propcheck::forall;
+
+    fn line_sct() -> Sct {
+        // Line-partitioned kernel (epu spans many elements): quantum 1.
+        Sct::kernel(KernelSpec::new(
+            "filter_pipeline",
+            vec![ParamSpec::VecIn],
+            2048,
+        ))
+    }
+
+    fn cfg(cpu_subs: u32, overlaps: Vec<u32>, cpu_share: f64, chunk_q: u64) -> DecomposeConfig {
+        let n = overlaps.len();
+        DecomposeConfig {
+            cpu_subdevices: cpu_subs,
+            gpu_overlap: overlaps,
+            gpu_weights: vec![1.0 / n.max(1) as f64; n],
+            cpu_share,
+            wgs: 256,
+            chunk_quantum: chunk_q,
+        }
+    }
+
+    #[test]
+    fn tiles_domain_exactly() {
+        let plan = decompose(&line_sct(), 2048, &cfg(6, vec![4], 0.25, 8)).unwrap();
+        assert_eq!(plan.total_units(), 2048);
+        // Contiguous coverage.
+        let mut cursor = 0;
+        for p in &plan.partitions {
+            assert_eq!(p.start_unit, cursor);
+            cursor += p.units;
+        }
+        assert_eq!(cursor, 2048);
+    }
+
+    #[test]
+    fn respects_requested_share_on_quantum_grid() {
+        let plan = decompose(&line_sct(), 4096, &cfg(6, vec![4], 0.25, 8)).unwrap();
+        let realized_cpu = plan.cpu_units() as f64 / 4096.0;
+        assert!((realized_cpu - 0.25).abs() < 8.0 * 2.0 / 4096.0);
+    }
+
+    #[test]
+    fn cpu_only_when_no_gpus() {
+        let plan = decompose(&line_sct(), 1024, &cfg(32, vec![], 0.0, 8)).unwrap();
+        assert_eq!(plan.cpu_units(), 1024);
+        assert_eq!(plan.gpu_share, 0.0);
+        assert_eq!(plan.partitions.len(), 32);
+    }
+
+    #[test]
+    fn gpu_only_when_share_zero() {
+        let plan = decompose(&line_sct(), 1024, &cfg(6, vec![4], 0.0, 8)).unwrap();
+        assert_eq!(plan.gpu_units(), 1024);
+        // CPU slots still present but empty.
+        assert!(plan
+            .partitions
+            .iter()
+            .filter(|p| p.slot.is_cpu())
+            .all(|p| p.units == 0));
+    }
+
+    #[test]
+    fn two_gpu_weights_split() {
+        let mut c = cfg(0, vec![2, 2], 0.0, 1);
+        c.cpu_subdevices = 0;
+        c.gpu_weights = vec![0.75, 0.25];
+        let plan = decompose(&line_sct(), 4000, &c).unwrap();
+        let g0: u64 = plan
+            .partitions
+            .iter()
+            .filter(|p| matches!(p.slot, ExecSlot::GpuSlot { gpu: 0, .. }))
+            .map(|p| p.units)
+            .sum();
+        assert!((g0 as f64 / 4000.0 - 0.75).abs() < 0.01);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(decompose(&line_sct(), 0, &cfg(1, vec![], 0.0, 1)).is_err());
+        assert!(decompose(&line_sct(), 10, &cfg(0, vec![], 0.0, 1)).is_err());
+        assert!(decompose(&line_sct(), 10, &cfg(1, vec![1], 1.5, 1)).is_err());
+    }
+
+    #[test]
+    fn prop_partitions_always_tile_domain() {
+        forall(
+            0xDEC0,
+            300,
+            |r| {
+                (
+                    r.below(1 << 14) + 1,       // total units
+                    r.below(32) + 1,            // cpu subdevices
+                    r.below(100),               // cpu share %
+                )
+            },
+            |&(total, subs, share)| {
+                let c = cfg(subs as u32, vec![4], share as f64 / 100.0, 4);
+                let plan = decompose(&line_sct(), total, &c)
+                    .map_err(|e| format!("{e}"))?;
+                if plan.total_units() != total {
+                    return Err(format!(
+                        "tiled {} of {total}",
+                        plan.total_units()
+                    ));
+                }
+                let mut cursor = 0;
+                for p in &plan.partitions {
+                    if p.start_unit != cursor {
+                        return Err(format!("gap at {cursor}"));
+                    }
+                    cursor += p.units;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_non_tail_partitions_quantum_aligned() {
+        forall(
+            0xDEC1,
+            300,
+            |r| (r.below(1 << 12) + 1, r.below(7) + 1),
+            |&(total_q, chunk_q)| {
+                // Make total a multiple of quantum so every partition must be
+                // aligned.
+                let c = cfg(4, vec![2], 0.5, chunk_q);
+                let plan = decompose(&line_sct(), total_q * chunk_q, &c)
+                    .map_err(|e| format!("{e}"))?;
+                for p in plan.partitions.iter() {
+                    if p.units % plan.quantum != 0 {
+                        return Err(format!(
+                            "partition {p:?} not multiple of quantum {}",
+                            plan.quantum
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

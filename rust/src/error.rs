@@ -1,0 +1,51 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error type for every marrow subsystem.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Partitioning constraints of Section 3.1 cannot be satisfied.
+    #[error("decomposition error: {0}")]
+    Decompose(String),
+
+    /// A kernel/SCT specification is inconsistent.
+    #[error("specification error: {0}")]
+    Spec(String),
+
+    /// Artifact manifest or HLO loading problems.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Knowledge-base lookup/persistence failure.
+    #[error("knowledge base error: {0}")]
+    Kb(String),
+
+    /// Profiling / tuning failure.
+    #[error("tuner error: {0}")]
+    Tuner(String),
+
+    /// JSON parse error (own parser: no serde offline).
+    #[error("json error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    /// CLI usage error.
+    #[error("usage error: {0}")]
+    Usage(String),
+
+    #[error("i/o error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(format!("{e:?}"))
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,165 @@
+//! Scattered-data interpolation for configuration derivation
+//! (Section 3.2.3): Gaussian RBF network (dims 1-3, the paper uses Alglib's
+//! Fast RBF) and nearest-neighbour with inverse-distance weighting (dims > 3).
+
+use crate::error::Result;
+use crate::util::linalg::{dist, solve_general, solve_spd, Mat};
+
+/// Fit + evaluate a Gaussian RBF network at `target`.
+///
+/// phi(r) = exp(-(r/sigma)^2) with sigma the median pairwise distance;
+/// weights solve (Phi + lambda I) w = y. Returns `None`-ish error only for
+/// degenerate systems — callers fall back to nearest-neighbour.
+pub fn rbf_interpolate(points: &[Vec<f64>], values: &[f64], target: &[f64]) -> Option<f64> {
+    let n = points.len();
+    if n == 0 {
+        return None;
+    }
+    if n == 1 {
+        return Some(values[0]);
+    }
+    // Bandwidth: median pairwise distance.
+    let mut dists = Vec::new();
+    for i in 0..n {
+        for j in i + 1..n {
+            dists.push(dist(&points[i], &points[j]));
+        }
+    }
+    dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let sigma = dists[dists.len() / 2].max(1e-9);
+
+    let phi = |r: f64| (-(r / sigma) * (r / sigma)).exp();
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let v = phi(dist(&points[i], &points[j]));
+            a.set(i, j, v + if i == j { 1e-8 } else { 0.0 });
+        }
+    }
+    let w = match solve_spd(&a, values) {
+        Ok(w) => w,
+        Err(_) => solve_general(&a, values).ok()?,
+    };
+    let mut y = 0.0;
+    for (p, wi) in points.iter().zip(&w) {
+        y += wi * phi(dist(p, target));
+    }
+    Some(y)
+}
+
+/// Inverse-distance-weighted nearest neighbours (Euclidean metric) — the
+/// derivation method for work spaces of dimension > 3.
+pub fn nearest_neighbour(points: &[Vec<f64>], values: &[f64], target: &[f64]) -> Option<f64> {
+    if points.is_empty() {
+        return None;
+    }
+    // Exact hit?
+    for (p, v) in points.iter().zip(values) {
+        if dist(p, target) < 1e-12 {
+            return Some(*v);
+        }
+    }
+    // k=3 inverse-distance weighting.
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&a, &b| {
+        dist(&points[a], target)
+            .partial_cmp(&dist(&points[b], target))
+            .unwrap()
+    });
+    let k = idx.len().min(3);
+    let (mut num, mut den) = (0.0, 0.0);
+    for &i in &idx[..k] {
+        let w = 1.0 / dist(&points[i], target).max(1e-12);
+        num += w * values[i];
+        den += w;
+    }
+    Some(num / den)
+}
+
+/// Interpolation helper honouring the paper's dimensionality rule.
+pub fn interpolate(
+    points: &[Vec<f64>],
+    values: &[f64],
+    target: &[f64],
+) -> Result<f64> {
+    let v = if target.len() <= 3 {
+        rbf_interpolate(points, values, target)
+            .or_else(|| nearest_neighbour(points, values, target))
+    } else {
+        nearest_neighbour(points, values, target)
+    };
+    v.ok_or_else(|| crate::Error::Kb("no data to interpolate".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rbf_reproduces_training_points() {
+        let pts = vec![vec![0.0], vec![1.0], vec![2.0], vec![3.0]];
+        let vals = vec![0.0, 1.0, 4.0, 9.0];
+        for (p, v) in pts.iter().zip(&vals) {
+            let y = rbf_interpolate(&pts, &vals, p).unwrap();
+            assert!((y - v).abs() < 1e-3, "at {p:?}: {y} vs {v}");
+        }
+    }
+
+    #[test]
+    fn rbf_interpolates_smoothly_between_points() {
+        let pts = vec![vec![0.0], vec![2.0]];
+        let vals = vec![0.0, 1.0];
+        let mid = rbf_interpolate(&pts, &vals, &[1.0]).unwrap();
+        assert!(mid > 0.2 && mid < 0.8, "mid {mid}");
+    }
+
+    #[test]
+    fn rbf_2d() {
+        let pts = vec![
+            vec![0.0, 0.0],
+            vec![1.0, 0.0],
+            vec![0.0, 1.0],
+            vec![1.0, 1.0],
+        ];
+        let vals = vec![0.0, 1.0, 1.0, 2.0]; // f = x + y
+        let c = rbf_interpolate(&pts, &vals, &[0.5, 0.5]).unwrap();
+        // Gaussian RBF overshoots between training points; the derivation
+        // clamps shares to [0,1], so a loose band is the right contract.
+        assert!((c - 1.0).abs() < 0.5, "centre {c}");
+    }
+
+    #[test]
+    fn nn_exact_hit() {
+        let pts = vec![vec![1.0, 2.0, 3.0, 4.0], vec![5.0, 6.0, 7.0, 8.0]];
+        let vals = vec![10.0, 20.0];
+        assert_eq!(
+            nearest_neighbour(&pts, &vals, &[1.0, 2.0, 3.0, 4.0]).unwrap(),
+            10.0
+        );
+    }
+
+    #[test]
+    fn nn_weights_by_distance() {
+        let pts = vec![vec![0.0], vec![10.0]];
+        let vals = vec![0.0, 1.0];
+        let y = nearest_neighbour(&pts, &vals, &[1.0]).unwrap();
+        assert!(y < 0.5, "near the 0-point: {y}");
+    }
+
+    #[test]
+    fn single_point_constant() {
+        let pts = vec![vec![5.0]];
+        let vals = vec![0.7];
+        assert_eq!(rbf_interpolate(&pts, &vals, &[100.0]).unwrap(), 0.7);
+        assert_eq!(nearest_neighbour(&pts, &vals, &[100.0]).unwrap(), 0.7);
+    }
+
+    #[test]
+    fn dispatch_by_dimensionality() {
+        let pts4 = vec![vec![0.0; 4], vec![1.0; 4]];
+        let vals = vec![0.0, 1.0];
+        assert!(interpolate(&pts4, &vals, &[0.1; 4]).unwrap() < 0.5);
+        let pts1 = vec![vec![0.0], vec![1.0]];
+        assert!(interpolate(&pts1, &vals, &[0.9]).unwrap() > 0.5);
+    }
+}

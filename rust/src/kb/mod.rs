@@ -1,0 +1,283 @@
+//! The Knowledge Base (Section 3.2.3): stores the best-known configuration
+//! per (SCT, workload) pair, persists to JSON, and *derives* configurations
+//! for unseen pairs via multidimensional interpolation of scattered data —
+//! an RBF network for workspaces of dimension 1-3, nearest-neighbour above.
+//!
+//! Derivation narrows scope progressively: configurations of the same SCT
+//! first; failing that, configurations of the same workload regardless of
+//! SCT; failing that, any workload of the same dimensionality.
+
+pub mod interp;
+
+use std::path::{Path, PathBuf};
+
+use crate::data::workload::Workload;
+use crate::error::Result;
+use crate::platform::cpu::FissionLevel;
+use crate::tuner::profile::{FrameworkConfig, Profile, ProfileOrigin};
+use crate::util::json::Json;
+
+/// The knowledge base.
+#[derive(Default)]
+pub struct KnowledgeBase {
+    entries: Vec<Profile>,
+    path: Option<PathBuf>,
+}
+
+impl KnowledgeBase {
+    pub fn in_memory() -> KnowledgeBase {
+        KnowledgeBase::default()
+    }
+
+    /// Open (or create) a JSON-backed KB.
+    pub fn open(path: &Path) -> Result<KnowledgeBase> {
+        let mut kb = KnowledgeBase {
+            entries: Vec::new(),
+            path: Some(path.to_path_buf()),
+        };
+        if path.exists() {
+            let text = std::fs::read_to_string(path)?;
+            let v = Json::parse(&text)?;
+            for e in v.get("profiles")?.as_arr().unwrap_or(&[]) {
+                kb.entries.push(Profile::from_json(e)?);
+            }
+        }
+        Ok(kb)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Persist to the backing file (no-op for in-memory KBs).
+    pub fn save(&self) -> Result<()> {
+        if let Some(path) = &self.path {
+            let v = Json::obj(vec![(
+                "profiles",
+                Json::arr(self.entries.iter().map(|p| p.to_json()).collect()),
+            )]);
+            std::fs::write(path, v.to_string_pretty())?;
+        }
+        Ok(())
+    }
+
+    /// Store a profile, keeping only the best time per (SCT, workload).
+    pub fn store(&mut self, profile: Profile) {
+        if let Some(existing) = self.entries.iter_mut().find(|p| {
+            p.sct_id == profile.sct_id && p.workload.id() == profile.workload.id()
+        }) {
+            if profile.best_time <= existing.best_time
+                || profile.origin == ProfileOrigin::Refined
+            {
+                *existing = profile;
+            }
+        } else {
+            self.entries.push(profile);
+        }
+    }
+
+    /// Exact lookup for a (SCT, workload) pair.
+    pub fn lookup(&self, sct_id: &str, workload: &Workload) -> Option<&Profile> {
+        self.entries
+            .iter()
+            .find(|p| p.sct_id == sct_id && p.workload.id() == workload.id())
+    }
+
+    /// Derive a configuration for an unseen pair (box "Derive work
+    /// distribution"). Returns `None` when nothing of the same
+    /// dimensionality exists yet.
+    pub fn derive(&self, sct_id: &str, workload: &Workload) -> Option<FrameworkConfig> {
+        if let Some(hit) = self.lookup(sct_id, workload) {
+            return Some(hit.config.clone());
+        }
+        // Scope 1: same SCT.
+        let same_sct: Vec<&Profile> = self
+            .entries
+            .iter()
+            .filter(|p| {
+                p.sct_id == sct_id
+                    && p.workload.dimensionality() == workload.dimensionality()
+            })
+            .collect();
+        if !same_sct.is_empty() {
+            return Some(interpolate_config(&same_sct, workload));
+        }
+        // Scope 2: same workload, any SCT.
+        let same_wl: Vec<&Profile> = self
+            .entries
+            .iter()
+            .filter(|p| p.workload.id() == workload.id())
+            .collect();
+        if !same_wl.is_empty() {
+            return Some(interpolate_config(&same_wl, workload));
+        }
+        // Scope 3: same dimensionality.
+        let same_dim: Vec<&Profile> = self
+            .entries
+            .iter()
+            .filter(|p| p.workload.dimensionality() == workload.dimensionality())
+            .collect();
+        if !same_dim.is_empty() {
+            return Some(interpolate_config(&same_dim, workload));
+        }
+        None
+    }
+
+    pub fn entries(&self) -> &[Profile] {
+        &self.entries
+    }
+}
+
+/// Interpolate a configuration from scoped profiles: continuous fields
+/// (cpu_share) via RBF (dims <= 3) or inverse-distance NN; discrete fields
+/// (fission, overlap, wgs) from the nearest neighbour.
+fn interpolate_config(scope: &[&Profile], workload: &Workload) -> FrameworkConfig {
+    let target = workload.features();
+    let dims = workload.dimensionality();
+
+    // Nearest profile for the discrete dimensions.
+    let nearest = scope
+        .iter()
+        .min_by(|a, b| {
+            let da = crate::util::linalg::dist(&a.workload.features(), &target);
+            let db = crate::util::linalg::dist(&b.workload.features(), &target);
+            da.partial_cmp(&db).unwrap()
+        })
+        .unwrap();
+
+    let points: Vec<Vec<f64>> = scope.iter().map(|p| p.workload.features()).collect();
+    let shares: Vec<f64> = scope.iter().map(|p| p.config.cpu_share).collect();
+    let share = if dims <= 3 && points.len() >= 2 {
+        interp::rbf_interpolate(&points, &shares, &target)
+            .unwrap_or(nearest.config.cpu_share)
+    } else {
+        interp::nearest_neighbour(&points, &shares, &target)
+            .unwrap_or(nearest.config.cpu_share)
+    }
+    .clamp(0.0, 1.0);
+
+    FrameworkConfig {
+        fission: nearest.config.fission,
+        overlap: nearest.config.overlap.clone(),
+        wgs: nearest.config.wgs,
+        cpu_share: share,
+    }
+}
+
+/// Convenience: a quick profile value for tests/benches.
+pub fn mk_profile(
+    sct_id: &str,
+    workload: Workload,
+    fission: FissionLevel,
+    overlap: Vec<u32>,
+    cpu_share: f64,
+    best_time: f64,
+) -> Profile {
+    Profile {
+        sct_id: sct_id.to_string(),
+        workload,
+        config: FrameworkConfig {
+            fission,
+            overlap,
+            wgs: 256,
+            cpu_share,
+        },
+        best_time,
+        origin: ProfileOrigin::Built,
+    }
+}
+
+impl std::fmt::Debug for KnowledgeBase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KnowledgeBase({} profiles)", self.entries.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wl(h: u64, w: u64) -> Workload {
+        Workload::d2(h, w)
+    }
+
+    #[test]
+    fn store_keeps_best() {
+        let mut kb = KnowledgeBase::in_memory();
+        kb.store(mk_profile("f", wl(1024, 1024), FissionLevel::L2, vec![4], 0.2, 2.0));
+        kb.store(mk_profile("f", wl(1024, 1024), FissionLevel::L3, vec![4], 0.3, 1.0));
+        kb.store(mk_profile("f", wl(1024, 1024), FissionLevel::L1, vec![4], 0.4, 5.0));
+        assert_eq!(kb.len(), 1);
+        let p = kb.lookup("f", &wl(1024, 1024)).unwrap();
+        assert_eq!(p.config.fission, FissionLevel::L3);
+    }
+
+    #[test]
+    fn exact_lookup_wins_over_interpolation() {
+        let mut kb = KnowledgeBase::in_memory();
+        kb.store(mk_profile("f", wl(1024, 1024), FissionLevel::L2, vec![4], 0.2, 1.0));
+        let cfg = kb.derive("f", &wl(1024, 1024)).unwrap();
+        assert_eq!(cfg.cpu_share, 0.2);
+    }
+
+    #[test]
+    fn derive_interpolates_between_sizes() {
+        let mut kb = KnowledgeBase::in_memory();
+        kb.store(mk_profile("f", wl(1024, 1024), FissionLevel::L2, vec![4], 0.10, 1.0));
+        kb.store(mk_profile("f", wl(4096, 4096), FissionLevel::L2, vec![4], 0.30, 1.0));
+        let cfg = kb.derive("f", &wl(2048, 2048)).unwrap();
+        assert!(
+            cfg.cpu_share > 0.10 && cfg.cpu_share < 0.30,
+            "share {}",
+            cfg.cpu_share
+        );
+    }
+
+    #[test]
+    fn derive_scope_narrows_to_other_scts() {
+        let mut kb = KnowledgeBase::in_memory();
+        kb.store(mk_profile("other", wl(2048, 2048), FissionLevel::L1, vec![3], 0.25, 1.0));
+        // Unknown SCT but same workload: scope 2.
+        let cfg = kb.derive("fresh", &wl(2048, 2048)).unwrap();
+        assert_eq!(cfg.fission, FissionLevel::L1);
+        assert!((cfg.cpu_share - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn derive_falls_back_to_dimensionality() {
+        let mut kb = KnowledgeBase::in_memory();
+        kb.store(mk_profile("a", wl(512, 512), FissionLevel::L3, vec![2], 0.4, 1.0));
+        let cfg = kb.derive("b", &wl(999, 777)).unwrap();
+        assert_eq!(cfg.fission, FissionLevel::L3);
+    }
+
+    #[test]
+    fn derive_none_for_empty_or_wrong_dim() {
+        let kb = KnowledgeBase::in_memory();
+        assert!(kb.derive("x", &wl(10, 10)).is_none());
+        let mut kb2 = KnowledgeBase::in_memory();
+        kb2.store(mk_profile("a", Workload::d1(100), FissionLevel::L1, vec![], 1.0, 1.0));
+        assert!(kb2.derive("a", &wl(10, 10)).is_none());
+    }
+
+    #[test]
+    fn persistence_roundtrip() {
+        let path = std::env::temp_dir().join("marrow_kb_test.json");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut kb = KnowledgeBase::open(&path).unwrap();
+            kb.store(mk_profile("f", wl(1024, 512), FissionLevel::Numa, vec![2, 3], 0.15, 0.5));
+            kb.save().unwrap();
+        }
+        let kb = KnowledgeBase::open(&path).unwrap();
+        assert_eq!(kb.len(), 1);
+        let p = kb.lookup("f", &wl(1024, 512)).unwrap();
+        assert_eq!(p.config.fission, FissionLevel::Numa);
+        assert_eq!(p.config.overlap, vec![2, 3]);
+        let _ = std::fs::remove_file(&path);
+    }
+}

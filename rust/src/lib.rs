@@ -1,0 +1,37 @@
+//! # marrow — cooperative multi-CPU/multi-GPU execution of compound
+//! multi-kernel computations
+//!
+//! Rust implementation of the Marrow runtime described in *"Execution of
+//! Compound Multi-Kernel OpenCL Computations in Multi-CPU/Multi-GPU
+//! Environments"* (Soldado, Alexandre, Paulino — CCPE 2015), re-architected
+//! on a three-layer Rust + JAX/Pallas + PJRT stack:
+//!
+//! * **L1/L2** (build time, Python): Pallas kernels + JAX compositions,
+//!   AOT-lowered to HLO-text artifacts (`python/compile/`, `artifacts/`).
+//! * **L3** (this crate): the paper's contribution — skeleton computational
+//!   trees ([`sct`]), locality-aware domain decomposition ([`decompose`]),
+//!   CPU-fission / GPU-overlap execution platforms ([`platform`]),
+//!   profile-based workload distribution ([`tuner`]), a knowledge base with
+//!   RBF-interpolated configuration derivation ([`kb`]) and dynamic load
+//!   balancing with adaptive binary search ([`balance`]).
+//!
+//! The OpenCL devices of the paper are substituted by a calibrated
+//! performance simulator ([`sim`]) for paper-scale benches, while real
+//! numerics run through the PJRT CPU client ([`runtime`]). See DESIGN.md.
+
+pub mod balance;
+pub mod bench;
+pub mod cli;
+pub mod data;
+pub mod decompose;
+pub mod error;
+pub mod kb;
+pub mod platform;
+pub mod runtime;
+pub mod scheduler;
+pub mod sct;
+pub mod sim;
+pub mod tuner;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,167 @@
+//! marrow — CLI launcher for the Marrow reproduction.
+//!
+//! Subcommands:
+//!   eval <table2|table3|table4|table5|fig11|ablations|all>
+//!       regenerate the paper's tables/figures (simulated clock)
+//!   profile --bench <name> --size <n> [--gpus <g>]
+//!       run Algorithm 1 on one benchmark and print the profile
+//!   shoc
+//!       install-time calibration: host microbenchmarks + GPU ranking
+//!   info
+//!       machine descriptions and artifact inventory
+
+use marrow::bench::eval::{ablations, fig11, table2, table3, table4, table5};
+use marrow::bench::workloads;
+use marrow::cli::Args;
+use marrow::platform::device::{i7_hd7950, opteron_6272_quad};
+use marrow::runtime::artifacts::Manifest;
+use marrow::scheduler::SimEnv;
+use marrow::sim::machine::SimMachine;
+use marrow::sim::shoc;
+use marrow::tuner::builder::{build_profile, TunerOpts};
+use marrow::Result;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("eval") => eval(&args),
+        Some("profile") => profile(&args),
+        Some("shoc") => shoc_cmd(),
+        Some("info") => info(),
+        _ => {
+            println!("{}", USAGE);
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "\
+marrow — multi-CPU/multi-GPU execution of compound multi-kernel computations
+usage:
+  marrow eval <table2|table3|table4|table5|fig11|ablations|all>
+  marrow profile --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>]
+  marrow shoc
+  marrow info";
+
+fn eval(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let all = what == "all";
+    if all || what == "table2" {
+        println!("{}", table2::report()?);
+    }
+    if all || what == "table3" {
+        println!("{}", table3::report()?);
+    }
+    if all || what == "table4" {
+        println!("{}", table4::report(table4::RUNS)?);
+    }
+    if all || what == "table5" {
+        println!("{}", table5::report()?);
+    }
+    if all || what == "fig11" {
+        println!("{}", fig11::report()?);
+    }
+    if all || what == "ablations" {
+        println!("{}", ablations::discard_ordering()?);
+        println!("{}", ablations::locality()?);
+        println!("{}", ablations::interpolation()?);
+    }
+    Ok(())
+}
+
+fn profile(args: &Args) -> Result<()> {
+    let bench = args.get_or("bench", "saxpy");
+    let size = args.get_u64("size", 10_000_000)?;
+    let gpus = args.get_u64("gpus", 1)? as usize;
+    let b = match bench.as_str() {
+        "saxpy" => workloads::saxpy(size),
+        "filter" => workloads::filter_pipeline(size, size, true),
+        "fft" => workloads::fft(size),
+        "nbody" => workloads::nbody(size, 20),
+        "segmentation" => workloads::segmentation(size),
+        other => {
+            return Err(marrow::Error::Usage(format!(
+                "unknown benchmark '{other}'"
+            )))
+        }
+    };
+    let machine = if gpus == 0 {
+        opteron_6272_quad()
+    } else {
+        i7_hd7950(gpus)
+    };
+    let mut env = SimEnv::new(SimMachine::new(machine, 7));
+    env.copy_bytes = b.copy_bytes;
+    let p = build_profile(
+        &mut env,
+        &b.sct,
+        &b.workload,
+        b.total_units,
+        &TunerOpts::default(),
+    )?;
+    println!("benchmark      : {}", b.name);
+    println!("sct id         : {}", p.sct_id);
+    println!("workload       : {}", p.workload.id());
+    println!(
+        "configuration  : fission={} overlap={:?} wgs={}",
+        p.config.fission.label(),
+        p.config.overlap,
+        p.config.wgs
+    );
+    println!(
+        "distribution   : GPU {:.1}% / CPU {:.1}%",
+        100.0 * p.config.gpu_share(),
+        100.0 * p.config.cpu_share
+    );
+    println!("best time (sim): {:.4} s", p.best_time);
+    Ok(())
+}
+
+fn shoc_cmd() -> Result<()> {
+    println!("host calibration (real measurements on this machine):");
+    println!(
+        "  f32 FMA throughput : {:.2} GFLOPS/core",
+        shoc::host_flops_gflops()
+    );
+    println!(
+        "  stream bandwidth   : {:.2} GB/s",
+        shoc::host_stream_gbps()
+    );
+    let mut gpus = i7_hd7950(2).gpus;
+    let w = shoc::rank_gpus(&mut gpus);
+    println!("simulated GPU ranking (SHOC-score weights): {w:?}");
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    for m in [opteron_6272_quad(), i7_hd7950(2)] {
+        println!(
+            "machine: {} — {} cores, {} GPUs",
+            m.name,
+            m.cpu.total_cores(),
+            m.gpus.len()
+        );
+    }
+    match Manifest::load_default() {
+        Ok(man) => {
+            println!("artifacts ({} families):", man.by_family.len());
+            for (fam, arts) in &man.by_family {
+                let chunks: Vec<u64> = arts.iter().map(|a| a.chunk_units).collect();
+                println!("  {fam:<18} chunk menu {chunks:?}");
+            }
+        }
+        Err(e) => println!("artifacts: not built ({e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,207 @@
+//! CPUExecutionPlatform: OpenCL device-fission semantics (Section 2.2, 3.2.2).
+//!
+//! Fission partitions the (possibly multi-socket) CPU OpenCL device into
+//! sub-devices by cache affinity domain: `L1`, `L2`, `L3`, `NUMA` or no
+//! fission at all. Each sub-device is an independent parallel execution slot
+//! with its own work queue, which is how the paper leverages data locality
+//! in CPU-directed executions.
+//!
+//! `configurations()` is the platform's iterator over candidate fission
+//! levels, ordered from L1 to NO_FISSION as required by Algorithm 1's
+//! discard-ordering.
+
+use crate::platform::device::CpuSpec;
+
+/// OpenCL affinity-domain fission level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum FissionLevel {
+    L1,
+    L2,
+    L3,
+    Numa,
+    NoFission,
+}
+
+impl FissionLevel {
+    /// All levels in Algorithm 1's search order (L1 first).
+    pub const ALL: [FissionLevel; 5] = [
+        FissionLevel::L1,
+        FissionLevel::L2,
+        FissionLevel::L3,
+        FissionLevel::Numa,
+        FissionLevel::NoFission,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            FissionLevel::L1 => "L1",
+            FissionLevel::L2 => "L2",
+            FissionLevel::L3 => "L3",
+            FissionLevel::Numa => "NUMA",
+            FissionLevel::NoFission => "none",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FissionLevel> {
+        match s.to_ascii_uppercase().as_str() {
+            "L1" => Some(FissionLevel::L1),
+            "L2" => Some(FissionLevel::L2),
+            "L3" => Some(FissionLevel::L3),
+            "NUMA" => Some(FissionLevel::Numa),
+            "NONE" | "NO_FISSION" => Some(FissionLevel::NoFission),
+            _ => None,
+        }
+    }
+}
+
+/// A fissioned CPU sub-device: `cores` cores sharing `cache_kib` of the
+/// affinity level's cache.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SubDevice {
+    pub cores: u32,
+    pub cache_kib: u64,
+    /// Does this sub-device span more than one socket (=> cross-NUMA traffic)?
+    pub sockets_spanned: u32,
+    /// Streaming-bandwidth efficiency of the affinity domain: threads pinned
+    /// to a private L2 domain stream without cross-domain interference (the
+    /// locality effect the paper measures); coarser domains contend.
+    pub bw_factor: f64,
+    /// Compute-scheduling efficiency: coarser domains suffer placement churn
+    /// and shared-FPU contention under the OpenCL CPU runtime.
+    pub compute_factor: f64,
+}
+
+/// The CPU execution platform.
+#[derive(Clone, Debug)]
+pub struct CpuPlatform {
+    pub spec: CpuSpec,
+}
+
+impl CpuPlatform {
+    pub fn new(spec: CpuSpec) -> CpuPlatform {
+        CpuPlatform { spec }
+    }
+
+    /// Fission levels this device supports, in Algorithm 1 search order.
+    /// Levels that would produce the same partitioning as a finer level are
+    /// kept (the paper reports them separately), but levels meaningless for
+    /// the topology (NUMA on single-socket) are dropped.
+    pub fn configurations(&self) -> Vec<FissionLevel> {
+        let mut levels = vec![FissionLevel::L1, FissionLevel::L2, FissionLevel::L3];
+        if self.spec.numa_nodes > 1 {
+            levels.push(FissionLevel::Numa);
+        }
+        levels.push(FissionLevel::NoFission);
+        levels
+    }
+
+    /// Number of sub-devices produced by a fission level.
+    pub fn subdevice_count(&self, level: FissionLevel) -> u32 {
+        let c = &self.spec;
+        match level {
+            FissionLevel::L1 => c.total_cores(),
+            FissionLevel::L2 => c.total_cores() / c.cores_per_l2.max(1),
+            FissionLevel::L3 => c.total_cores() / c.cores_per_l3.max(1),
+            FissionLevel::Numa => c.numa_nodes,
+            FissionLevel::NoFission => 1,
+        }
+    }
+
+    /// Shape of each sub-device at a fission level.
+    pub fn subdevice(&self, level: FissionLevel) -> SubDevice {
+        let c = &self.spec;
+        let (cores, cache_kib, bw_factor, compute_factor) = match level {
+            // L1 domains are too fine to amortize the runtime's per-domain
+            // scheduling, but stream privately.
+            FissionLevel::L1 => (1, c.l1_kib, 1.10, 0.96),
+            // L2 affinity is the paper's sweet spot for streaming locality.
+            FissionLevel::L2 => (c.cores_per_l2, c.l2_kib, 1.20, 1.00),
+            FissionLevel::L3 => (c.cores_per_l3, c.l3_kib, 1.08, 0.985),
+            FissionLevel::Numa => (
+                c.total_cores() / c.numa_nodes.max(1),
+                // NUMA domain owns all L3 groups inside it.
+                c.l3_kib * (c.total_cores() / c.numa_nodes.max(1) / c.cores_per_l3.max(1)) as u64,
+                1.00,
+                0.955,
+            ),
+            FissionLevel::NoFission => (
+                c.total_cores(),
+                c.l3_kib * (c.total_cores() / c.cores_per_l3.max(1)) as u64,
+                1.00,
+                0.90,
+            ),
+        };
+        let cores_per_socket = c.cores_per_socket.max(1);
+        SubDevice {
+            cores,
+            cache_kib,
+            sockets_spanned: cores.div_ceil(cores_per_socket),
+            bw_factor,
+            compute_factor,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::device::{i7_hd7950, opteron_6272_quad};
+
+    #[test]
+    fn opteron_subdevice_counts_match_paper_table2() {
+        // Table 2: L2 -> 32 subdevices, L3 -> 8 subdevices.
+        let p = CpuPlatform::new(opteron_6272_quad().cpu);
+        assert_eq!(p.subdevice_count(FissionLevel::L1), 64);
+        assert_eq!(p.subdevice_count(FissionLevel::L2), 32);
+        assert_eq!(p.subdevice_count(FissionLevel::L3), 8);
+        assert_eq!(p.subdevice_count(FissionLevel::Numa), 4);
+        assert_eq!(p.subdevice_count(FissionLevel::NoFission), 1);
+    }
+
+    #[test]
+    fn i7_subdevice_counts_match_paper_table3() {
+        // Table 3 parallelism: L1/L2 -> 6 subdevices, L3 -> 1.
+        let p = CpuPlatform::new(i7_hd7950(1).cpu);
+        assert_eq!(p.subdevice_count(FissionLevel::L1), 6);
+        assert_eq!(p.subdevice_count(FissionLevel::L2), 6);
+        assert_eq!(p.subdevice_count(FissionLevel::L3), 1);
+    }
+
+    #[test]
+    fn i7_has_no_numa_level() {
+        let p = CpuPlatform::new(i7_hd7950(1).cpu);
+        assert!(!p.configurations().contains(&FissionLevel::Numa));
+        assert_eq!(
+            p.configurations().last().copied(),
+            Some(FissionLevel::NoFission)
+        );
+    }
+
+    #[test]
+    fn configurations_ordered_l1_first() {
+        let p = CpuPlatform::new(opteron_6272_quad().cpu);
+        assert_eq!(p.configurations()[0], FissionLevel::L1);
+    }
+
+    #[test]
+    fn no_fission_spans_all_sockets() {
+        let p = CpuPlatform::new(opteron_6272_quad().cpu);
+        assert_eq!(p.subdevice(FissionLevel::NoFission).sockets_spanned, 4);
+        assert_eq!(p.subdevice(FissionLevel::L2).sockets_spanned, 1);
+    }
+
+    #[test]
+    fn numa_subdevice_owns_socket_cache() {
+        let p = CpuPlatform::new(opteron_6272_quad().cpu);
+        let sd = p.subdevice(FissionLevel::Numa);
+        assert_eq!(sd.cores, 16);
+        assert_eq!(sd.cache_kib, 6144 * 2); // two 8-core L3 groups
+    }
+
+    #[test]
+    fn fission_label_roundtrip() {
+        for l in FissionLevel::ALL {
+            assert_eq!(FissionLevel::parse(l.label()), Some(l));
+        }
+    }
+}

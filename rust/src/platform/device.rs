@@ -1,0 +1,195 @@
+//! Device and machine descriptions.
+//!
+//! These describe the paper's two experimental testbeds; the simulator
+//! ([`crate::sim`]) prices task executions against them. Numbers are from
+//! the paper's Section 4 plus vendor datasheets for the parts the paper
+//! leaves implicit (GFLOPS, bandwidths).
+
+/// Kind of processing unit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    Cpu,
+    Gpu,
+}
+
+/// A (possibly multi-socket) CPU OpenCL device.
+#[derive(Clone, Debug)]
+pub struct CpuSpec {
+    pub name: String,
+    pub sockets: u32,
+    pub cores_per_socket: u32,
+    /// L1 data cache per core (KiB).
+    pub l1_kib: u64,
+    /// Unified L2 per group (KiB) and group size in cores.
+    pub l2_kib: u64,
+    pub cores_per_l2: u32,
+    /// Unified L3 per group (KiB) and group size in cores.
+    pub l3_kib: u64,
+    pub cores_per_l3: u32,
+    /// NUMA nodes (affinity-domain fission targets).
+    pub numa_nodes: u32,
+    /// Peak single-precision GFLOPS per core (vector units included).
+    pub gflops_per_core: f64,
+    /// Aggregate memory bandwidth (GB/s) across all sockets.
+    pub mem_bw_gbps: f64,
+    /// Per-kernel-launch host overhead (µs).
+    pub launch_overhead_us: f64,
+}
+
+impl CpuSpec {
+    pub fn total_cores(&self) -> u32 {
+        self.sockets * self.cores_per_socket
+    }
+}
+
+/// A discrete GPU attached via PCIe.
+#[derive(Clone, Debug)]
+pub struct GpuSpec {
+    pub name: String,
+    pub compute_units: u32,
+    /// Threads per wavefront (AMD) / warp (NVIDIA).
+    pub wavefront: u32,
+    /// Max work-group size.
+    pub max_wg: u32,
+    /// Max resident wavefronts per compute unit.
+    pub max_waves_per_cu: u32,
+    /// Max resident work-groups per compute unit.
+    pub max_wgs_per_cu: u32,
+    /// Local memory per compute unit (KiB).
+    pub local_mem_kib: u64,
+    /// Scalar registers per compute unit (in units of 256 regs).
+    pub vgpr_banks_per_cu: u32,
+    /// Peak single-precision GFLOPS.
+    pub gflops: f64,
+    /// Device memory bandwidth (GB/s).
+    pub mem_bw_gbps: f64,
+    /// Effective host<->device PCIe bandwidth (GB/s).
+    pub pcie_gbps: f64,
+    /// Per-kernel-launch overhead (µs).
+    pub launch_overhead_us: f64,
+    /// Relative performance weight from the install-time SHOC-style run
+    /// (Section 3.2): used for the static multi-GPU distribution.
+    pub relative_perf: f64,
+}
+
+/// A machine = one CPU OpenCL device + zero or more GPUs.
+#[derive(Clone, Debug)]
+pub struct Machine {
+    pub name: String,
+    pub cpu: CpuSpec,
+    pub gpus: Vec<GpuSpec>,
+}
+
+impl Machine {
+    /// Static GPU workload weights, normalized (Section 3.2: relative
+    /// performance order from the SHOC suite at installation time).
+    pub fn gpu_weights(&self) -> Vec<f64> {
+        let total: f64 = self.gpus.iter().map(|g| g.relative_perf).sum();
+        self.gpus
+            .iter()
+            .map(|g| g.relative_perf / total.max(1e-12))
+            .collect()
+    }
+}
+
+/// Testbed 1 (Section 4.1): four sixteen-core AMD Opteron 6272 @ 2.2 GHz,
+/// 64 GiB RAM. Caches: 16 KiB L1/core, 2 MiB L2 per 2 cores, 6 MiB L3 per
+/// 8 cores; 4 NUMA nodes (one per socket).
+pub fn opteron_6272_quad() -> Machine {
+    Machine {
+        name: "4x Opteron 6272 (64 cores)".to_string(),
+        cpu: CpuSpec {
+            name: "AMD Opteron 6272".to_string(),
+            sockets: 4,
+            cores_per_socket: 16,
+            l1_kib: 16,
+            l2_kib: 2048,
+            cores_per_l2: 2,
+            l3_kib: 6144,
+            cores_per_l3: 8,
+            numa_nodes: 4,
+            // 2.2 GHz, shared FPU per module, AVX: ~8 effective f32 FLOP/cycle.
+            gflops_per_core: 17.6,
+            mem_bw_gbps: 102.4, // 4 sockets x 25.6 GB/s DDR3-1600
+            launch_overhead_us: 18.0,
+        },
+        gpus: Vec::new(),
+    }
+}
+
+/// Testbed 2 (Section 4.2): hyper-threaded six-core i7-3930K @ 3.2 GHz
+/// (L1/L2 per core, one shared L3) + `n_gpus` AMD HD 7950 on dedicated
+/// PCIe x16, 32 GiB RAM.
+pub fn i7_hd7950(n_gpus: usize) -> Machine {
+    let gpu = GpuSpec {
+        name: "AMD HD 7950".to_string(),
+        compute_units: 28,
+        wavefront: 64,
+        max_wg: 256,
+        max_waves_per_cu: 40,
+        max_wgs_per_cu: 10,
+        local_mem_kib: 64,
+        vgpr_banks_per_cu: 1024, // 256 KiB VGPR file / CU = 1024 banks of 64x4B
+        gflops: 2867.0,
+        mem_bw_gbps: 240.0,
+        pcie_gbps: 7.0, // effective PCIe 3.0 x16 after protocol overhead
+        launch_overhead_us: 9.0,
+        relative_perf: 1.0,
+    };
+    Machine {
+        name: format!("i7-3930K + {n_gpus}x HD 7950"),
+        cpu: CpuSpec {
+            name: "Intel i7-3930K".to_string(),
+            sockets: 1,
+            cores_per_socket: 6,
+            l1_kib: 32,
+            l2_kib: 256,
+            cores_per_l2: 1,
+            l3_kib: 12288,
+            cores_per_l3: 6,
+            numa_nodes: 1,
+            // 3.2 GHz, AVX 8-wide FMA-less SNB-E: ~16 f32 FLOP/cycle.
+            gflops_per_core: 51.2,
+            mem_bw_gbps: 51.2, // quad-channel DDR3-1600
+            launch_overhead_us: 12.0,
+        },
+        gpus: (0..n_gpus).map(|_| gpu.clone()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opteron_core_count() {
+        let m = opteron_6272_quad();
+        assert_eq!(m.cpu.total_cores(), 64);
+        assert!(m.gpus.is_empty());
+    }
+
+    #[test]
+    fn i7_machine_shape() {
+        let m = i7_hd7950(2);
+        assert_eq!(m.cpu.total_cores(), 6);
+        assert_eq!(m.gpus.len(), 2);
+    }
+
+    #[test]
+    fn gpu_weights_normalized() {
+        let m = i7_hd7950(2);
+        let w = m.gpu_weights();
+        assert_eq!(w.len(), 2);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((w[0] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn heterogeneous_gpu_weights() {
+        let mut m = i7_hd7950(2);
+        m.gpus[1].relative_perf = 3.0;
+        let w = m.gpu_weights();
+        assert!((w[0] - 0.25).abs() < 1e-12);
+        assert!((w[1] - 0.75).abs() < 1e-12);
+    }
+}

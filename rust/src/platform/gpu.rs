@@ -1,0 +1,89 @@
+//! GPUExecutionPlatform: overlapped (multi-buffered) executions
+//! (Section 2.2, 3.2.2).
+//!
+//! The GPU platform supports the overlap of computation with communication:
+//! an overlap factor `o` means each GPU runs `o` concurrent SCT executions
+//! over distinct partitions, so the transfer of partition *k+1* hides behind
+//! the compute of partition *k*. `configurations()` exposes the two ordered
+//! candidate sets of Algorithm 1: overlap factors (natural order) and
+//! work-group sizes (non-increasing occupancy).
+
+use crate::platform::device::GpuSpec;
+use crate::platform::occupancy::{self, KernelFootprint};
+
+/// Maximum overlap factor explored by the profiler. The paper's search space
+/// is [1, inf); in practice occupancy of the candidate list is cut off by
+/// Algorithm 1's discard rule well before this bound.
+pub const MAX_OVERLAP: u32 = 8;
+
+/// The GPU execution platform for one device.
+#[derive(Clone, Debug)]
+pub struct GpuPlatform {
+    pub spec: GpuSpec,
+}
+
+impl GpuPlatform {
+    pub fn new(spec: GpuSpec) -> GpuPlatform {
+        GpuPlatform { spec }
+    }
+
+    /// Ordered overlap-factor candidates (natural order, Section 3.2.2).
+    pub fn overlap_candidates(&self) -> Vec<u32> {
+        (1..=MAX_OVERLAP).collect()
+    }
+
+    /// Ordered work-group-size candidates for a kernel footprint, filtered
+    /// by the occupancy threshold (default 0.8).
+    pub fn wgs_candidates(&self, fp: &KernelFootprint, threshold: f64) -> Vec<u32> {
+        occupancy::wgs_candidates(&self.spec, fp, threshold)
+    }
+
+    /// Occupancy for a particular work-group size.
+    pub fn occupancy(&self, fp: &KernelFootprint, wgs: u32) -> f64 {
+        occupancy::occupancy(&self.spec, fp, wgs)
+    }
+
+    /// Fraction of host<->device transfer time exposed (not hidden behind
+    /// compute) at overlap factor `o`: the first buffer's transfer is always
+    /// exposed; the remaining (o-1)/o of the stream overlaps compute.
+    pub fn exposed_transfer_fraction(&self, overlap: u32) -> f64 {
+        1.0 / overlap.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::device::i7_hd7950;
+
+    fn plat() -> GpuPlatform {
+        GpuPlatform::new(i7_hd7950(1).gpus[0].clone())
+    }
+
+    #[test]
+    fn overlap_candidates_natural_order() {
+        let c = plat().overlap_candidates();
+        assert_eq!(c[0], 1);
+        assert!(c.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn exposed_transfer_shrinks_with_overlap() {
+        let p = plat();
+        assert!((p.exposed_transfer_fraction(1) - 1.0).abs() < 1e-12);
+        assert!((p.exposed_transfer_fraction(4) - 0.25).abs() < 1e-12);
+        assert!(
+            p.exposed_transfer_fraction(2) > p.exposed_transfer_fraction(4)
+        );
+    }
+
+    #[test]
+    fn wgs_candidates_non_empty() {
+        let fp = KernelFootprint {
+            local_mem_base: 0,
+            local_mem_per_thread: 0,
+            regs_per_thread: 24,
+        };
+        assert!(!plat().wgs_candidates(&fp, 0.8).is_empty());
+    }
+}

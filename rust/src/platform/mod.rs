@@ -1,0 +1,12 @@
+//! Execution platforms (Section 2.2): device descriptions, the CPU platform
+//! with OpenCL-device-fission semantics, the GPU platform with overlapped
+//! (multi-buffered) executions, and the occupancy calculator.
+
+pub mod cpu;
+pub mod device;
+pub mod gpu;
+pub mod occupancy;
+
+pub use cpu::{CpuPlatform, FissionLevel};
+pub use device::{CpuSpec, DeviceKind, GpuSpec, Machine};
+pub use gpu::GpuPlatform;

@@ -1,0 +1,169 @@
+//! GPU kernel-occupancy calculator (Section 3.1, ref. [19] of the paper).
+//!
+//! Occupancy is computed from the usual constraining factors: number of
+//! work-groups per compute unit, local memory per work-group, and registers
+//! (private memory) per thread. The GPU platform uses it to order candidate
+//! work-group sizes by non-increasing occupancy and to filter candidates
+//! below the configurable threshold (default 80%).
+
+use crate::platform::device::GpuSpec;
+
+/// Per-kernel resource requirements (from the kernel interface spec).
+#[derive(Clone, Copy, Debug)]
+pub struct KernelFootprint {
+    /// Local (work-group shared) memory bytes per work-group, as a function
+    /// of work-group size: `base + per_thread * wgs`.
+    pub local_mem_base: u64,
+    pub local_mem_per_thread: u64,
+    /// Vector registers per thread.
+    pub regs_per_thread: u32,
+}
+
+impl KernelFootprint {
+    pub fn local_mem_bytes(&self, wgs: u32) -> u64 {
+        self.local_mem_base + self.local_mem_per_thread * wgs as u64
+    }
+}
+
+/// Fraction of the device's maximum resident wavefronts achieved by
+/// work-group size `wgs` for a kernel with footprint `fp` (0, 1].
+pub fn occupancy(gpu: &GpuSpec, fp: &KernelFootprint, wgs: u32) -> f64 {
+    if wgs == 0 || wgs > gpu.max_wg {
+        return 0.0;
+    }
+    let waves_per_wg = wgs.div_ceil(gpu.wavefront).max(1);
+
+    // Limit 1: resident work-groups per CU.
+    let wg_limit = gpu.max_wgs_per_cu;
+
+    // Limit 2: local memory.
+    let lm = fp.local_mem_bytes(wgs).max(1);
+    let lm_limit = (gpu.local_mem_kib * 1024 / lm) as u32;
+
+    // Limit 3: registers. VGPR file is vgpr_banks_per_cu banks of
+    // wavefront x 4 B; a wave needs regs_per_thread banks.
+    let waves_by_regs = if fp.regs_per_thread == 0 {
+        gpu.max_waves_per_cu
+    } else {
+        gpu.vgpr_banks_per_cu / fp.regs_per_thread
+    };
+    let reg_limit = waves_by_regs / waves_per_wg;
+
+    let wgs_per_cu = wg_limit.min(lm_limit).min(reg_limit);
+    let waves = (wgs_per_cu * waves_per_wg).min(gpu.max_waves_per_cu);
+    waves as f64 / gpu.max_waves_per_cu as f64
+}
+
+/// Candidate work-group sizes (powers of two times the wavefront, bounded by
+/// the device max), ordered by non-increasing occupancy as Algorithm 1
+/// requires; ties keep larger sizes first (fewer launches).
+pub fn wgs_candidates(gpu: &GpuSpec, fp: &KernelFootprint, threshold: f64) -> Vec<u32> {
+    let mut cands: Vec<u32> = {
+        let mut v = Vec::new();
+        let mut s = gpu.wavefront;
+        while s <= gpu.max_wg {
+            v.push(s);
+            s *= 2;
+        }
+        v
+    };
+    cands.sort_by(|&a, &b| {
+        let oa = occupancy(gpu, fp, a);
+        let ob = occupancy(gpu, fp, b);
+        ob.partial_cmp(&oa).unwrap().then(b.cmp(&a))
+    });
+    let above: Vec<u32> = cands
+        .iter()
+        .copied()
+        .filter(|&w| occupancy(gpu, fp, w) >= threshold)
+        .collect();
+    if above.is_empty() {
+        // Paper footnote 2: fall back to the best-occupancy size.
+        cands.into_iter().take(1).collect()
+    } else {
+        above
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::device::i7_hd7950;
+
+    fn light() -> KernelFootprint {
+        KernelFootprint {
+            local_mem_base: 0,
+            local_mem_per_thread: 0,
+            regs_per_thread: 16,
+        }
+    }
+
+    #[test]
+    fn light_kernel_reaches_full_occupancy() {
+        let gpu = &i7_hd7950(1).gpus[0];
+        // 256-thread WGs: 4 waves/wg, 10 wgs allowed -> 40 waves = max.
+        assert!((occupancy(gpu, &light(), 256) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn small_wg_limited_by_wg_slots() {
+        let gpu = &i7_hd7950(1).gpus[0];
+        // 64-thread WGs: 1 wave/wg, max 10 wgs -> 10 waves / 40 = 0.25.
+        assert!((occupancy(gpu, &light(), 64) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn local_memory_constrains() {
+        let gpu = &i7_hd7950(1).gpus[0];
+        let heavy = KernelFootprint {
+            local_mem_base: 32 * 1024, // 32 KiB/WG -> 2 WGs per 64 KiB CU
+            local_mem_per_thread: 0,
+            regs_per_thread: 16,
+        };
+        // 256-thread WGs: 2 wgs x 4 waves = 8 waves -> 0.2.
+        assert!((occupancy(gpu, &heavy, 256) - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn register_pressure_constrains() {
+        let gpu = &i7_hd7950(1).gpus[0];
+        let regs = KernelFootprint {
+            local_mem_base: 0,
+            local_mem_per_thread: 0,
+            regs_per_thread: 128, // 1024/128 = 8 waves by regs
+        };
+        // 256-thread WG = 4 waves -> 2 wgs -> 8 waves -> 0.2.
+        assert!((occupancy(gpu, &regs, 256) - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn candidates_ordered_by_occupancy() {
+        let gpu = &i7_hd7950(1).gpus[0];
+        let c = wgs_candidates(gpu, &light(), 0.8);
+        assert_eq!(c[0], 256); // only full-occupancy candidate
+        assert!(!c.is_empty());
+        let occs: Vec<f64> = c.iter().map(|&w| occupancy(gpu, &light(), w)).collect();
+        for pair in occs.windows(2) {
+            assert!(pair[0] >= pair[1]);
+        }
+    }
+
+    #[test]
+    fn fallback_when_nothing_clears_threshold() {
+        let gpu = &i7_hd7950(1).gpus[0];
+        let heavy = KernelFootprint {
+            local_mem_base: 60 * 1024,
+            local_mem_per_thread: 0,
+            regs_per_thread: 200,
+        };
+        let c = wgs_candidates(gpu, &heavy, 0.8);
+        assert_eq!(c.len(), 1); // best-occupancy fallback
+    }
+
+    #[test]
+    fn zero_and_oversize_wgs_rejected() {
+        let gpu = &i7_hd7950(1).gpus[0];
+        assert_eq!(occupancy(gpu, &light(), 0), 0.0);
+        assert_eq!(occupancy(gpu, &light(), 1024), 0.0);
+    }
+}

@@ -1,0 +1,208 @@
+//! Artifact manifest: the contract between the Python AOT pipeline and this
+//! runtime (`artifacts/manifest.json`, written by `python/compile/aot.py`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Input/output tensor declaration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<u64>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> u64 {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<IoSpec> {
+        Ok(IoSpec {
+            name: v.get("name")?.as_str().unwrap_or("").to_string(),
+            shape: v
+                .get("shape")?
+                .as_arr()
+                .ok_or_else(|| Error::Artifact("shape not array".into()))?
+                .iter()
+                .filter_map(|d| d.as_u64())
+                .collect(),
+            dtype: v.get("dtype")?.as_str().unwrap_or("f32").to_string(),
+        })
+    }
+}
+
+/// One AOT-lowered artifact (a fixed chunk shape of one kernel family).
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub family: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// Units of the partition domain consumed per launch.
+    pub chunk_units: u64,
+    /// Analytic cost counts for the simulator.
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+/// The parsed manifest, indexed by family.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub by_family: BTreeMap<String, Vec<ArtifactInfo>>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {}/manifest.json ({e}); run `make artifacts`",
+                dir.display()
+            ))
+        })?;
+        let v = Json::parse(&text)?;
+        let format = v.get("format")?.as_u64().unwrap_or(0);
+        if format != 1 {
+            return Err(Error::Artifact(format!("unsupported format {format}")));
+        }
+        let mut by_family: BTreeMap<String, Vec<ArtifactInfo>> = BTreeMap::new();
+        for a in v
+            .get("artifacts")?
+            .as_arr()
+            .ok_or_else(|| Error::Artifact("artifacts not array".into()))?
+        {
+            let info = ArtifactInfo {
+                name: a.get("name")?.as_str().unwrap_or("").to_string(),
+                family: a.get("family")?.as_str().unwrap_or("").to_string(),
+                file: dir.join(a.get("file")?.as_str().unwrap_or("")),
+                inputs: a
+                    .get("inputs")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .get("outputs")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                chunk_units: a.get("chunk_units")?.as_u64().unwrap_or(1),
+                flops: a.get("flops")?.as_f64().unwrap_or(0.0),
+                bytes: a.get("bytes")?.as_f64().unwrap_or(0.0),
+            };
+            by_family.entry(info.family.clone()).or_default().push(info);
+        }
+        // Sort each family's menu by chunk size ascending.
+        for v in by_family.values_mut() {
+            v.sort_by_key(|a| a.chunk_units);
+        }
+        Ok(Manifest {
+            by_family,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Default repo location: `$MARROW_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Manifest> {
+        let dir = std::env::var("MARROW_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"));
+        Manifest::load(&dir)
+    }
+
+    /// Artifacts of a family, chunk-size ascending.
+    pub fn family(&self, family: &str) -> Result<&[ArtifactInfo]> {
+        self.by_family
+            .get(family)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| Error::Artifact(format!("no artifacts for family '{family}'")))
+    }
+
+    /// Smallest chunk of a family — the decomposition quantum contribution.
+    pub fn chunk_quantum(&self, family: &str) -> Result<u64> {
+        Ok(self.family(family)?[0].chunk_units)
+    }
+
+    /// The largest artifact of `family` whose chunk divides `units`, falling
+    /// back to the smallest chunk (the executor loops it).
+    pub fn best_chunk(&self, family: &str, units: u64) -> Result<&ArtifactInfo> {
+        let menu = self.family(family)?;
+        Ok(menu
+            .iter()
+            .rev()
+            .find(|a| units >= a.chunk_units && units % a.chunk_units == 0)
+            .unwrap_or(&menu[0]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_from(text: &str, dir: &Path) -> Manifest {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        Manifest::load(dir).unwrap()
+    }
+
+    fn sample() -> String {
+        r#"{"format": 1, "artifacts": [
+            {"name": "saxpy_n4096", "family": "saxpy", "file": "a.hlo.txt",
+             "chunk_units": 4096, "flops": 8192, "bytes": 49152,
+             "inputs": [{"name": "alpha", "shape": [1], "dtype": "f32"}],
+             "outputs": [{"name": "out", "shape": [4096], "dtype": "f32"}]},
+            {"name": "saxpy_n32768", "family": "saxpy", "file": "b.hlo.txt",
+             "chunk_units": 32768, "flops": 65536, "bytes": 393216,
+             "inputs": [], "outputs": []}
+        ]}"#
+        .to_string()
+    }
+
+    #[test]
+    fn loads_and_indexes_by_family() {
+        let dir = std::env::temp_dir().join("marrow_test_manifest_1");
+        let m = manifest_from(&sample(), &dir);
+        assert_eq!(m.family("saxpy").unwrap().len(), 2);
+        assert_eq!(m.chunk_quantum("saxpy").unwrap(), 4096);
+        assert!(m.family("nope").is_err());
+    }
+
+    #[test]
+    fn best_chunk_prefers_largest_dividing() {
+        let dir = std::env::temp_dir().join("marrow_test_manifest_2");
+        let m = manifest_from(&sample(), &dir);
+        assert_eq!(m.best_chunk("saxpy", 65536).unwrap().chunk_units, 32768);
+        assert_eq!(m.best_chunk("saxpy", 8192).unwrap().chunk_units, 4096);
+        // Nothing divides 1000 -> fall back to smallest.
+        assert_eq!(m.best_chunk("saxpy", 1000).unwrap().chunk_units, 4096);
+    }
+
+    #[test]
+    fn real_manifest_loads_when_built() {
+        // Integration-lite: if `make artifacts` has run, the real manifest
+        // must parse and contain all five benchmark families.
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        for fam in [
+            "saxpy",
+            "filter_pipeline",
+            "fft_roundtrip",
+            "nbody_accel",
+            "segmentation",
+        ] {
+            assert!(m.family(fam).is_ok(), "missing family {fam}");
+        }
+    }
+}

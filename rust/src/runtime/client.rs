@@ -1,0 +1,127 @@
+//! PJRT client wrapper with an executable cache.
+//!
+//! HLO *text* is the interchange format (see /opt/xla-example/README.md):
+//! jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; `HloModuleProto::from_text_file` reassigns
+//! ids and round-trips cleanly.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::runtime::artifacts::ArtifactInfo;
+
+/// A compiled-executable cache keyed by artifact name over one PJRT CPU
+/// client. Compilation happens once per artifact per process (measured in
+/// the perf pass: ~10-200 ms each, far too slow for the request path).
+pub struct RtClient {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl RtClient {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<RtClient> {
+        Ok(RtClient {
+            client: xla::PjRtClient::cpu()?,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text file (uncached).
+    pub fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact(format!("bad path {path:?}")))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Get (or compile and cache) the executable for an artifact.
+    pub fn executable(
+        &self,
+        info: &ArtifactInfo,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(e) = cache.get(&info.name) {
+                return Ok(e.clone());
+            }
+        }
+        let exe = std::sync::Arc::new(self.compile_file(&info.file)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(info.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Execute with literal inputs; returns the flattened output tuple.
+    /// (AOT lowering uses `return_tuple=True`, so the root is always a
+    /// tuple — unpacked here into its leaves.)
+    pub fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Build an f32 literal of the given logical shape from a host slice.
+pub fn literal_f32(data: &[f32], shape: &[u64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given logical shape.
+pub fn literal_i32(data: &[i32], shape: &[u64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Extract an f32 buffer from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Real-PJRT tests live in rust/tests/runtime_integration.rs (they need
+    // `make artifacts`); here we only cover the literal helpers.
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = literal_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), data.to_vec());
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let lit = literal_i32(&[7, 8], &[2]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_fails() {
+        assert!(literal_f32(&[1.0, 2.0, 3.0], &[2, 2]).is_err());
+    }
+}

@@ -1,0 +1,391 @@
+//! Real-mode partition executor: runs an SCT over one partition as a
+//! sequence of AOT-chunk PJRT launches (the hot path of the system).
+//!
+//! A partition of `units` epu units executes as `units / chunk_units`
+//! launches of the largest artifact chunk that divides it (super-chunk
+//! selection amortizes the per-launch overhead; see EXPERIMENTS.md §Perf).
+//! Intermediate vectors between pipeline stages stay in host buffers owned
+//! by this runner — the locality-aware decomposition guarantees consecutive
+//! kernels see identical partitionings, so no re-partitioning happens
+//! between stages.
+
+use crate::data::vector::{ArgValue, ScalarTrait, VectorArg};
+use crate::error::{Error, Result};
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::client::{literal_f32, literal_i32, to_vec_f32, RtClient};
+use crate::sct::{KernelSpec, ParamSpec, Sct};
+
+/// Execution mode: real PJRT numerics or simulated (cost-model) timing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    Real,
+    Simulated,
+}
+
+/// Request-level arguments: vectors (partitioned or COPY) and scalars, both
+/// consumed positionally by the kernel parameter declarations.
+#[derive(Clone, Debug, Default)]
+pub struct RequestArgs {
+    pub vectors: Vec<VectorArg>,
+    pub scalars: Vec<f64>,
+}
+
+/// Chunk-looping executor over one PJRT client.
+pub struct ChunkRunner<'a> {
+    pub client: &'a RtClient,
+    pub manifest: &'a Manifest,
+    /// Counters for the perf pass.
+    pub launches: std::cell::Cell<u64>,
+    /// Adaptive chunk selection: measured (total seconds, total units) per
+    /// artifact. Largest-chunk-first is only a prior — interpret-lowered
+    /// grids make per-unit cost non-monotonic in chunk size, so the runner
+    /// explores untimed candidates once and then picks the measured best
+    /// (EXPERIMENTS.md §Perf, iteration 2). Shared so the knowledge
+    /// persists across requests (the scheduler owns it).
+    timings: TimingCache,
+}
+
+/// Shared per-artifact timing knowledge, keyed by artifact name.
+pub type TimingCache =
+    std::sync::Arc<std::sync::Mutex<std::collections::HashMap<String, (f64, u64)>>>;
+
+impl<'a> ChunkRunner<'a> {
+    pub fn new(client: &'a RtClient, manifest: &'a Manifest) -> ChunkRunner<'a> {
+        ChunkRunner {
+            client,
+            manifest,
+            launches: std::cell::Cell::new(0),
+            timings: TimingCache::default(),
+        }
+    }
+
+    /// Share an existing timing cache (the scheduler passes its own so the
+    /// adaptive chunk selection learns across requests).
+    pub fn with_timings(mut self, timings: TimingCache) -> Self {
+        self.timings = timings;
+        self
+    }
+
+    /// Execute an SCT over the unit range [start, start+units). Returns the
+    /// final output buffers (one per kernel output), concatenated across
+    /// chunks in unit order.
+    ///
+    /// Handles Kernel, Pipeline (stage chaining), Map (transparent) and
+    /// non-global-sync Loop; request-level skeleton stages (global-sync
+    /// loops, reductions, merging) belong to the scheduler.
+    pub fn run_tree(
+        &self,
+        sct: &Sct,
+        args: &RequestArgs,
+        start_unit: u64,
+        units: u64,
+    ) -> Result<Vec<ArgValue>> {
+        match sct {
+            Sct::Kernel(k) => self.run_kernel(k, args, None, start_unit, units),
+            Sct::Map(inner) => self.run_tree(inner, args, start_unit, units),
+            Sct::Pipeline(stages) => {
+                let mut carried: Option<ArgValue> = None;
+                let mut cursor = ArgCursor::default();
+                let mut outs = Vec::new();
+                for stage in stages {
+                    let k = match stage {
+                        Sct::Kernel(k) => k,
+                        _ => {
+                            return Err(Error::Spec(
+                                "nested non-kernel pipeline stages are executed \
+                                 via scheduler-level traversal"
+                                    .into(),
+                            ))
+                        }
+                    };
+                    outs = self.run_kernel_with_cursor(
+                        k,
+                        args,
+                        carried.take(),
+                        start_unit,
+                        units,
+                        &mut cursor,
+                    )?;
+                    carried = Some(outs[0].clone());
+                }
+                Ok(outs)
+            }
+            Sct::Loop { body, state } => {
+                if state.global_sync {
+                    return Err(Error::Spec(
+                        "global-sync Loop must be driven by the scheduler".into(),
+                    ));
+                }
+                let mut outs = Vec::new();
+                let mut local = args.clone();
+                for it in 0..state.max_iters {
+                    outs = self.run_tree(body, &local, start_unit, units)?;
+                    if let Some(update) = &state.update {
+                        let mut vecs: Vec<ArgValue> = local
+                            .vectors
+                            .iter()
+                            .map(|v| v.value.clone())
+                            .collect();
+                        let go = update(it, &mut vecs, &outs);
+                        for (v, nv) in local.vectors.iter_mut().zip(vecs) {
+                            v.value = nv;
+                        }
+                        if !go {
+                            break;
+                        }
+                    }
+                }
+                Ok(outs)
+            }
+            Sct::MapReduce { map, .. } => {
+                // Reduction handled at the request level by the scheduler;
+                // per-partition we produce the map stage's partials.
+                self.run_tree(map, args, start_unit, units)
+            }
+        }
+    }
+
+    fn run_kernel(
+        &self,
+        k: &KernelSpec,
+        args: &RequestArgs,
+        carried: Option<ArgValue>,
+        start_unit: u64,
+        units: u64,
+    ) -> Result<Vec<ArgValue>> {
+        let mut cursor = ArgCursor::default();
+        self.run_kernel_with_cursor(k, args, carried, start_unit, units, &mut cursor)
+    }
+
+    /// Execute one kernel leaf over the unit range, consuming request args
+    /// through `cursor`. When `carried` is set (pipeline chaining), the
+    /// kernel's first VecIn binds to it instead of a request vector.
+    fn run_kernel_with_cursor(
+        &self,
+        k: &KernelSpec,
+        args: &RequestArgs,
+        carried: Option<ArgValue>,
+        start_unit: u64,
+        units: u64,
+        cursor: &mut ArgCursor,
+    ) -> Result<Vec<ArgValue>> {
+        let mut carried = carried;
+
+        // Pre-resolve which request vector each param uses (cursor order).
+        let param_binds = self.bind_params(k, args, cursor, carried.is_some())?;
+
+        // Pick the largest artifact chunk that divides the partition AND
+        // whose fixed input shapes match the bound arguments (COPY-mode
+        // vectors pin the artifact variant, e.g. nbody's body-set size).
+        let info = self.pick_artifact(k, args, &param_binds, units)?;
+        let exe = self.client.executable(info)?;
+        let chunk = info.chunk_units;
+        let n_chunks = units / chunk;
+        let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); info.outputs.len()];
+
+        for c in 0..n_chunks {
+            let off = start_unit + c * chunk;
+            let mut literals = Vec::with_capacity(k.params.len());
+            for (p, bind) in k.params.iter().zip(&param_binds) {
+                let lit = match (p, bind) {
+                    (ParamSpec::VecIn, Bind::Carried) => {
+                        let buf = carried.as_ref().unwrap().as_f32()?;
+                        let epu = k.elems_per_unit as usize;
+                        let local = (off - start_unit) as usize * epu;
+                        let len = chunk as usize * epu;
+                        let spec = &info.inputs[literals.len()];
+                        literal_f32(&buf[local..local + len], &spec.shape)?
+                    }
+                    (ParamSpec::VecIn, Bind::Vector(i)) => {
+                        let v = &args.vectors[*i];
+                        let sl = v.slice_units(off, chunk)?;
+                        let spec = &info.inputs[literals.len()];
+                        literal_f32(sl.as_f32()?, &spec.shape)?
+                    }
+                    (ParamSpec::VecCopy, Bind::Vector(i)) => {
+                        let v = &args.vectors[*i];
+                        let spec = &info.inputs[literals.len()];
+                        literal_f32(v.value.as_f32()?, &spec.shape)?
+                    }
+                    (ParamSpec::ScalarF32(tr), Bind::Scalar(i)) => {
+                        let base = args.scalars.get(*i).copied().unwrap_or(0.0);
+                        let val = scalar_value(*tr, base, off, chunk, k) as f32;
+                        let spec = &info.inputs[literals.len()];
+                        literal_f32(&[val], &spec.shape)?
+                    }
+                    (ParamSpec::ScalarI32(tr), Bind::Scalar(i)) => {
+                        let base = args.scalars.get(*i).copied().unwrap_or(0.0);
+                        let val = scalar_value(*tr, base, off, chunk, k) as i32;
+                        let spec = &info.inputs[literals.len()];
+                        literal_i32(&[val], &spec.shape)?
+                    }
+                    (p, b) => {
+                        return Err(Error::Spec(format!(
+                            "inconsistent binding {b:?} for param {p:?}"
+                        )))
+                    }
+                };
+                literals.push(lit);
+            }
+            let t0 = std::time::Instant::now();
+            let outs = self.client.run(&exe, &literals)?;
+            let dt = t0.elapsed().as_secs_f64();
+            {
+                let mut tm = self.timings.lock().unwrap();
+                let e = tm.entry(info.name.clone()).or_insert((0.0, 0));
+                e.0 += dt;
+                e.1 += chunk;
+            }
+            self.launches.set(self.launches.get() + 1);
+            for (slot, lit) in outputs.iter_mut().zip(&outs) {
+                slot.extend_from_slice(&to_vec_f32(lit)?);
+            }
+        }
+        // NBody-style chunk offsets are relative to the partition for the
+        // carried buffer but absolute for Offset scalars — handled above.
+        let _ = carried.take();
+        Ok(outputs.into_iter().map(ArgValue::F32).collect())
+    }
+
+    /// Artifact selection under the chunk-menu constraint (DESIGN.md §1.2).
+    fn pick_artifact(
+        &self,
+        k: &KernelSpec,
+        args: &RequestArgs,
+        binds: &[Bind],
+        units: u64,
+    ) -> Result<&crate::runtime::artifacts::ArtifactInfo> {
+        let menu = self.manifest.family(&k.family)?;
+        let mut valid: Vec<&crate::runtime::artifacts::ArtifactInfo> = Vec::new();
+        'menu: for info in menu.iter().rev() {
+            if units % info.chunk_units != 0 || units < info.chunk_units {
+                continue;
+            }
+            for ((p, bind), spec) in k.params.iter().zip(binds).zip(&info.inputs) {
+                let want = spec.elems();
+                let ok = match (p, bind) {
+                    (ParamSpec::VecIn, Bind::Carried) => {
+                        want == info.chunk_units * k.elems_per_unit
+                    }
+                    (ParamSpec::VecIn, Bind::Vector(i)) => {
+                        want == info.chunk_units * args.vectors[*i].elems_per_unit
+                    }
+                    (ParamSpec::VecCopy, Bind::Vector(i)) => {
+                        want == args.vectors[*i].value.len() as u64
+                    }
+                    _ => true, // scalars: shape (1,) or small fixed vectors
+                };
+                if !ok {
+                    continue 'menu;
+                }
+            }
+            valid.push(info);
+        }
+        // Exploration: any untimed candidate (largest first) gets tried once;
+        // exploitation: otherwise the measured-best per-unit cost wins.
+        if !valid.is_empty() {
+            let timings = self.timings.lock().unwrap();
+            if let Some(untimed) = valid.iter().find(|i| !timings.contains_key(&i.name)) {
+                return Ok(untimed);
+            }
+            return Ok(valid
+                .iter()
+                .min_by(|a, b| {
+                    let pa = timings[&a.name];
+                    let pb = timings[&b.name];
+                    (pa.0 / pa.1 as f64)
+                        .partial_cmp(&(pb.0 / pb.1 as f64))
+                        .unwrap()
+                })
+                .unwrap());
+        }
+        Err(Error::Artifact(format!(
+            "no artifact of family '{}' matches partition of {units} units \
+             (menu: {:?})",
+            k.family,
+            menu.iter().map(|a| a.chunk_units).collect::<Vec<_>>()
+        )))
+    }
+
+    fn bind_params(
+        &self,
+        k: &KernelSpec,
+        args: &RequestArgs,
+        cursor: &mut ArgCursor,
+        has_carried: bool,
+    ) -> Result<Vec<Bind>> {
+        let mut binds = Vec::with_capacity(k.params.len());
+        let mut first_vecin = true;
+        for p in &k.params {
+            let b = match p {
+                ParamSpec::VecIn | ParamSpec::VecCopy => {
+                    if matches!(p, ParamSpec::VecIn) && first_vecin && has_carried {
+                        first_vecin = false;
+                        Bind::Carried
+                    } else {
+                        if matches!(p, ParamSpec::VecIn) {
+                            first_vecin = false;
+                        }
+                        let i = cursor.vec;
+                        if i >= args.vectors.len() {
+                            return Err(Error::Spec(format!(
+                                "kernel {} needs vector arg #{i} but request \
+                                 has {}",
+                                k.family,
+                                args.vectors.len()
+                            )));
+                        }
+                        cursor.vec += 1;
+                        Bind::Vector(i)
+                    }
+                }
+                ParamSpec::ScalarF32(_) | ParamSpec::ScalarI32(_) => {
+                    let i = cursor.scalar;
+                    cursor.scalar += 1;
+                    Bind::Scalar(i)
+                }
+            };
+            binds.push(b);
+        }
+        Ok(binds)
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct ArgCursor {
+    vec: usize,
+    scalar: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Bind {
+    Vector(usize),
+    Scalar(usize),
+    Carried,
+}
+
+fn scalar_value(tr: ScalarTrait, base: f64, off: u64, chunk: u64, k: &KernelSpec) -> f64 {
+    match tr {
+        ScalarTrait::Bound => base,
+        ScalarTrait::Size => (chunk * k.elems_per_unit) as f64,
+        ScalarTrait::Offset => off as f64,
+        ScalarTrait::SeededOffset => base + off as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_traits_resolve() {
+        let k = KernelSpec::new("f", vec![], 512);
+        assert_eq!(scalar_value(ScalarTrait::Bound, 3.5, 10, 8, &k), 3.5);
+        assert_eq!(scalar_value(ScalarTrait::Size, 0.0, 10, 8, &k), 4096.0);
+        assert_eq!(scalar_value(ScalarTrait::Offset, 0.0, 10, 8, &k), 10.0);
+        assert_eq!(
+            scalar_value(ScalarTrait::SeededOffset, 100.0, 10, 8, &k),
+            110.0
+        );
+    }
+}

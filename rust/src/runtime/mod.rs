@@ -1,0 +1,11 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them on
+//! the CPU PJRT client. Python is never on this path — the Rust binary is
+//! self-contained once `make artifacts` has produced `artifacts/`.
+
+pub mod artifacts;
+pub mod client;
+pub mod exec;
+
+pub use artifacts::{ArtifactInfo, Manifest};
+pub use client::RtClient;
+pub use exec::{ChunkRunner, ExecMode};

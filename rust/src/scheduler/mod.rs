@@ -1,0 +1,212 @@
+//! The Scheduler + Task Launcher (Section 2.2): distributes an SCT
+//! execution among the selected hardware, generating one task per parallel
+//! execution slot, placed in per-slot work queues consumed by the launcher.
+//!
+//! Two execution environments implement [`ExecEnv`]:
+//!  * [`SimEnv`] — prices executions with the analytic cost model
+//!    ([`crate::sim`]); used by the paper-scale benches and by the tuner.
+//!  * [`real::RealScheduler`] — executes partitions on the PJRT client with
+//!    real numerics and wall-clock times.
+
+pub mod queues;
+pub mod real;
+
+use crate::decompose::{decompose, DecomposeConfig, PartitionPlan};
+use crate::error::Result;
+use crate::platform::cpu::CpuPlatform;
+use crate::platform::device::Machine;
+use crate::platform::occupancy;
+use crate::sct::Sct;
+use crate::sim::cost::SctCost;
+use crate::sim::machine::SimMachine;
+use crate::tuner::profile::FrameworkConfig;
+
+pub use queues::{Task, WorkQueues};
+
+/// Result of one SCT execution request, as seen by the adaptation layer.
+#[derive(Clone, Debug)]
+pub struct ExecOutcome {
+    /// Completion time (seconds — virtual in Sim, wall in Real).
+    pub total: f64,
+    /// Per-device-type completion times.
+    pub cpu_time: f64,
+    pub gpu_time: f64,
+    /// Per-slot times of every *active* parallel execution.
+    pub slot_times: Vec<f64>,
+}
+
+/// An execution environment the tuner/balancer can drive.
+pub trait ExecEnv {
+    fn machine(&self) -> &Machine;
+
+    /// Decomposition quantum contributed by the AOT chunk menu for this SCT
+    /// (1 when everything is simulated).
+    fn chunk_quantum(&self, sct: &Sct) -> u64;
+
+    /// Execute the SCT over `total_units` under `cfg`, returning timings.
+    fn execute(
+        &mut self,
+        sct: &Sct,
+        total_units: u64,
+        cfg: &FrameworkConfig,
+    ) -> Result<ExecOutcome>;
+}
+
+/// Build the decomposition config for a framework configuration.
+pub fn decompose_config(
+    machine: &Machine,
+    cfg: &FrameworkConfig,
+    chunk_quantum: u64,
+) -> DecomposeConfig {
+    let cpu = CpuPlatform::new(machine.cpu.clone());
+    DecomposeConfig {
+        cpu_subdevices: cpu.subdevice_count(cfg.fission),
+        gpu_overlap: cfg.overlap.clone(),
+        gpu_weights: machine.gpu_weights(),
+        cpu_share: cfg.cpu_share,
+        wgs: cfg.wgs,
+        chunk_quantum,
+    }
+}
+
+/// Plan an execution request (shared by both environments).
+pub fn plan(
+    machine: &Machine,
+    sct: &Sct,
+    total_units: u64,
+    cfg: &FrameworkConfig,
+    chunk_quantum: u64,
+) -> Result<PartitionPlan> {
+    decompose(
+        sct,
+        total_units,
+        &decompose_config(machine, cfg, chunk_quantum),
+    )
+}
+
+/// The simulated environment: cost model + virtual clock.
+pub struct SimEnv {
+    pub sim: SimMachine,
+    /// COPY-mode bytes of the current request (replicated per device).
+    pub copy_bytes: f64,
+    /// Chunk granularity for launch-overhead accounting.
+    pub chunk_units: u64,
+}
+
+impl SimEnv {
+    pub fn new(sim: SimMachine) -> SimEnv {
+        SimEnv {
+            sim,
+            copy_bytes: 0.0,
+            chunk_units: 4096,
+        }
+    }
+
+    /// Kernel occupancy at the configured work-group size (uses the first
+    /// kernel's footprint; the paper computes per-kernel occupancy but
+    /// configures a single wgs dimension per SCT in Algorithm 1).
+    fn occupancy(&self, sct: &Sct, cfg: &FrameworkConfig) -> f64 {
+        if self.sim.machine.gpus.is_empty() {
+            return 1.0;
+        }
+        let fp = sct.kernels().first().map(|k| k.footprint).unwrap_or(
+            occupancy::KernelFootprint {
+                local_mem_base: 0,
+                local_mem_per_thread: 0,
+                regs_per_thread: 24,
+            },
+        );
+        occupancy::occupancy(&self.sim.machine.gpus[0], &fp, cfg.wgs)
+    }
+}
+
+impl ExecEnv for SimEnv {
+    fn machine(&self) -> &Machine {
+        &self.sim.machine
+    }
+
+    fn chunk_quantum(&self, _sct: &Sct) -> u64 {
+        1
+    }
+
+    fn execute(
+        &mut self,
+        sct: &Sct,
+        total_units: u64,
+        cfg: &FrameworkConfig,
+    ) -> Result<ExecOutcome> {
+        let p = plan(&self.sim.machine, sct, total_units, cfg, 1)?;
+        let cost = SctCost::from_sct(sct, self.copy_bytes);
+        let occ = self.occupancy(sct, cfg);
+        let out = self
+            .sim
+            .execute(&p, &cost, cfg.fission, occ, &cfg.overlap, self.chunk_units);
+        Ok(ExecOutcome {
+            total: out.total,
+            cpu_time: out.cpu_time,
+            gpu_time: out.gpu_time,
+            slot_times: out
+                .slot_times
+                .iter()
+                .copied()
+                .filter(|&t| t > 0.0)
+                .collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::cpu::FissionLevel;
+    use crate::platform::device::i7_hd7950;
+    use crate::sct::{KernelSpec, ParamSpec};
+
+    fn saxpy() -> Sct {
+        let mut k = KernelSpec::new("saxpy", vec![ParamSpec::VecIn], 1);
+        k.flops_per_unit = 2.0;
+        k.bytes_per_unit = 12.0;
+        Sct::kernel(k)
+    }
+
+    fn cfg(share: f64) -> FrameworkConfig {
+        FrameworkConfig {
+            fission: FissionLevel::L2,
+            overlap: vec![4],
+            wgs: 256,
+            cpu_share: share,
+        }
+    }
+
+    #[test]
+    fn sim_env_executes_and_times() {
+        let mut env = SimEnv::new(SimMachine::new(i7_hd7950(1), 42));
+        let out = env.execute(&saxpy(), 1 << 22, &cfg(0.25)).unwrap();
+        assert!(out.total > 0.0);
+        assert!(out.cpu_time > 0.0 && out.gpu_time > 0.0);
+        assert!(!out.slot_times.is_empty());
+        assert!((out.total - out.cpu_time.max(out.gpu_time)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn more_gpu_share_speeds_up_gpu_favored_workload() {
+        let mut env = SimEnv::new(SimMachine::new(i7_hd7950(1), 1));
+        let t_hi_cpu = env.execute(&saxpy(), 1 << 24, &cfg(0.8)).unwrap().total;
+        let t_lo_cpu = env.execute(&saxpy(), 1 << 24, &cfg(0.25)).unwrap().total;
+        assert!(t_lo_cpu < t_hi_cpu);
+    }
+
+    #[test]
+    fn plan_respects_machine_topology() {
+        let m = i7_hd7950(2);
+        let c = FrameworkConfig {
+            fission: FissionLevel::L1,
+            overlap: vec![4, 4],
+            wgs: 256,
+            cpu_share: 0.2,
+        };
+        let p = plan(&m, &saxpy(), 1 << 20, &c, 1).unwrap();
+        // 6 cpu subdevices + 8 gpu slots.
+        assert_eq!(p.partitions.len(), 14);
+    }
+}

@@ -1,0 +1,140 @@
+//! Work queues and tasks (Section 2.2: "a group of tasks placed in a set of
+//! work queues — one per parallel execution").
+//!
+//! The launcher consumes queues in round-robin order. On the paper's
+//! hardware each queue drains on its own device concurrently; the PJRT CPU
+//! client binding is single-threaded, so the Real scheduler preserves queue
+//! *semantics* (ordering, per-slot accounting) with deterministic
+//! round-robin draining, and per-slot times come from per-task wall clocks.
+
+use std::collections::VecDeque;
+
+use crate::decompose::{ExecSlot, Partition, PartitionPlan};
+
+/// One task: execute the SCT over a partition on a slot.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Task {
+    pub partition: Partition,
+    /// Sequence number within the request (stable ordering for merges).
+    pub seq: usize,
+}
+
+/// Per-slot FIFO work queues.
+#[derive(Clone, Debug, Default)]
+pub struct WorkQueues {
+    queues: Vec<(ExecSlot, VecDeque<Task>)>,
+}
+
+impl WorkQueues {
+    /// Build the queues for a partition plan: one queue per parallel
+    /// execution slot, holding that slot's (single) task. Empty partitions
+    /// produce no task.
+    pub fn from_plan(plan: &PartitionPlan) -> WorkQueues {
+        let mut queues: Vec<(ExecSlot, VecDeque<Task>)> = Vec::new();
+        for (seq, part) in plan.partitions.iter().enumerate() {
+            let q = match queues.iter_mut().find(|(s, _)| *s == part.slot) {
+                Some((_, q)) => q,
+                None => {
+                    queues.push((part.slot, VecDeque::new()));
+                    &mut queues.last_mut().unwrap().1
+                }
+            };
+            if part.units > 0 {
+                q.push_back(Task {
+                    partition: *part,
+                    seq,
+                });
+            }
+        }
+        WorkQueues { queues }
+    }
+
+    pub fn n_queues(&self) -> usize {
+        self.queues.len()
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.queues.iter().map(|(_, q)| q.len()).sum()
+    }
+
+    /// Round-robin drain: repeatedly take the front task of each non-empty
+    /// queue. Returns tasks in a deterministic interleaving.
+    pub fn drain_round_robin(&mut self) -> Vec<Task> {
+        let mut out = Vec::with_capacity(self.n_tasks());
+        loop {
+            let mut any = false;
+            for (_, q) in self.queues.iter_mut() {
+                if let Some(t) = q.pop_front() {
+                    out.push(t);
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decompose::{decompose, DecomposeConfig};
+    use crate::sct::{KernelSpec, ParamSpec, Sct};
+
+    fn plan() -> PartitionPlan {
+        let sct = Sct::kernel(KernelSpec::new("k", vec![ParamSpec::VecIn], 1));
+        decompose(
+            &sct,
+            4096,
+            &DecomposeConfig {
+                cpu_subdevices: 4,
+                gpu_overlap: vec![2],
+                gpu_weights: vec![1.0],
+                cpu_share: 0.5,
+                wgs: 1,
+                chunk_quantum: 1,
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn one_queue_per_slot() {
+        let q = WorkQueues::from_plan(&plan());
+        assert_eq!(q.n_queues(), 6); // 4 cpu + 2 gpu slots
+        assert_eq!(q.n_tasks(), 6);
+    }
+
+    #[test]
+    fn drain_is_deterministic_and_complete() {
+        let mut a = WorkQueues::from_plan(&plan());
+        let mut b = WorkQueues::from_plan(&plan());
+        let ta = a.drain_round_robin();
+        let tb = b.drain_round_robin();
+        assert_eq!(ta, tb);
+        assert_eq!(ta.len(), 6);
+        assert_eq!(a.n_tasks(), 0);
+    }
+
+    #[test]
+    fn empty_partitions_create_no_tasks() {
+        let sct = Sct::kernel(KernelSpec::new("k", vec![ParamSpec::VecIn], 1));
+        let p = decompose(
+            &sct,
+            2,
+            &DecomposeConfig {
+                cpu_subdevices: 8,
+                gpu_overlap: vec![],
+                gpu_weights: vec![],
+                cpu_share: 1.0,
+                wgs: 1,
+                chunk_quantum: 1,
+            },
+        )
+        .unwrap();
+        let q = WorkQueues::from_plan(&p);
+        assert!(q.n_tasks() <= 2);
+    }
+}

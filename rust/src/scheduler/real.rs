@@ -1,0 +1,270 @@
+//! Real-mode scheduler: orchestrates an execution request end-to-end on the
+//! PJRT runtime — decomposition, per-slot work queues, chunked execution,
+//! partial-result merging, host-side Loop state updates and MapReduce
+//! reductions (Sections 3.1 and 3.4).
+
+use std::time::Instant;
+
+use crate::data::vector::{ArgValue, Merge};
+use crate::decompose::PartitionPlan;
+use crate::error::{Error, Result};
+use crate::platform::device::Machine;
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::client::RtClient;
+use crate::runtime::exec::{ChunkRunner, RequestArgs};
+use crate::scheduler::queues::WorkQueues;
+use crate::scheduler::{plan, ExecEnv, ExecOutcome};
+use crate::sct::{Reduction, Sct};
+use crate::tuner::profile::FrameworkConfig;
+
+/// Real (PJRT) scheduler over one machine description.
+pub struct RealScheduler<'a> {
+    pub machine: Machine,
+    pub client: &'a RtClient,
+    pub manifest: &'a Manifest,
+    /// Chunk launches performed (perf-pass counter).
+    pub launches: u64,
+    /// Adaptive chunk-selection knowledge, shared across requests.
+    pub timings: crate::runtime::exec::TimingCache,
+}
+
+/// Outputs + timing of one request.
+pub struct RealOutcome {
+    pub outputs: Vec<ArgValue>,
+    pub exec: ExecOutcome,
+}
+
+impl<'a> RealScheduler<'a> {
+    pub fn new(
+        machine: Machine,
+        client: &'a RtClient,
+        manifest: &'a Manifest,
+    ) -> RealScheduler<'a> {
+        RealScheduler {
+            machine,
+            client,
+            manifest,
+            launches: 0,
+            timings: Default::default(),
+        }
+    }
+
+    fn sct_chunk_quantum(&self, sct: &Sct) -> u64 {
+        sct.kernels()
+            .iter()
+            .filter_map(|k| self.manifest.chunk_quantum(&k.family).ok())
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Execute a request: returns merged outputs and per-slot wall times.
+    pub fn run_request(
+        &mut self,
+        sct: &Sct,
+        args: &RequestArgs,
+        total_units: u64,
+        cfg: &FrameworkConfig,
+    ) -> Result<RealOutcome> {
+        let quantum = self.sct_chunk_quantum(sct);
+        let p = plan(&self.machine, sct, total_units, cfg, quantum)?;
+        match sct {
+            Sct::Loop { body, state } if state.global_sync => {
+                // Stage 1-3 per iteration (Section 3.1): body on devices,
+                // state update on the host with a global sync point.
+                let mut local = args.clone();
+                let mut outputs = Vec::new();
+                let mut slot_acc: Vec<f64> = Vec::new();
+                for it in 0..state.max_iters {
+                    let (outs, times) = self.run_plan(body, &local, &p)?;
+                    accumulate(&mut slot_acc, &times);
+                    outputs = outs;
+                    if let Some(update) = &state.update {
+                        let mut vecs: Vec<ArgValue> =
+                            local.vectors.iter().map(|v| v.value.clone()).collect();
+                        let go = update(it, &mut vecs, &outputs);
+                        for (v, nv) in local.vectors.iter_mut().zip(vecs) {
+                            v.value = nv;
+                        }
+                        if !go {
+                            break;
+                        }
+                    }
+                }
+                Ok(self.outcome(&p, outputs, slot_acc))
+            }
+            Sct::MapReduce { map, reduce } => {
+                let (partials, times) = self.run_plan_partials(map, args, &p)?;
+                let merged = match reduce {
+                    Reduction::Host(m) => fold_partials(&partials, *m)?,
+                    Reduction::HostFn(f) => {
+                        let firsts: Vec<ArgValue> =
+                            partials.iter().map(|p| p[0].clone()).collect();
+                        vec![f(&firsts)]
+                    }
+                    Reduction::Device(_) => {
+                        // Device reduction: reduce each partition's partial
+                        // on-device (already folded into partials by the map
+                        // tree), then fold across partitions on the host.
+                        fold_partials(&partials, Merge::Add)?
+                    }
+                };
+                Ok(self.outcome(&p, merged, times))
+            }
+            _ => {
+                let (outs, times) = self.run_plan(sct, args, &p)?;
+                Ok(self.outcome(&p, outs, times))
+            }
+        }
+    }
+
+    /// Run a (loop-free) tree over every partition; concat outputs in unit
+    /// order. Returns (outputs, per-active-slot times).
+    fn run_plan(
+        &mut self,
+        sct: &Sct,
+        args: &RequestArgs,
+        p: &PartitionPlan,
+    ) -> Result<(Vec<ArgValue>, Vec<f64>)> {
+        let (partials, times) = self.run_plan_partials(sct, args, p)?;
+        let n_out = partials.first().map(|o| o.len()).unwrap_or(0);
+        let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); n_out];
+        for part in &partials {
+            for (o, val) in outputs.iter_mut().zip(part) {
+                o.extend_from_slice(val.as_f32()?);
+            }
+        }
+        Ok((outputs.into_iter().map(ArgValue::F32).collect(), times))
+    }
+
+    /// Run a tree over every partition; keep per-partition partials.
+    fn run_plan_partials(
+        &mut self,
+        sct: &Sct,
+        args: &RequestArgs,
+        p: &PartitionPlan,
+    ) -> Result<(Vec<Vec<ArgValue>>, Vec<f64>)> {
+        let mut queues = WorkQueues::from_plan(p);
+        let tasks = queues.drain_round_robin();
+        let runner =
+            ChunkRunner::new(self.client, self.manifest).with_timings(self.timings.clone());
+        // seq -> partial, preserving unit order for the merge.
+        let mut partials: Vec<(usize, Vec<ArgValue>)> = Vec::with_capacity(tasks.len());
+        let mut times = Vec::with_capacity(tasks.len());
+        for task in tasks {
+            let start = Instant::now();
+            let outs = runner.run_tree(
+                sct,
+                args,
+                task.partition.start_unit,
+                task.partition.units,
+            )?;
+            times.push(start.elapsed().as_secs_f64());
+            partials.push((task.seq, outs));
+        }
+        self.launches += runner.launches.get();
+        partials.sort_by_key(|(seq, _)| *seq);
+        Ok((partials.into_iter().map(|(_, o)| o).collect(), times))
+    }
+
+    fn outcome(&self, p: &PartitionPlan, outputs: Vec<ArgValue>, times: Vec<f64>) -> RealOutcome {
+        // Active partitions in plan order correspond 1:1 with `times` after
+        // the seq sort; classify by slot type.
+        let mut cpu_t = 0.0f64;
+        let mut gpu_t = 0.0f64;
+        for (part, &t) in p.active().zip(&times) {
+            if part.slot.is_cpu() {
+                cpu_t = cpu_t.max(t);
+            } else {
+                gpu_t = gpu_t.max(t);
+            }
+        }
+        RealOutcome {
+            outputs,
+            exec: ExecOutcome {
+                total: cpu_t.max(gpu_t),
+                cpu_time: cpu_t,
+                gpu_time: gpu_t,
+                slot_times: times,
+            },
+        }
+    }
+}
+
+/// The RealScheduler also serves as an [`ExecEnv`] for the tuner (timings
+/// only; arguments are zero-filled buffers of the right size).
+pub struct RealEnv<'a> {
+    pub inner: RealScheduler<'a>,
+    pub args: RequestArgs,
+}
+
+impl<'a> ExecEnv for RealEnv<'a> {
+    fn machine(&self) -> &Machine {
+        &self.inner.machine
+    }
+
+    fn chunk_quantum(&self, sct: &Sct) -> u64 {
+        self.inner.sct_chunk_quantum(sct)
+    }
+
+    fn execute(
+        &mut self,
+        sct: &Sct,
+        total_units: u64,
+        cfg: &FrameworkConfig,
+    ) -> Result<ExecOutcome> {
+        let args = self.args.clone();
+        Ok(self.inner.run_request(sct, &args, total_units, cfg)?.exec)
+    }
+}
+
+fn accumulate(acc: &mut Vec<f64>, times: &[f64]) {
+    if acc.len() < times.len() {
+        acc.resize(times.len(), 0.0);
+    }
+    for (a, t) in acc.iter_mut().zip(times) {
+        *a += t;
+    }
+}
+
+fn fold_partials(partials: &[Vec<ArgValue>], m: Merge) -> Result<Vec<ArgValue>> {
+    let first = partials
+        .first()
+        .ok_or_else(|| Error::Spec("no partials to reduce".into()))?;
+    let mut out: Vec<Vec<f32>> = first
+        .iter()
+        .map(|v| v.as_f32().map(|s| s.to_vec()))
+        .collect::<Result<_>>()?;
+    for part in &partials[1..] {
+        for (acc, val) in out.iter_mut().zip(part) {
+            let v = val.as_f32()?;
+            // Elementwise fold over the shorter length (partition partials
+            // of reductions are same-shaped).
+            let n = acc.len().min(v.len());
+            for i in 0..n {
+                acc[i] = m.fold(acc[i], v[i]);
+            }
+        }
+    }
+    Ok(out.into_iter().map(ArgValue::F32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold_partials_adds_elementwise() {
+        let a = vec![ArgValue::F32(vec![1.0, 2.0])];
+        let b = vec![ArgValue::F32(vec![10.0, 20.0])];
+        let out = fold_partials(&[a, b], Merge::Add).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[11.0, 22.0]);
+    }
+
+    #[test]
+    fn accumulate_grows() {
+        let mut acc = Vec::new();
+        accumulate(&mut acc, &[1.0, 2.0]);
+        accumulate(&mut acc, &[0.5, 0.5, 3.0]);
+        assert_eq!(acc, vec![1.5, 2.5, 3.0]);
+    }
+}

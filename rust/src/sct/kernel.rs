@@ -1,0 +1,108 @@
+//! Kernel objects: the leaf computational units of an SCT (Section 2.1).
+//!
+//! A `KernelSpec` encloses the kernel's logic (by artifact family reference —
+//! the actual compute lives in the AOT-compiled HLO artifact) and its
+//! *interface*: parameter classification (vector/scalar, partitionable/COPY,
+//! partition-sensitive traits), the elementary partitioning unit, the
+//! user-bound work-group size and the per-thread work amount. Multi-device
+//! support (Section 3.1) adds the partitionability declarations used by the
+//! locality-aware domain decomposition.
+
+use crate::data::vector::ScalarTrait;
+use crate::platform::occupancy::KernelFootprint;
+
+/// Declaration of one kernel parameter.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ParamSpec {
+    /// Input vector partitioned under the domain decomposition.
+    VecIn,
+    /// Input vector replicated integrally to every device (COPY mode).
+    VecCopy,
+    /// Scalar input, possibly partition-sensitive (Size / Offset traits).
+    ScalarF32(ScalarTrait),
+    ScalarI32(ScalarTrait),
+}
+
+/// A kernel leaf: interface specification + cost/resource metadata.
+#[derive(Clone, Debug)]
+pub struct KernelSpec {
+    /// Human name; also the artifact family in `artifacts/manifest.json`.
+    pub family: String,
+    /// Parameter declarations, positionally matching the artifact inputs.
+    pub params: Vec<ParamSpec>,
+    /// Number of output vectors produced per chunk.
+    pub outputs: usize,
+    /// Elements of each partitioned vector spanned by one elementary
+    /// partitioning unit (e.g. image width for line-partitioned filters).
+    pub elems_per_unit: u64,
+    /// Elements of the work space computed by each thread (`nu`, default 1).
+    pub work_per_thread: u32,
+    /// Kernel-bound work-group size, if the computation requires one.
+    pub fixed_wgs: Option<u32>,
+    /// GPU resource footprint for the occupancy calculator.
+    pub footprint: KernelFootprint,
+    /// Cost-model metadata: flops / bytes per epu unit, and how many times
+    /// the kernel re-traverses its working set (cache-locality `passes`).
+    pub flops_per_unit: f64,
+    pub bytes_per_unit: f64,
+    pub passes: f64,
+}
+
+impl KernelSpec {
+    /// A builder-lite constructor with the common defaults.
+    pub fn new(family: &str, params: Vec<ParamSpec>, elems_per_unit: u64) -> KernelSpec {
+        KernelSpec {
+            family: family.to_string(),
+            params,
+            outputs: 1,
+            elems_per_unit,
+            work_per_thread: 1,
+            fixed_wgs: None,
+            footprint: KernelFootprint {
+                local_mem_base: 0,
+                local_mem_per_thread: 0,
+                regs_per_thread: 24,
+            },
+            flops_per_unit: 1.0,
+            bytes_per_unit: 8.0,
+            passes: 1.0,
+        }
+    }
+
+    /// Granularity constraint (Section 3.1): partition sizes (in units) must
+    /// be divisible by `quantum_units(wgs)`, which accounts for the
+    /// work-group size and the per-thread work amount mapped into epu units.
+    ///
+    ///   epu(V) mod nu(V,K) = 0       (validated at spec build)
+    ///   #V_j mod (epu/nu) = 0  and  #V_j mod wgs_j(K) = 0
+    ///
+    /// In the unit domain: one work-group of size `wgs` with `nu` elements
+    /// per thread consumes `wgs * nu / elems_per_unit` units (at least 1).
+    pub fn quantum_units(&self, wgs: u32) -> u64 {
+        let elems = wgs as u64 * self.work_per_thread as u64;
+        elems.div_ceil(self.elems_per_unit).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantum_maps_threads_to_units() {
+        // Filter kernels: one line = 2048 elems, 2 px/thread:
+        // a 256-thread WG covers 512 px -> under one line -> quantum 1 unit.
+        let mut k = KernelSpec::new("filter_pipeline", vec![ParamSpec::VecIn], 2048);
+        k.work_per_thread = 2;
+        assert_eq!(k.quantum_units(256), 1);
+        // Saxpy: epu = 1 element -> a 256-thread WG needs 256 units.
+        let s = KernelSpec::new("saxpy", vec![ParamSpec::VecIn], 1);
+        assert_eq!(s.quantum_units(256), 256);
+    }
+
+    #[test]
+    fn quantum_never_zero() {
+        let k = KernelSpec::new("seg", vec![ParamSpec::VecIn], 1 << 20);
+        assert_eq!(k.quantum_units(64), 1);
+    }
+}

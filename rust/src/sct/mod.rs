@@ -1,0 +1,12 @@
+//! Skeleton computational trees (Section 2).
+//!
+//! A Marrow computation is a tree of skeleton constructions — `Pipeline`,
+//! `Loop`, `Map`, `MapReduce` — whose leaves are [`KernelSpec`]s wrapping
+//! AOT-compiled kernels. Execution requests traverse the tree depth-first
+//! (Section 2: K1, then the loop iterations of K2, then K3).
+
+pub mod kernel;
+pub mod node;
+
+pub use kernel::{KernelSpec, ParamSpec};
+pub use node::{HostReduce, HostUpdate, LoopState, Reduction, Sct};

@@ -1,0 +1,281 @@
+//! The skeleton tree: Pipeline, Loop, Map, MapReduce over kernel leaves
+//! (Section 2.1).
+
+use std::sync::Arc;
+
+use crate::data::vector::{ArgValue, Merge};
+use crate::sct::kernel::KernelSpec;
+
+/// Host-side loop-state update (Loop stage 3, Section 3.1): receives the
+/// iteration index and the partial outputs written by the SCT body and
+/// mutates the request arguments for the next iteration. Returns `false`
+/// to stop the loop (the stoppage condition).
+pub type HostUpdate =
+    Arc<dyn Fn(u32, &mut Vec<ArgValue>, &[ArgValue]) -> bool + Send + Sync>;
+
+/// Host-side reduction function for MapReduce (Section 3.1: "the skeleton
+/// also accepts C++ functions that are executed on the host side").
+pub type HostReduce = Arc<dyn Fn(&[ArgValue]) -> ArgValue + Send + Sync>;
+
+/// Loop skeleton state (Section 2.1): stoppage condition, updated data
+/// items, and whether the update requires global (all-device) sync.
+#[derive(Clone)]
+pub struct LoopState {
+    /// Upper bound on iterations (stoppage condition fallback).
+    pub max_iters: u32,
+    /// Whether the state update requires a global synchronization point
+    /// between iterations (true for NBody: positions feed all devices).
+    pub global_sync: bool,
+    /// Host update; `None` means a pure for-loop over the body.
+    pub update: Option<HostUpdate>,
+}
+
+impl std::fmt::Debug for LoopState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LoopState")
+            .field("max_iters", &self.max_iters)
+            .field("global_sync", &self.global_sync)
+            .field("update", &self.update.as_ref().map(|_| "<fn>"))
+            .finish()
+    }
+}
+
+/// Reduction stage of MapReduce: on-device kernel or host function.
+#[derive(Clone)]
+pub enum Reduction {
+    Device(KernelSpec),
+    Host(Merge),
+    HostFn(HostReduce),
+}
+
+impl std::fmt::Debug for Reduction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Reduction::Device(k) => write!(f, "Device({})", k.family),
+            Reduction::Host(m) => write!(f, "Host({m:?})"),
+            Reduction::HostFn(_) => write!(f, "HostFn(<fn>)"),
+        }
+    }
+}
+
+/// A skeleton computational tree.
+#[derive(Clone, Debug)]
+pub enum Sct {
+    Kernel(KernelSpec),
+    Pipeline(Vec<Sct>),
+    Loop {
+        body: Box<Sct>,
+        state: LoopState,
+    },
+    Map(Box<Sct>),
+    MapReduce {
+        map: Box<Sct>,
+        reduce: Reduction,
+    },
+}
+
+impl Sct {
+    pub fn kernel(k: KernelSpec) -> Sct {
+        Sct::Kernel(k)
+    }
+
+    pub fn pipeline(stages: Vec<Sct>) -> Sct {
+        Sct::Pipeline(stages)
+    }
+
+    pub fn map(tree: Sct) -> Sct {
+        Sct::Map(Box::new(tree))
+    }
+
+    pub fn for_loop(body: Sct, iters: u32, global_sync: bool) -> Sct {
+        Sct::Loop {
+            body: Box::new(body),
+            state: LoopState {
+                max_iters: iters,
+                global_sync,
+                update: None,
+            },
+        }
+    }
+
+    pub fn loop_with(body: Sct, state: LoopState) -> Sct {
+        Sct::Loop {
+            body: Box::new(body),
+            state,
+        }
+    }
+
+    pub fn map_reduce(map: Sct, reduce: Reduction) -> Sct {
+        Sct::MapReduce {
+            map: Box::new(map),
+            reduce,
+        }
+    }
+
+    /// Kernel leaves in depth-first (execution) order.
+    pub fn kernels(&self) -> Vec<&KernelSpec> {
+        let mut out = Vec::new();
+        self.collect_kernels(&mut out);
+        out
+    }
+
+    fn collect_kernels<'a>(&'a self, out: &mut Vec<&'a KernelSpec>) {
+        match self {
+            Sct::Kernel(k) => out.push(k),
+            Sct::Pipeline(stages) => {
+                for s in stages {
+                    s.collect_kernels(out);
+                }
+            }
+            Sct::Loop { body, .. } => body.collect_kernels(out),
+            Sct::Map(t) => t.collect_kernels(out),
+            Sct::MapReduce { map, reduce } => {
+                map.collect_kernels(out);
+                if let Reduction::Device(k) = reduce {
+                    out.push(k);
+                }
+            }
+        }
+    }
+
+    /// Total loop-iteration multiplier applied to the body kernels (used by
+    /// the cost model; 1 for loop-free trees).
+    pub fn iteration_factor(&self) -> f64 {
+        match self {
+            Sct::Kernel(_) => 1.0,
+            Sct::Pipeline(stages) => stages
+                .iter()
+                .map(|s| s.iteration_factor())
+                .fold(1.0, f64::max),
+            Sct::Loop { body, state } => state.max_iters as f64 * body.iteration_factor(),
+            Sct::Map(t) => t.iteration_factor(),
+            Sct::MapReduce { map, .. } => map.iteration_factor(),
+        }
+    }
+
+    /// Number of global synchronization points per execution (Loop
+    /// iterations whose state update is global).
+    pub fn sync_points(&self) -> u32 {
+        match self {
+            Sct::Kernel(_) => 0,
+            Sct::Pipeline(stages) => stages.iter().map(|s| s.sync_points()).sum(),
+            Sct::Loop { body, state } => {
+                let inner = body.sync_points();
+                if state.global_sync {
+                    state.max_iters * (inner + 1)
+                } else {
+                    state.max_iters * inner
+                }
+            }
+            Sct::Map(t) => t.sync_points(),
+            Sct::MapReduce { map, .. } => map.sync_points(),
+        }
+    }
+
+    /// Structural identifier used as the SCT's unique id in the knowledge
+    /// base (profile field (a), Section 3.2.1).
+    pub fn id(&self) -> String {
+        match self {
+            Sct::Kernel(k) => k.family.clone(),
+            Sct::Pipeline(stages) => {
+                let inner: Vec<String> = stages.iter().map(|s| s.id()).collect();
+                format!("pipeline({})", inner.join(","))
+            }
+            Sct::Loop { body, state } => {
+                format!("loop({},n={})", body.id(), state.max_iters)
+            }
+            Sct::Map(t) => format!("map({})", t.id()),
+            Sct::MapReduce { map, reduce } => {
+                let r = match reduce {
+                    Reduction::Device(k) => k.family.clone(),
+                    Reduction::Host(m) => format!("host:{m:?}"),
+                    Reduction::HostFn(_) => "host:fn".to_string(),
+                };
+                format!("map_reduce({},{r})", map.id())
+            }
+        }
+    }
+
+    /// The quantum (in epu units) all partitions must respect: the least
+    /// common multiple of every kernel's granularity constraint. This is the
+    /// global-vision partitioning constraint of Section 3.1: consecutive
+    /// kernels communicating through persisted device buffers must see
+    /// identically-partitioned vectors.
+    pub fn quantum_units(&self, wgs: u32) -> u64 {
+        self.kernels()
+            .iter()
+            .map(|k| k.quantum_units(k.fixed_wgs.unwrap_or(wgs)))
+            .fold(1, lcm)
+    }
+}
+
+fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+fn lcm(a: u64, b: u64) -> u64 {
+    a / gcd(a, b) * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sct::kernel::ParamSpec;
+
+    fn k(name: &str, epu: u64) -> KernelSpec {
+        KernelSpec::new(name, vec![ParamSpec::VecIn], epu)
+    }
+
+    #[test]
+    fn depth_first_kernel_order() {
+        // Fig. 1: pipeline(K1, loop(K2), K3) -> K1, K2, K3.
+        let sct = Sct::pipeline(vec![
+            Sct::kernel(k("k1", 1)),
+            Sct::for_loop(Sct::kernel(k("k2", 1)), 5, true),
+            Sct::kernel(k("k3", 1)),
+        ]);
+        let names: Vec<&str> = sct.kernels().iter().map(|k| k.family.as_str()).collect();
+        assert_eq!(names, vec!["k1", "k2", "k3"]);
+    }
+
+    #[test]
+    fn loop_multiplies_iteration_factor() {
+        let sct = Sct::for_loop(Sct::kernel(k("body", 1)), 10, true);
+        assert_eq!(sct.iteration_factor(), 10.0);
+        assert_eq!(sct.sync_points(), 10);
+    }
+
+    #[test]
+    fn non_sync_loop_has_no_sync_points() {
+        let sct = Sct::for_loop(Sct::kernel(k("body", 1)), 10, false);
+        assert_eq!(sct.sync_points(), 0);
+    }
+
+    #[test]
+    fn id_encodes_structure() {
+        let sct = Sct::pipeline(vec![
+            Sct::kernel(k("a", 1)),
+            Sct::for_loop(Sct::kernel(k("b", 1)), 3, false),
+        ]);
+        assert_eq!(sct.id(), "pipeline(a,loop(b,n=3))");
+    }
+
+    #[test]
+    fn quantum_is_lcm_over_kernels() {
+        // saxpy-like: epu 1 elem, wgs 256 -> 256 units; paired with a
+        // line kernel needing 1 unit -> lcm 256.
+        let sct = Sct::pipeline(vec![Sct::kernel(k("a", 1)), Sct::kernel(k("b", 2048))]);
+        assert_eq!(sct.quantum_units(256), 256);
+    }
+
+    #[test]
+    fn map_reduce_device_kernel_listed() {
+        let sct = Sct::map_reduce(Sct::kernel(k("m", 1)), Reduction::Device(k("r", 1)));
+        let names: Vec<&str> = sct.kernels().iter().map(|k| k.family.as_str()).collect();
+        assert_eq!(names, vec!["m", "r"]);
+    }
+}

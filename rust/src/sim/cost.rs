@@ -1,0 +1,344 @@
+//! The analytic cost model (DESIGN.md §1.1 substitution 2).
+
+use crate::platform::cpu::SubDevice;
+use crate::platform::device::{CpuSpec, GpuSpec};
+use crate::sct::Sct;
+
+/// Tunable model constants. Defaults were calibrated so the regenerated
+/// tables land in the paper's qualitative regime (EXPERIMENTS.md records the
+/// calibration); `sim::shoc` re-derives the CPU efficiency on the host.
+#[derive(Clone, Debug)]
+pub struct CostParams {
+    /// Achievable fraction of peak CPU FLOPS for OpenCL-style kernels.
+    pub cpu_eff: f64,
+    /// Achievable fraction of peak CPU memory bandwidth.
+    pub cpu_bw_eff: f64,
+    /// Cross-socket (NUMA) bandwidth penalty coefficient: traffic of a
+    /// sub-device spanning `s` sockets pays `1 + gamma * (1 - 1/s)`.
+    pub numa_gamma: f64,
+    /// Cross-socket compute penalty: a sub-device spanning `s` sockets loses
+    /// FLOPS as `1 + gamma_f * (s - 1)` (thread placement churn, remote
+    /// cache-line sharing — why compute-bound NBody also gains from fission).
+    pub numa_flops_gamma: f64,
+    /// Host-side fork/join dispatch cost per execution, per parallel slot
+    /// (µs): many sub-devices make small executions dispatch-bound.
+    pub forkjoin_us: f64,
+    /// Relative cost of re-traversing a working set that fits the affinity
+    /// domain's cache (vs. re-streaming it from DRAM).
+    pub cache_repass: f64,
+    /// Achievable fraction of peak GPU FLOPS.
+    pub gpu_eff: f64,
+    /// Compute efficiency at zero occupancy (latency-bound floor).
+    pub gpu_occ_floor: f64,
+    /// Host-side cost per global synchronization point, per participating
+    /// execution slot (µs).
+    pub sync_us_per_slot: f64,
+    /// Extra per-iteration cost when CPU sub-devices participate in a
+    /// global-sync loop (ms): barrier stragglers + host update serialization.
+    pub cpu_loop_sync_ms: f64,
+    /// Lognormal noise sigma per device type.
+    pub cpu_noise: f64,
+    pub gpu_noise: f64,
+    /// Straggler events: probability and multiplier (CPU only; time-shared).
+    pub straggler_p: f64,
+    pub straggler_mult: f64,
+}
+
+impl Default for CostParams {
+    fn default() -> Self {
+        CostParams {
+            cpu_eff: 0.32,
+            cpu_bw_eff: 0.055,
+            numa_gamma: 2.4,
+            numa_flops_gamma: 0.55,
+            forkjoin_us: 4.0,
+            cache_repass: 0.12,
+            gpu_eff: 0.55,
+            gpu_occ_floor: 0.35,
+            sync_us_per_slot: 60.0,
+            cpu_loop_sync_ms: 10.0,
+            cpu_noise: 0.025,
+            gpu_noise: 0.010,
+            straggler_p: 0.004,
+            straggler_mult: 1.25,
+        }
+    }
+}
+
+/// Aggregated cost profile of one SCT execution request, per epu unit.
+/// Iteration factors (Loop) are folded in at aggregation time.
+#[derive(Clone, Debug)]
+pub struct SctCost {
+    /// FLOPs per unit across all kernel leaves x loop iterations.
+    pub flops_per_unit: f64,
+    /// Bytes touched per unit per traversal.
+    pub bytes_per_unit: f64,
+    /// Number of working-set traversals (kernel passes x iterations).
+    pub passes: f64,
+    /// Host<->device bytes per unit (partitioned vectors, in + out).
+    pub transfer_bytes_per_unit: f64,
+    /// COPY-mode bytes replicated to each device, per transfer event.
+    pub copy_bytes: f64,
+    /// Global synchronization points per execution.
+    pub sync_points: u32,
+    /// Loop iteration multiplier (for per-iteration costs).
+    pub iter_factor: f64,
+}
+
+impl SctCost {
+    /// Aggregate the cost profile of an SCT from its kernel metadata.
+    /// `copy_bytes` is the total size of COPY-mode vectors in the request.
+    pub fn from_sct(sct: &Sct, copy_bytes: f64) -> SctCost {
+        let iter = sct.iteration_factor();
+        let kernels = sct.kernels();
+        let flops: f64 = kernels.iter().map(|k| k.flops_per_unit).sum();
+        let bytes: f64 = kernels
+            .iter()
+            .map(|k| k.bytes_per_unit)
+            .fold(0.0, f64::max);
+        let passes: f64 = kernels.iter().map(|k| k.passes).sum();
+        SctCost {
+            flops_per_unit: flops * iter,
+            bytes_per_unit: bytes,
+            passes: passes * iter,
+            transfer_bytes_per_unit: bytes, // in + out approximated by max pass
+            copy_bytes,
+            sync_points: sct.sync_points(),
+            iter_factor: iter,
+        }
+    }
+}
+
+/// Time (seconds, noise-free) for a CPU sub-device to execute `units` of the
+/// SCT. `load_factor >= 1` scales for external CPU load (time sharing);
+/// `chunk_units` is the AOT chunk granularity (per-launch overhead);
+/// `n_slots` is the execution's total parallel-slot count (fork/join cost).
+#[allow(clippy::too_many_arguments)]
+pub fn cpu_partition_time(
+    units: u64,
+    sub: &SubDevice,
+    cpu: &CpuSpec,
+    cost: &SctCost,
+    p: &CostParams,
+    load_factor: f64,
+    chunk_units: u64,
+    n_slots: u32,
+) -> f64 {
+    if units == 0 {
+        return 0.0;
+    }
+    let u = units as f64;
+    let flops_pen = 1.0 + p.numa_flops_gamma * (sub.sockets_spanned as f64 - 1.0);
+    let flops_t = u * cost.flops_per_unit * flops_pen
+        / (sub.cores as f64
+            * cpu.gflops_per_core
+            * 1e9
+            * p.cpu_eff
+            * sub.compute_factor);
+
+    let bw_share = cpu.mem_bw_gbps * 1e9 * p.cpu_bw_eff * sub.bw_factor * sub.cores as f64
+        / cpu.total_cores() as f64;
+    let numa_pen = 1.0 + p.numa_gamma * (1.0 - 1.0 / sub.sockets_spanned as f64);
+    let ws = u * cost.bytes_per_unit;
+    // Re-traversals hit cache if the working set fits the affinity domain.
+    let repass = if ws <= (sub.cache_kib * 1024) as f64 {
+        p.cache_repass
+    } else {
+        1.0
+    };
+    let traffic = ws * (1.0 + (cost.passes - 1.0).max(0.0) * repass);
+    let mem_t = traffic * numa_pen / bw_share;
+
+    // One clEnqueueNDRange per kernel pass over the partition: chunked
+    // launches are an artifact of the Real-mode AOT menu, not of the
+    // simulated OpenCL testbed.
+    let _ = chunk_units;
+    let launches = cost.passes.max(1.0);
+    let overhead = cpu.launch_overhead_us * 1e-6 * launches
+        + p.forkjoin_us * 1e-6 * n_slots as f64;
+    // Note: the global-sync barrier penalty for CPU participation in a
+    // Loop is charged at the machine level (it gates every device's
+    // iteration, not just the CPU slot) — see SimMachine::execute.
+    let sync = p.sync_us_per_slot * 1e-6 * cost.sync_points as f64;
+
+    (flops_t.max(mem_t) + overhead + sync) * load_factor
+}
+
+/// Time (seconds, noise-free) for one GPU overlap slot to execute `units`.
+/// `occ` is the kernel occupancy at the chosen work-group size; `overlap`
+/// the device's overlap factor (hides (o-1)/o of PCIe transfer).
+#[allow(clippy::too_many_arguments)]
+pub fn gpu_partition_time(
+    units: u64,
+    gpu: &GpuSpec,
+    cost: &SctCost,
+    p: &CostParams,
+    occ: f64,
+    overlap: u32,
+    chunk_units: u64,
+) -> f64 {
+    if units == 0 {
+        return 0.0;
+    }
+    let u = units as f64;
+    let occ_eff = p.gpu_occ_floor + (1.0 - p.gpu_occ_floor) * occ.clamp(0.0, 1.0);
+    let comp = u * cost.flops_per_unit / (gpu.gflops * 1e9 * p.gpu_eff * occ_eff);
+    let mem = u * cost.bytes_per_unit * cost.passes / (gpu.mem_bw_gbps * 1e9);
+
+    // PCIe: partition traffic + COPY-mode replication; COPY re-transfers at
+    // every global sync (Loop state flows back through the host).
+    let copy_events = 1.0 + cost.sync_points as f64;
+    let transfer = (u * cost.transfer_bytes_per_unit + cost.copy_bytes * copy_events)
+        / (gpu.pcie_gbps * 1e9);
+
+    let _ = chunk_units;
+    let launches = cost.passes.max(1.0);
+    let overhead = gpu.launch_overhead_us * 1e-6 * launches;
+    let sync = p.sync_us_per_slot * 1e-6 * cost.sync_points as f64;
+
+    // Multi-buffered pipeline: overlap hides transfer behind *compute* —
+    // communication-bound kernels stay PCIe-bound no matter the overlap
+    // (why the CPU boosts Saxpy/Segmentation most, Section 4.2.1).
+    let compute = comp.max(mem);
+    let o = overlap.max(1) as f64;
+    let steady = compute.max(transfer * (o - 1.0) / o);
+    steady + transfer / o + overhead + sync
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::cpu::{CpuPlatform, FissionLevel};
+    use crate::platform::device::{i7_hd7950, opteron_6272_quad};
+    use crate::sct::{KernelSpec, ParamSpec, Sct};
+
+    fn streaming_kernel() -> KernelSpec {
+        let mut k = KernelSpec::new("saxpy", vec![ParamSpec::VecIn], 1);
+        k.flops_per_unit = 2.0;
+        k.bytes_per_unit = 12.0;
+        k.passes = 1.0;
+        k
+    }
+
+    fn compute_kernel() -> KernelSpec {
+        let mut k = KernelSpec::new("nbody", vec![ParamSpec::VecCopy], 1);
+        k.flops_per_unit = 20.0 * 65536.0;
+        k.bytes_per_unit = 16.0;
+        k.passes = 1.0;
+        k
+    }
+
+    #[test]
+    fn fission_beats_no_fission_for_streaming_on_numa() {
+        // Table 2 shape: memory-bound kernels gain from fission on the
+        // 4-socket Opteron because NoFission pays cross-socket traffic.
+        let m = opteron_6272_quad();
+        let plat = CpuPlatform::new(m.cpu.clone());
+        let cost = SctCost::from_sct(&Sct::kernel(streaming_kernel()), 0.0);
+        let p = CostParams::default();
+        let u = 10_000_000;
+
+        // Whole-device time at a level = max over subdevices of per-sub time
+        // with an even split.
+        let t = |level: FissionLevel| {
+            let n = plat.subdevice_count(level) as u64;
+            let sub = plat.subdevice(level);
+            cpu_partition_time(u / n, &sub, &m.cpu, &cost, &p, 1.0, 4096, n as u32)
+        };
+        assert!(
+            t(FissionLevel::L2) < t(FissionLevel::NoFission) / 2.0,
+            "L2={} none={}",
+            t(FissionLevel::L2),
+            t(FissionLevel::NoFission)
+        );
+    }
+
+    #[test]
+    fn cache_fit_rewards_repasses() {
+        // A 3-pass kernel over a small working set should run faster on a
+        // fission level whose cache holds the partition.
+        let m = opteron_6272_quad();
+        let plat = CpuPlatform::new(m.cpu.clone());
+        let mut k = streaming_kernel();
+        k.passes = 3.0;
+        let cost = SctCost::from_sct(&Sct::kernel(k), 0.0);
+        let p = CostParams::default();
+        // 64 KiB partition fits the 2 MiB L2 domain; compare against a
+        // cache-free variant by scaling bytes.
+        let sub = plat.subdevice(FissionLevel::L2);
+        let units = 5_000; // x12 B = 60 KB < 2 MiB
+        let t_fit = cpu_partition_time(units, &sub, &m.cpu, &cost, &p, 1.0, 4096, 32);
+        let mut sub_nocache = sub;
+        sub_nocache.cache_kib = 1; // force misses
+        let t_miss = cpu_partition_time(units, &sub_nocache, &m.cpu, &cost, &p, 1.0, 4096, 32);
+        assert!(t_fit < t_miss);
+    }
+
+    #[test]
+    fn gpu_overlap_hides_transfer() {
+        let m = i7_hd7950(1);
+        let cost = SctCost::from_sct(&Sct::kernel(streaming_kernel()), 0.0);
+        let p = CostParams::default();
+        let t1 = gpu_partition_time(1 << 22, &m.gpus[0], &cost, &p, 1.0, 1, 4096);
+        let t4 = gpu_partition_time(1 << 22, &m.gpus[0], &cost, &p, 1.0, 4, 4096);
+        assert!(t4 < t1, "overlap must reduce exposed transfer");
+    }
+
+    #[test]
+    fn occupancy_scales_gpu_compute() {
+        let m = i7_hd7950(1);
+        let cost = SctCost::from_sct(&Sct::kernel(compute_kernel()), 1024.0 * 1024.0);
+        let p = CostParams::default();
+        let hi = gpu_partition_time(4096, &m.gpus[0], &cost, &p, 1.0, 4, 256);
+        let lo = gpu_partition_time(4096, &m.gpus[0], &cost, &p, 0.2, 4, 256);
+        assert!(hi < lo);
+    }
+
+    #[test]
+    fn load_factor_scales_cpu_time() {
+        let m = i7_hd7950(1);
+        let plat = CpuPlatform::new(m.cpu.clone());
+        let sub = plat.subdevice(FissionLevel::L2);
+        let cost = SctCost::from_sct(&Sct::kernel(streaming_kernel()), 0.0);
+        let p = CostParams::default();
+        let t1 = cpu_partition_time(1 << 20, &sub, &m.cpu, &cost, &p, 1.0, 4096, 6);
+        let t2 = cpu_partition_time(1 << 20, &sub, &m.cpu, &cost, &p, 2.0, 4096, 6);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loop_sync_charged_at_machine_level() {
+        // NBody shape (Table 3): the global-sync loop barrier is charged at
+        // the machine level when CPU sub-devices participate, gating every
+        // device's iterations — see SimMachine::execute. Here we check the
+        // cost profile carries the hooks the machine needs, and that the
+        // per-slot time still includes the per-sync host cost.
+        let sct = Sct::for_loop(Sct::kernel(compute_kernel()), 50, true);
+        let cost = SctCost::from_sct(&sct, 65536.0 * 16.0);
+        assert_eq!(cost.sync_points, 50);
+        assert_eq!(cost.iter_factor, 50.0);
+        let m = i7_hd7950(1);
+        let plat = CpuPlatform::new(m.cpu.clone());
+        let sub = plat.subdevice(FissionLevel::L2);
+        let p = CostParams::default();
+        let t_small = cpu_partition_time(64, &sub, &m.cpu, &cost, &p, 1.0, 256, 10);
+        assert!(t_small > p.sync_us_per_slot * 1e-6 * 50.0 * 0.9);
+    }
+
+    #[test]
+    fn zero_units_cost_nothing() {
+        let m = i7_hd7950(1);
+        let plat = CpuPlatform::new(m.cpu.clone());
+        let sub = plat.subdevice(FissionLevel::L1);
+        let cost = SctCost::from_sct(&Sct::kernel(streaming_kernel()), 0.0);
+        let p = CostParams::default();
+        assert_eq!(
+            cpu_partition_time(0, &sub, &m.cpu, &cost, &p, 1.0, 4096, 6),
+            0.0
+        );
+        assert_eq!(
+            gpu_partition_time(0, &m.gpus[0], &cost, &p, 1.0, 4, 4096),
+            0.0
+        );
+    }
+}

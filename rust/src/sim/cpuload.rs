@@ -1,0 +1,78 @@
+//! External CPU load generator (the Fig. 11 experiment).
+//!
+//! The paper introduces load fluctuation by spawning a configurable number
+//! of software threads running a computationally heavy algebraic problem.
+//! Here the profile maps a run index to the number of interfering threads;
+//! the cost model turns that into a time-sharing multiplier for CPU tasks.
+
+/// Piecewise-constant external load: `(from_run, threads)` steps.
+#[derive(Clone, Debug, Default)]
+pub struct LoadProfile {
+    steps: Vec<(u64, u32)>,
+}
+
+impl LoadProfile {
+    /// No external load.
+    pub fn idle() -> LoadProfile {
+        LoadProfile { steps: Vec::new() }
+    }
+
+    /// Build from steps; they are sorted by run index.
+    pub fn new(mut steps: Vec<(u64, u32)>) -> LoadProfile {
+        steps.sort_by_key(|s| s.0);
+        LoadProfile { steps }
+    }
+
+    /// Step load: `threads` interfering threads from run `from_run` on.
+    pub fn step_at(from_run: u64, threads: u32) -> LoadProfile {
+        LoadProfile::new(vec![(0, 0), (from_run, threads)])
+    }
+
+    /// Interfering threads at a run index.
+    pub fn threads_at(&self, run: u64) -> u32 {
+        let mut t = 0;
+        for &(from, threads) in &self.steps {
+            if run >= from {
+                t = threads;
+            } else {
+                break;
+            }
+        }
+        t
+    }
+
+    /// Time-sharing multiplier for CPU tasks at a run index: with `k`
+    /// compute-bound interfering threads on `cores` cores, the OS gives the
+    /// framework `cores / (cores + k)` of the machine.
+    pub fn load_factor(&self, run: u64, cores: u32) -> f64 {
+        let k = self.threads_at(run) as f64;
+        1.0 + k / cores.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_is_unit_factor() {
+        let l = LoadProfile::idle();
+        assert_eq!(l.load_factor(100, 6), 1.0);
+    }
+
+    #[test]
+    fn step_applies_from_run() {
+        let l = LoadProfile::step_at(50, 6);
+        assert_eq!(l.threads_at(49), 0);
+        assert_eq!(l.threads_at(50), 6);
+        assert_eq!(l.load_factor(60, 6), 2.0);
+    }
+
+    #[test]
+    fn multi_step_profile() {
+        let l = LoadProfile::new(vec![(0, 0), (10, 3), (20, 0)]);
+        assert_eq!(l.threads_at(5), 0);
+        assert_eq!(l.threads_at(15), 3);
+        assert_eq!(l.threads_at(25), 0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Device performance simulator — the substitution substrate for the
+//! paper's OpenCL CPU/GPU testbeds (DESIGN.md §1.1).
+//!
+//! The analytic cost model prices each task (an SCT executed over one
+//! partition on one execution slot) from the kernel's flop/byte counts and
+//! the device description: a roofline term, a cache-locality term driven by
+//! the fission level's affinity-domain cache, a NUMA cross-socket penalty,
+//! PCIe transfer exposure under overlap, per-launch overheads and global
+//! synchronization costs. Multiplicative lognormal noise plus rare straggler
+//! events give the execution-time distributions the paper's load-balancing
+//! machinery reacts to.
+
+pub mod cost;
+pub mod cpuload;
+pub mod machine;
+pub mod shoc;
+
+pub use cost::{CostParams, SctCost};
+pub use cpuload::LoadProfile;
+pub use machine::SimMachine;

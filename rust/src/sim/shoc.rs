@@ -1,0 +1,99 @@
+//! SHOC-style install-time calibration (Section 3.2).
+//!
+//! The paper runs the SHOC benchmark suite at installation time to establish
+//! the relative performance of the GPU devices (for the static multi-GPU
+//! distribution). Here calibration has two parts:
+//!
+//!  1. `rank_gpus` orders simulated GPUs by a SHOC-like score combining
+//!     peak FLOPS and memory bandwidth (the suite's MaxFlops / DeviceMemory
+//!     microbenchmarks).
+//!  2. `host_flops_gbps` measures the *actual* host's arithmetic throughput
+//!     with a vectorizable f32 kernel. The Real-mode executor reports this
+//!     alongside simulated numbers so EXPERIMENTS.md can relate the two
+//!     timescales.
+
+use std::time::Instant;
+
+use crate::platform::device::GpuSpec;
+
+/// SHOC-like score: geometric mean of normalized FLOPS and bandwidth.
+pub fn shoc_score(gpu: &GpuSpec) -> f64 {
+    (gpu.gflops * gpu.mem_bw_gbps).sqrt()
+}
+
+/// Derive the static relative-performance weights for a GPU set (the
+/// paper's install-time ranking). Weights are written back to
+/// `relative_perf` and returned normalized.
+pub fn rank_gpus(gpus: &mut [GpuSpec]) -> Vec<f64> {
+    let scores: Vec<f64> = gpus.iter().map(shoc_score).collect();
+    let total: f64 = scores.iter().sum();
+    for (g, s) in gpus.iter_mut().zip(&scores) {
+        g.relative_perf = *s;
+    }
+    scores.iter().map(|s| s / total.max(1e-12)).collect()
+}
+
+/// Measure the host's achievable single-thread f32 GFLOPS with a fused
+/// multiply-add loop over a small in-cache buffer.
+pub fn host_flops_gflops() -> f64 {
+    const N: usize = 4096;
+    const REPS: usize = 2000;
+    let mut a = vec![1.000001f32; N];
+    let x = 1.000000119f32;
+    let y = 0.0000001f32;
+    let start = Instant::now();
+    for _ in 0..REPS {
+        for v in a.iter_mut() {
+            *v = *v * x + y;
+        }
+    }
+    let secs = start.elapsed().as_secs_f64();
+    // 2 flops per element per rep; prevent the loop being optimized away.
+    let checksum: f32 = a.iter().sum();
+    std::hint::black_box(checksum);
+    (2.0 * N as f64 * REPS as f64) / secs / 1e9
+}
+
+/// Measure host memory streaming bandwidth (GB/s) over a buffer far larger
+/// than L2.
+pub fn host_stream_gbps() -> f64 {
+    const N: usize = 8 << 20; // 32 MiB of f32
+    let src = vec![1.0f32; N];
+    let mut dst = vec![0.0f32; N];
+    let start = Instant::now();
+    for _ in 0..4 {
+        dst.copy_from_slice(&src);
+        std::hint::black_box(&dst);
+    }
+    let secs = start.elapsed().as_secs_f64();
+    (2.0 * 4.0 * (N * 4) as f64) / secs / 1e9 // read + write
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::device::i7_hd7950;
+
+    #[test]
+    fn equal_gpus_get_equal_weights() {
+        let mut gpus = i7_hd7950(2).gpus;
+        let w = rank_gpus(&mut gpus);
+        assert!((w[0] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn faster_gpu_ranks_higher() {
+        let mut gpus = i7_hd7950(2).gpus;
+        gpus[1].gflops *= 4.0;
+        gpus[1].mem_bw_gbps *= 4.0;
+        let w = rank_gpus(&mut gpus);
+        assert!(w[1] > 0.75);
+        assert!(gpus[1].relative_perf > gpus[0].relative_perf);
+    }
+
+    #[test]
+    fn host_microbenches_positive() {
+        assert!(host_flops_gflops() > 0.01);
+        assert!(host_stream_gbps() > 0.01);
+    }
+}

@@ -1,0 +1,289 @@
+//! Profile construction — Algorithm 1 (Section 3.2.2).
+//!
+//! Searches the configuration space (CPU fission level x GPU overlap x
+//! work-group size x CPU/GPU distribution) for the best-performing tuple.
+//! The dimensions are ordered by likeliness to perform well (fission L1
+//! first, overlap in natural order, wgs by non-increasing occupancy) and
+//! each is pruned by a discard rule: when a candidate fails to improve on
+//! its predecessor, all subsequent candidates of that dimension are
+//! discarded.
+
+use crate::error::Result;
+use crate::platform::cpu::CpuPlatform;
+use crate::platform::gpu::GpuPlatform;
+use crate::scheduler::ExecEnv;
+use crate::sct::Sct;
+use crate::data::workload::Workload;
+use crate::tuner::profile::{FrameworkConfig, Profile, ProfileOrigin};
+use crate::tuner::wldg::Wldg;
+
+/// Tuning options (Algorithm 1 inputs).
+#[derive(Clone, Debug)]
+pub struct TunerOpts {
+    /// Minimum accepted GPU occupancy for wgs candidates.
+    pub occupancy_threshold: f64,
+    /// Precision value for the workload-distribution search (seconds).
+    pub precision: f64,
+    /// Quality factor: executions averaged per candidate distribution.
+    pub number_executions: u32,
+    /// Cap on WLDG iterations per platform configuration.
+    pub max_dist_iters: u32,
+}
+
+impl Default for TunerOpts {
+    fn default() -> Self {
+        TunerOpts {
+            occupancy_threshold: 0.8,
+            precision: 0.01, // relative
+
+            number_executions: 3,
+            max_dist_iters: 12,
+        }
+    }
+}
+
+/// Execute `n` times and average (the algorithm's quality factor smooths
+/// performance fluctuations).
+fn exec_for_profile<E: ExecEnv>(
+    env: &mut E,
+    sct: &Sct,
+    units: u64,
+    cfg: &FrameworkConfig,
+    n: u32,
+) -> Result<(f64, f64, f64)> {
+    let (mut t, mut ct, mut gt) = (0.0, 0.0, 0.0);
+    for _ in 0..n.max(1) {
+        let o = env.execute(sct, units, cfg)?;
+        t += o.total;
+        ct += o.cpu_time;
+        gt += o.gpu_time;
+    }
+    let n = n.max(1) as f64;
+    Ok((t / n, ct / n, gt / n))
+}
+
+/// Find the best workload distribution for a fixed platform configuration
+/// via the WLDG binary search (Algorithm 1, steps 9-20).
+fn best_distribution<E: ExecEnv>(
+    env: &mut E,
+    sct: &Sct,
+    units: u64,
+    base: &FrameworkConfig,
+    opts: &TunerOpts,
+) -> Result<(f64, f64)> {
+    if base.overlap.is_empty() {
+        // CPU-only machine: distribution is trivially all-CPU.
+        let mut cfg = base.clone();
+        cfg.cpu_share = 1.0;
+        let (t, _, _) = exec_for_profile(env, sct, units, &cfg, opts.number_executions)?;
+        return Ok((1.0, t));
+    }
+    let mut wldg = Wldg::new();
+    let mut best = (wldg.candidate_cpu_share(), f64::INFINITY);
+    let mut prev_time = f64::INFINITY;
+    let resolution = 1.0 / units.max(1) as f64;
+    for _ in 0..opts.max_dist_iters {
+        let share = wldg.candidate_cpu_share();
+        let mut cfg = base.clone();
+        cfg.cpu_share = share;
+        let (t, ct, gt) = exec_for_profile(env, sct, units, &cfg, opts.number_executions)?;
+        if t < best.1 {
+            best = (share, t);
+        }
+        wldg.feedback(ct, gt);
+        // Step 17: stop this search direction when the delta flattens
+        // (precision is relative to the measured time so small and large
+        // workloads converge alike).
+        if (prev_time - t).abs() < opts.precision * t.max(1e-12)
+            || wldg.converged(resolution)
+        {
+            break;
+        }
+        prev_time = t;
+    }
+    // Always probe the GPU-only distribution: sub-quantum CPU partitions
+    // carry no work, and Table 3 reports NBody as exactly 100/0.
+    {
+        let mut cfg = base.clone();
+        cfg.cpu_share = 0.0;
+        let (t, _, _) = exec_for_profile(env, sct, units, &cfg, opts.number_executions)?;
+        if t <= best.1 {
+            best = (0.0, t);
+        }
+    }
+    Ok(best)
+}
+
+/// Algorithm 1: build the best-known profile for (SCT, workload).
+pub fn build_profile<E: ExecEnv>(
+    env: &mut E,
+    sct: &Sct,
+    workload: &Workload,
+    total_units: u64,
+    opts: &TunerOpts,
+) -> Result<Profile> {
+    let machine = env.machine().clone();
+    let cpu_plat = CpuPlatform::new(machine.cpu.clone());
+    let fission_levels = cpu_plat.configurations();
+
+    let has_gpu = !machine.gpus.is_empty();
+    let (overlaps, wgs_cands) = if has_gpu {
+        let gp = GpuPlatform::new(machine.gpus[0].clone());
+        let fp = sct
+            .kernels()
+            .first()
+            .map(|k| k.footprint)
+            .unwrap_or(crate::platform::occupancy::KernelFootprint {
+                local_mem_base: 0,
+                local_mem_per_thread: 0,
+                regs_per_thread: 24,
+            });
+        (
+            gp.overlap_candidates(),
+            gp.wgs_candidates(&fp, opts.occupancy_threshold),
+        )
+    } else {
+        (vec![], vec![256])
+    };
+
+    let mut best: Option<Profile> = None;
+    let mut prev_fission_best = f64::INFINITY;
+
+    'fission: for &fission in &fission_levels {
+        let mut fission_best = f64::INFINITY;
+        let overlap_iter: Vec<Option<u32>> = if has_gpu {
+            overlaps.iter().map(|&o| Some(o)).collect()
+        } else {
+            vec![None]
+        };
+        let mut prev_overlap_best = f64::INFINITY;
+        'overlap: for &ov in &overlap_iter {
+            let mut overlap_best = f64::INFINITY;
+            let mut prev_wgs_best = f64::INFINITY;
+            for &wgs in &wgs_cands {
+                let base = FrameworkConfig {
+                    fission,
+                    overlap: match ov {
+                        Some(o) => vec![o; machine.gpus.len()],
+                        None => vec![],
+                    },
+                    wgs,
+                    cpu_share: 0.5,
+                };
+                let (share, t) = best_distribution(env, sct, total_units, &base, opts)?;
+                if t < overlap_best {
+                    overlap_best = t;
+                }
+                let better_than_stored =
+                    best.as_ref().map(|b| t < b.best_time).unwrap_or(true);
+                if better_than_stored {
+                    let mut cfg = base.clone();
+                    cfg.cpu_share = share;
+                    best = Some(Profile {
+                        sct_id: sct.id(),
+                        workload: workload.clone(),
+                        config: cfg,
+                        best_time: t,
+                        origin: ProfileOrigin::Built,
+                    });
+                }
+                // Discard rule on the wgs dimension.
+                if t > prev_wgs_best {
+                    break;
+                }
+                prev_wgs_best = t;
+            }
+            if overlap_best < fission_best {
+                fission_best = overlap_best;
+            }
+            // Discard rule on the overlap dimension.
+            if overlap_best > prev_overlap_best {
+                break 'overlap;
+            }
+            prev_overlap_best = overlap_best;
+        }
+        // Discard rule on the fission dimension.
+        if fission_best > prev_fission_best {
+            break 'fission;
+        }
+        prev_fission_best = fission_best;
+    }
+
+    best.ok_or_else(|| crate::Error::Tuner("empty configuration space".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::device::{i7_hd7950, opteron_6272_quad};
+    use crate::scheduler::SimEnv;
+    use crate::sct::{KernelSpec, ParamSpec};
+    use crate::sim::machine::SimMachine;
+
+    fn saxpy_sct() -> Sct {
+        let mut k = KernelSpec::new("saxpy", vec![ParamSpec::VecIn], 1);
+        k.flops_per_unit = 2.0;
+        k.bytes_per_unit = 12.0;
+        Sct::kernel(k)
+    }
+
+    fn filter_sct() -> Sct {
+        let mut k = KernelSpec::new("filter_pipeline", vec![ParamSpec::VecIn], 2048);
+        k.flops_per_unit = 60.0 * 2048.0;
+        k.bytes_per_unit = 8.0 * 2048.0;
+        k.passes = 3.0;
+        k.work_per_thread = 2;
+        Sct::kernel(k)
+    }
+
+    #[test]
+    fn hybrid_profile_distributes_between_devices() {
+        let mut env = SimEnv::new(SimMachine::new(i7_hd7950(1), 9));
+        let w = Workload::d1(1 << 24);
+        let p = build_profile(
+            &mut env,
+            &saxpy_sct(),
+            &w,
+            1 << 24,
+            &TunerOpts::default(),
+        )
+        .unwrap();
+        assert!(p.best_time.is_finite() && p.best_time > 0.0);
+        // Streaming workload: both device types should participate, GPU
+        // dominant (Table 3: saxpy ~75/25).
+        assert!(p.config.cpu_share > 0.02, "cpu {}", p.config.cpu_share);
+        assert!(p.config.cpu_share < 0.6, "cpu {}", p.config.cpu_share);
+        assert!(!p.config.overlap.is_empty());
+        assert_eq!(p.origin, ProfileOrigin::Built);
+    }
+
+    #[test]
+    fn cpu_only_machine_profiles_fission() {
+        let mut env = SimEnv::new(SimMachine::new(opteron_6272_quad(), 5));
+        let w = Workload::d2(2048, 2048);
+        let p = build_profile(
+            &mut env,
+            &filter_sct(),
+            &w,
+            2048,
+            &TunerOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(p.config.cpu_share, 1.0);
+        assert!(p.config.overlap.is_empty());
+        // Fission should beat NoFission on the 4-socket box.
+        assert_ne!(
+            p.config.fission,
+            crate::platform::cpu::FissionLevel::NoFission
+        );
+    }
+
+    #[test]
+    fn profile_id_matches_sct() {
+        let mut env = SimEnv::new(SimMachine::new(i7_hd7950(1), 2));
+        let w = Workload::d1(1 << 20);
+        let p = build_profile(&mut env, &saxpy_sct(), &w, 1 << 20, &TunerOpts::default())
+            .unwrap();
+        assert_eq!(p.sct_id, "saxpy");
+    }
+}

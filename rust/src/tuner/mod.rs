@@ -1,0 +1,11 @@
+//! Profile-based workload distribution (Section 3.2): profile records, the
+//! workload-distribution generator (binary search over the transferable
+//! partition), and the profile-building search of Algorithm 1.
+
+pub mod builder;
+pub mod profile;
+pub mod wldg;
+
+pub use builder::{build_profile, TunerOpts};
+pub use profile::{FrameworkConfig, Profile, ProfileOrigin};
+pub use wldg::Wldg;

@@ -1,0 +1,200 @@
+//! Profile specification (Section 3.2.1): everything needed to reproduce a
+//! framework configuration for a given (SCT, workload) pair.
+
+use crate::data::workload::Workload;
+use crate::error::{Error, Result};
+use crate::platform::cpu::{CpuPlatform, FissionLevel};
+use crate::util::json::Json;
+
+/// How a stored profile was obtained (profile field (f)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProfileOrigin {
+    /// Built from scratch by the profiling process (box "Build SCT profile").
+    Built,
+    /// Derived from the knowledge base (box "Derive work distribution").
+    Derived,
+    /// Refined by the dynamic load balancer after derivation.
+    Refined,
+}
+
+impl ProfileOrigin {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ProfileOrigin::Built => "built",
+            ProfileOrigin::Derived => "derived",
+            ProfileOrigin::Refined => "refined",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ProfileOrigin> {
+        match s {
+            "built" => Some(ProfileOrigin::Built),
+            "derived" => Some(ProfileOrigin::Derived),
+            "refined" => Some(ProfileOrigin::Refined),
+            _ => None,
+        }
+    }
+}
+
+/// The execution-platform configuration of one profile (profile fields (c)
+/// and (d)): fission level, per-GPU overlap, work-group size, CPU share.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrameworkConfig {
+    pub fission: FissionLevel,
+    /// Overlap factor per GPU device.
+    pub overlap: Vec<u32>,
+    /// Work-group size for GPU-directed kernel launches.
+    pub wgs: u32,
+    /// Fraction of the workload assigned to the CPU device type.
+    pub cpu_share: f64,
+}
+
+impl FrameworkConfig {
+    /// CPU-only default at a fission level.
+    pub fn cpu_only(fission: FissionLevel) -> FrameworkConfig {
+        FrameworkConfig {
+            fission,
+            overlap: Vec::new(),
+            wgs: 256,
+            cpu_share: 1.0,
+        }
+    }
+
+    /// The SCT's level of (coarse) parallelism (Section 3.2.2): fission
+    /// sub-devices + the sum of the GPUs' overlap factors.
+    pub fn parallelism(&self, cpu: &CpuPlatform) -> u32 {
+        let subs = if self.cpu_share > 0.0 || self.overlap.is_empty() {
+            cpu.subdevice_count(self.fission)
+        } else {
+            cpu.subdevice_count(self.fission)
+        };
+        subs + self.overlap.iter().sum::<u32>()
+    }
+
+    /// GPU share (1 - cpu_share), as the tables report "GPU/CPU".
+    pub fn gpu_share(&self) -> f64 {
+        1.0 - self.cpu_share
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("fission", Json::str(self.fission.label())),
+            (
+                "overlap",
+                Json::arr(self.overlap.iter().map(|&o| Json::num(o as f64)).collect()),
+            ),
+            ("wgs", Json::num(self.wgs as f64)),
+            ("cpu_share", Json::num(self.cpu_share)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<FrameworkConfig> {
+        Ok(FrameworkConfig {
+            fission: FissionLevel::parse(v.get("fission")?.as_str().unwrap_or(""))
+                .ok_or_else(|| Error::Kb("bad fission level".into()))?,
+            overlap: v
+                .get("overlap")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|o| o.as_u64().map(|v| v as u32))
+                .collect(),
+            wgs: v.get("wgs")?.as_u64().unwrap_or(256) as u32,
+            cpu_share: v.get("cpu_share")?.as_f64().unwrap_or(0.0),
+        })
+    }
+}
+
+/// A stored profile (Section 3.2.1, fields (a)-(f)).
+#[derive(Clone, Debug)]
+pub struct Profile {
+    /// (a) SCT unique identifier.
+    pub sct_id: String,
+    /// (b) workload characterization.
+    pub workload: Workload,
+    /// (c) + (d) distribution & platform configuration.
+    pub config: FrameworkConfig,
+    /// (e) minimum execution time measured for this configuration (s).
+    pub best_time: f64,
+    /// (f) generation process.
+    pub origin: ProfileOrigin,
+}
+
+impl Profile {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("sct_id", Json::str(&self.sct_id)),
+            ("workload", self.workload.to_json()),
+            ("config", self.config.to_json()),
+            ("best_time", Json::num(self.best_time)),
+            ("origin", Json::str(self.origin.label())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Profile> {
+        Ok(Profile {
+            sct_id: v.get("sct_id")?.as_str().unwrap_or("").to_string(),
+            workload: Workload::from_json(v.get("workload")?)?,
+            config: FrameworkConfig::from_json(v.get("config")?)?,
+            best_time: v.get("best_time")?.as_f64().unwrap_or(f64::INFINITY),
+            origin: ProfileOrigin::parse(v.get("origin")?.as_str().unwrap_or(""))
+                .ok_or_else(|| Error::Kb("bad origin".into()))?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::device::i7_hd7950;
+
+    #[test]
+    fn parallelism_matches_paper_table3() {
+        // Filter 2048², 1 GPU: L2 fission + overlap 4 -> 6 + 4 = 10.
+        let cpu = CpuPlatform::new(i7_hd7950(1).cpu);
+        let cfg = FrameworkConfig {
+            fission: FissionLevel::L2,
+            overlap: vec![4],
+            wgs: 256,
+            cpu_share: 0.232,
+        };
+        assert_eq!(cfg.parallelism(&cpu), 10);
+        // FFT 128 MB, 2 GPUs: L3/4 -> 1 + 8 = 9.
+        let cfg2 = FrameworkConfig {
+            fission: FissionLevel::L3,
+            overlap: vec![4, 4],
+            wgs: 256,
+            cpu_share: 0.249,
+        };
+        assert_eq!(cfg2.parallelism(&cpu), 9);
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        let cfg = FrameworkConfig {
+            fission: FissionLevel::Numa,
+            overlap: vec![3, 4],
+            wgs: 128,
+            cpu_share: 0.21,
+        };
+        let j = cfg.to_json();
+        assert_eq!(FrameworkConfig::from_json(&j).unwrap(), cfg);
+    }
+
+    #[test]
+    fn profile_json_roundtrip() {
+        let p = Profile {
+            sct_id: "pipeline(a,b)".into(),
+            workload: Workload::d2(2048, 2048),
+            config: FrameworkConfig::cpu_only(FissionLevel::L2),
+            best_time: 0.125,
+            origin: ProfileOrigin::Built,
+        };
+        let j = p.to_json();
+        let back = Profile::from_json(&j).unwrap();
+        assert_eq!(back.sct_id, p.sct_id);
+        assert_eq!(back.workload, p.workload);
+        assert_eq!(back.config, p.config);
+        assert_eq!(back.origin, ProfileOrigin::Built);
+    }
+}

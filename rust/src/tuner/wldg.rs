@@ -1,0 +1,154 @@
+//! The workload distribution generator (Section 3.2.2).
+//!
+//! An iterator that, at each invocation, outputs a CPU/GPU distribution
+//! trying to even the completion time of each device type. Binary search:
+//! the *transferable partition* starts as the whole workload; each iteration
+//! splits it evenly between the device types and permanently binds one half
+//! to the better performer; the remainder half is the next transferable
+//! partition — `transferableSize(n, size) = size / 2^n`.
+
+/// Binary-search workload distribution generator.
+#[derive(Clone, Debug)]
+pub struct Wldg {
+    /// Fraction permanently bound to the CPU device type.
+    bound_cpu: f64,
+    /// Fraction permanently bound to the GPU device type.
+    bound_gpu: f64,
+    /// Fraction still under training.
+    transferable: f64,
+    iterations: u32,
+}
+
+impl Wldg {
+    pub fn new() -> Wldg {
+        Wldg {
+            bound_cpu: 0.0,
+            bound_gpu: 0.0,
+            transferable: 1.0,
+            iterations: 0,
+        }
+    }
+
+    /// Current candidate distribution: the transferable partition is split
+    /// evenly, so the CPU share to *test* is `bound_cpu + transferable/2`.
+    pub fn candidate_cpu_share(&self) -> f64 {
+        self.bound_cpu + self.transferable / 2.0
+    }
+
+    /// Feed back the per-device-type completion times measured at the
+    /// candidate distribution; binds half the transferable partition to the
+    /// better performer.
+    pub fn feedback(&mut self, cpu_time: f64, gpu_time: f64) {
+        let half = self.transferable / 2.0;
+        if cpu_time <= gpu_time {
+            // CPU finished first: it can take more work.
+            self.bound_cpu += half;
+        } else {
+            self.bound_gpu += half;
+        }
+        self.transferable = half;
+        self.iterations += 1;
+    }
+
+    /// `transferableSize(n, size) = size / 2^n` — the asymptotically
+    /// vanishing training fraction.
+    pub fn transferable(&self) -> f64 {
+        self.transferable
+    }
+
+    pub fn iterations(&self) -> u32 {
+        self.iterations
+    }
+
+    /// Converged when the transferable fraction can no longer change the
+    /// distribution by more than `resolution` (e.g. one quantum / total).
+    pub fn converged(&self, resolution: f64) -> bool {
+        self.transferable / 2.0 < resolution.max(1e-9)
+    }
+}
+
+impl Default for Wldg {
+    fn default() -> Self {
+        Wldg::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn starts_even() {
+        let w = Wldg::new();
+        assert!((w.candidate_cpu_share() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transferable_halves_each_iteration() {
+        let mut w = Wldg::new();
+        for n in 1..=10 {
+            w.feedback(1.0, 2.0);
+            assert!((w.transferable() - 1.0 / (1u64 << n) as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn converges_to_equal_throughput_split() {
+        // CPU processes at rate rc, GPU at rg; completion times for share s:
+        // cpu = s/rc, gpu = (1-s)/rg. Optimal share = rc/(rc+rg).
+        let (rc, rg) = (1.0, 3.0);
+        let mut w = Wldg::new();
+        for _ in 0..30 {
+            let s = w.candidate_cpu_share();
+            w.feedback(s / rc, (1.0 - s) / rg);
+        }
+        let expect = rc / (rc + rg);
+        assert!(
+            (w.candidate_cpu_share() - expect).abs() < 1e-6,
+            "got {} want {expect}",
+            w.candidate_cpu_share()
+        );
+    }
+
+    #[test]
+    fn gpu_always_faster_drives_share_to_zero() {
+        let mut w = Wldg::new();
+        for _ in 0..40 {
+            w.feedback(10.0, 1.0); // CPU always slower
+        }
+        assert!(w.candidate_cpu_share() < 1e-9);
+    }
+
+    #[test]
+    fn prop_shares_partition_unity() {
+        forall(
+            0x71d6,
+            200,
+            |r| {
+                (0..12)
+                    .map(|_| r.f64())
+                    .collect::<Vec<f64>>()
+            },
+            |flips| {
+                let mut w = Wldg::new();
+                for &f in flips {
+                    if f < 0.5 {
+                        w.feedback(1.0, 2.0);
+                    } else {
+                        w.feedback(2.0, 1.0);
+                    }
+                    let total = w.bound_cpu + w.bound_gpu + w.transferable;
+                    if (total - 1.0).abs() > 1e-9 {
+                        return Err(format!("shares sum to {total}"));
+                    }
+                    let s = w.candidate_cpu_share();
+                    if !(0.0..=1.0).contains(&s) {
+                        return Err(format!("share {s} out of range"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,226 @@
+//! Small dense linear algebra: just enough for the RBF network solve used by
+//! the knowledge base's configuration derivation (Section 3.2.3).
+//!
+//! The paper uses Alglib's Fast RBF; offline we implement a classic Gaussian
+//! RBF network whose weights come from a regularized symmetric solve. Systems
+//! are tiny (one row per stored profile), so an O(n³) Cholesky with partial
+//! fallback to Gaussian elimination is plenty.
+
+use crate::error::{Error, Result};
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        let mut y = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            y[r] = row.iter().zip(x).map(|(a, b)| a * b).sum();
+        }
+        y
+    }
+}
+
+/// Solve A x = b for symmetric positive-definite A via Cholesky (A = L Lᵀ).
+pub fn solve_spd(a: &Mat, b: &[f64]) -> Result<Vec<f64>> {
+    assert_eq!(a.rows, a.cols);
+    assert_eq!(a.rows, b.len());
+    let n = a.rows;
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j);
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(Error::Kb(format!(
+                        "matrix not positive definite at pivot {i} ({sum})"
+                    )));
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    // Forward substitution L y = b.
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[i * n + k] * y[k];
+        }
+        y[i] = sum / l[i * n + i];
+    }
+    // Back substitution Lᵀ x = y.
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l[k * n + i] * x[k];
+        }
+        x[i] = sum / l[i * n + i];
+    }
+    Ok(x)
+}
+
+/// Solve a general square system by Gaussian elimination with partial
+/// pivoting (fallback when the RBF Gram matrix is near-singular and the
+/// caller retries with a polynomial tail or larger regularization).
+pub fn solve_general(a: &Mat, b: &[f64]) -> Result<Vec<f64>> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m = a.data.clone();
+    let mut x = b.to_vec();
+    for col in 0..n {
+        // Pivot.
+        let mut piv = col;
+        for r in col + 1..n {
+            if m[r * n + col].abs() > m[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if m[piv * n + col].abs() < 1e-14 {
+            return Err(Error::Kb("singular system".to_string()));
+        }
+        if piv != col {
+            for c in 0..n {
+                m.swap(col * n + c, piv * n + c);
+            }
+            x.swap(col, piv);
+        }
+        // Eliminate below.
+        for r in col + 1..n {
+            let f = m[r * n + col] / m[col * n + col];
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                m[r * n + c] -= f * m[col * n + c];
+            }
+            x[r] -= f * x[col];
+        }
+    }
+    for i in (0..n).rev() {
+        let mut sum = x[i];
+        for c in i + 1..n {
+            sum -= m[i * n + c] * x[c];
+        }
+        x[i] = sum / m[i * n + i];
+    }
+    Ok(x)
+}
+
+/// Euclidean distance between points.
+pub fn dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: usize, cols: usize, vals: &[f64]) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vals.to_vec(),
+        }
+    }
+
+    #[test]
+    fn cholesky_solves_spd() {
+        // A = [[4,2],[2,3]], b = [10, 8] -> x = [1.75, 1.5]
+        let a = mat(2, 2, &[4.0, 2.0, 2.0, 3.0]);
+        let x = solve_spd(&a, &[10.0, 8.0]).unwrap();
+        assert!((x[0] - 1.75).abs() < 1e-12);
+        assert!((x[1] - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = mat(2, 2, &[1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(solve_spd(&a, &[1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn general_solver_with_pivoting() {
+        // Requires a row swap: first pivot is 0.
+        let a = mat(3, 3, &[0.0, 2.0, 1.0, 1.0, 0.0, 1.0, 2.0, 1.0, 0.0]);
+        let xs = solve_general(&a, &[7.0, 4.0, 5.0]).unwrap();
+        let back = a.matvec(&xs);
+        for (g, w) in back.iter().zip(&[7.0, 4.0, 5.0]) {
+            assert!((g - w).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn general_solver_detects_singular() {
+        let a = mat(2, 2, &[1.0, 2.0, 2.0, 4.0]);
+        assert!(solve_general(&a, &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn residual_random_spd() {
+        // Build A = BᵀB + I (SPD), check ‖Ax - b‖ small.
+        let n = 8;
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut bm = Mat::zeros(n, n);
+        for r in 0..n {
+            for c in 0..n {
+                bm.set(r, c, rng.range_f64(-1.0, 1.0));
+            }
+        }
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += bm.at(k, i) * bm.at(k, j);
+                }
+                a.set(i, j, s + if i == j { 1.0 } else { 0.0 });
+            }
+        }
+        let b: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let x = solve_spd(&a, &b).unwrap();
+        let r = a.matvec(&x);
+        for (g, w) in r.iter().zip(&b) {
+            assert!((g - w).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn dist_basic() {
+        assert!((dist(&[0.0, 0.0], &[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+}

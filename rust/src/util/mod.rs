@@ -1,0 +1,13 @@
+//! Self-contained substrates: JSON, RNG, statistics, dense linear algebra
+//! and a property-testing mini-framework.
+//!
+//! The build environment resolves crates offline from a fixed vendor set that
+//! does not include serde/rand/nalgebra/proptest, so the paper's
+//! infrastructure needs (knowledge-base persistence, stochastic simulation,
+//! RBF interpolation, invariant testing) are implemented here from scratch.
+
+pub mod json;
+pub mod linalg;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;

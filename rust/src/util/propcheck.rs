@@ -1,0 +1,201 @@
+//! Property-based testing mini-framework (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` against `cases` random values
+//! from `gen`; on failure it performs greedy shrinking via the value's
+//! [`Shrink`] implementation and panics with the minimal counterexample.
+//! Used by the decomposition / tuner / balancer invariant tests.
+
+use crate::util::rng::Rng;
+
+/// Types that can propose smaller versions of themselves for shrinking.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate strictly-smaller values, in decreasing order of aggression.
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<usize> {
+        (*self as u64).shrink().into_iter().map(|v| v as usize).collect()
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+            out.push(self.trunc());
+        }
+        out.retain(|v| v != self);
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[1..].to_vec());
+            // Shrink a single element (first shrinkable).
+            for (i, item) in self.iter().enumerate() {
+                if let Some(smaller) = item.shrink().into_iter().next() {
+                    let mut v = self.clone();
+                    v[i] = smaller;
+                    out.push(v);
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<(A, B)> {
+        let mut out: Vec<(A, B)> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<(A, B, C)> {
+        let mut out: Vec<(A, B, C)> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink()
+                .into_iter()
+                .map(|b| (self.0.clone(), b, self.2.clone())),
+        );
+        out.extend(
+            self.2
+                .shrink()
+                .into_iter()
+                .map(|c| (self.0.clone(), self.1.clone(), c)),
+        );
+        out
+    }
+}
+
+/// Run `prop` on `cases` random inputs; shrink and panic on failure.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let value = gen(&mut rng);
+        if let Err(msg) = prop(&value) {
+            let (min_value, min_msg) = shrink_loop(value, msg, &prop);
+            panic!(
+                "property failed (case {case}/{cases}, seed {seed}):\n  \
+                 counterexample: {min_value:?}\n  reason: {min_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink, P: Fn(&T) -> Result<(), String>>(
+    mut value: T,
+    mut msg: String,
+    prop: &P,
+) -> (T, String) {
+    // Greedy descent, bounded to avoid pathological loops.
+    for _ in 0..1000 {
+        let mut advanced = false;
+        for cand in value.shrink() {
+            if let Err(m) = prop(&cand) {
+                value = cand;
+                msg = m;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    (value, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        forall(
+            1,
+            200,
+            |r| r.below(1000),
+            |&n| {
+                if n < 1000 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "counterexample: 100")]
+    fn shrinks_to_minimal_counterexample() {
+        // Property "n < 100" fails first at some random n >= 100 and must
+        // shrink to exactly 100.
+        forall(
+            2,
+            500,
+            |r| r.below(100_000),
+            |&n| {
+                if n < 100 {
+                    Ok(())
+                } else {
+                    Err(format!("{n} >= 100"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn vec_shrink_reduces_len() {
+        let v = vec![5u64, 6, 7, 8];
+        let shrunk = v.shrink();
+        assert!(shrunk.iter().any(|s| s.len() < v.len()));
+    }
+
+    #[test]
+    fn tuple_shrink_covers_both_slots() {
+        let t = (4u64, 8u64);
+        let shrunk = t.shrink();
+        assert!(shrunk.iter().any(|(a, _)| *a < 4));
+        assert!(shrunk.iter().any(|(_, b)| *b < 8));
+    }
+}

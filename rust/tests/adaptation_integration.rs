@@ -1,0 +1,142 @@
+//! Integration tests for the adaptation pipeline over the simulated
+//! machine: tuner -> KB -> derivation -> load balancer, end-to-end
+//! (the Section 3.2/3.3 workflow of Fig 4).
+
+use marrow::balance::LoadBalancer;
+use marrow::bench::workloads;
+use marrow::data::workload::Workload;
+use marrow::kb::KnowledgeBase;
+use marrow::platform::device::{i7_hd7950, opteron_6272_quad};
+use marrow::scheduler::{ExecEnv, SimEnv};
+use marrow::sim::cpuload::LoadProfile;
+use marrow::sim::machine::SimMachine;
+use marrow::tuner::builder::{build_profile, TunerOpts};
+use marrow::tuner::profile::ProfileOrigin;
+
+#[test]
+fn fig4_workflow_build_store_derive_balance() {
+    // 1. New (SCT, workload) arrives; profile construction runs (box
+    //    "Build SCT profile") and the result is persisted.
+    let b1 = workloads::filter_pipeline(1024, 1024, true);
+    let mut env = SimEnv::new(SimMachine::new(i7_hd7950(1), 1));
+    env.copy_bytes = b1.copy_bytes;
+    let p1 = build_profile(&mut env, &b1.sct, &b1.workload, b1.total_units, &TunerOpts::default())
+        .unwrap();
+    let mut kb = KnowledgeBase::in_memory();
+    kb.store(p1.clone());
+
+    // 2. A different workload of the same SCT arrives: derivation (box
+    //    "Derive work distribution") must produce a nearby configuration.
+    let b2 = workloads::filter_pipeline(2048, 2048, true);
+    let derived = kb.derive(&b2.sct.id(), &b2.workload).expect("derivable");
+    assert!((derived.cpu_share - p1.config.cpu_share).abs() < 0.3);
+
+    // 3. Recurrent executions under the derived config are monitored; the
+    //    balancer refines and the refined profile is persisted.
+    let mut cfg = derived;
+    let mut lb = LoadBalancer::new(0.85, cfg.cpu_share);
+    let mut env2 = SimEnv::new(SimMachine::new(i7_hd7950(1), 2));
+    env2.copy_bytes = b2.copy_bytes;
+    let mut total = 0.0;
+    for _ in 0..50 {
+        total += lb
+            .step(&mut env2, &b2.sct, b2.total_units, &mut cfg)
+            .unwrap()
+            .total;
+    }
+    kb.store(marrow::tuner::profile::Profile {
+        sct_id: b2.sct.id(),
+        workload: b2.workload.clone(),
+        config: cfg,
+        best_time: total / 50.0,
+        origin: ProfileOrigin::Refined,
+    });
+    assert_eq!(kb.len(), 2);
+    // The refined entry is retrievable verbatim.
+    assert!(kb.lookup(&b2.sct.id(), &b2.workload).is_some());
+}
+
+#[test]
+fn derived_config_performs_close_to_built() {
+    // The Table-5 claim in miniature: derive for an unseen size and compare
+    // against a from-scratch construction.
+    let train = [(1024u64, 1024u64), (4096, 4096)];
+    let mut kb = KnowledgeBase::in_memory();
+    for (i, &(h, w)) in train.iter().enumerate() {
+        let b = workloads::filter_pipeline(h, w, true);
+        let mut env = SimEnv::new(SimMachine::new(i7_hd7950(1), 10 + i as u64));
+        env.copy_bytes = b.copy_bytes;
+        let p = build_profile(&mut env, &b.sct, &b.workload, b.total_units, &TunerOpts::default())
+            .unwrap();
+        kb.store(p);
+    }
+    let b = workloads::filter_pipeline(2048, 2048, true);
+    let derived = kb.derive(&b.sct.id(), &b.workload).unwrap();
+
+    let mut env = SimEnv::new(SimMachine::new(i7_hd7950(1), 20));
+    env.copy_bytes = b.copy_bytes;
+    let built =
+        build_profile(&mut env, &b.sct, &b.workload, b.total_units, &TunerOpts::default())
+            .unwrap();
+
+    let t_derived = env.execute(&b.sct, b.total_units, &derived).unwrap().total;
+    let t_built = env.execute(&b.sct, b.total_units, &built.config).unwrap().total;
+    // Paper: performance error below ~5% after a few images; allow slack
+    // for the coarser two-point training set.
+    assert!(
+        t_derived < t_built * 1.25,
+        "derived {t_derived} vs built {t_built}"
+    );
+}
+
+#[test]
+fn load_spike_and_recovery_round_trip() {
+    // Load appears, balancer shifts to GPU; load disappears, balancer
+    // shifts back towards the CPU.
+    let b = workloads::saxpy(10_000_000);
+    let sim = SimMachine::new(i7_hd7950(1), 33)
+        .with_load(LoadProfile::new(vec![(0, 0), (20, 10), (90, 0)]));
+    let mut env = SimEnv::new(sim);
+    env.copy_bytes = b.copy_bytes;
+
+    let mut env0 = SimEnv::new(SimMachine::new(i7_hd7950(1), 34));
+    env0.copy_bytes = b.copy_bytes;
+    let p = build_profile(&mut env0, &b.sct, &b.workload, b.total_units, &TunerOpts::default())
+        .unwrap();
+    let mut cfg = p.config.clone();
+    let steady = cfg.cpu_share;
+    assert!(steady > 0.1, "saxpy should use the CPU: {steady}");
+
+    let mut lb = LoadBalancer::new(0.85, steady);
+    let mut share_under_load = steady;
+    for run in 0..160u64 {
+        lb.step(&mut env, &b.sct, b.total_units, &mut cfg).unwrap();
+        if run == 85 {
+            share_under_load = cfg.cpu_share;
+        }
+    }
+    assert!(
+        share_under_load < steady,
+        "under load share must drop: {share_under_load} vs {steady}"
+    );
+    assert!(
+        cfg.cpu_share > share_under_load,
+        "after recovery share must rebound: {} vs {share_under_load}",
+        cfg.cpu_share
+    );
+}
+
+#[test]
+fn cpu_only_machine_full_flow() {
+    let b = workloads::fft(128);
+    let mut env = SimEnv::new(SimMachine::new(opteron_6272_quad(), 44));
+    env.copy_bytes = b.copy_bytes;
+    let p = build_profile(&mut env, &b.sct, &b.workload, b.total_units, &TunerOpts::default())
+        .unwrap();
+    assert_eq!(p.config.cpu_share, 1.0);
+    assert!(p.config.overlap.is_empty());
+    let mut kb = KnowledgeBase::in_memory();
+    kb.store(p);
+    let derived = kb.derive(&b.sct.id(), &Workload::d1(256 * 1024 * 1024)).unwrap();
+    assert_eq!(derived.cpu_share, 1.0);
+}

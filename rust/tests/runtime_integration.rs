@@ -1,0 +1,291 @@
+//! Integration tests over the real PJRT runtime: AOT artifacts -> compile
+//! -> chunked execution -> scheduler-level merging. These exercise the
+//! cross-module composition the lib tests mock out.
+//!
+//! They require `make artifacts`; every test no-ops (with a note) when the
+//! manifest is absent so `cargo test` stays green pre-build.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use marrow::bench::workloads;
+use marrow::data::image::{bodies, image, randn_vec, volume};
+use marrow::data::vector::{ArgValue, VectorArg};
+use marrow::platform::cpu::FissionLevel;
+use marrow::platform::device::i7_hd7950;
+use marrow::runtime::artifacts::Manifest;
+use marrow::runtime::client::RtClient;
+use marrow::runtime::exec::{ChunkRunner, RequestArgs};
+use marrow::scheduler::real::RealScheduler;
+use marrow::sct::Sct;
+use marrow::tuner::profile::FrameworkConfig;
+
+fn manifest() -> Option<Manifest> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping integration test");
+        return None;
+    }
+    Some(Manifest::load(&dir).unwrap())
+}
+
+fn cfg(share: f64) -> FrameworkConfig {
+    FrameworkConfig {
+        fission: FissionLevel::L2,
+        overlap: vec![2],
+        wgs: 256,
+        cpu_share: share,
+    }
+}
+
+#[test]
+fn saxpy_partition_chunks_match_host() {
+    let Some(man) = manifest() else { return };
+    let client = RtClient::cpu().unwrap();
+    let runner = ChunkRunner::new(&client, &man);
+    let n = 8192usize;
+    let x = randn_vec(1, n);
+    let y = randn_vec(2, n);
+    let b = workloads::saxpy(n as u64);
+    let args = RequestArgs {
+        vectors: vec![
+            VectorArg::partitioned_f32("x", x.clone(), 1),
+            VectorArg::partitioned_f32("y", y.clone(), 1),
+        ],
+        scalars: vec![3.0],
+    };
+    let outs = runner.run_tree(&b.sct, &args, 0, n as u64).unwrap();
+    let got = outs[0].as_f32().unwrap();
+    for i in 0..n {
+        assert!((got[i] - (3.0 * x[i] + y[i])).abs() < 1e-4, "elem {i}");
+    }
+    // 8192 = 2 x 4096-chunks.
+    assert_eq!(runner.launches.get(), 2);
+}
+
+#[test]
+fn super_chunk_selection_reduces_launches() {
+    let Some(man) = manifest() else { return };
+    let client = RtClient::cpu().unwrap();
+    let n = 32768u64;
+    let b = workloads::saxpy(n);
+    let args = RequestArgs {
+        vectors: vec![
+            VectorArg::partitioned_f32("x", randn_vec(3, n as usize), 1),
+            VectorArg::partitioned_f32("y", randn_vec(4, n as usize), 1),
+        ],
+        scalars: vec![1.0],
+    };
+    let runner = ChunkRunner::new(&client, &man);
+    runner.run_tree(&b.sct, &args, 0, n).unwrap();
+    // 32768 divides the 32768-chunk artifact: exactly one launch.
+    assert_eq!(runner.launches.get(), 1);
+}
+
+#[test]
+fn filter_pipeline_fused_equals_staged_through_pjrt() {
+    let Some(man) = manifest() else { return };
+    let client = RtClient::cpu().unwrap();
+    // w = 512: the staged single-filter artifacts are lowered at this width.
+    let (h, w) = (64usize, 512usize);
+    let img = image(9, h, w);
+    let args = RequestArgs {
+        vectors: vec![VectorArg::partitioned_f32("img", img, w as u64)],
+        scalars: vec![17.0, 0.0, 100.0],
+    };
+    let runner = ChunkRunner::new(&client, &man);
+    let fused = workloads::filter_pipeline(h as u64, w as u64, true);
+    let staged = workloads::filter_pipeline(h as u64, w as u64, false);
+    let a = runner.run_tree(&fused.sct, &args, 0, h as u64).unwrap();
+    let b = runner.run_tree(&staged.sct, &args, 0, h as u64).unwrap();
+    assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+}
+
+#[test]
+fn filter_chunking_is_offset_invariant() {
+    // Running rows [0,64) as one call must equal running [0,8) + [8,64)
+    // separately — the dynamic row_off input at work.
+    let Some(man) = manifest() else { return };
+    let client = RtClient::cpu().unwrap();
+    let (h, w) = (64usize, 256usize);
+    let img = image(13, h, w);
+    let args = RequestArgs {
+        vectors: vec![VectorArg::partitioned_f32("img", img, w as u64)],
+        scalars: vec![5.0, 0.0, 140.0],
+    };
+    let runner = ChunkRunner::new(&client, &man);
+    let fused = workloads::filter_pipeline(h as u64, w as u64, true);
+    let whole = runner.run_tree(&fused.sct, &args, 0, h as u64).unwrap();
+    let head = runner.run_tree(&fused.sct, &args, 0, 8).unwrap();
+    let tail = runner.run_tree(&fused.sct, &args, 8, (h - 8) as u64).unwrap();
+    let whole = whole[0].as_f32().unwrap();
+    let head = head[0].as_f32().unwrap();
+    let tail = tail[0].as_f32().unwrap();
+    assert_eq!(&whole[..head.len()], head);
+    assert_eq!(&whole[head.len()..], tail);
+}
+
+#[test]
+fn fft_roundtrip_identity_through_scheduler() {
+    let Some(man) = manifest() else { return };
+    let client = RtClient::cpu().unwrap();
+    let n_ffts = 32u64;
+    let re = randn_vec(5, (n_ffts * 512) as usize);
+    let im = randn_vec(6, (n_ffts * 512) as usize);
+    let mut b = workloads::fft(1);
+    b.total_units = n_ffts;
+    let args = RequestArgs {
+        vectors: vec![
+            VectorArg::partitioned_f32("re", re.clone(), 512),
+            VectorArg::partitioned_f32("im", im.clone(), 512),
+        ],
+        scalars: vec![],
+    };
+    let mut s = RealScheduler::new(i7_hd7950(1), &client, &man);
+    let out = s.run_request(&b.sct, &args, n_ffts, &cfg(0.25)).unwrap();
+    let rr = out.outputs[0].as_f32().unwrap();
+    let ri = out.outputs[1].as_f32().unwrap();
+    for i in 0..rr.len() {
+        assert!((rr[i] - re[i]).abs() < 1e-3, "re[{i}]");
+        assert!((ri[i] - im[i]).abs() < 1e-3, "im[{i}]");
+    }
+}
+
+#[test]
+fn nbody_chunks_match_host_direct_sum() {
+    let Some(man) = manifest() else { return };
+    let client = RtClient::cpu().unwrap();
+    let n = 512usize;
+    let pos = bodies(8, n);
+    let b = workloads::nbody(n as u64, 1);
+    let args = RequestArgs {
+        vectors: vec![VectorArg::copied_f32("pos", pos.clone())],
+        scalars: vec![0.0],
+    };
+    let mut s = RealScheduler::new(i7_hd7950(1), &client, &man);
+    let out = s.run_request(&b.sct, &args, n as u64, &cfg(0.25)).unwrap();
+    let acc = out.outputs[0].as_f32().unwrap();
+    assert_eq!(acc.len(), n * 3);
+    // Host oracle: softened direct sum (eps = 1e-3, matching the kernel).
+    let eps2 = 1e-3f32 * 1e-3;
+    for i in (0..n).step_by(53) {
+        let mut want = [0.0f32; 3];
+        for j in 0..n {
+            let dx = pos[j * 4] - pos[i * 4];
+            let dy = pos[j * 4 + 1] - pos[i * 4 + 1];
+            let dz = pos[j * 4 + 2] - pos[i * 4 + 2];
+            let r2 = dx * dx + dy * dy + dz * dz + eps2;
+            let w = pos[j * 4 + 3] / (r2 * r2.sqrt());
+            want[0] += dx * w;
+            want[1] += dy * w;
+            want[2] += dz * w;
+        }
+        for d in 0..3 {
+            let got = acc[i * 3 + d];
+            assert!(
+                (got - want[d]).abs() < 2e-2 * want[d].abs().max(1.0),
+                "body {i} dim {d}: {got} vs {}",
+                want[d]
+            );
+        }
+    }
+}
+
+#[test]
+fn nbody_loop_host_update_advances_positions() {
+    let Some(man) = manifest() else { return };
+    let client = RtClient::cpu().unwrap();
+    let n = 512usize;
+    let pos0 = bodies(10, n);
+    let mut b = workloads::nbody(n as u64, 2);
+    let moved = std::sync::Arc::new(std::sync::atomic::AtomicU32::new(0));
+    let moved2 = moved.clone();
+    if let Sct::Loop { state, .. } = &mut b.sct {
+        state.update = Some(Arc::new(move |_it, vecs: &mut Vec<ArgValue>, outs| {
+            moved2.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            if let (ArgValue::F32(p), Ok(a)) = (&mut vecs[0], outs[0].as_f32()) {
+                for i in 0..p.len() / 4 {
+                    for d in 0..3 {
+                        p[i * 4 + d] += 1e-2 * a[i * 3 + d];
+                    }
+                }
+            }
+            true
+        }));
+    }
+    let args = RequestArgs {
+        vectors: vec![VectorArg::copied_f32("pos", pos0)],
+        scalars: vec![0.0],
+    };
+    let mut s = RealScheduler::new(i7_hd7950(1), &client, &man);
+    let out = s.run_request(&b.sct, &args, n as u64, &cfg(0.0)).unwrap();
+    assert_eq!(moved.load(std::sync::atomic::Ordering::SeqCst), 2);
+    assert!(out.outputs[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn segmentation_alphabet_and_layout() {
+    let Some(man) = manifest() else { return };
+    let client = RtClient::cpu().unwrap();
+    let planes = 16usize;
+    let vol = volume(14, planes, 32, 32);
+    let mut b = workloads::segmentation(1);
+    b.total_units = planes as u64;
+    let args = RequestArgs {
+        vectors: vec![
+            VectorArg::partitioned_f32("vol", vol.clone(), 32 * 32),
+            VectorArg::copied_f32("thresholds", vec![85.0, 170.0]),
+        ],
+        scalars: vec![],
+    };
+    let mut s = RealScheduler::new(i7_hd7950(1), &client, &man);
+    let out = s.run_request(&b.sct, &args, planes as u64, &cfg(0.5)).unwrap();
+    let got = out.outputs[0].as_f32().unwrap();
+    for (i, (&v, &g)) in vol.iter().zip(got).enumerate() {
+        let want = if v < 85.0 {
+            0.0
+        } else if v > 170.0 {
+            255.0
+        } else {
+            128.0
+        };
+        assert_eq!(g, want, "voxel {i}");
+    }
+}
+
+#[test]
+fn executable_cache_compiles_each_artifact_once() {
+    let Some(man) = manifest() else { return };
+    let client = RtClient::cpu().unwrap();
+    let info = &man.family("saxpy").unwrap()[0];
+    assert_eq!(client.cached(), 0);
+    let _ = client.executable(info).unwrap();
+    let _ = client.executable(info).unwrap();
+    assert_eq!(client.cached(), 1);
+}
+
+#[test]
+fn gpu_only_and_hybrid_agree_numerically() {
+    // Device placement must never change results (Section 3's single-image
+    // view): the same request under different distributions is identical.
+    let Some(man) = manifest() else { return };
+    let client = RtClient::cpu().unwrap();
+    let n = 16384usize;
+    let x = randn_vec(20, n);
+    let y = randn_vec(21, n);
+    let b = workloads::saxpy(n as u64);
+    let args = RequestArgs {
+        vectors: vec![
+            VectorArg::partitioned_f32("x", x, 1),
+            VectorArg::partitioned_f32("y", y, 1),
+        ],
+        scalars: vec![0.5],
+    };
+    let mut s = RealScheduler::new(i7_hd7950(1), &client, &man);
+    let a = s.run_request(&b.sct, &args, n as u64, &cfg(0.0)).unwrap();
+    let b2 = s.run_request(&b.sct, &args, n as u64, &cfg(0.5)).unwrap();
+    assert_eq!(
+        a.outputs[0].as_f32().unwrap(),
+        b2.outputs[0].as_f32().unwrap()
+    );
+}
