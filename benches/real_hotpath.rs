@@ -8,13 +8,11 @@ use marrow::bench::harness::{fmt_time, BenchResult, Timer};
 use marrow::bench::workloads;
 use marrow::data::image::randn_vec;
 use marrow::data::vector::VectorArg;
-use marrow::platform::cpu::FissionLevel;
 use marrow::platform::device::i7_hd7950;
 use marrow::runtime::artifacts::Manifest;
 use marrow::runtime::client::{literal_f32, RtClient};
 use marrow::runtime::exec::RequestArgs;
-use marrow::scheduler::real::RealScheduler;
-use marrow::tuner::profile::FrameworkConfig;
+use marrow::session::{Computation, ConfigOverride, Session};
 
 fn main() {
     let manifest = match Manifest::load_default() {
@@ -63,8 +61,10 @@ fn main() {
         ));
     }
 
-    // 3. End-to-end request through the full scheduler stack.
-    let bench = workloads::saxpy(n as u64);
+    // 3. End-to-end request through the full stack, driven by the Session
+    //    facade under a pinned hybrid split (deterministic A/B with the raw
+    //    launch loops above).
+    let comp = Computation::from(workloads::saxpy(n as u64));
     let args = RequestArgs {
         vectors: vec![
             VectorArg::partitioned_f32("x", x.clone(), 1),
@@ -72,16 +72,11 @@ fn main() {
         ],
         scalars: vec![2.0],
     };
-    let cfg = FrameworkConfig {
-        fission: FissionLevel::L2,
-        overlap: vec![2],
-        wgs: 256,
-        cpu_share: 0.25,
-    };
-    let machine = i7_hd7950(1);
-    results.push(timer.time("saxpy 262k full scheduler request", || {
-        let mut s = RealScheduler::new(machine.clone(), &client, &manifest);
-        let _ = s.run_request(&bench.sct, &args, n as u64, &cfg).unwrap();
+    let mut session = Session::real(i7_hd7950(1), &client, &manifest);
+    results.push(timer.time("saxpy 262k full session request", || {
+        let _ = session
+            .run_with(&comp, &args, ConfigOverride::new().cpu_share(0.25))
+            .unwrap();
     }));
 
     println!("\n{}", BenchResult::header());

@@ -1,54 +1,46 @@
-//! Adaptive load-balancing demo (the Fig 11 scenario, simulated clock):
-//! an FFT workload runs steadily until an external application floods the
-//! CPU with compute threads; the monitor detects the unbalance and the
-//! adaptive binary search shifts work to the GPU.
+//! Adaptive load-balancing demo (the Fig 11 scenario, simulated clock)
+//! through the `Session` facade: an FFT workload runs steadily until an
+//! external application floods the CPU with compute threads; the session's
+//! monitor detects the unbalance and the adaptive binary search shifts work
+//! to the GPU — all inside `Session::run`, no manual balancer wiring.
 //!
 //! Run with: `cargo run --release --example adaptive_load`.
 
-use marrow::balance::LoadBalancer;
 use marrow::bench::workloads;
 use marrow::platform::device::i7_hd7950;
-use marrow::scheduler::SimEnv;
+use marrow::runtime::exec::RequestArgs;
+use marrow::session::{Computation, Session};
 use marrow::sim::cpuload::LoadProfile;
 use marrow::sim::machine::SimMachine;
-use marrow::tuner::builder::{build_profile, TunerOpts};
 
 fn main() -> marrow::Result<()> {
-    let b = workloads::fft(128);
+    let comp = Computation::from(workloads::fft(128));
+    let args = RequestArgs::default();
 
-    // Profile under stable load.
-    let mut env = SimEnv::new(SimMachine::new(i7_hd7950(1), 99));
-    env.copy_bytes = b.copy_bytes;
-    let profile = build_profile(
-        &mut env,
-        &b.sct,
-        &b.workload,
-        b.total_units,
-        &TunerOpts::default(),
-    )?;
-    let mut cfg = profile.config.clone();
+    // Profile under stable load; the tuned profile lands in the KB.
+    let mut tuned = Session::simulated(i7_hd7950(1), 99);
+    let profile = tuned.profile(&comp)?;
     println!(
         "profiled distribution: GPU {:.1}% / CPU {:.1}% (fission {}, overlap {:?})",
-        100.0 * cfg.gpu_share(),
-        100.0 * cfg.cpu_share,
-        cfg.fission.label(),
-        cfg.overlap
+        100.0 * profile.config.gpu_share(),
+        100.0 * profile.config.cpu_share,
+        profile.config.fission.label(),
+        profile.config.overlap
     );
 
-    // Re-run with a load spike at run 15: 9 external compute threads.
+    // Re-run on a machine with a load spike at run 15 (9 external compute
+    // threads), inheriting the warm KB: every run is a KB hit and the
+    // session's balancer refines the stored distribution in place.
     let sim = SimMachine::new(i7_hd7950(1), 100).with_load(LoadProfile::step_at(15, 9));
-    let mut env = SimEnv::new(sim);
-    env.copy_bytes = b.copy_bytes;
-    let mut lb = LoadBalancer::new(0.85, cfg.cpu_share);
+    let mut s = Session::sim(sim).with_kb(tuned.into_kb());
 
     println!("\n run | GPU share | exec time | event");
     println!("-----+-----------+-----------+-------");
     for run in 0..60u64 {
-        let ops = lb.balance_ops;
-        let out = lb.step(&mut env, &b.sct, b.total_units, &mut cfg)?;
+        let out = s.run(&comp, &args)?;
         let event = if run == 15 {
             "<- load spike (9 threads)"
-        } else if lb.balance_ops > ops {
+        } else if out.rebalanced {
             "<- balance op"
         } else {
             ""
@@ -56,14 +48,15 @@ fn main() -> marrow::Result<()> {
         if run % 3 == 0 || !event.is_empty() {
             println!(
                 " {run:>3} |   {:>5.1}%  | {:>7.2}ms | {event}",
-                100.0 * cfg.gpu_share(),
-                out.total * 1e3
+                100.0 * out.config.gpu_share(),
+                out.exec.total * 1e3
             );
         }
     }
+    let st = s.stats();
     println!(
-        "\n{} balance operations, {} unbalanced runs out of 60",
-        lb.balance_ops, lb.unbalanced_runs
+        "\n{} balance operations, {} unbalanced runs out of {}",
+        st.balance_ops, st.unbalanced_runs, st.runs
     );
     println!("adaptive_load OK");
     Ok(())

@@ -5,6 +5,9 @@
 //! benchmarks, verifying numerics end-to-end and reporting the headline
 //! comparison (hybrid plan vs GPU-only plan, real wall clock).
 //!
+//! Every request goes through the `Session` facade; the hybrid/GPU-only
+//! A/B uses pinned `ConfigOverride`s so the comparison is deterministic.
+//!
 //! Run with: `cargo run --release --example paper_eval` (after `make
 //! artifacts`). Results are recorded in EXPERIMENTS.md §E2E.
 
@@ -14,22 +17,15 @@ use marrow::bench::harness::fmt_time;
 use marrow::bench::workloads;
 use marrow::data::image::{bodies, image, randn_vec, volume};
 use marrow::data::vector::{ArgValue, VectorArg};
-use marrow::platform::cpu::FissionLevel;
 use marrow::platform::device::i7_hd7950;
 use marrow::runtime::artifacts::Manifest;
 use marrow::runtime::client::RtClient;
 use marrow::runtime::exec::RequestArgs;
-use marrow::scheduler::real::RealScheduler;
-use marrow::sct::{LoopState, Sct};
-use marrow::tuner::profile::FrameworkConfig;
+use marrow::sct::Sct;
+use marrow::session::{Computation, ConfigOverride, Session};
 
-fn cfg(cpu_share: f64) -> FrameworkConfig {
-    FrameworkConfig {
-        fission: FissionLevel::L2,
-        overlap: vec![2],
-        wgs: 256,
-        cpu_share,
-    }
+fn hybrid() -> ConfigOverride {
+    ConfigOverride::new().cpu_share(0.25)
 }
 
 fn main() -> marrow::Result<()> {
@@ -45,7 +41,7 @@ fn main() -> marrow::Result<()> {
     {
         let n = 1 << 19;
         let (x, y) = (randn_vec(11, n), randn_vec(12, n));
-        let b = workloads::saxpy(n as u64);
+        let comp = Computation::from(workloads::saxpy(n as u64));
         let args = RequestArgs {
             vectors: vec![
                 VectorArg::partitioned_f32("x", x.clone(), 1),
@@ -53,49 +49,45 @@ fn main() -> marrow::Result<()> {
             ],
             scalars: vec![1.75],
         };
-        let mut s = RealScheduler::new(machine.clone(), &client, &manifest);
-        let hybrid = s.run_request(&b.sct, &args, n as u64, &cfg(0.25))?;
-        let got = hybrid.outputs[0].as_f32()?;
+        let mut s = Session::real(machine.clone(), &client, &manifest);
+        let hy = s.run_with(&comp, &args, hybrid())?;
+        let got = hy.outputs[0].as_f32()?;
         let mut err = 0.0f32;
         for i in 0..n {
             err = err.max((got[i] - (1.75 * x[i] + y[i])).abs());
         }
         assert!(err < 1e-4, "saxpy err {err}");
-        let gpu_only = s.run_request(&b.sct, &args, n as u64, &cfg(0.0))?;
-        rows.push((
-            format!("saxpy {n}"),
-            hybrid.exec.total,
-            gpu_only.exec.total,
-            s.launches,
-        ));
+        let go = s.run_with(&comp, &args, ConfigOverride::new().gpu_only())?;
+        rows.push((format!("saxpy {n}"), hy.exec.total, go.exec.total, go.launches));
     }
 
     // ---- Filter pipeline (fused vs staged equality + timing) -------------
     {
         let (h, w) = (256usize, 512usize);
         let img = image(3, h, w);
-        let b = workloads::filter_pipeline(h as u64, w as u64, true);
+        let fused = Computation::from(workloads::filter_pipeline(h as u64, w as u64, true));
+        let staged =
+            Computation::from(workloads::filter_pipeline(h as u64, w as u64, false));
         let args = RequestArgs {
             vectors: vec![VectorArg::partitioned_f32("img", img, w as u64)],
             scalars: vec![42.0, 0.0, 128.0],
         };
-        let mut s = RealScheduler::new(machine.clone(), &client, &manifest);
-        let hybrid = s.run_request(&b.sct, &args, h as u64, &cfg(0.25))?;
-        let staged = workloads::filter_pipeline(h as u64, w as u64, false);
-        let st = s.run_request(&staged.sct, &args, h as u64, &cfg(0.25))?;
-        let err = hybrid.outputs[0]
+        let mut s = Session::real(machine.clone(), &client, &manifest);
+        let hy = s.run_with(&fused, &args, hybrid())?;
+        let st = s.run_with(&staged, &args, hybrid())?;
+        let err = hy.outputs[0]
             .as_f32()?
             .iter()
             .zip(st.outputs[0].as_f32()?)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(err < 1e-3, "fused/staged divergence {err}");
-        let gpu_only = s.run_request(&b.sct, &args, h as u64, &cfg(0.0))?;
+        let go = s.run_with(&fused, &args, ConfigOverride::new().gpu_only())?;
         rows.push((
             format!("filter_pipeline {h}x{w}"),
-            hybrid.exec.total,
-            gpu_only.exec.total,
-            s.launches,
+            hy.exec.total,
+            go.exec.total,
+            go.launches,
         ));
     }
 
@@ -104,8 +96,7 @@ fn main() -> marrow::Result<()> {
         let n_ffts = 256usize; // 256 x 512-pt FFTs
         let re = randn_vec(21, n_ffts * 512);
         let im = randn_vec(22, n_ffts * 512);
-        let mut b = workloads::fft(1);
-        b.total_units = n_ffts as u64;
+        let comp = Computation::from(workloads::fft(1)).units(n_ffts as u64);
         let args = RequestArgs {
             vectors: vec![
                 VectorArg::partitioned_f32("re", re.clone(), 512),
@@ -113,22 +104,22 @@ fn main() -> marrow::Result<()> {
             ],
             scalars: vec![],
         };
-        let mut s = RealScheduler::new(machine.clone(), &client, &manifest);
-        let hybrid = s.run_request(&b.sct, &args, n_ffts as u64, &cfg(0.25))?;
+        let mut s = Session::real(machine.clone(), &client, &manifest);
+        let hy = s.run_with(&comp, &args, hybrid())?;
         // Roundtrip identity: ifft(fft(x)) == x.
-        let rr = hybrid.outputs[0].as_f32()?;
+        let rr = hy.outputs[0].as_f32()?;
         let err = rr
             .iter()
             .zip(&re)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(err < 1e-3, "fft roundtrip err {err}");
-        let gpu_only = s.run_request(&b.sct, &args, n_ffts as u64, &cfg(0.0))?;
+        let go = s.run_with(&comp, &args, ConfigOverride::new().gpu_only())?;
         rows.push((
             format!("fft_roundtrip {n_ffts}x512"),
-            hybrid.exec.total,
-            gpu_only.exec.total,
-            s.launches,
+            hy.exec.total,
+            go.exec.total,
+            go.launches,
         ));
     }
 
@@ -138,10 +129,10 @@ fn main() -> marrow::Result<()> {
         let iters = 3u32;
         let dt = 1e-3f32;
         let pos = bodies(31, n);
-        let mut b = workloads::nbody(n as u64, iters);
+        let mut comp = Computation::from(workloads::nbody(n as u64, iters));
         // Attach the host state update (Loop stage 3, Section 3.1): Euler
         // drift of positions by the merged accelerations.
-        if let Sct::Loop { state, .. } = &mut b.sct {
+        if let Sct::Loop { state, .. } = comp.sct_mut() {
             state.update = Some(Arc::new(move |_it, vecs: &mut Vec<ArgValue>, outs| {
                 if let (ArgValue::F32(pos), Ok(acc)) = (&mut vecs[0], outs[0].as_f32()) {
                     for i in 0..pos.len() / 4 {
@@ -157,18 +148,17 @@ fn main() -> marrow::Result<()> {
             vectors: vec![VectorArg::copied_f32("pos", pos.clone())],
             scalars: vec![0.0], // Offset placeholder
         };
-        let mut s = RealScheduler::new(machine.clone(), &client, &manifest);
-        let hybrid = s.run_request(&b.sct, &args, n as u64, &cfg(0.25))?;
-        // Cross-check one acceleration on the host (direct sum, eps 1e-3).
-        let acc = hybrid.outputs[0].as_f32()?;
+        let mut s = Session::real(machine.clone(), &client, &manifest);
+        let hy = s.run_with(&comp, &args, hybrid())?;
+        let acc = hy.outputs[0].as_f32()?;
         assert_eq!(acc.len(), n * 3);
         assert!(acc.iter().all(|v| v.is_finite()));
-        let gpu_only = s.run_request(&b.sct, &args, n as u64, &cfg(0.0))?;
+        let go = s.run_with(&comp, &args, ConfigOverride::new().gpu_only())?;
         rows.push((
             format!("nbody {n} x{iters} iters"),
-            hybrid.exec.total,
-            gpu_only.exec.total,
-            s.launches,
+            hy.exec.total,
+            go.exec.total,
+            go.launches,
         ));
     }
 
@@ -176,8 +166,7 @@ fn main() -> marrow::Result<()> {
     {
         let planes = 64usize;
         let vol = volume(41, planes, 32, 32); // depth-major (d, h, w)
-        let mut b = workloads::segmentation(1);
-        b.total_units = planes as u64;
+        let comp = Computation::from(workloads::segmentation(1)).units(planes as u64);
         let args = RequestArgs {
             vectors: vec![
                 VectorArg::partitioned_f32("vol", vol.clone(), 32 * 32),
@@ -185,9 +174,9 @@ fn main() -> marrow::Result<()> {
             ],
             scalars: vec![],
         };
-        let mut s = RealScheduler::new(machine.clone(), &client, &manifest);
-        let hybrid = s.run_request(&b.sct, &args, planes as u64, &cfg(0.25))?;
-        let out = hybrid.outputs[0].as_f32()?;
+        let mut s = Session::real(machine.clone(), &client, &manifest);
+        let hy = s.run_with(&comp, &args, hybrid())?;
+        let out = hy.outputs[0].as_f32()?;
         assert_eq!(out.len(), vol.len());
         assert!(out.iter().all(|&v| v == 0.0 || v == 128.0 || v == 255.0));
         // Spot-check semantics.
@@ -201,12 +190,12 @@ fn main() -> marrow::Result<()> {
             };
             assert_eq!(out[i], want, "voxel {i}");
         }
-        let gpu_only = s.run_request(&b.sct, &args, planes as u64, &cfg(0.0))?;
+        let go = s.run_with(&comp, &args, ConfigOverride::new().gpu_only())?;
         rows.push((
             format!("segmentation {planes} planes"),
-            hybrid.exec.total,
-            gpu_only.exec.total,
-            s.launches,
+            hy.exec.total,
+            go.exec.total,
+            go.launches,
         ));
     }
 
@@ -224,7 +213,7 @@ fn main() -> marrow::Result<()> {
     }
     println!(
         "\nAll five benchmarks verified end-to-end through artifacts -> PJRT \
-         -> decomposer -> scheduler -> merge.\npaper_eval OK"
+         -> decomposer -> scheduler -> merge, driven by the Session facade.\npaper_eval OK"
     );
     Ok(())
 }

@@ -1,46 +1,37 @@
-//! Quickstart: build a Saxpy SCT, execute it on the real PJRT runtime under
-//! a hybrid CPU/GPU partition plan, and verify the numerics.
+//! Quickstart: the `Session` facade end-to-end.
 //!
-//! Run with: `cargo run --release --example quickstart` (after `make artifacts`).
+//! One `Computation` (a Saxpy map), one `Session` per backend — the session
+//! owns the scheduler, the knowledge base and the balancer, so there is no
+//! manual `Manifest`/`RealScheduler`/`FrameworkConfig` wiring here:
+//!
+//!  1. a *simulated* session runs Algorithm 1 and stores the tuned profile
+//!     in its knowledge base (fast: analytic cost model);
+//!  2. a *real* (PJRT) session inherits that KB, so its first `run` is
+//!     already a knowledge-base hit — the paper's "seamless" path — and the
+//!     numerics are verified against the host.
+//!
+//! Without `make artifacts` (or without the `pjrt` feature) step 2 falls
+//! back to the simulator and only reports timings.
+//!
+//! Run with: `cargo run --release --example quickstart`.
 
 use marrow::bench::workloads;
 use marrow::data::image::randn_vec;
 use marrow::data::vector::VectorArg;
-use marrow::platform::cpu::FissionLevel;
 use marrow::platform::device::i7_hd7950;
 use marrow::runtime::artifacts::Manifest;
 use marrow::runtime::client::RtClient;
 use marrow::runtime::exec::RequestArgs;
-use marrow::scheduler::real::RealScheduler;
-use marrow::tuner::profile::FrameworkConfig;
+use marrow::session::{Computation, Session};
 
 fn main() -> marrow::Result<()> {
     let n: usize = 1 << 18; // 262,144 elements
     let alpha = 2.5f32;
 
-    // 1. Host data.
+    // 1. Host data + the computation (a Map skeleton over the saxpy kernel).
     let x = randn_vec(1, n);
     let y = randn_vec(2, n);
-
-    // 2. The SCT: a Map skeleton over the saxpy kernel (Section 2.1).
-    let bench = workloads::saxpy(n as u64);
-
-    // 3. Runtime: PJRT CPU client + AOT artifact manifest.
-    let manifest = Manifest::load_default()?;
-    let client = RtClient::cpu()?;
-    println!("platform: {}", client.platform());
-
-    // 4. A hybrid framework configuration (fission L2, overlap 2, 25% CPU —
-    //    in production this comes from the tuner/KB; see `marrow profile`).
-    let cfg = FrameworkConfig {
-        fission: FissionLevel::L2,
-        overlap: vec![2],
-        wgs: 256,
-        cpu_share: 0.25,
-    };
-
-    // 5. Execute the request.
-    let mut sched = RealScheduler::new(i7_hd7950(1), &client, &manifest);
+    let comp = Computation::from(workloads::saxpy(n as u64));
     let args = RequestArgs {
         vectors: vec![
             VectorArg::partitioned_f32("x", x.clone(), 1),
@@ -48,23 +39,58 @@ fn main() -> marrow::Result<()> {
         ],
         scalars: vec![alpha as f64],
     };
-    let out = sched.run_request(&bench.sct, &args, n as u64, &cfg)?;
 
-    // 6. Verify against the host computation.
-    let got = out.outputs[0].as_f32()?;
-    assert_eq!(got.len(), n);
-    let mut max_err = 0.0f32;
-    for i in 0..n {
-        let want = alpha * x[i] + y[i];
-        max_err = max_err.max((got[i] - want).abs());
-    }
+    // 2. Tune in the simulator; the profile lands in the session's KB.
+    let mut sim = Session::simulated(i7_hd7950(1), 42);
+    let profile = sim.profile(&comp)?;
     println!(
-        "saxpy n={n}: total {:.3} ms over {} slots ({} chunk launches), max |err| = {max_err:.2e}",
-        out.exec.total * 1e3,
-        out.exec.slot_times.len(),
-        sched.launches,
+        "simulated profile: GPU {:.1}% / CPU {:.1}% (fission {}, overlap {:?}, wgs {})",
+        100.0 * profile.config.gpu_share(),
+        100.0 * profile.config.cpu_share,
+        profile.config.fission.label(),
+        profile.config.overlap,
+        profile.config.wgs,
     );
-    assert!(max_err < 1e-4, "numerics mismatch");
+
+    // 3. Run for real through the same facade, seeded with the sim-built KB.
+    match (Manifest::load_default(), RtClient::cpu()) {
+        (Ok(manifest), Ok(client)) => {
+            println!("platform: {}", client.platform());
+            let mut s =
+                Session::real(i7_hd7950(1), &client, &manifest).with_kb(sim.into_kb());
+            let out = s.run(&comp, &args)?;
+
+            // 4. Verify against the host computation.
+            let got = out.outputs[0].as_f32()?;
+            assert_eq!(got.len(), n);
+            let mut max_err = 0.0f32;
+            for i in 0..n {
+                let want = alpha * x[i] + y[i];
+                max_err = max_err.max((got[i] - want).abs());
+            }
+            println!(
+                "saxpy n={n}: total {:.3} ms over {} slots ({} chunk launches, \
+                 config {}), max |err| = {max_err:.2e}",
+                out.exec.total * 1e3,
+                out.exec.slot_times.len(),
+                out.launches,
+                out.origin.label(),
+            );
+            assert!(max_err < 1e-4, "numerics mismatch");
+        }
+        (man, client) => {
+            if let Some(e) = man.err().or(client.err()) {
+                println!("real runtime unavailable ({e}); running simulated");
+            }
+            let out = sim.run(&comp, &args)?;
+            println!(
+                "saxpy n={n} (simulated clock): total {:.3} ms over {} slots, config {}",
+                out.exec.total * 1e3,
+                out.exec.slot_times.len(),
+                out.origin.label(),
+            );
+        }
+    }
     println!("quickstart OK");
     Ok(())
 }

@@ -4,18 +4,19 @@
 //! An external application spawns compute-heavy threads mid-experiment; the
 //! load balancer detects the unbalance and shifts work to the GPU: an
 //! abrupt-but-quick shifting phase (1-4 runs in the paper) followed by a
-//! smoother in-depth binary search (~10 runs).
+//! smoother in-depth binary search (~10 runs). The whole experiment runs
+//! through the [`Session`] facade: profile under stable load, then repeated
+//! `Session::run` requests on a loaded machine with the warm KB.
 
-use crate::balance::LoadBalancer;
 use crate::bench::eval::EVAL_SEED;
 use crate::bench::harness::Table;
 use crate::bench::workloads;
 use crate::error::Result;
 use crate::platform::device::i7_hd7950;
-use crate::scheduler::SimEnv;
+use crate::runtime::exec::RequestArgs;
+use crate::session::{Computation, Session};
 use crate::sim::cpuload::LoadProfile;
 use crate::sim::machine::SimMachine;
-use crate::tuner::builder::{build_profile, TunerOpts};
 
 /// The run index where the external load kicks in.
 pub const LOAD_AT: u64 = 20;
@@ -34,34 +35,27 @@ pub struct TracePoint {
 
 /// Run the experiment; returns the trace.
 pub fn run() -> Result<Vec<TracePoint>> {
-    let b = workloads::fft(128);
-    // Initial distribution from a stable-load profile (Table 3's ~75/25).
-    let mut env0 = SimEnv::new(SimMachine::new(i7_hd7950(1), EVAL_SEED ^ 0x11));
-    env0.copy_bytes = b.copy_bytes;
-    let profile = build_profile(
-        &mut env0,
-        &b.sct,
-        &b.workload,
-        b.total_units,
-        &TunerOpts::default(),
-    )?;
-    let mut cfg = profile.config.clone();
+    let comp = Computation::from(workloads::fft(128));
+    // Initial distribution from a stable-load profile (Table 3's ~75/25),
+    // persisted in the session's knowledge base.
+    let mut tuned = Session::simulated(i7_hd7950(1), EVAL_SEED ^ 0x11);
+    tuned.profile(&comp)?;
 
+    // Same facade on the loaded machine, warm KB: every request is a KB
+    // hit and the monitor/ABS refine the stored distribution in place.
     let sim = SimMachine::new(i7_hd7950(1), EVAL_SEED ^ 0x12)
         .with_load(LoadProfile::step_at(LOAD_AT, LOAD_THREADS));
-    let mut env = SimEnv::new(sim);
-    env.copy_bytes = b.copy_bytes;
+    let mut s = Session::sim(sim).with_kb(tuned.into_kb());
 
-    let mut lb = LoadBalancer::new(0.85, cfg.cpu_share);
+    let args = RequestArgs::default();
     let mut trace = Vec::new();
     for run in 0..RUNS {
-        let ops_before = lb.balance_ops;
-        let out = lb.step(&mut env, &b.sct, b.total_units, &mut cfg)?;
+        let out = s.run(&comp, &args)?;
         trace.push(TracePoint {
             run,
-            gpu_share_pct: 100.0 * cfg.gpu_share(),
-            time: out.total,
-            triggered: lb.balance_ops > ops_before,
+            gpu_share_pct: 100.0 * out.config.gpu_share(),
+            time: out.exec.total,
+            triggered: out.rebalanced,
         });
     }
     Ok(trace)

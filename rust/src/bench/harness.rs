@@ -1,10 +1,16 @@
 //! Wall-clock timing harness — the offline stand-in for criterion.
 //!
-//! Warmup + fixed-iteration measurement with median/p95 reporting, and an
-//! aligned-table reporter shared by every `benches/*.rs` target.
+//! Warmup + fixed-iteration measurement with median/p95 reporting, an
+//! aligned-table reporter shared by every `benches/*.rs` target, and a
+//! [`Timer::time_session`] entry that benchmarks whole requests through the
+//! [`crate::session::Session`] facade.
 
 use std::time::Instant;
 
+use crate::error::Result;
+use crate::runtime::exec::RequestArgs;
+use crate::scheduler::ExecEnv;
+use crate::session::{Computation, Session};
 use crate::util::stats::{max, mean, median, min, percentile};
 
 /// One measured benchmark.
@@ -93,6 +99,33 @@ impl Timer {
             max_s: max(&samples),
         }
     }
+
+    /// Time repeated [`Session::run`] requests of one computation — the
+    /// facade-level benchmark entry. The first request runs untimed so
+    /// cold-start tuning happens before measurement; a failure in any
+    /// request (including the timed ones) fails the whole benchmark rather
+    /// than silently skewing the statistics.
+    pub fn time_session<E: ExecEnv>(
+        &self,
+        name: &str,
+        session: &mut Session<E>,
+        comp: &Computation,
+        args: &RequestArgs,
+    ) -> Result<BenchResult> {
+        session.run(comp, args)?;
+        let mut failure = None;
+        let result = self.time(name, || {
+            if failure.is_none() {
+                if let Err(e) = session.run(comp, args) {
+                    failure = Some(e);
+                }
+            }
+        });
+        match failure {
+            Some(e) => Err(e),
+            None => Ok(result),
+        }
+    }
 }
 
 /// Fixed-width table printer for eval outputs.
@@ -149,6 +182,20 @@ impl Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bench::workloads;
+    use crate::platform::device::i7_hd7950;
+
+    #[test]
+    fn time_session_measures_facade_requests() {
+        let comp = Computation::from(workloads::saxpy(1 << 16));
+        let mut s = Session::simulated(i7_hd7950(1), 4);
+        let r = Timer::new(0, 3)
+            .time_session("saxpy via session", &mut s, &comp, &RequestArgs::default())
+            .unwrap();
+        assert_eq!(r.iters, 3);
+        // 1 untimed + 3 timed requests went through the facade.
+        assert_eq!(s.stats().runs, 4);
+    }
 
     #[test]
     fn timing_produces_ordered_stats() {

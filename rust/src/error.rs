@@ -1,46 +1,76 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls keep the crate dependency-free (no
+//! `thiserror` offline); the `From<xla::Error>` conversion only exists when
+//! the real PJRT runtime is compiled in.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error type for every marrow subsystem.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Partitioning constraints of Section 3.1 cannot be satisfied.
-    #[error("decomposition error: {0}")]
     Decompose(String),
 
     /// A kernel/SCT specification is inconsistent.
-    #[error("specification error: {0}")]
     Spec(String),
 
     /// Artifact manifest or HLO loading problems.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
-    /// PJRT / XLA runtime failure.
-    #[error("runtime error: {0}")]
+    /// PJRT / XLA runtime failure (or the runtime is not compiled in).
     Runtime(String),
 
     /// Knowledge-base lookup/persistence failure.
-    #[error("knowledge base error: {0}")]
     Kb(String),
 
     /// Profiling / tuning failure.
-    #[error("tuner error: {0}")]
     Tuner(String),
 
     /// JSON parse error (own parser: no serde offline).
-    #[error("json error at byte {offset}: {msg}")]
     Json { offset: usize, msg: String },
 
     /// CLI usage error.
-    #[error("usage error: {0}")]
     Usage(String),
 
-    #[error("i/o error: {0}")]
-    Io(#[from] std::io::Error),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Decompose(m) => write!(f, "decomposition error: {m}"),
+            Error::Spec(m) => write!(f, "specification error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Kb(m) => write!(f, "knowledge base error: {m}"),
+            Error::Tuner(m) => write!(f, "tuner error: {m}"),
+            Error::Json { offset, msg } => {
+                write!(f, "json error at byte {offset}: {msg}")
+            }
+            Error::Usage(m) => write!(f, "usage error: {m}"),
+            Error::Io(e) => write!(f, "i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(format!("{e:?}"))

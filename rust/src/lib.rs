@@ -18,6 +18,14 @@
 //! The OpenCL devices of the paper are substituted by a calibrated
 //! performance simulator ([`sim`]) for paper-scale benches, while real
 //! numerics run through the PJRT CPU client ([`runtime`]). See DESIGN.md.
+//!
+//! The user-facing entry point is the [`session`] facade: a [`session::Session`]
+//! owns a backend ([`scheduler::SimEnv`] or
+//! [`scheduler::real::RealScheduler`]), the knowledge base and the balancing
+//! state, and [`session::Session::run`] resolves configurations through the
+//! lookup → derive → build chain, executes, and self-adapts across requests.
+//! Examples, the CLI and the benches all go through it rather than wiring
+//! the layers by hand.
 
 pub mod balance;
 pub mod bench;
@@ -30,8 +38,10 @@ pub mod platform;
 pub mod runtime;
 pub mod scheduler;
 pub mod sct;
+pub mod session;
 pub mod sim;
 pub mod tuner;
 pub mod util;
 
 pub use error::{Error, Result};
+pub use session::{Computation, Session};

@@ -3,22 +3,27 @@
 //! Subcommands:
 //!   eval <table2|table3|table4|table5|fig11|ablations|all>
 //!       regenerate the paper's tables/figures (simulated clock)
-//!   profile --bench <name> --size <n> [--gpus <g>]
-//!       run Algorithm 1 on one benchmark and print the profile
+//!   profile --bench <name> --size <n> [--gpus <g>] [--kb <path>]
+//!       run Algorithm 1 on one benchmark through a Session and print the
+//!       profile (persisted when --kb is given)
+//!   run --bench <name> --size <n> [--gpus <g>] [--runs <r>] [--kb <path>]
+//!       repeated Session::run requests: KB lookup -> derive -> build chain,
+//!       execution monitoring and adaptive rebalancing, per-run trace
 //!   shoc
 //!       install-time calibration: host microbenchmarks + GPU ranking
 //!   info
 //!       machine descriptions and artifact inventory
 
+use std::path::PathBuf;
+
 use marrow::bench::eval::{ablations, fig11, table2, table3, table4, table5};
-use marrow::bench::workloads;
+use marrow::bench::workloads::{self, Benchmark};
 use marrow::cli::Args;
-use marrow::platform::device::{i7_hd7950, opteron_6272_quad};
+use marrow::platform::device::{i7_hd7950, opteron_6272_quad, Machine};
 use marrow::runtime::artifacts::Manifest;
-use marrow::scheduler::SimEnv;
-use marrow::sim::machine::SimMachine;
+use marrow::runtime::exec::RequestArgs;
+use marrow::session::{Computation, Session};
 use marrow::sim::shoc;
-use marrow::tuner::builder::{build_profile, TunerOpts};
 use marrow::Result;
 
 fn main() {
@@ -33,6 +38,7 @@ fn run() -> Result<()> {
     match args.command.as_deref() {
         Some("eval") => eval(&args),
         Some("profile") => profile(&args),
+        Some("run") => run_cmd(&args),
         Some("shoc") => shoc_cmd(),
         Some("info") => info(),
         _ => {
@@ -46,7 +52,8 @@ const USAGE: &str = "\
 marrow — multi-CPU/multi-GPU execution of compound multi-kernel computations
 usage:
   marrow eval <table2|table3|table4|table5|fig11|ablations|all>
-  marrow profile --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>]
+  marrow profile --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--kb <path>]
+  marrow run --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--runs <r>] [--kb <path>]
   marrow shoc
   marrow info";
 
@@ -80,37 +87,49 @@ fn eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn profile(args: &Args) -> Result<()> {
+fn pick_benchmark(args: &Args) -> Result<Benchmark> {
     let bench = args.get_or("bench", "saxpy");
     let size = args.get_u64("size", 10_000_000)?;
+    match bench.as_str() {
+        "saxpy" => Ok(workloads::saxpy(size)),
+        "filter" => Ok(workloads::filter_pipeline(size, size, true)),
+        "fft" => Ok(workloads::fft(size)),
+        "nbody" => Ok(workloads::nbody(size, 20)),
+        "segmentation" => Ok(workloads::segmentation(size)),
+        other => Err(marrow::Error::Usage(format!("unknown benchmark '{other}'"))),
+    }
+}
+
+fn pick_machine(args: &Args) -> Result<Machine> {
     let gpus = args.get_u64("gpus", 1)? as usize;
-    let b = match bench.as_str() {
-        "saxpy" => workloads::saxpy(size),
-        "filter" => workloads::filter_pipeline(size, size, true),
-        "fft" => workloads::fft(size),
-        "nbody" => workloads::nbody(size, 20),
-        "segmentation" => workloads::segmentation(size),
-        other => {
-            return Err(marrow::Error::Usage(format!(
-                "unknown benchmark '{other}'"
-            )))
-        }
-    };
-    let machine = if gpus == 0 {
+    Ok(if gpus == 0 {
         opteron_6272_quad()
     } else {
         i7_hd7950(gpus)
-    };
-    let mut env = SimEnv::new(SimMachine::new(machine, 7));
-    env.copy_bytes = b.copy_bytes;
-    let p = build_profile(
-        &mut env,
-        &b.sct,
-        &b.workload,
-        b.total_units,
-        &TunerOpts::default(),
-    )?;
-    println!("benchmark      : {}", b.name);
+    })
+}
+
+/// Build a simulated session honouring the optional `--kb <path>` flag.
+fn sim_session(
+    args: &Args,
+    machine: Machine,
+    seed: u64,
+) -> Result<Session<marrow::scheduler::SimEnv>> {
+    let s = Session::simulated(machine, seed);
+    match args.get("kb") {
+        Some(path) => s.with_kb_path(&PathBuf::from(path)),
+        None => Ok(s),
+    }
+}
+
+fn profile(args: &Args) -> Result<()> {
+    let b = pick_benchmark(args)?;
+    let name = b.name.clone();
+    let comp = Computation::from(b);
+    let mut session = sim_session(args, pick_machine(args)?, 7)?;
+    let p = session.profile(&comp)?;
+    session.save_kb()?;
+    println!("benchmark      : {}", name);
     println!("sct id         : {}", p.sct_id);
     println!("workload       : {}", p.workload.id());
     println!(
@@ -125,6 +144,45 @@ fn profile(args: &Args) -> Result<()> {
         100.0 * p.config.cpu_share
     );
     println!("best time (sim): {:.4} s", p.best_time);
+    Ok(())
+}
+
+/// The seamless path, observable: repeated `Session::run` requests with the
+/// per-run configuration origin and the balancer's refinements.
+fn run_cmd(args: &Args) -> Result<()> {
+    let b = pick_benchmark(args)?;
+    let runs = args.get_u64("runs", 8)?;
+    let name = b.name.clone();
+    let comp = Computation::from(b);
+    let mut session = sim_session(args, pick_machine(args)?, 11)?;
+    println!("benchmark: {name} ({} runs, simulated clock)", runs);
+    println!(" run | origin  | GPU share | exec time | balanced?");
+    println!("-----+---------+-----------+-----------+----------");
+    for run in 0..runs {
+        let out = session.run(&comp, &RequestArgs::default())?;
+        println!(
+            " {run:>3} | {:<7} |   {:>5.1}%  | {:>7.3}ms | {}",
+            out.origin.label(),
+            100.0 * out.config.gpu_share(),
+            out.exec.total * 1e3,
+            if out.rebalanced {
+                "rebalanced"
+            } else if out.unbalanced {
+                "no"
+            } else {
+                "yes"
+            },
+        );
+    }
+    let st = session.stats();
+    println!(
+        "\n{} runs: {} kb hits, {} derived, {} built, {} balance ops",
+        st.runs, st.kb_hits, st.derived, st.built, st.balance_ops
+    );
+    session.save_kb()?;
+    if args.get("kb").is_some() {
+        println!("knowledge base persisted ({} profiles)", session.kb().len());
+    }
     Ok(())
 }
 

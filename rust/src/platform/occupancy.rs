@@ -54,10 +54,45 @@ pub fn occupancy(gpu: &GpuSpec, fp: &KernelFootprint, wgs: u32) -> f64 {
     waves as f64 / gpu.max_waves_per_cu as f64
 }
 
+/// A light default footprint for kernel-free trees.
+pub const DEFAULT_FOOTPRINT: KernelFootprint = KernelFootprint {
+    local_mem_base: 0,
+    local_mem_per_thread: 0,
+    regs_per_thread: 24,
+};
+
+/// Occupancy of a multi-kernel SCT at work-group size `wgs`: the minimum
+/// over the kernels' occupancies — the max-footprint kernel constrains the
+/// whole tree (one wgs dimension per SCT in Algorithm 1). Which kernel is
+/// the constraining one may change with `wgs`, so the minimum is evaluated
+/// per size rather than fixing one footprint upfront.
+pub fn sct_occupancy(gpu: &GpuSpec, fps: &[KernelFootprint], wgs: u32) -> f64 {
+    let worst = fps
+        .iter()
+        .map(|fp| occupancy(gpu, fp, wgs))
+        .fold(f64::INFINITY, f64::min);
+    if worst.is_finite() {
+        worst
+    } else {
+        occupancy(gpu, &DEFAULT_FOOTPRINT, wgs)
+    }
+}
+
 /// Candidate work-group sizes (powers of two times the wavefront, bounded by
 /// the device max), ordered by non-increasing occupancy as Algorithm 1
 /// requires; ties keep larger sizes first (fewer launches).
 pub fn wgs_candidates(gpu: &GpuSpec, fp: &KernelFootprint, threshold: f64) -> Vec<u32> {
+    wgs_candidates_multi(gpu, std::slice::from_ref(fp), threshold)
+}
+
+/// [`wgs_candidates`] for a multi-kernel SCT: each candidate size is scored
+/// by [`sct_occupancy`], so ordering and threshold filtering follow the
+/// kernel that actually constrains residency at that size.
+pub fn wgs_candidates_multi(
+    gpu: &GpuSpec,
+    fps: &[KernelFootprint],
+    threshold: f64,
+) -> Vec<u32> {
     let mut cands: Vec<u32> = {
         let mut v = Vec::new();
         let mut s = gpu.wavefront;
@@ -68,14 +103,14 @@ pub fn wgs_candidates(gpu: &GpuSpec, fp: &KernelFootprint, threshold: f64) -> Ve
         v
     };
     cands.sort_by(|&a, &b| {
-        let oa = occupancy(gpu, fp, a);
-        let ob = occupancy(gpu, fp, b);
+        let oa = sct_occupancy(gpu, fps, a);
+        let ob = sct_occupancy(gpu, fps, b);
         ob.partial_cmp(&oa).unwrap().then(b.cmp(&a))
     });
     let above: Vec<u32> = cands
         .iter()
         .copied()
-        .filter(|&w| occupancy(gpu, fp, w) >= threshold)
+        .filter(|&w| sct_occupancy(gpu, fps, w) >= threshold)
         .collect();
     if above.is_empty() {
         // Paper footnote 2: fall back to the best-occupancy size.

@@ -20,6 +20,17 @@ impl IoSpec {
         self.shape.iter().product()
     }
 
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            (
+                "shape",
+                Json::arr(self.shape.iter().map(|&d| Json::num(d as f64)).collect()),
+            ),
+            ("dtype", Json::str(&self.dtype)),
+        ])
+    }
+
     fn from_json(v: &Json) -> Result<IoSpec> {
         Ok(IoSpec {
             name: v.get("name")?.as_str().unwrap_or("").to_string(),
@@ -66,7 +77,10 @@ impl Manifest {
                 dir.display()
             ))
         })?;
-        let v = Json::parse(&text)?;
+        Manifest::parse(&text, dir)
+    }
+
+    fn from_json(v: &Json, dir: &Path) -> Result<Manifest> {
         let format = v.get("format")?.as_u64().unwrap_or(0);
         if format != 1 {
             return Err(Error::Artifact(format!("unsupported format {format}")));
@@ -141,6 +155,52 @@ impl Manifest {
             .rev()
             .find(|a| units >= a.chunk_units && units % a.chunk_units == 0)
             .unwrap_or(&menu[0]))
+    }
+
+    /// Serialize back to the manifest interchange format. Artifact files are
+    /// emitted relative to the manifest directory, so
+    /// parse -> `to_json` -> parse is the identity and the serialized form
+    /// is stable under round-trips (the contract the Python AOT pipeline
+    /// and golden tests rely on).
+    pub fn to_json(&self) -> Json {
+        let mut arts: Vec<Json> = Vec::new();
+        for infos in self.by_family.values() {
+            for a in infos {
+                let file = a
+                    .file
+                    .strip_prefix(&self.dir)
+                    .unwrap_or(&a.file)
+                    .to_string_lossy()
+                    .to_string();
+                arts.push(Json::obj(vec![
+                    ("name", Json::str(&a.name)),
+                    ("family", Json::str(&a.family)),
+                    ("file", Json::str(file)),
+                    (
+                        "inputs",
+                        Json::arr(a.inputs.iter().map(IoSpec::to_json).collect()),
+                    ),
+                    (
+                        "outputs",
+                        Json::arr(a.outputs.iter().map(IoSpec::to_json).collect()),
+                    ),
+                    ("chunk_units", Json::num(a.chunk_units as f64)),
+                    ("flops", Json::num(a.flops)),
+                    ("bytes", Json::num(a.bytes)),
+                ]));
+            }
+        }
+        Json::obj(vec![
+            ("format", Json::num(1.0)),
+            ("artifacts", Json::arr(arts)),
+        ])
+    }
+
+    /// Parse a manifest from already-loaded text (no filesystem access);
+    /// artifact paths resolve against `dir`.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        Manifest::from_json(&v, dir)
     }
 }
 

@@ -12,6 +12,11 @@ use std::sync::Mutex;
 use crate::error::{Error, Result};
 use crate::runtime::artifacts::ArtifactInfo;
 
+// Without the `pjrt` feature the stub shim supplies the same API surface:
+// functional host literals, unavailable client (see `runtime::stub`).
+#[cfg(not(feature = "pjrt"))]
+use crate::runtime::stub as xla;
+
 /// A compiled-executable cache keyed by artifact name over one PJRT CPU
 /// client. Compilation happens once per artifact per process (measured in
 /// the perf pass: ~10-200 ms each, far too slow for the request path).
@@ -40,7 +45,8 @@ impl RtClient {
                 .ok_or_else(|| Error::Artifact(format!("bad path {path:?}")))?,
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        Ok(self.client.compile(&comp)?)
+        let exe = self.client.compile(&comp)?;
+        Ok(exe)
     }
 
     /// Get (or compile and cache) the executable for an artifact.
@@ -77,7 +83,8 @@ impl RtClient {
     ) -> Result<Vec<xla::Literal>> {
         let result = exe.execute::<xla::Literal>(inputs)?;
         let lit = result[0][0].to_literal_sync()?;
-        Ok(lit.to_tuple()?)
+        let tuple = lit.to_tuple()?;
+        Ok(tuple)
     }
 }
 
@@ -85,19 +92,22 @@ impl RtClient {
 pub fn literal_f32(data: &[f32], shape: &[u64]) -> Result<xla::Literal> {
     let lit = xla::Literal::vec1(data);
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(lit.reshape(&dims)?)
+    let reshaped = lit.reshape(&dims)?;
+    Ok(reshaped)
 }
 
 /// Build an i32 literal of the given logical shape.
 pub fn literal_i32(data: &[i32], shape: &[u64]) -> Result<xla::Literal> {
     let lit = xla::Literal::vec1(data);
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(lit.reshape(&dims)?)
+    let reshaped = lit.reshape(&dims)?;
+    Ok(reshaped)
 }
 
 /// Extract an f32 buffer from a literal.
 pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
+    let v = lit.to_vec::<f32>()?;
+    Ok(v)
 }
 
 #[cfg(test)]

@@ -5,6 +5,8 @@
 pub mod artifacts;
 pub mod client;
 pub mod exec;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
 pub use artifacts::{ArtifactInfo, Manifest};
 pub use client::RtClient;

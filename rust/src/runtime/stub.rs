@@ -1,0 +1,162 @@
+//! Offline stand-in for the `xla` PJRT binding (compiled when the `pjrt`
+//! feature is off, which is the default in dependency-free environments).
+//!
+//! The stub keeps the whole real-mode code path *type-checking* without the
+//! native XLA runtime: [`Literal`] is a fully functional host buffer (so the
+//! literal helpers and their tests behave identically), while the client /
+//! compilation entry points report themselves unavailable at runtime. The
+//! [`crate::session::Session`] facade catches that error and falls back to
+//! the simulated backend, so every example stays runnable.
+
+use crate::error::{Error, Result};
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error::Runtime(
+        "PJRT runtime not compiled in (build with `--features pjrt` and an \
+         `xla` dependency to run real numerics)"
+            .into(),
+    ))
+}
+
+/// Element types a stub literal can hold.
+pub trait Element: Copy {
+    fn make(data: Vec<Self>, dims: Vec<i64>) -> Literal;
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl Element for f32 {
+    fn make(data: Vec<f32>, dims: Vec<i64>) -> Literal {
+        Literal::F32(data, dims)
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<f32>> {
+        match lit {
+            Literal::F32(v, _) => Ok(v.clone()),
+            _ => Err(Error::Runtime("literal is not f32".into())),
+        }
+    }
+}
+
+impl Element for i32 {
+    fn make(data: Vec<i32>, dims: Vec<i64>) -> Literal {
+        Literal::I32(data, dims)
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<i32>> {
+        match lit {
+            Literal::I32(v, _) => Ok(v.clone()),
+            _ => Err(Error::Runtime("literal is not i32".into())),
+        }
+    }
+}
+
+/// Host-side typed buffer with a logical shape.
+#[derive(Clone, Debug)]
+pub enum Literal {
+    F32(Vec<f32>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl Literal {
+    pub fn vec1<T: Element>(data: &[T]) -> Literal {
+        T::make(data.to_vec(), vec![data.len() as i64])
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = match self {
+            Literal::F32(v, _) => v.len() as i64,
+            Literal::I32(v, _) => v.len() as i64,
+        };
+        if want != have {
+            return Err(Error::Runtime(format!(
+                "cannot reshape {have} elements to {dims:?}"
+            )));
+        }
+        Ok(match self {
+            Literal::F32(v, _) => Literal::F32(v.clone(), dims.to_vec()),
+            Literal::I32(v, _) => Literal::I32(v.clone(), dims.to_vec()),
+        })
+    }
+
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+}
+
+/// Placeholder for a device buffer returned by an execution.
+pub struct Buffer;
+
+impl Buffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Placeholder for a parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// Placeholder for an XLA computation.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Placeholder for a compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[Literal]) -> Result<Vec<Vec<Buffer>>> {
+        unavailable()
+    }
+}
+
+/// Placeholder for the PJRT client; construction always fails so the real
+/// scheduler is never reachable without the native runtime.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn literal_is_functional() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.reshape(&[3, 2]).is_err());
+    }
+}

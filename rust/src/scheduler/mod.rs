@@ -7,15 +7,20 @@
 //!    ([`crate::sim`]); used by the paper-scale benches and by the tuner.
 //!  * [`real::RealScheduler`] — executes partitions on the PJRT client with
 //!    real numerics and wall-clock times.
+//!
+//! Both sit behind the same widened trait, so the [`crate::session`] facade,
+//! the tuner and the load balancer drive either backend interchangeably.
 
 pub mod queues;
 pub mod real;
 
+use crate::data::vector::ArgValue;
 use crate::decompose::{decompose, DecomposeConfig, PartitionPlan};
 use crate::error::Result;
 use crate::platform::cpu::CpuPlatform;
 use crate::platform::device::Machine;
 use crate::platform::occupancy;
+use crate::runtime::exec::RequestArgs;
 use crate::sct::Sct;
 use crate::sim::cost::SctCost;
 use crate::sim::machine::SimMachine;
@@ -35,7 +40,20 @@ pub struct ExecOutcome {
     pub slot_times: Vec<f64>,
 }
 
-/// An execution environment the tuner/balancer can drive.
+/// Outputs + timing of one full execution request. Timing-only backends
+/// (the simulator) return empty `outputs`.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    pub outputs: Vec<ArgValue>,
+    pub exec: ExecOutcome,
+}
+
+/// An execution environment the session facade, tuner and balancer drive.
+///
+/// The trait covers both halves of the paper's runtime: timing-only
+/// executions ([`ExecEnv::execute`], what Algorithm 1 and the adaptive
+/// binary search observe) and full data-carrying requests
+/// ([`ExecEnv::run_request`], what user computations go through).
 pub trait ExecEnv {
     fn machine(&self) -> &Machine;
 
@@ -50,6 +68,40 @@ pub trait ExecEnv {
         total_units: u64,
         cfg: &FrameworkConfig,
     ) -> Result<ExecOutcome>;
+
+    /// Execute a full request: decomposition, per-slot queues, chunked
+    /// execution and partial-result merging. The default covers analytic
+    /// backends — timings from [`ExecEnv::execute`], no output buffers.
+    fn run_request(
+        &mut self,
+        sct: &Sct,
+        args: &RequestArgs,
+        total_units: u64,
+        cfg: &FrameworkConfig,
+    ) -> Result<RunOutcome> {
+        let _ = args;
+        Ok(RunOutcome {
+            outputs: Vec::new(),
+            exec: self.execute(sct, total_units, cfg)?,
+        })
+    }
+
+    /// Bind the arguments timing-only executions should use (real backends
+    /// need data to run the tuner's probes; analytic backends ignore it).
+    fn bind_tuning_args(&mut self, args: &RequestArgs) {
+        let _ = args;
+    }
+
+    /// Per-request cost hint: COPY-mode bytes replicated to every device
+    /// (consumed by analytic backends; a no-op on real hardware).
+    fn set_copy_bytes(&mut self, bytes: f64) {
+        let _ = bytes;
+    }
+
+    /// Cumulative kernel-launch count (0 for backends that don't launch).
+    fn launch_count(&self) -> u64 {
+        0
+    }
 }
 
 /// Build the decomposition config for a framework configuration.
@@ -102,21 +154,16 @@ impl SimEnv {
         }
     }
 
-    /// Kernel occupancy at the configured work-group size (uses the first
-    /// kernel's footprint; the paper computes per-kernel occupancy but
-    /// configures a single wgs dimension per SCT in Algorithm 1).
+    /// SCT occupancy at the configured work-group size: the minimum over
+    /// the kernels' occupancies, i.e. the max-footprint kernel constrains
+    /// the whole tree (the paper configures a single wgs dimension per SCT
+    /// in Algorithm 1, so the tightest kernel bounds residency).
     fn occupancy(&self, sct: &Sct, cfg: &FrameworkConfig) -> f64 {
         if self.sim.machine.gpus.is_empty() {
             return 1.0;
         }
-        let fp = sct.kernels().first().map(|k| k.footprint).unwrap_or(
-            occupancy::KernelFootprint {
-                local_mem_base: 0,
-                local_mem_per_thread: 0,
-                regs_per_thread: 24,
-            },
-        );
-        occupancy::occupancy(&self.sim.machine.gpus[0], &fp, cfg.wgs)
+        let fps: Vec<_> = sct.kernels().iter().map(|k| k.footprint).collect();
+        occupancy::sct_occupancy(&self.sim.machine.gpus[0], &fps, cfg.wgs)
     }
 }
 
@@ -153,6 +200,10 @@ impl ExecEnv for SimEnv {
                 .collect(),
         })
     }
+
+    fn set_copy_bytes(&mut self, bytes: f64) {
+        self.copy_bytes = bytes;
+    }
 }
 
 #[cfg(test)]
@@ -160,6 +211,7 @@ mod tests {
     use super::*;
     use crate::platform::cpu::FissionLevel;
     use crate::platform::device::i7_hd7950;
+    use crate::platform::occupancy::KernelFootprint;
     use crate::sct::{KernelSpec, ParamSpec};
 
     fn saxpy() -> Sct {
@@ -208,5 +260,44 @@ mod tests {
         let p = plan(&m, &saxpy(), 1 << 20, &c, 1).unwrap();
         // 6 cpu subdevices + 8 gpu slots.
         assert_eq!(p.partitions.len(), 14);
+    }
+
+    #[test]
+    fn occupancy_uses_max_footprint_kernel() {
+        // A light kernel piped with a local-memory hog: the SCT's occupancy
+        // must be the hog's, not the first (light) kernel's.
+        let light = KernelSpec::new("light", vec![ParamSpec::VecIn], 1);
+        let mut heavy = KernelSpec::new("heavy", vec![ParamSpec::VecIn], 1);
+        heavy.footprint = KernelFootprint {
+            local_mem_base: 32 * 1024,
+            local_mem_per_thread: 0,
+            regs_per_thread: 16,
+        };
+        let env = SimEnv::new(SimMachine::new(i7_hd7950(1), 7));
+        let light_first =
+            Sct::pipeline(vec![Sct::kernel(light.clone()), Sct::kernel(heavy.clone())]);
+        let heavy_first = Sct::pipeline(vec![Sct::kernel(heavy), Sct::kernel(light)]);
+        let c = cfg(0.25);
+        let a = env.occupancy(&light_first, &c);
+        let b = env.occupancy(&heavy_first, &c);
+        assert!((a - b).abs() < 1e-12, "order must not matter: {a} vs {b}");
+        let gpu = &env.sim.machine.gpus[0];
+        let hog_fp = KernelFootprint {
+            local_mem_base: 32 * 1024,
+            local_mem_per_thread: 0,
+            regs_per_thread: 16,
+        };
+        let want = occupancy::occupancy(gpu, &hog_fp, c.wgs);
+        assert!((a - want).abs() < 1e-12, "hog constrains: {a} vs {want}");
+    }
+
+    #[test]
+    fn default_run_request_returns_timings_without_outputs() {
+        let mut env = SimEnv::new(SimMachine::new(i7_hd7950(1), 3));
+        let out = env
+            .run_request(&saxpy(), &RequestArgs::default(), 1 << 20, &cfg(0.25))
+            .unwrap();
+        assert!(out.outputs.is_empty());
+        assert!(out.exec.total > 0.0);
     }
 }

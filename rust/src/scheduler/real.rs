@@ -2,6 +2,12 @@
 //! PJRT runtime — decomposition, per-slot work queues, chunked execution,
 //! partial-result merging, host-side Loop state updates and MapReduce
 //! reductions (Sections 3.1 and 3.4).
+//!
+//! `RealScheduler` implements the widened [`ExecEnv`] trait, so the session
+//! facade, the tuner and the load balancer drive it exactly like the
+//! simulated backend — timing-only probes use [`ExecEnv::execute`] with the
+//! bound tuning arguments, full requests go through
+//! [`ExecEnv::run_request`].
 
 use std::time::Instant;
 
@@ -13,7 +19,7 @@ use crate::runtime::artifacts::Manifest;
 use crate::runtime::client::RtClient;
 use crate::runtime::exec::{ChunkRunner, RequestArgs};
 use crate::scheduler::queues::WorkQueues;
-use crate::scheduler::{plan, ExecEnv, ExecOutcome};
+use crate::scheduler::{plan, ExecEnv, ExecOutcome, RunOutcome};
 use crate::sct::{Reduction, Sct};
 use crate::tuner::profile::FrameworkConfig;
 
@@ -26,13 +32,13 @@ pub struct RealScheduler<'a> {
     pub launches: u64,
     /// Adaptive chunk-selection knowledge, shared across requests.
     pub timings: crate::runtime::exec::TimingCache,
+    /// Arguments used by timing-only [`ExecEnv::execute`] probes (the tuner
+    /// drives real kernels, so it needs real buffers to feed them).
+    pub tuning_args: RequestArgs,
 }
 
-/// Outputs + timing of one request.
-pub struct RealOutcome {
-    pub outputs: Vec<ArgValue>,
-    pub exec: ExecOutcome,
-}
+/// Backwards-compatible name for the outputs+timing of one request.
+pub type RealOutcome = RunOutcome;
 
 impl<'a> RealScheduler<'a> {
     pub fn new(
@@ -46,6 +52,7 @@ impl<'a> RealScheduler<'a> {
             manifest,
             launches: 0,
             timings: Default::default(),
+            tuning_args: RequestArgs::default(),
         }
     }
 
@@ -64,7 +71,7 @@ impl<'a> RealScheduler<'a> {
         args: &RequestArgs,
         total_units: u64,
         cfg: &FrameworkConfig,
-    ) -> Result<RealOutcome> {
+    ) -> Result<RunOutcome> {
         let quantum = self.sct_chunk_quantum(sct);
         let p = plan(&self.machine, sct, total_units, cfg, quantum)?;
         match sct {
@@ -166,7 +173,7 @@ impl<'a> RealScheduler<'a> {
         Ok((partials.into_iter().map(|(_, o)| o).collect(), times))
     }
 
-    fn outcome(&self, p: &PartitionPlan, outputs: Vec<ArgValue>, times: Vec<f64>) -> RealOutcome {
+    fn outcome(&self, p: &PartitionPlan, outputs: Vec<ArgValue>, times: Vec<f64>) -> RunOutcome {
         // Active partitions in plan order correspond 1:1 with `times` after
         // the seq sort; classify by slot type.
         let mut cpu_t = 0.0f64;
@@ -178,7 +185,7 @@ impl<'a> RealScheduler<'a> {
                 gpu_t = gpu_t.max(t);
             }
         }
-        RealOutcome {
+        RunOutcome {
             outputs,
             exec: ExecOutcome {
                 total: cpu_t.max(gpu_t),
@@ -190,20 +197,13 @@ impl<'a> RealScheduler<'a> {
     }
 }
 
-/// The RealScheduler also serves as an [`ExecEnv`] for the tuner (timings
-/// only; arguments are zero-filled buffers of the right size).
-pub struct RealEnv<'a> {
-    pub inner: RealScheduler<'a>,
-    pub args: RequestArgs,
-}
-
-impl<'a> ExecEnv for RealEnv<'a> {
+impl<'a> ExecEnv for RealScheduler<'a> {
     fn machine(&self) -> &Machine {
-        &self.inner.machine
+        &self.machine
     }
 
     fn chunk_quantum(&self, sct: &Sct) -> u64 {
-        self.inner.sct_chunk_quantum(sct)
+        self.sct_chunk_quantum(sct)
     }
 
     fn execute(
@@ -212,8 +212,26 @@ impl<'a> ExecEnv for RealEnv<'a> {
         total_units: u64,
         cfg: &FrameworkConfig,
     ) -> Result<ExecOutcome> {
-        let args = self.args.clone();
-        Ok(self.inner.run_request(sct, &args, total_units, cfg)?.exec)
+        let args = self.tuning_args.clone();
+        Ok(RealScheduler::run_request(self, sct, &args, total_units, cfg)?.exec)
+    }
+
+    fn run_request(
+        &mut self,
+        sct: &Sct,
+        args: &RequestArgs,
+        total_units: u64,
+        cfg: &FrameworkConfig,
+    ) -> Result<RunOutcome> {
+        RealScheduler::run_request(self, sct, args, total_units, cfg)
+    }
+
+    fn bind_tuning_args(&mut self, args: &RequestArgs) {
+        self.tuning_args = args.clone();
+    }
+
+    fn launch_count(&self) -> u64 {
+        self.launches
     }
 }
 

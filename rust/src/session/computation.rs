@@ -1,0 +1,245 @@
+//! The fluent computation builder: the user-facing way to assemble a
+//! skeleton computational tree plus the workload metadata the adaptation
+//! layers need (workload characterization, domain size, COPY volume).
+//!
+//! A `Computation` is what [`crate::session::Session`] executes; it wraps
+//! the existing [`crate::sct`] types without replacing them — `.sct()`
+//! hands back the tree for anything lower-level.
+//!
+//! Typical construction, fluent from a kernel leaf:
+//!
+//! ```text
+//! let comp = Computation::kernel(gaussian)
+//!     .pipeline(solarize)
+//!     .pipeline(mirror)
+//!     .over(Workload::d2(h, w))
+//!     .units(h);
+//! ```
+//!
+//! or from one of the paper benchmarks: `Computation::from(workloads::fft(128))`.
+
+use crate::bench::workloads::Benchmark;
+use crate::data::workload::Workload;
+use crate::error::{Error, Result};
+use crate::sct::{KernelSpec, LoopState, Reduction, Sct};
+
+/// A runnable computation: SCT + workload characterization + domain size.
+#[derive(Clone, Debug)]
+pub struct Computation {
+    name: String,
+    sct: Sct,
+    workload: Option<Workload>,
+    total_units: Option<u64>,
+    copy_bytes: f64,
+}
+
+impl Computation {
+    /// Start from a single kernel leaf.
+    pub fn kernel(k: KernelSpec) -> Computation {
+        let name = k.family.clone();
+        Computation {
+            name,
+            sct: Sct::kernel(k),
+            workload: None,
+            total_units: None,
+            copy_bytes: 0.0,
+        }
+    }
+
+    /// Start from an already-built tree.
+    pub fn from_sct(sct: Sct) -> Computation {
+        Computation {
+            name: sct.id(),
+            sct,
+            workload: None,
+            total_units: None,
+            copy_bytes: 0.0,
+        }
+    }
+
+    /// Append a kernel as the next pipeline stage: extends an existing
+    /// `Pipeline` root, or wraps the current tree and the new stage in one.
+    pub fn pipeline(self, k: KernelSpec) -> Computation {
+        self.then(Sct::kernel(k))
+    }
+
+    /// Chain an arbitrary sub-tree as the next pipeline stage.
+    pub fn then(mut self, sct: Sct) -> Computation {
+        self.sct = match self.sct {
+            Sct::Pipeline(mut stages) => {
+                stages.push(sct);
+                Sct::Pipeline(stages)
+            }
+            root => Sct::pipeline(vec![root, sct]),
+        };
+        self
+    }
+
+    /// Wrap the current tree in a `Map` skeleton.
+    pub fn map(mut self) -> Computation {
+        self.sct = Sct::map(self.sct);
+        self
+    }
+
+    /// Wrap the current tree in a `Loop` skeleton.
+    pub fn for_loop(mut self, iters: u32, global_sync: bool) -> Computation {
+        self.sct = Sct::for_loop(self.sct, iters, global_sync);
+        self
+    }
+
+    /// Wrap the current tree in a `Loop` with a full loop state (stoppage
+    /// condition + host update).
+    pub fn loop_with(mut self, state: LoopState) -> Computation {
+        self.sct = Sct::loop_with(self.sct, state);
+        self
+    }
+
+    /// Wrap the current tree in a `MapReduce` skeleton.
+    pub fn reduce(mut self, r: Reduction) -> Computation {
+        self.sct = Sct::map_reduce(self.sct, r);
+        self
+    }
+
+    /// Attach the workload characterization (profile field (b)). When no
+    /// explicit domain size was set, the first dimension becomes the number
+    /// of elementary partitioning units — the common case for 1-D and
+    /// line-partitioned 2-D workloads; call [`Computation::units`] when the
+    /// partitioned dimension is a different one.
+    pub fn over(mut self, w: Workload) -> Computation {
+        if self.total_units.is_none() {
+            self.total_units = w.dims.first().copied();
+        }
+        self.workload = Some(w);
+        self
+    }
+
+    /// Set the domain size in elementary partitioning units.
+    pub fn units(mut self, n: u64) -> Computation {
+        self.total_units = Some(n);
+        self
+    }
+
+    /// COPY-mode bytes replicated to every device per request (cost hint
+    /// for analytic backends).
+    pub fn copy_bytes(mut self, bytes: f64) -> Computation {
+        self.copy_bytes = bytes;
+        self
+    }
+
+    /// Display name (defaults to the kernel family / SCT id).
+    pub fn named(mut self, name: &str) -> Computation {
+        self.name = name.to_string();
+        self
+    }
+
+    // --- accessors --------------------------------------------------------
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn sct(&self) -> &Sct {
+        &self.sct
+    }
+
+    /// Mutable access to the tree (e.g. to attach a Loop host update).
+    pub fn sct_mut(&mut self) -> &mut Sct {
+        &mut self.sct
+    }
+
+    /// The knowledge-base identifier of this computation's tree.
+    pub fn sct_id(&self) -> String {
+        self.sct.id()
+    }
+
+    pub fn get_copy_bytes(&self) -> f64 {
+        self.copy_bytes
+    }
+
+    /// Validate and expose the fields an execution needs.
+    pub fn spec(&self) -> Result<(&Sct, &Workload, u64)> {
+        let w = self.workload.as_ref().ok_or_else(|| {
+            Error::Spec(format!(
+                "computation '{}' has no workload characterization; call .over(..)",
+                self.name
+            ))
+        })?;
+        let units = self.total_units.ok_or_else(|| {
+            Error::Spec(format!(
+                "computation '{}' has no domain size; call .units(..)",
+                self.name
+            ))
+        })?;
+        Ok((&self.sct, w, units))
+    }
+}
+
+impl From<Benchmark> for Computation {
+    fn from(b: Benchmark) -> Computation {
+        Computation {
+            name: b.name,
+            sct: b.sct,
+            workload: Some(b.workload),
+            total_units: Some(b.total_units),
+            copy_bytes: b.copy_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads;
+    use crate::data::vector::Merge;
+    use crate::sct::ParamSpec;
+
+    fn k(name: &str) -> KernelSpec {
+        KernelSpec::new(name, vec![ParamSpec::VecIn], 1)
+    }
+
+    #[test]
+    fn fluent_pipeline_builds_expected_tree() {
+        let c = Computation::kernel(k("a"))
+            .pipeline(k("b"))
+            .pipeline(k("c"))
+            .over(Workload::d1(100));
+        assert_eq!(c.sct_id(), "pipeline(a,b,c)");
+        let (_, w, units) = c.spec().unwrap();
+        assert_eq!(units, 100);
+        assert_eq!(w.dimensionality(), 1);
+    }
+
+    #[test]
+    fn map_loop_reduce_wrap() {
+        let c = Computation::kernel(k("m"))
+            .map()
+            .for_loop(3, true)
+            .reduce(Reduction::Host(Merge::Add))
+            .over(Workload::d1(10));
+        assert_eq!(c.sct_id(), "map_reduce(loop(map(m),n=3),host:Add)");
+    }
+
+    #[test]
+    fn units_override_beats_workload_default() {
+        let c = Computation::kernel(k("seg"))
+            .over(Workload::d3(256, 256, 64))
+            .units(64);
+        assert_eq!(c.spec().unwrap().2, 64);
+    }
+
+    #[test]
+    fn missing_workload_is_an_error() {
+        let c = Computation::kernel(k("a"));
+        assert!(c.spec().is_err());
+    }
+
+    #[test]
+    fn from_benchmark_carries_everything() {
+        let b = workloads::nbody(1024, 5);
+        let copy = b.copy_bytes;
+        let c = Computation::from(b);
+        assert!(c.get_copy_bytes() > 0.0);
+        assert_eq!(c.get_copy_bytes(), copy);
+        assert_eq!(c.spec().unwrap().2, 1024);
+    }
+}

@@ -1,0 +1,493 @@
+//! The unified `Session` facade — one entry point that wires SCTs, the
+//! tuner / knowledge base, and adaptive load balancing across the simulated
+//! and real backends (the "seamless execution" contract of Sections
+//! 3.2-3.3).
+//!
+//! A [`Session`] owns an execution backend (any [`ExecEnv`]: [`SimEnv`] or
+//! [`crate::scheduler::real::RealScheduler`]), a [`KnowledgeBase`] and the
+//! per-computation balancing state. [`Session::run`] resolves the framework
+//! configuration through the paper's fallback chain — exact KB lookup, then
+//! RBF-interpolated derivation, then a from-scratch Algorithm 1 profile
+//! build — executes the request, feeds the observed outcome back into the
+//! KB, and applies adaptive-binary-search rebalancing across repeated
+//! requests (Fig 4's workflow).
+//!
+//! ```text
+//! let comp = Computation::from(workloads::saxpy(1 << 20));
+//! let mut s = Session::simulated(i7_hd7950(1), 42);
+//! let out = s.run(&comp, &RequestArgs::default())?;   // cold start: builds
+//! let out = s.run(&comp, &RequestArgs::default())?;   // KB hit, monitored
+//! ```
+//!
+//! The facade is the only place in the tree that wires
+//! `SimEnv`/`RealScheduler`/`FrameworkConfig` together; examples, the CLI
+//! and the benches all go through it.
+
+pub mod computation;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::balance::{AdaptiveBinarySearch, Monitor};
+use crate::data::vector::ArgValue;
+use crate::error::Result;
+use crate::kb::KnowledgeBase;
+use crate::platform::cpu::FissionLevel;
+use crate::platform::device::Machine;
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::client::RtClient;
+use crate::runtime::exec::RequestArgs;
+use crate::scheduler::real::RealScheduler;
+use crate::scheduler::{ExecEnv, ExecOutcome, SimEnv};
+use crate::sim::machine::SimMachine;
+use crate::tuner::builder::{build_profile, TunerOpts};
+use crate::tuner::profile::{FrameworkConfig, Profile, ProfileOrigin};
+
+pub use computation::Computation;
+
+/// How [`Session::run`] obtained the configuration of one request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConfigOrigin {
+    /// Exact (SCT, workload) hit in the knowledge base.
+    KbHit,
+    /// Interpolated from nearby profiles (box "Derive work distribution").
+    Derived,
+    /// Built from scratch by Algorithm 1 (box "Build SCT profile").
+    Built,
+    /// Explicitly pinned by [`Session::run_with`] — adaptation bypassed.
+    Pinned,
+}
+
+impl ConfigOrigin {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ConfigOrigin::KbHit => "kb-hit",
+            ConfigOrigin::Derived => "derived",
+            ConfigOrigin::Built => "built",
+            ConfigOrigin::Pinned => "pinned",
+        }
+    }
+}
+
+/// Everything one [`Session::run`] call produced.
+#[derive(Clone, Debug)]
+pub struct SessionOutcome {
+    /// Merged output buffers (empty on timing-only backends).
+    pub outputs: Vec<ArgValue>,
+    /// Timing of the execution.
+    pub exec: ExecOutcome,
+    /// The configuration the request actually ran under.
+    pub config: FrameworkConfig,
+    /// Where that configuration came from.
+    pub origin: ConfigOrigin,
+    /// Whether the monitor observed this execution as unbalanced (the lbt
+    /// threshold needs a few consecutive unbalanced runs before triggering).
+    pub unbalanced: bool,
+    /// Whether the balancer moved the CPU/GPU split for the *next* run.
+    pub rebalanced: bool,
+    /// Cumulative backend kernel launches (0 for analytic backends).
+    pub launches: u64,
+}
+
+/// Aggregate session counters.
+#[derive(Clone, Debug, Default)]
+pub struct SessionStats {
+    pub runs: u64,
+    pub kb_hits: u64,
+    pub derived: u64,
+    pub built: u64,
+    pub pinned: u64,
+    pub balance_ops: u64,
+    pub unbalanced_runs: u64,
+}
+
+/// Per-configuration tweaks for [`Session::run_with`]: applied on top of a
+/// machine-derived baseline so callers never assemble a raw
+/// [`FrameworkConfig`] by hand.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigOverride {
+    cpu_share: Option<f64>,
+    fission: Option<FissionLevel>,
+    overlap: Option<u32>,
+    wgs: Option<u32>,
+}
+
+impl ConfigOverride {
+    pub fn new() -> ConfigOverride {
+        ConfigOverride::default()
+    }
+
+    /// Pin the CPU fraction of the workload.
+    pub fn cpu_share(mut self, share: f64) -> ConfigOverride {
+        self.cpu_share = Some(share.clamp(0.0, 1.0));
+        self
+    }
+
+    /// Everything on the GPUs.
+    pub fn gpu_only(self) -> ConfigOverride {
+        self.cpu_share(0.0)
+    }
+
+    /// Everything on the CPUs.
+    pub fn cpu_only(self) -> ConfigOverride {
+        self.cpu_share(1.0)
+    }
+
+    pub fn fission(mut self, level: FissionLevel) -> ConfigOverride {
+        self.fission = Some(level);
+        self
+    }
+
+    /// Overlap factor applied to every GPU.
+    pub fn overlap(mut self, o: u32) -> ConfigOverride {
+        self.overlap = Some(o);
+        self
+    }
+
+    pub fn wgs(mut self, wgs: u32) -> ConfigOverride {
+        self.wgs = Some(wgs);
+        self
+    }
+
+    fn apply(&self, mut base: FrameworkConfig) -> FrameworkConfig {
+        if let Some(s) = self.cpu_share {
+            base.cpu_share = s;
+        }
+        if let Some(f) = self.fission {
+            base.fission = f;
+        }
+        if let Some(o) = self.overlap {
+            base.overlap = vec![o; base.overlap.len()];
+        }
+        if let Some(w) = self.wgs {
+            base.wgs = w;
+        }
+        base
+    }
+}
+
+/// A sensible machine-derived default configuration (used as the base for
+/// pinned runs; the adaptive path never sees it).
+fn baseline_config(machine: &Machine) -> FrameworkConfig {
+    let hybrid = !machine.gpus.is_empty();
+    FrameworkConfig {
+        fission: FissionLevel::L2,
+        overlap: if hybrid {
+            vec![2; machine.gpus.len()]
+        } else {
+            Vec::new()
+        },
+        wgs: 256,
+        cpu_share: if hybrid { 0.25 } else { 1.0 },
+    }
+}
+
+/// Per-(SCT, workload) adaptation state: the execution monitor and the
+/// adaptive binary search, persisted across requests.
+struct BalanceState {
+    monitor: Monitor,
+    abs: AdaptiveBinarySearch,
+}
+
+/// The unified execution session.
+pub struct Session<E: ExecEnv> {
+    env: E,
+    kb: KnowledgeBase,
+    tuner: TunerOpts,
+    /// Balance threshold `maxDev` handed to new monitors (Section 3.3).
+    max_dev: f64,
+    states: HashMap<String, BalanceState>,
+    stats: SessionStats,
+}
+
+impl Session<SimEnv> {
+    /// A session over the analytic simulator for `machine`.
+    pub fn simulated(machine: Machine, seed: u64) -> Session<SimEnv> {
+        Session::sim(SimMachine::new(machine, seed))
+    }
+
+    /// A session over a fully customized simulated machine (load profiles,
+    /// cost parameters...).
+    pub fn sim(sim: SimMachine) -> Session<SimEnv> {
+        Session::new(SimEnv::new(sim))
+    }
+}
+
+impl<'a> Session<RealScheduler<'a>> {
+    /// A session over the real PJRT runtime.
+    pub fn real(
+        machine: Machine,
+        client: &'a RtClient,
+        manifest: &'a Manifest,
+    ) -> Session<RealScheduler<'a>> {
+        Session::new(RealScheduler::new(machine, client, manifest))
+    }
+}
+
+impl<E: ExecEnv> Session<E> {
+    /// A session over any execution environment.
+    pub fn new(env: E) -> Session<E> {
+        Session {
+            env,
+            kb: KnowledgeBase::in_memory(),
+            tuner: TunerOpts::default(),
+            max_dev: 0.85,
+            states: HashMap::new(),
+            stats: SessionStats::default(),
+        }
+    }
+
+    /// Replace the knowledge base (e.g. one warmed by a simulated session).
+    pub fn with_kb(mut self, kb: KnowledgeBase) -> Session<E> {
+        self.kb = kb;
+        self
+    }
+
+    /// Use a JSON-backed knowledge base at `path` (created when missing).
+    pub fn with_kb_path(mut self, path: &Path) -> Result<Session<E>> {
+        self.kb = KnowledgeBase::open(path)?;
+        Ok(self)
+    }
+
+    /// Tuning options for cold-start profile builds.
+    pub fn with_tuner(mut self, opts: TunerOpts) -> Session<E> {
+        self.tuner = opts;
+        self
+    }
+
+    /// Balance threshold for the execution monitor (paper default 0.85).
+    pub fn with_max_dev(mut self, max_dev: f64) -> Session<E> {
+        self.max_dev = max_dev;
+        self
+    }
+
+    // --- the seamless path ------------------------------------------------
+
+    /// Resolve the framework configuration for a computation through the
+    /// Section 3.2.3 fallback chain: KB lookup, RBF derivation, profile
+    /// build. The built profile (cold start) is stored into the KB; `args`
+    /// feed the tuner's probe executions on backends that run real kernels
+    /// (analytic backends ignore them).
+    pub fn resolve_config(
+        &mut self,
+        comp: &Computation,
+        args: &RequestArgs,
+    ) -> Result<(FrameworkConfig, ConfigOrigin)> {
+        let (sct, w, units) = comp.spec()?;
+        let id = sct.id();
+        if let Some(p) = self.kb.lookup(&id, w) {
+            self.stats.kb_hits += 1;
+            return Ok((p.config.clone(), ConfigOrigin::KbHit));
+        }
+        if let Some(cfg) = self.kb.derive(&id, w) {
+            self.stats.derived += 1;
+            return Ok((cfg, ConfigOrigin::Derived));
+        }
+        self.env.set_copy_bytes(comp.get_copy_bytes());
+        self.env.bind_tuning_args(args);
+        let p = build_profile(&mut self.env, sct, w, units, &self.tuner)?;
+        let cfg = p.config.clone();
+        self.kb.store(p);
+        self.stats.built += 1;
+        Ok((cfg, ConfigOrigin::Built))
+    }
+
+    /// Execute a computation under the KB-resolved configuration, monitor
+    /// the execution, rebalance if the monitor triggers, and feed the
+    /// outcome back into the knowledge base.
+    pub fn run(&mut self, comp: &Computation, args: &RequestArgs) -> Result<SessionOutcome> {
+        self.env.set_copy_bytes(comp.get_copy_bytes());
+        self.env.bind_tuning_args(args);
+        let (cfg, origin) = self.resolve_config(comp, args)?;
+        let (sct, w, units) = comp.spec()?;
+        let id = sct.id();
+        let out = self.env.run_request(sct, args, units, &cfg)?;
+
+        // Section 3.3: monitor every execution; adapt when lbt triggers.
+        let key = format!("{id}|{}", w.id());
+        let max_dev = self.max_dev;
+        let st = self.states.entry(key).or_insert_with(|| BalanceState {
+            monitor: Monitor::new(max_dev),
+            abs: AdaptiveBinarySearch::new(cfg.cpu_share),
+        });
+        let status = st.monitor.observe(&out.exec.slot_times);
+        if status.unbalanced {
+            self.stats.unbalanced_runs += 1;
+        }
+        let mut stored_cfg = cfg.clone();
+        let mut rebalanced = false;
+        if status.trigger && !cfg.overlap.is_empty() {
+            stored_cfg.cpu_share = st.abs.propose(out.exec.cpu_time, out.exec.gpu_time);
+            st.monitor.reset_lbt();
+            self.stats.balance_ops += 1;
+            rebalanced = true;
+        } else {
+            st.abs.track(cfg.cpu_share);
+        }
+
+        // Feed the observed outcome back into the KB: refined profiles
+        // replace the stored distribution; plain runs keep the best time of
+        // the configuration they actually ran under (Refined entries bypass
+        // the store's best-time guard, so the min is taken here).
+        let existing = self.kb.lookup(&id, w);
+        let store_origin = if rebalanced {
+            ProfileOrigin::Refined
+        } else {
+            match origin {
+                ConfigOrigin::Built => ProfileOrigin::Built,
+                ConfigOrigin::Derived => ProfileOrigin::Derived,
+                _ => existing.map(|p| p.origin).unwrap_or(ProfileOrigin::Built),
+            }
+        };
+        let best_time = match existing {
+            Some(p) if !rebalanced && p.config == stored_cfg => {
+                out.exec.total.min(p.best_time)
+            }
+            _ => out.exec.total,
+        };
+        self.kb.store(Profile {
+            sct_id: id,
+            workload: w.clone(),
+            config: stored_cfg,
+            best_time,
+            origin: store_origin,
+        });
+
+        self.stats.runs += 1;
+        Ok(SessionOutcome {
+            outputs: out.outputs,
+            exec: out.exec,
+            config: cfg,
+            origin,
+            unbalanced: status.unbalanced,
+            rebalanced,
+            launches: self.env.launch_count(),
+        })
+    }
+
+    /// Execute under an explicitly pinned configuration (baseline + the
+    /// override), bypassing the KB and the balancer — the escape hatch for
+    /// reproducing fixed table rows and A/B comparisons.
+    pub fn run_with(
+        &mut self,
+        comp: &Computation,
+        args: &RequestArgs,
+        ovr: ConfigOverride,
+    ) -> Result<SessionOutcome> {
+        let (sct, _, units) = comp.spec()?;
+        self.env.set_copy_bytes(comp.get_copy_bytes());
+        let cfg = ovr.apply(baseline_config(self.env.machine()));
+        let out = self.env.run_request(sct, args, units, &cfg)?;
+        self.stats.runs += 1;
+        self.stats.pinned += 1;
+        Ok(SessionOutcome {
+            outputs: out.outputs,
+            exec: out.exec,
+            config: cfg,
+            origin: ConfigOrigin::Pinned,
+            unbalanced: false,
+            rebalanced: false,
+            launches: self.env.launch_count(),
+        })
+    }
+
+    /// Run Algorithm 1 for a computation and persist the profile in the
+    /// session's knowledge base.
+    pub fn profile(&mut self, comp: &Computation) -> Result<Profile> {
+        self.profile_with_args(comp, &RequestArgs::default())
+    }
+
+    /// Like [`Session::profile`], binding `args` for the tuner's probe
+    /// executions (real backends need actual buffers).
+    pub fn profile_with_args(
+        &mut self,
+        comp: &Computation,
+        args: &RequestArgs,
+    ) -> Result<Profile> {
+        let (sct, w, units) = comp.spec()?;
+        self.env.set_copy_bytes(comp.get_copy_bytes());
+        self.env.bind_tuning_args(args);
+        let p = build_profile(&mut self.env, sct, w, units, &self.tuner)?;
+        self.kb.store(p.clone());
+        self.stats.built += 1;
+        Ok(p)
+    }
+
+    // --- accessors --------------------------------------------------------
+
+    pub fn kb(&self) -> &KnowledgeBase {
+        &self.kb
+    }
+
+    pub fn kb_mut(&mut self) -> &mut KnowledgeBase {
+        &mut self.kb
+    }
+
+    /// Hand the knowledge base over (e.g. sim-warmed KB into a real session).
+    pub fn into_kb(self) -> KnowledgeBase {
+        self.kb
+    }
+
+    /// Persist the knowledge base (no-op for in-memory KBs).
+    pub fn save_kb(&self) -> Result<()> {
+        self.kb.save()
+    }
+
+    pub fn env(&self) -> &E {
+        &self.env
+    }
+
+    pub fn env_mut(&mut self) -> &mut E {
+        &mut self.env
+    }
+
+    pub fn machine(&self) -> &Machine {
+        self.env.machine()
+    }
+
+    pub fn stats(&self) -> &SessionStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads;
+    use crate::platform::device::i7_hd7950;
+
+    #[test]
+    fn override_applies_on_machine_baseline() {
+        let base = baseline_config(&i7_hd7950(2));
+        assert_eq!(base.overlap.len(), 2);
+        let cfg = ConfigOverride::new().gpu_only().overlap(4).apply(base);
+        assert_eq!(cfg.cpu_share, 0.0);
+        assert_eq!(cfg.overlap, vec![4, 4]);
+    }
+
+    #[test]
+    fn pinned_run_reports_origin_and_skips_kb() {
+        let comp = Computation::from(workloads::saxpy(1 << 20));
+        let mut s = Session::simulated(i7_hd7950(1), 5);
+        let out = s
+            .run_with(&comp, &RequestArgs::default(), ConfigOverride::new().gpu_only())
+            .unwrap();
+        assert_eq!(out.origin, ConfigOrigin::Pinned);
+        assert_eq!(out.config.cpu_share, 0.0);
+        assert!(s.kb().is_empty());
+        assert_eq!(s.stats().pinned, 1);
+    }
+
+    #[test]
+    fn cpu_only_machine_never_rebalances() {
+        use crate::platform::device::opteron_6272_quad;
+        let comp = Computation::from(workloads::fft(16));
+        let mut s = Session::simulated(opteron_6272_quad(), 9);
+        for _ in 0..10 {
+            let out = s.run(&comp, &RequestArgs::default()).unwrap();
+            assert!(!out.rebalanced);
+            assert_eq!(out.config.cpu_share, 1.0);
+        }
+        assert_eq!(s.stats().balance_ops, 0);
+    }
+}

@@ -129,18 +129,17 @@ pub fn build_profile<E: ExecEnv>(
     let has_gpu = !machine.gpus.is_empty();
     let (overlaps, wgs_cands) = if has_gpu {
         let gp = GpuPlatform::new(machine.gpus[0].clone());
-        let fp = sct
-            .kernels()
-            .first()
-            .map(|k| k.footprint)
-            .unwrap_or(crate::platform::occupancy::KernelFootprint {
-                local_mem_base: 0,
-                local_mem_per_thread: 0,
-                regs_per_thread: 24,
-            });
+        // Candidate sizes are scored against the whole SCT (minimum over
+        // per-kernel occupancies), not just the first leaf: the kernel that
+        // constrains residency can differ per work-group size.
+        let fps: Vec<_> = sct.kernels().iter().map(|k| k.footprint).collect();
         (
             gp.overlap_candidates(),
-            gp.wgs_candidates(&fp, opts.occupancy_threshold),
+            crate::platform::occupancy::wgs_candidates_multi(
+                &machine.gpus[0],
+                &fps,
+                opts.occupancy_threshold,
+            ),
         )
     } else {
         (vec![], vec![256])

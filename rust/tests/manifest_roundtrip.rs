@@ -1,0 +1,100 @@
+//! Manifest JSON round-trip stability (the manifest-roundtrip idiom):
+//! serialize -> parse -> re-serialize must be the identity on the canonical
+//! form, and parsing must preserve every field bit-for-bit. The manifest is
+//! the contract between the Python AOT pipeline and the Rust runtime, so
+//! its serialized form has to be deterministic.
+
+use std::path::Path;
+
+use marrow::runtime::artifacts::Manifest;
+use marrow::util::json::Json;
+
+const SAMPLE: &str = r#"{"format": 1, "artifacts": [
+    {"name": "saxpy_n4096", "family": "saxpy", "file": "saxpy_n4096.hlo.txt",
+     "chunk_units": 4096, "flops": 8192, "bytes": 49152,
+     "inputs": [{"name": "alpha", "shape": [1], "dtype": "f32"},
+                {"name": "x", "shape": [4096], "dtype": "f32"}],
+     "outputs": [{"name": "out", "shape": [4096], "dtype": "f32"}]},
+    {"name": "saxpy_n32768", "family": "saxpy", "file": "saxpy_n32768.hlo.txt",
+     "chunk_units": 32768, "flops": 65536, "bytes": 393216,
+     "inputs": [], "outputs": []},
+    {"name": "mirror_w512", "family": "mirror", "file": "mirror_w512.hlo.txt",
+     "chunk_units": 8, "flops": 0, "bytes": 32768,
+     "inputs": [{"name": "img", "shape": [8, 512], "dtype": "f32"}],
+     "outputs": [{"name": "out", "shape": [8, 512], "dtype": "f32"}]}
+]}"#;
+
+#[test]
+fn serialize_parse_reserialize_is_stable() {
+    let dir = Path::new("artifacts");
+    let m1 = Manifest::parse(SAMPLE, dir).unwrap();
+    let text1 = m1.to_json().to_string_pretty();
+    let m2 = Manifest::parse(&text1, dir).unwrap();
+    let text2 = m2.to_json().to_string_pretty();
+    assert_eq!(text1, text2, "canonical form must be a fixed point");
+    // And a third trip for good measure (compact form too).
+    let m3 = Manifest::parse(&text2, dir).unwrap();
+    assert_eq!(m3.to_json().to_string(), m2.to_json().to_string());
+}
+
+#[test]
+fn roundtrip_preserves_every_field() {
+    let dir = Path::new("artifacts");
+    let m1 = Manifest::parse(SAMPLE, dir).unwrap();
+    let m2 = Manifest::parse(&m1.to_json().to_string_pretty(), dir).unwrap();
+    assert_eq!(m1.by_family.len(), m2.by_family.len());
+    for (fam, arts) in &m1.by_family {
+        let back = &m2.by_family[fam];
+        assert_eq!(arts.len(), back.len(), "family {fam}");
+        for (a, b) in arts.iter().zip(back) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.family, b.family);
+            assert_eq!(a.file, b.file);
+            assert_eq!(a.chunk_units, b.chunk_units);
+            assert_eq!(a.flops, b.flops);
+            assert_eq!(a.bytes, b.bytes);
+            assert_eq!(a.inputs, b.inputs);
+            assert_eq!(a.outputs, b.outputs);
+        }
+    }
+}
+
+#[test]
+fn canonical_form_is_family_grouped_and_chunk_sorted() {
+    // The canonical serialization groups by family (sorted) and orders each
+    // menu by ascending chunk size, independent of input order.
+    let shuffled = r#"{"format": 1, "artifacts": [
+        {"name": "b_large", "family": "b", "file": "b2.hlo.txt",
+         "chunk_units": 512, "flops": 1, "bytes": 1, "inputs": [], "outputs": []},
+        {"name": "a_only", "family": "a", "file": "a.hlo.txt",
+         "chunk_units": 64, "flops": 1, "bytes": 1, "inputs": [], "outputs": []},
+        {"name": "b_small", "family": "b", "file": "b1.hlo.txt",
+         "chunk_units": 16, "flops": 1, "bytes": 1, "inputs": [], "outputs": []}
+    ]}"#;
+    let dir = Path::new("artifacts");
+    let m = Manifest::parse(shuffled, dir).unwrap();
+    let v = m.to_json();
+    let names: Vec<String> = v
+        .get("artifacts")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|a| a.get("name").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(names, vec!["a_only", "b_small", "b_large"]);
+    // Stability still holds from the shuffled source.
+    let text1 = v.to_string_pretty();
+    let text2 = Manifest::parse(&text1, dir).unwrap().to_json().to_string_pretty();
+    assert_eq!(text1, text2);
+}
+
+#[test]
+fn parse_accepts_what_json_parser_produces() {
+    // Guard against serializer/parser drift: the serialized manifest is
+    // valid JSON for the crate's own parser at the raw level too.
+    let dir = Path::new("artifacts");
+    let m = Manifest::parse(SAMPLE, dir).unwrap();
+    let text = m.to_json().to_string_pretty();
+    assert!(Json::parse(&text).is_ok());
+}

@@ -1,0 +1,160 @@
+//! Integration tests for the `Session` facade: the Section 3.2.3 config
+//! resolution chain (KB hit -> RBF derivation -> cold-start profile build),
+//! outcome feedback into the knowledge base, and adaptive rebalancing of
+//! repeated requests — all against the simulated backend.
+
+use marrow::bench::workloads;
+use marrow::data::workload::Workload;
+use marrow::kb::{mk_profile, KnowledgeBase};
+use marrow::platform::cpu::FissionLevel;
+use marrow::platform::device::i7_hd7950;
+use marrow::runtime::exec::RequestArgs;
+use marrow::session::{Computation, ConfigOrigin, Session};
+use marrow::tuner::profile::ProfileOrigin;
+
+#[test]
+fn kb_hit_resolution_uses_stored_profile() {
+    let comp = Computation::from(workloads::saxpy(1 << 22));
+    let mut kb = KnowledgeBase::in_memory();
+    kb.store(mk_profile(
+        &comp.sct_id(),
+        Workload::d1(1 << 22),
+        FissionLevel::L2,
+        vec![4],
+        0.3,
+        1.0,
+    ));
+    let mut s = Session::simulated(i7_hd7950(1), 1).with_kb(kb);
+    let out = s.run(&comp, &RequestArgs::default()).unwrap();
+    assert_eq!(out.origin, ConfigOrigin::KbHit);
+    assert!((out.config.cpu_share - 0.3).abs() < 1e-12);
+    assert_eq!(s.stats().kb_hits, 1);
+}
+
+#[test]
+fn rbf_derivation_interpolates_between_stored_sizes() {
+    let comp = Computation::from(workloads::saxpy(1 << 22));
+    let id = comp.sct_id();
+    let mut kb = KnowledgeBase::in_memory();
+    kb.store(mk_profile(&id, Workload::d1(1 << 20), FissionLevel::L2, vec![4], 0.10, 1.0));
+    kb.store(mk_profile(&id, Workload::d1(1 << 24), FissionLevel::L2, vec![4], 0.30, 1.0));
+    let mut s = Session::simulated(i7_hd7950(1), 2).with_kb(kb);
+    let out = s.run(&comp, &RequestArgs::default()).unwrap();
+    assert_eq!(out.origin, ConfigOrigin::Derived);
+    assert!(
+        out.config.cpu_share > 0.10 && out.config.cpu_share < 0.30,
+        "share {}",
+        out.config.cpu_share
+    );
+    // The derived outcome is fed back: the next request is an exact hit.
+    let p = s.kb().lookup(&id, &Workload::d1(1 << 22)).expect("stored");
+    assert_eq!(p.origin, ProfileOrigin::Derived);
+    let again = s.run(&comp, &RequestArgs::default()).unwrap();
+    assert_eq!(again.origin, ConfigOrigin::KbHit);
+}
+
+#[test]
+fn cold_start_builds_profile_and_caches_it() {
+    // Same machine/workload/seed regime as the tuner's own hybrid test, so
+    // the expected distribution band is already validated there.
+    let comp = Computation::from(workloads::saxpy(1 << 24));
+    let mut s = Session::simulated(i7_hd7950(1), 9);
+    assert!(s.kb().is_empty());
+    let out = s.run(&comp, &RequestArgs::default()).unwrap();
+    assert_eq!(out.origin, ConfigOrigin::Built);
+    assert_eq!(s.kb().len(), 1);
+    // Streaming workload on the hybrid box: the built profile must be a
+    // genuine hybrid distribution, not the baseline.
+    assert!(out.config.cpu_share > 0.02 && out.config.cpu_share < 0.6);
+    let again = s.run(&comp, &RequestArgs::default()).unwrap();
+    assert_eq!(again.origin, ConfigOrigin::KbHit);
+    assert_eq!(s.stats().built, 1);
+    assert_eq!(s.stats().kb_hits, 1);
+}
+
+#[test]
+fn repeated_runs_converge_cpu_share_via_balancer() {
+    // Acceptance: seed the KB with a badly unbalanced split (85% CPU for a
+    // GPU-favoured streaming kernel) and let repeated Session::run calls
+    // converge cpu_share through the monitor + adaptive binary search.
+    let comp = Computation::from(workloads::saxpy(1 << 22));
+    let mut kb = KnowledgeBase::in_memory();
+    kb.store(mk_profile(
+        &comp.sct_id(),
+        Workload::d1(1 << 22),
+        FissionLevel::L2,
+        vec![4],
+        0.85,
+        1.0,
+    ));
+    let mut s = Session::simulated(i7_hd7950(1), 7).with_kb(kb);
+
+    let args = RequestArgs::default();
+    let first = s.run(&comp, &args).unwrap();
+    assert!((first.config.cpu_share - 0.85).abs() < 1e-12);
+    let t_first = first.exec.total;
+
+    let mut shares = vec![first.config.cpu_share];
+    let mut last = first;
+    for _ in 0..59 {
+        last = s.run(&comp, &args).unwrap();
+        shares.push(last.config.cpu_share);
+    }
+
+    assert!(
+        s.stats().balance_ops >= 2,
+        "balancer must trigger: {:?}",
+        s.stats()
+    );
+    let final_share = last.config.cpu_share;
+    assert!(
+        final_share < 0.6,
+        "cpu_share must move off the bad split: trace {shares:?}"
+    );
+    // The search settles: the last third of the trace stays in a narrow
+    // band instead of ping-ponging across the interval.
+    let tail = &shares[shares.len() - 20..];
+    let (lo, hi) = tail
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &s| {
+            (l.min(s), h.max(s))
+        });
+    assert!(hi - lo < 0.35, "share must settle, trace {shares:?}");
+    assert!(hi < 0.6, "settled band must be near the optimum: {shares:?}");
+    // Performance must improve once the share has converged.
+    assert!(
+        last.exec.total < t_first,
+        "converged runs must beat the unbalanced start: {} vs {t_first}",
+        last.exec.total
+    );
+    // The refined distribution is persisted for future sessions.
+    let p = s
+        .kb()
+        .lookup(&comp.sct_id(), &Workload::d1(1 << 22))
+        .expect("profile kept");
+    assert_eq!(p.origin, ProfileOrigin::Refined);
+    assert!(p.config.cpu_share < 0.6);
+}
+
+#[test]
+fn session_kb_persists_across_sessions() {
+    let path = std::env::temp_dir().join("marrow_session_kb_test.json");
+    let _ = std::fs::remove_file(&path);
+    let comp = Computation::from(workloads::saxpy(1 << 20));
+    {
+        let mut s = Session::simulated(i7_hd7950(1), 5)
+            .with_kb_path(&path)
+            .unwrap();
+        let out = s.run(&comp, &RequestArgs::default()).unwrap();
+        assert_eq!(out.origin, ConfigOrigin::Built);
+        s.save_kb().unwrap();
+    }
+    {
+        let mut s = Session::simulated(i7_hd7950(1), 6)
+            .with_kb_path(&path)
+            .unwrap();
+        let out = s.run(&comp, &RequestArgs::default()).unwrap();
+        assert_eq!(out.origin, ConfigOrigin::KbHit, "warm start across sessions");
+    }
+    let _ = std::fs::remove_file(&path);
+}
