@@ -72,7 +72,7 @@ fn main() {
         ],
         scalars: vec![2.0],
     };
-    let mut session = Session::real(i7_hd7950(1), &client, &manifest);
+    let session = Session::real(i7_hd7950(1), &client, &manifest);
     results.push(timer.time("saxpy 262k full session request", || {
         let _ = session
             .run_with(&comp, &args, ConfigOverride::new().cpu_share(0.25))

@@ -1,0 +1,87 @@
+//! Serve-path throughput bench: requests/sec and p50/p99 latency of the
+//! multi-request driver across admission caps — the first point of the
+//! repo's performance trajectory (BENCH_pr2.json).
+//!
+//! The pool runs simulated backends; every request carries the serve
+//! path's fixed pace floor standing in for device occupancy, so the
+//! numbers measure admission-cap scaling of the *driver* (session pool,
+//! shared-KB resolution, balance bookkeeping), not the analytic clock.
+
+use marrow::bench::workloads;
+use marrow::platform::device::i7_hd7950;
+use marrow::session::serve::{serve_simulated, ServeOpts, ServeRequest};
+use marrow::session::Computation;
+
+const REQUESTS: usize = 64;
+const PACE_MS: f64 = 2.0;
+
+fn main() {
+    let machine = i7_hd7950(1);
+    let requests: Vec<ServeRequest> = (0..REQUESTS)
+        .map(|_| ServeRequest::from(Computation::from(workloads::saxpy(1 << 20))))
+        .collect();
+
+    println!(
+        "serve throughput: {REQUESTS} saxpy requests, pace floor {PACE_MS} ms \
+         (simulated backends)\n"
+    );
+    println!(
+        "{:>11} {:>10} {:>10} {:>10} {:>9} {:>9}",
+        "concurrency", "req/s", "p50 ms", "p99 ms", "kb hits", "built"
+    );
+
+    let mut points = Vec::new();
+    for concurrency in [1usize, 2, 4, 8] {
+        let report = serve_simulated(
+            &machine,
+            42,
+            &requests,
+            &ServeOpts {
+                concurrency,
+                pace: PACE_MS * 1e-3,
+            },
+        )
+        .expect("serve");
+        println!(
+            "{:>11} {:>10.1} {:>10.2} {:>10.2} {:>9} {:>9}",
+            report.concurrency,
+            report.requests_per_sec,
+            report.p50_latency * 1e3,
+            report.p99_latency * 1e3,
+            report.stats.kb_hits,
+            report.stats.built
+        );
+        points.push((
+            report.concurrency,
+            report.requests_per_sec,
+            report.p50_latency * 1e3,
+            report.p99_latency * 1e3,
+        ));
+    }
+
+    let rps_1 = points.iter().find(|p| p.0 == 1).map(|p| p.1).unwrap_or(0.0);
+    let rps_4 = points.iter().find(|p| p.0 == 4).map(|p| p.1).unwrap_or(0.0);
+    let speedup = if rps_1 > 0.0 { rps_4 / rps_1 } else { 0.0 };
+    println!("\nspeedup concurrency 4 vs 1: {speedup:.2}x");
+
+    let json_points: Vec<String> = points
+        .iter()
+        .map(|(c, rps, p50, p99)| {
+            format!(
+                "    {{\"concurrency\": {c}, \"requests_per_sec\": {rps:.2}, \
+                 \"p50_ms\": {p50:.3}, \"p99_ms\": {p99:.3}}}"
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"serve_throughput\",\n  \"pr\": 2,\n  \
+         \"requests\": {REQUESTS},\n  \"pace_ms\": {PACE_MS},\n  \
+         \"points\": [\n{}\n  ],\n  \"speedup_c4_vs_c1\": {speedup:.2}\n}}\n",
+        json_points.join(",\n")
+    );
+    let path = "BENCH_pr2.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -18,7 +18,7 @@ fn main() -> marrow::Result<()> {
     let args = RequestArgs::default();
 
     // Profile under stable load; the tuned profile lands in the KB.
-    let mut tuned = Session::simulated(i7_hd7950(1), 99);
+    let tuned = Session::simulated(i7_hd7950(1), 99);
     let profile = tuned.profile(&comp)?;
     println!(
         "profiled distribution: GPU {:.1}% / CPU {:.1}% (fission {}, overlap {:?})",
@@ -32,7 +32,7 @@ fn main() -> marrow::Result<()> {
     // threads), inheriting the warm KB: every run is a KB hit and the
     // session's balancer refines the stored distribution in place.
     let sim = SimMachine::new(i7_hd7950(1), 100).with_load(LoadProfile::step_at(15, 9));
-    let mut s = Session::sim(sim).with_kb(tuned.into_kb());
+    let s = Session::sim(sim).with_kb(tuned.into_kb());
 
     println!("\n run | GPU share | exec time | event");
     println!("-----+-----------+-----------+-------");

@@ -40,9 +40,9 @@ fn main() -> marrow::Result<()> {
         (Ok(manifest), Ok(client)) => {
             // Locality-aware fused SCT vs the staged ablation path, each in
             // its own session (separate launch counters).
-            let mut sf = Session::real(i7_hd7950(1), &client, &manifest);
+            let sf = Session::real(i7_hd7950(1), &client, &manifest);
             let out_fused = sf.run_with(&fused, &args, hybrid.clone())?;
-            let mut ss = Session::real(i7_hd7950(1), &client, &manifest);
+            let ss = Session::real(i7_hd7950(1), &client, &manifest);
             let out_staged = ss.run_with(&staged, &args, hybrid)?;
 
             let a = out_fused.outputs[0].as_f32()?;
@@ -74,7 +74,7 @@ fn main() -> marrow::Result<()> {
             if let Some(e) = man.err().or(client.err()) {
                 println!("real runtime unavailable ({e}); running simulated");
             }
-            let mut s = Session::simulated(i7_hd7950(1), 7);
+            let s = Session::simulated(i7_hd7950(1), 7);
             let out_fused = s.run_with(&fused, &args, hybrid.clone())?;
             let out_staged = s.run_with(&staged, &args, hybrid)?;
             println!(

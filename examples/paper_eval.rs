@@ -49,7 +49,7 @@ fn main() -> marrow::Result<()> {
             ],
             scalars: vec![1.75],
         };
-        let mut s = Session::real(machine.clone(), &client, &manifest);
+        let s = Session::real(machine.clone(), &client, &manifest);
         let hy = s.run_with(&comp, &args, hybrid())?;
         let got = hy.outputs[0].as_f32()?;
         let mut err = 0.0f32;
@@ -72,7 +72,7 @@ fn main() -> marrow::Result<()> {
             vectors: vec![VectorArg::partitioned_f32("img", img, w as u64)],
             scalars: vec![42.0, 0.0, 128.0],
         };
-        let mut s = Session::real(machine.clone(), &client, &manifest);
+        let s = Session::real(machine.clone(), &client, &manifest);
         let hy = s.run_with(&fused, &args, hybrid())?;
         let st = s.run_with(&staged, &args, hybrid())?;
         let err = hy.outputs[0]
@@ -104,7 +104,7 @@ fn main() -> marrow::Result<()> {
             ],
             scalars: vec![],
         };
-        let mut s = Session::real(machine.clone(), &client, &manifest);
+        let s = Session::real(machine.clone(), &client, &manifest);
         let hy = s.run_with(&comp, &args, hybrid())?;
         // Roundtrip identity: ifft(fft(x)) == x.
         let rr = hy.outputs[0].as_f32()?;
@@ -148,7 +148,7 @@ fn main() -> marrow::Result<()> {
             vectors: vec![VectorArg::copied_f32("pos", pos.clone())],
             scalars: vec![0.0], // Offset placeholder
         };
-        let mut s = Session::real(machine.clone(), &client, &manifest);
+        let s = Session::real(machine.clone(), &client, &manifest);
         let hy = s.run_with(&comp, &args, hybrid())?;
         let acc = hy.outputs[0].as_f32()?;
         assert_eq!(acc.len(), n * 3);
@@ -174,7 +174,7 @@ fn main() -> marrow::Result<()> {
             ],
             scalars: vec![],
         };
-        let mut s = Session::real(machine.clone(), &client, &manifest);
+        let s = Session::real(machine.clone(), &client, &manifest);
         let hy = s.run_with(&comp, &args, hybrid())?;
         let out = hy.outputs[0].as_f32()?;
         assert_eq!(out.len(), vol.len());

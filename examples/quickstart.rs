@@ -41,7 +41,7 @@ fn main() -> marrow::Result<()> {
     };
 
     // 2. Tune in the simulator; the profile lands in the session's KB.
-    let mut sim = Session::simulated(i7_hd7950(1), 42);
+    let sim = Session::simulated(i7_hd7950(1), 42);
     let profile = sim.profile(&comp)?;
     println!(
         "simulated profile: GPU {:.1}% / CPU {:.1}% (fission {}, overlap {:?}, wgs {})",
@@ -56,7 +56,7 @@ fn main() -> marrow::Result<()> {
     match (Manifest::load_default(), RtClient::cpu()) {
         (Ok(manifest), Ok(client)) => {
             println!("platform: {}", client.platform());
-            let mut s =
+            let s =
                 Session::real(i7_hd7950(1), &client, &manifest).with_kb(sim.into_kb());
             let out = s.run(&comp, &args)?;
 

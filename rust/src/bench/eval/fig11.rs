@@ -38,14 +38,14 @@ pub fn run() -> Result<Vec<TracePoint>> {
     let comp = Computation::from(workloads::fft(128));
     // Initial distribution from a stable-load profile (Table 3's ~75/25),
     // persisted in the session's knowledge base.
-    let mut tuned = Session::simulated(i7_hd7950(1), EVAL_SEED ^ 0x11);
+    let tuned = Session::simulated(i7_hd7950(1), EVAL_SEED ^ 0x11);
     tuned.profile(&comp)?;
 
     // Same facade on the loaded machine, warm KB: every request is a KB
     // hit and the monitor/ABS refine the stored distribution in place.
     let sim = SimMachine::new(i7_hd7950(1), EVAL_SEED ^ 0x12)
         .with_load(LoadProfile::step_at(LOAD_AT, LOAD_THREADS));
-    let mut s = Session::sim(sim).with_kb(tuned.into_kb());
+    let s = Session::sim(sim).with_kb(tuned.into_kb());
 
     let args = RequestArgs::default();
     let mut trace = Vec::new();

@@ -108,7 +108,7 @@ impl Timer {
     pub fn time_session<E: ExecEnv>(
         &self,
         name: &str,
-        session: &mut Session<E>,
+        session: &Session<E>,
         comp: &Computation,
         args: &RequestArgs,
     ) -> Result<BenchResult> {
@@ -188,9 +188,9 @@ mod tests {
     #[test]
     fn time_session_measures_facade_requests() {
         let comp = Computation::from(workloads::saxpy(1 << 16));
-        let mut s = Session::simulated(i7_hd7950(1), 4);
+        let s = Session::simulated(i7_hd7950(1), 4);
         let r = Timer::new(0, 3)
-            .time_session("saxpy via session", &mut s, &comp, &RequestArgs::default())
+            .time_session("saxpy via session", &s, &comp, &RequestArgs::default())
             .unwrap();
         assert_eq!(r.iters, 3);
         // 1 untimed + 3 timed requests went through the facade.

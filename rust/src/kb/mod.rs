@@ -17,8 +17,9 @@ use crate::platform::cpu::FissionLevel;
 use crate::tuner::profile::{FrameworkConfig, Profile, ProfileOrigin};
 use crate::util::json::Json;
 
-/// The knowledge base.
-#[derive(Default)]
+/// The knowledge base. `Clone` snapshots the current profiles (used when
+/// extracting a KB that other sessions still share).
+#[derive(Clone, Default)]
 pub struct KnowledgeBase {
     entries: Vec<Profile>,
     path: Option<PathBuf>,

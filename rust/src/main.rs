@@ -7,8 +7,15 @@
 //!       run Algorithm 1 on one benchmark through a Session and print the
 //!       profile (persisted when --kb is given)
 //!   run --bench <name> --size <n> [--gpus <g>] [--runs <r>] [--kb <path>]
+//!       [--concurrency <c>]
 //!       repeated Session::run requests: KB lookup -> derive -> build chain,
 //!       execution monitoring and adaptive rebalancing, per-run trace
+//!       (with --concurrency > 1 the requests drain through a session pool)
+//!   serve --bench <name> --size <n> [--requests <r>] [--concurrency <c>]
+//!       [--pace-ms <m>] [--kb <path>]
+//!       multi-request serve path: a pool of sessions over one shared KB
+//!       drains the request stream under the admission cap; reports
+//!       requests/sec and p50/p99 latency
 //!   shoc
 //!       install-time calibration: host microbenchmarks + GPU ranking
 //!   info
@@ -19,9 +26,11 @@ use std::path::PathBuf;
 use marrow::bench::eval::{ablations, fig11, table2, table3, table4, table5};
 use marrow::bench::workloads::{self, Benchmark};
 use marrow::cli::Args;
+use marrow::kb::KnowledgeBase;
 use marrow::platform::device::{i7_hd7950, opteron_6272_quad, Machine};
 use marrow::runtime::artifacts::Manifest;
 use marrow::runtime::exec::RequestArgs;
+use marrow::session::serve::{ServeOpts, ServeRequest, SessionPool};
 use marrow::session::{Computation, Session};
 use marrow::sim::shoc;
 use marrow::Result;
@@ -39,6 +48,7 @@ fn run() -> Result<()> {
         Some("eval") => eval(&args),
         Some("profile") => profile(&args),
         Some("run") => run_cmd(&args),
+        Some("serve") => serve_cmd(&args),
         Some("shoc") => shoc_cmd(),
         Some("info") => info(),
         _ => {
@@ -53,7 +63,8 @@ marrow — multi-CPU/multi-GPU execution of compound multi-kernel computations
 usage:
   marrow eval <table2|table3|table4|table5|fig11|ablations|all>
   marrow profile --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--kb <path>]
-  marrow run --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--runs <r>] [--kb <path>]
+  marrow run --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--runs <r>] [--kb <path>] [--concurrency <c>]
+  marrow serve --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--requests <r>] [--concurrency <c>] [--pace-ms <m>] [--kb <path>]
   marrow shoc
   marrow info";
 
@@ -126,7 +137,7 @@ fn profile(args: &Args) -> Result<()> {
     let b = pick_benchmark(args)?;
     let name = b.name.clone();
     let comp = Computation::from(b);
-    let mut session = sim_session(args, pick_machine(args)?, 7)?;
+    let session = sim_session(args, pick_machine(args)?, 7)?;
     let p = session.profile(&comp)?;
     session.save_kb()?;
     println!("benchmark      : {}", name);
@@ -152,9 +163,15 @@ fn profile(args: &Args) -> Result<()> {
 fn run_cmd(args: &Args) -> Result<()> {
     let b = pick_benchmark(args)?;
     let runs = args.get_u64("runs", 8)?;
+    let concurrency = args.get_u64("concurrency", 1)? as usize;
+    if concurrency > 1 {
+        // Concurrent requests drain through the serve path, keeping run's
+        // own request-count default (8 runs, not serve's 32).
+        return serve_requests(args, runs);
+    }
     let name = b.name.clone();
     let comp = Computation::from(b);
-    let mut session = sim_session(args, pick_machine(args)?, 11)?;
+    let session = sim_session(args, pick_machine(args)?, 11)?;
     println!("benchmark: {name} ({} runs, simulated clock)", runs);
     println!(" run | origin  | GPU share | exec time | balanced?");
     println!("-----+---------+-----------+-----------+----------");
@@ -182,6 +199,49 @@ fn run_cmd(args: &Args) -> Result<()> {
     session.save_kb()?;
     if args.get("kb").is_some() {
         println!("knowledge base persisted ({} profiles)", session.kb().len());
+    }
+    Ok(())
+}
+
+/// The multi-request serve path: drain a request stream through a pool of
+/// simulated sessions sharing one knowledge base.
+fn serve_cmd(args: &Args) -> Result<()> {
+    serve_requests(args, args.get_u64("runs", 32)?)
+}
+
+/// Serve with an explicit request-count default (`marrow run --concurrency`
+/// delegates here with run's default of 8).
+fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
+    let b = pick_benchmark(args)?;
+    let n_requests = args.get_u64("requests", default_requests)? as usize;
+    let concurrency = (args.get_u64("concurrency", 4)? as usize).max(1);
+    let pace = args.get_f64("pace-ms", 2.0)? * 1e-3;
+    let name = b.name.clone();
+    let comp = Computation::from(b);
+    let machine = pick_machine(args)?;
+
+    let pool = SessionPool::build(concurrency, |i| {
+        Session::simulated(machine.clone(), 11 + i as u64)
+    });
+    if let Some(path) = args.get("kb") {
+        *pool.shared_kb().write().unwrap() = KnowledgeBase::open(&PathBuf::from(path))?;
+    }
+
+    let requests: Vec<ServeRequest> = (0..n_requests)
+        .map(|_| ServeRequest::from(comp.clone()))
+        .collect();
+    println!(
+        "serving {n_requests} x {name} at concurrency {concurrency} \
+         (pace floor {:.1} ms/request, simulated clock)",
+        pace * 1e3
+    );
+    let report = pool.serve(&requests, &ServeOpts { concurrency, pace })?;
+    println!("{}", report.summary());
+    if args.get("kb").is_some() {
+        let kb = pool.shared_kb();
+        let kb = kb.read().unwrap();
+        kb.save()?;
+        println!("knowledge base persisted ({} profiles)", kb.len());
     }
     Ok(())
 }

@@ -23,7 +23,25 @@ use crate::runtime::stub as xla;
 pub struct RtClient {
     client: xla::PjRtClient,
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Serializes compile/execute entry when the native binding is not
+    /// thread-safe: the concurrent launcher's workers take this gate (via
+    /// [`RtClient::exclusive`]) around every task in `pjrt` builds. Owned
+    /// by the client — not a scheduler — so any number of schedulers or
+    /// sessions sharing one client contend on the *same* lock.
+    gate: Mutex<()>,
 }
+
+// The concurrent launcher shares one `RtClient` across its per-slot worker
+// threads. In `pjrt` builds every chunk-launch path (`ChunkRunner`) holds
+// the client's own gate while it compiles or executes, so the native
+// binding is never entered concurrently through the runtime. Callers that
+// bypass `ChunkRunner` and drive `run`/`compile_file` from multiple
+// threads themselves must take `exclusive()` first — that is the client's
+// threading contract. The stub build's client is a plain host-side struct.
+#[cfg(feature = "pjrt")]
+unsafe impl Send for RtClient {}
+#[cfg(feature = "pjrt")]
+unsafe impl Sync for RtClient {}
 
 impl RtClient {
     /// Create the CPU PJRT client.
@@ -31,7 +49,15 @@ impl RtClient {
         Ok(RtClient {
             client: xla::PjRtClient::cpu()?,
             cache: Mutex::new(HashMap::new()),
+            gate: Mutex::new(()),
         })
+    }
+
+    /// Exclusive access to the native binding (see the Send/Sync note
+    /// above). Hold the returned guard across compile/execute sequences
+    /// that must not interleave with other threads.
+    pub fn exclusive(&self) -> std::sync::MutexGuard<'_, ()> {
+        self.gate.lock().unwrap()
     }
 
     pub fn platform(&self) -> String {

@@ -30,12 +30,14 @@ pub struct RequestArgs {
     pub scalars: Vec<f64>,
 }
 
-/// Chunk-looping executor over one PJRT client.
+/// Chunk-looping executor over one PJRT client. Shared by reference across
+/// the launcher's per-slot worker threads, so every counter is atomic and
+/// the timing cache locks internally.
 pub struct ChunkRunner<'a> {
     pub client: &'a RtClient,
     pub manifest: &'a Manifest,
-    /// Counters for the perf pass.
-    pub launches: std::cell::Cell<u64>,
+    /// Counters for the perf pass (atomic: workers launch concurrently).
+    pub launches: std::sync::atomic::AtomicU64,
     /// Adaptive chunk selection: measured (total seconds, total units) per
     /// artifact. Largest-chunk-first is only a prior — interpret-lowered
     /// grids make per-unit cost non-monotonic in chunk size, so the runner
@@ -54,9 +56,14 @@ impl<'a> ChunkRunner<'a> {
         ChunkRunner {
             client,
             manifest,
-            launches: std::cell::Cell::new(0),
+            launches: std::sync::atomic::AtomicU64::new(0),
             timings: TimingCache::default(),
         }
+    }
+
+    /// Chunk launches performed so far.
+    pub fn launch_count(&self) -> u64 {
+        self.launches.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Share an existing timing cache (the scheduler passes its own so the
@@ -236,7 +243,8 @@ impl<'a> ChunkRunner<'a> {
                 e.0 += dt;
                 e.1 += chunk;
             }
-            self.launches.set(self.launches.get() + 1);
+            self.launches
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             for (slot, lit) in outputs.iter_mut().zip(&outs) {
                 slot.extend_from_slice(&to_vec_f32(lit)?);
             }

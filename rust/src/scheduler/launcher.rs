@@ -1,0 +1,372 @@
+//! The concurrent task launcher (Section 2.2): per-slot worker threads
+//! drain the work queues simultaneously, so hybrid CPU/GPU executions
+//! genuinely overlap — the request's completion time is the wall clock of
+//! the slowest *concurrent* slot, not a serial sum of per-task slices.
+//!
+//! Each worker owns one queue (front pops preserve unit order) and steals
+//! from the back of the longest other queue once its own runs dry. Per-task
+//! wall times are measured on the worker that ran the task and stay paired
+//! with the task's `seq`, so partial results and their timings can never
+//! drift apart (the drain-order/plan-order mismatch the serial launcher
+//! suffered from). Per-slot busy clocks feed the execution monitor.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::data::vector::ArgValue;
+use crate::decompose::ExecSlot;
+use crate::error::Result;
+use crate::scheduler::queues::{SharedQueues, Task, WorkQueues};
+
+/// One slot-execution engine the launcher drives: runs a single task and
+/// returns its partial outputs. Implementations decide how much real
+/// parallelism the backend tolerates (the PJRT binding serializes launches
+/// behind the client's gate; the stub and the tests run fully parallel).
+pub trait TaskRunner: Sync {
+    fn run_task(&self, slot: ExecSlot, task: &Task) -> Result<TaskOutput>;
+}
+
+/// One task's outputs, plus an optional self-measured execution time.
+pub struct TaskOutput {
+    pub outputs: Vec<ArgValue>,
+    /// Execution seconds as measured by the runner itself, *excluding* any
+    /// serialization wait it imposed (e.g. the PJRT launch gate) — lock
+    /// waits in a busy clock would make every slot look equally slow and
+    /// blind the balance monitor. `None` lets the launcher's own wall
+    /// measurement stand (right for runners with no internal locking).
+    pub busy: Option<f64>,
+}
+
+impl From<Vec<ArgValue>> for TaskOutput {
+    fn from(outputs: Vec<ArgValue>) -> TaskOutput {
+        TaskOutput {
+            outputs,
+            busy: None,
+        }
+    }
+}
+
+/// Per-slot wall clocks of one concurrent drain.
+#[derive(Clone, Debug, Default)]
+pub struct SlotClock {
+    /// The slot owning each queue (stable across iterations of a Loop).
+    pub slots: Vec<ExecSlot>,
+    /// Busy seconds accumulated by each slot's worker.
+    pub busy: Vec<f64>,
+    /// Wall-clock seconds of the whole concurrent drain — with real
+    /// overlap this is (close to) the *max* over slots, not their sum.
+    pub elapsed: f64,
+}
+
+impl SlotClock {
+    fn max_busy<F: Fn(&ExecSlot) -> bool>(&self, pred: F) -> f64 {
+        self.slots
+            .iter()
+            .zip(&self.busy)
+            .filter(|(s, _)| pred(s))
+            .map(|(_, &t)| t)
+            .fold(0.0, f64::max)
+    }
+
+    /// Completion time of the CPU device type: max busy over CPU slots.
+    pub fn cpu_time(&self) -> f64 {
+        self.max_busy(|s| s.is_cpu())
+    }
+
+    /// Completion time of the GPU device type: max busy over GPU slots.
+    pub fn gpu_time(&self) -> f64 {
+        self.max_busy(|s| !s.is_cpu())
+    }
+
+    /// Per-slot times of the active slots (busy > 0), for the monitor.
+    pub fn active_times(&self) -> Vec<f64> {
+        self.busy.iter().copied().filter(|&t| t > 0.0).collect()
+    }
+
+    /// Fold another drain's clocks in (Loop iterations re-drain the same
+    /// queues, so slots align by identity).
+    pub fn accumulate(&mut self, other: &SlotClock) {
+        if self.slots.is_empty() {
+            self.slots = other.slots.clone();
+            self.busy = vec![0.0; other.busy.len()];
+        }
+        for (slot, &t) in other.slots.iter().zip(&other.busy) {
+            match self.slots.iter().position(|s| s == slot) {
+                Some(i) => self.busy[i] += t,
+                None => {
+                    self.slots.push(*slot);
+                    self.busy.push(t);
+                }
+            }
+        }
+        self.elapsed += other.elapsed;
+    }
+}
+
+/// One completed task: (seq, partial outputs, wall seconds on its worker).
+pub type TaskResult = (usize, Vec<ArgValue>, f64);
+
+/// Everything one concurrent drain produced.
+pub struct LaunchOutput {
+    /// Partial outputs sorted by task `seq` (unit order), each paired with
+    /// the wall time measured on the worker that ran it.
+    pub partials: Vec<TaskResult>,
+    pub clock: SlotClock,
+    /// Tasks executed by a slot other than the one they were queued on.
+    pub stolen: u64,
+}
+
+impl LaunchOutput {
+    /// The seq-sorted partial outputs alone.
+    pub fn into_outputs(self) -> Vec<Vec<ArgValue>> {
+        self.partials.into_iter().map(|(_, o, _)| o).collect()
+    }
+}
+
+/// Drain the queues concurrently: one scoped worker thread per queue, local
+/// front pops then back-of-longest-queue steals. The first task error stops
+/// every worker and is returned; partials are seq-sorted on return.
+pub fn launch<R: TaskRunner>(queues: WorkQueues, runner: &R) -> Result<LaunchOutput> {
+    let n = queues.n_queues();
+    if n == 0 {
+        return Ok(LaunchOutput {
+            partials: Vec::new(),
+            clock: SlotClock::default(),
+            stolen: 0,
+        });
+    }
+    let slots: Vec<ExecSlot> = (0..n).map(|i| queues.slot(i)).collect();
+    let shared: SharedQueues = queues.into_shared();
+    let results: Mutex<Vec<TaskResult>> = Mutex::new(Vec::new());
+    let failure: Mutex<Option<crate::error::Error>> = Mutex::new(None);
+    let stop = AtomicBool::new(false);
+    let stolen = AtomicU64::new(0);
+
+    let t0 = Instant::now();
+    let busy: Vec<f64> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let shared = &shared;
+                let results = &results;
+                let failure = &failure;
+                let stop = &stop;
+                let stolen = &stolen;
+                scope.spawn(move || {
+                    let mut busy = 0.0f64;
+                    loop {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let task = match shared.pop_local(i) {
+                            Some(t) => t,
+                            None => match shared.steal(i) {
+                                Some(t) => {
+                                    stolen.fetch_add(1, Ordering::Relaxed);
+                                    t
+                                }
+                                None => break,
+                            },
+                        };
+                        let start = Instant::now();
+                        match runner.run_task(shared.slot(i), &task) {
+                            Ok(out) => {
+                                let dt = out
+                                    .busy
+                                    .unwrap_or_else(|| start.elapsed().as_secs_f64());
+                                busy += dt;
+                                results.lock().unwrap().push((task.seq, out.outputs, dt));
+                            }
+                            Err(e) => {
+                                let mut f = failure.lock().unwrap();
+                                if f.is_none() {
+                                    *f = Some(e);
+                                }
+                                stop.store(true, Ordering::Relaxed);
+                                break;
+                            }
+                        }
+                    }
+                    busy
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    if let Some(e) = failure.into_inner().unwrap() {
+        return Err(e);
+    }
+    let mut partials = results.into_inner().unwrap();
+    partials.sort_by_key(|(seq, _, _)| *seq);
+    Ok(LaunchOutput {
+        partials,
+        clock: SlotClock {
+            slots,
+            busy,
+            elapsed,
+        },
+        stolen: stolen.into_inner(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decompose::{Partition, PartitionPlan};
+    use crate::error::Error;
+    use std::time::Duration;
+
+    fn two_slot_plan(gpu_units: u64, cpu_units: u64) -> PartitionPlan {
+        PartitionPlan {
+            partitions: vec![
+                Partition {
+                    slot: ExecSlot::GpuSlot { gpu: 0, slot: 0 },
+                    start_unit: 0,
+                    units: gpu_units,
+                },
+                Partition {
+                    slot: ExecSlot::CpuSub { idx: 0 },
+                    start_unit: gpu_units,
+                    units: cpu_units,
+                },
+            ],
+            quantum: 1,
+            gpu_share: gpu_units as f64 / (gpu_units + cpu_units) as f64,
+        }
+    }
+
+    /// Runner that sleeps `per_unit_ms` per task unit and returns the
+    /// task's start_unit as a marker output.
+    struct Sleepy(u64);
+
+    impl TaskRunner for Sleepy {
+        fn run_task(&self, _slot: ExecSlot, task: &Task) -> Result<TaskOutput> {
+            std::thread::sleep(Duration::from_millis(self.0 * task.partition.units));
+            Ok(vec![ArgValue::F32(vec![task.partition.start_unit as f32])].into())
+        }
+    }
+
+    fn sleepy(per_unit_ms: u64) -> Sleepy {
+        Sleepy(per_unit_ms)
+    }
+
+    #[test]
+    fn partials_come_back_in_seq_order() {
+        // GPU task (seq 0) is 8x slower than the CPU task (seq 1): the CPU
+        // partial lands first, but the output must still be seq-sorted.
+        let p = two_slot_plan(8, 1);
+        let out = launch(WorkQueues::from_plan(&p), &sleepy(5)).unwrap();
+        let starts: Vec<f32> = out
+            .partials
+            .iter()
+            .map(|(_, o, _)| o[0].as_f32().unwrap()[0])
+            .collect();
+        assert_eq!(starts, vec![0.0, 8.0]);
+    }
+
+    #[test]
+    fn times_stay_paired_with_their_slot_under_out_of_order_completion() {
+        // Regression for the serial launcher's attribution bug: partials
+        // were seq-sorted while times stayed in drain order, so a fast CPU
+        // slice completing before a slow GPU slice swapped their clocks.
+        // Here the GPU slot does 40ms of work and the CPU slot 5ms; the
+        // classification must reflect that no matter the completion order.
+        let p = two_slot_plan(8, 1);
+        let out = launch(WorkQueues::from_plan(&p), &sleepy(5)).unwrap();
+        assert!(
+            out.clock.gpu_time() > out.clock.cpu_time(),
+            "gpu {} must exceed cpu {}",
+            out.clock.gpu_time(),
+            out.clock.cpu_time()
+        );
+        assert!(out.clock.gpu_time() >= 0.030);
+        assert!(out.clock.cpu_time() < 0.030);
+        // And the per-task times are paired with seq: seq 0 (gpu) is the
+        // slow one even though it completed last.
+        assert!(out.partials[0].2 > out.partials[1].2);
+    }
+
+    #[test]
+    fn hybrid_drain_overlaps_slots() {
+        // 4 slots x 20ms each: a serial launcher needs >= 80ms; concurrent
+        // workers finish in roughly one task time.
+        let p = PartitionPlan {
+            partitions: (0..4)
+                .map(|i| Partition {
+                    slot: if i < 2 {
+                        ExecSlot::CpuSub { idx: i as u32 }
+                    } else {
+                        ExecSlot::GpuSlot {
+                            gpu: 0,
+                            slot: i as u32 - 2,
+                        }
+                    },
+                    start_unit: i * 4,
+                    units: 4,
+                })
+                .collect(),
+            quantum: 1,
+            gpu_share: 0.5,
+        };
+        let out = launch(WorkQueues::from_plan(&p), &sleepy(5)).unwrap();
+        let serial_sum: f64 = out.clock.busy.iter().sum();
+        assert!(
+            out.clock.elapsed < 0.75 * serial_sum,
+            "no overlap: elapsed {} vs serial {}",
+            out.clock.elapsed,
+            serial_sum
+        );
+    }
+
+    #[test]
+    fn idle_slots_steal_from_the_longest_queue() {
+        // One overloaded slot with 8 stealable tasks, one idle peer.
+        let p = two_slot_plan(64, 8);
+        let queues = WorkQueues::from_plan_chunked(&p, 8);
+        assert!(queues.n_tasks() >= 9);
+        let out = launch(queues, &sleepy(1)).unwrap();
+        assert!(out.stolen > 0, "idle slot must have stolen work");
+        // Every task completed exactly once, seq-sorted.
+        let seqs: Vec<usize> = out.partials.iter().map(|(s, _, _)| *s).collect();
+        assert_eq!(seqs, (0..seqs.len()).collect::<Vec<_>>());
+    }
+
+    struct FailPast(u64);
+
+    impl TaskRunner for FailPast {
+        fn run_task(&self, _slot: ExecSlot, task: &Task) -> Result<TaskOutput> {
+            if task.partition.start_unit >= self.0 {
+                Err(Error::Runtime("injected".into()))
+            } else {
+                std::thread::sleep(Duration::from_millis(1));
+                Ok(vec![ArgValue::F32(vec![0.0])].into())
+            }
+        }
+    }
+
+    #[test]
+    fn first_error_stops_the_drain() {
+        let p = two_slot_plan(4, 4);
+        let queues = WorkQueues::from_plan_chunked(&p, 4);
+        let err = launch(queues, &FailPast(4)).unwrap_err();
+        assert!(format!("{err}").contains("injected"));
+    }
+
+    #[test]
+    fn clock_accumulates_across_iterations() {
+        let mut acc = SlotClock::default();
+        let a = SlotClock {
+            slots: vec![ExecSlot::CpuSub { idx: 0 }, ExecSlot::GpuSlot { gpu: 0, slot: 0 }],
+            busy: vec![1.0, 2.0],
+            elapsed: 2.0,
+        };
+        acc.accumulate(&a);
+        acc.accumulate(&a);
+        assert_eq!(acc.busy, vec![2.0, 4.0]);
+        assert_eq!(acc.elapsed, 4.0);
+        assert_eq!(acc.cpu_time(), 2.0);
+        assert_eq!(acc.gpu_time(), 4.0);
+    }
+}

@@ -1,6 +1,9 @@
 //! The Scheduler + Task Launcher (Section 2.2): distributes an SCT
-//! execution among the selected hardware, generating one task per parallel
-//! execution slot, placed in per-slot work queues consumed by the launcher.
+//! execution among the selected hardware, generating stealable tasks per
+//! parallel execution slot, placed in per-slot work queues ([`queues`])
+//! drained concurrently by the work-stealing launcher ([`launcher`]) — one
+//! worker thread per slot, idle slots stealing from the back of the
+//! longest queue.
 //!
 //! Two execution environments implement [`ExecEnv`]:
 //!  * [`SimEnv`] — prices executions with the analytic cost model
@@ -11,6 +14,7 @@
 //! Both sit behind the same widened trait, so the [`crate::session`] facade,
 //! the tuner and the load balancer drive either backend interchangeably.
 
+pub mod launcher;
 pub mod queues;
 pub mod real;
 
@@ -26,7 +30,8 @@ use crate::sim::cost::SctCost;
 use crate::sim::machine::SimMachine;
 use crate::tuner::profile::FrameworkConfig;
 
-pub use queues::{Task, WorkQueues};
+pub use launcher::{launch, LaunchOutput, SlotClock, TaskRunner};
+pub use queues::{SharedQueues, Task, WorkQueues};
 
 /// Result of one SCT execution request, as seen by the adaptation layer.
 #[derive(Clone, Debug)]

@@ -1,13 +1,16 @@
 //! Work queues and tasks (Section 2.2: "a group of tasks placed in a set of
 //! work queues — one per parallel execution").
 //!
-//! The launcher consumes queues in round-robin order. On the paper's
-//! hardware each queue drains on its own device concurrently; the PJRT CPU
-//! client binding is single-threaded, so the Real scheduler preserves queue
-//! *semantics* (ordering, per-slot accounting) with deterministic
-//! round-robin draining, and per-slot times come from per-task wall clocks.
+//! Each parallel execution slot owns a deque of tasks. The concurrent
+//! launcher ([`crate::scheduler::launcher`]) drains every queue on its own
+//! worker thread: a worker pops from the *front* of its own queue and, once
+//! empty, steals from the *back* of the longest remaining queue, so slots
+//! idled by load fluctuations pick up work from overloaded ones. Task `seq`
+//! numbers are globally ordered by unit range, so partial results merge in
+//! unit order no matter which slot ultimately ran a task.
 
 use std::collections::VecDeque;
+use std::sync::Mutex;
 
 use crate::decompose::{ExecSlot, Partition, PartitionPlan};
 
@@ -15,7 +18,8 @@ use crate::decompose::{ExecSlot, Partition, PartitionPlan};
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Task {
     pub partition: Partition,
-    /// Sequence number within the request (stable ordering for merges).
+    /// Sequence number within the request: tasks are numbered in unit
+    /// order, so sorting partials by `seq` reconstructs the domain.
     pub seq: usize,
 }
 
@@ -30,8 +34,44 @@ impl WorkQueues {
     /// execution slot, holding that slot's (single) task. Empty partitions
     /// produce no task.
     pub fn from_plan(plan: &PartitionPlan) -> WorkQueues {
+        Self::build(plan, |part| vec![*part])
+    }
+
+    /// Build the queues with each partition split into roughly
+    /// `tasks_per_slot` stealable tasks, every piece aligned to the plan's
+    /// quantum (the last piece absorbs the remainder, preserving whatever
+    /// residue the partition carried). Finer tasks give idle slots
+    /// something to steal when another slot falls behind.
+    pub fn from_plan_chunked(plan: &PartitionPlan, tasks_per_slot: u32) -> WorkQueues {
+        let q = plan.quantum.max(1);
+        Self::build(plan, |part| {
+            let pieces = tasks_per_slot.max(1) as u64;
+            let grain = (part.units / pieces / q).max(1) * q;
+            let mut out = Vec::new();
+            let mut start = part.start_unit;
+            let mut left = part.units;
+            while left > grain + grain / 2 {
+                out.push(Partition {
+                    slot: part.slot,
+                    start_unit: start,
+                    units: grain,
+                });
+                start += grain;
+                left -= grain;
+            }
+            out.push(Partition {
+                slot: part.slot,
+                start_unit: start,
+                units: left,
+            });
+            out
+        })
+    }
+
+    fn build<F: Fn(&Partition) -> Vec<Partition>>(plan: &PartitionPlan, split: F) -> WorkQueues {
         let mut queues: Vec<(ExecSlot, VecDeque<Task>)> = Vec::new();
-        for (seq, part) in plan.partitions.iter().enumerate() {
+        let mut seq = 0usize;
+        for part in &plan.partitions {
             let q = match queues.iter_mut().find(|(s, _)| *s == part.slot) {
                 Some((_, q)) => q,
                 None => {
@@ -40,10 +80,13 @@ impl WorkQueues {
                 }
             };
             if part.units > 0 {
-                q.push_back(Task {
-                    partition: *part,
-                    seq,
-                });
+                for piece in split(part) {
+                    q.push_back(Task {
+                        partition: piece,
+                        seq,
+                    });
+                    seq += 1;
+                }
             }
         }
         WorkQueues { queues }
@@ -57,23 +100,61 @@ impl WorkQueues {
         self.queues.iter().map(|(_, q)| q.len()).sum()
     }
 
-    /// Round-robin drain: repeatedly take the front task of each non-empty
-    /// queue. Returns tasks in a deterministic interleaving.
-    pub fn drain_round_robin(&mut self) -> Vec<Task> {
-        let mut out = Vec::with_capacity(self.n_tasks());
-        loop {
-            let mut any = false;
-            for (_, q) in self.queues.iter_mut() {
-                if let Some(t) = q.pop_front() {
-                    out.push(t);
-                    any = true;
-                }
-            }
-            if !any {
-                break;
-            }
+    /// The slot owning queue `i`.
+    pub fn slot(&self, i: usize) -> ExecSlot {
+        self.queues[i].0
+    }
+
+    /// Hand the queues to the concurrent launcher: per-queue locks so every
+    /// worker thread pops (and steals) independently.
+    pub fn into_shared(self) -> SharedQueues {
+        SharedQueues {
+            queues: self
+                .queues
+                .into_iter()
+                .map(|(s, q)| (s, Mutex::new(q)))
+                .collect(),
         }
-        out
+    }
+}
+
+/// The thread-shared form of [`WorkQueues`]: one lock per queue.
+pub struct SharedQueues {
+    queues: Vec<(ExecSlot, Mutex<VecDeque<Task>>)>,
+}
+
+impl SharedQueues {
+    pub fn n_queues(&self) -> usize {
+        self.queues.len()
+    }
+
+    pub fn slot(&self, i: usize) -> ExecSlot {
+        self.queues[i].0
+    }
+
+    /// Pop the next task of worker `i`'s own queue (front: unit order).
+    pub fn pop_local(&self, i: usize) -> Option<Task> {
+        self.queues[i].1.lock().unwrap().pop_front()
+    }
+
+    /// Steal a task for idle worker `thief`: take from the *back* of the
+    /// longest other queue (the victim keeps draining its front, the thief
+    /// peels units off the far end — the classic deque-stealing rule).
+    pub fn steal(&self, thief: usize) -> Option<Task> {
+        let victim = self
+            .queues
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != thief)
+            .map(|(i, (_, q))| (i, q.lock().unwrap().len()))
+            .filter(|(_, len)| *len > 0)
+            .max_by_key(|(_, len)| *len)?
+            .0;
+        self.queues[victim].1.lock().unwrap().pop_back()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.queues.iter().map(|(_, q)| q.lock().unwrap().len()).sum()
     }
 }
 
@@ -108,14 +189,67 @@ mod tests {
     }
 
     #[test]
-    fn drain_is_deterministic_and_complete() {
-        let mut a = WorkQueues::from_plan(&plan());
-        let mut b = WorkQueues::from_plan(&plan());
-        let ta = a.drain_round_robin();
-        let tb = b.drain_round_robin();
-        assert_eq!(ta, tb);
-        assert_eq!(ta.len(), 6);
-        assert_eq!(a.n_tasks(), 0);
+    fn chunked_tasks_tile_the_domain_in_seq_order() {
+        let p = plan();
+        let q = WorkQueues::from_plan_chunked(&p, 4);
+        assert!(q.n_tasks() > q.n_queues(), "chunking must add steal slack");
+        // Collect every task, sort by seq: ranges must tile [0, 4096).
+        let shared = q.into_shared();
+        let mut tasks = Vec::new();
+        for i in 0..shared.n_queues() {
+            while let Some(t) = shared.pop_local(i) {
+                tasks.push(t);
+            }
+        }
+        tasks.sort_by_key(|t| t.seq);
+        let mut cursor = 0u64;
+        for t in &tasks {
+            assert_eq!(t.partition.start_unit, cursor, "gap at seq {}", t.seq);
+            assert!(t.partition.units > 0);
+            cursor += t.partition.units;
+        }
+        assert_eq!(cursor, 4096);
+    }
+
+    #[test]
+    fn chunked_pieces_respect_the_quantum() {
+        let sct = Sct::kernel(KernelSpec::new("k", vec![ParamSpec::VecIn], 1));
+        let p = decompose(
+            &sct,
+            8192,
+            &DecomposeConfig {
+                cpu_subdevices: 2,
+                gpu_overlap: vec![1],
+                gpu_weights: vec![1.0],
+                cpu_share: 0.5,
+                wgs: 1,
+                chunk_quantum: 256,
+            },
+        )
+        .unwrap();
+        let shared = WorkQueues::from_plan_chunked(&p, 4).into_shared();
+        for i in 0..shared.n_queues() {
+            let mut last: Option<Task> = None;
+            while let Some(t) = shared.pop_local(i) {
+                if let Some(prev) = last {
+                    assert_eq!(prev.partition.units % 256, 0, "non-tail piece off-quantum");
+                }
+                last = Some(t);
+            }
+        }
+    }
+
+    #[test]
+    fn steal_takes_back_of_longest_queue() {
+        let p = plan();
+        let shared = WorkQueues::from_plan_chunked(&p, 4).into_shared();
+        // Drain queue 0 fully, then steal for it: the task must come from
+        // another queue's back (highest start_unit of that queue).
+        while shared.pop_local(0).is_some() {}
+        let before = shared.remaining();
+        let stolen = shared.steal(0).expect("other queues still hold work");
+        assert_eq!(shared.remaining(), before - 1);
+        assert_ne!(stolen.partition.slot, shared.slot(0));
     }
 
     #[test]

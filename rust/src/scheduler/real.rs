@@ -1,13 +1,23 @@
 //! Real-mode scheduler: orchestrates an execution request end-to-end on the
-//! PJRT runtime — decomposition, per-slot work queues, chunked execution,
-//! partial-result merging, host-side Loop state updates and MapReduce
-//! reductions (Sections 3.1 and 3.4).
+//! PJRT runtime — decomposition, per-slot work queues drained concurrently
+//! by the work-stealing launcher, partial-result merging, host-side Loop
+//! state updates and MapReduce reductions (Sections 3.1 and 3.4).
 //!
 //! `RealScheduler` implements the widened [`ExecEnv`] trait, so the session
 //! facade, the tuner and the load balancer drive it exactly like the
 //! simulated backend — timing-only probes use [`ExecEnv::execute`] with the
 //! bound tuning arguments, full requests go through
 //! [`ExecEnv::run_request`].
+//!
+//! Concurrency contract: every queue drains on its own scoped worker thread
+//! ([`crate::scheduler::launcher`]). Where the PJRT binding demands
+//! single-threaded access (the `pjrt` build), tasks serialize behind the
+//! *client's* gate ([`RtClient::exclusive`] — per client, so any number of
+//! schedulers sharing one client contend on the same lock); per-task busy
+//! time is measured inside the gate, so the balance monitor sees pure
+//! execution time, never lock waits. Queue semantics, stealing and
+//! per-slot accounting are identical in both builds; the stub build runs
+//! fully parallel.
 
 use std::time::Instant;
 
@@ -18,7 +28,8 @@ use crate::platform::device::Machine;
 use crate::runtime::artifacts::Manifest;
 use crate::runtime::client::RtClient;
 use crate::runtime::exec::{ChunkRunner, RequestArgs};
-use crate::scheduler::queues::WorkQueues;
+use crate::scheduler::launcher::{launch, SlotClock, TaskOutput, TaskRunner};
+use crate::scheduler::queues::{Task, WorkQueues};
 use crate::scheduler::{plan, ExecEnv, ExecOutcome, RunOutcome};
 use crate::sct::{Reduction, Sct};
 use crate::tuner::profile::FrameworkConfig;
@@ -35,10 +46,48 @@ pub struct RealScheduler<'a> {
     /// Arguments used by timing-only [`ExecEnv::execute`] probes (the tuner
     /// drives real kernels, so it needs real buffers to feed them).
     pub tuning_args: RequestArgs,
+    /// Stealable tasks generated per slot (finer tasks give idle slots
+    /// something to steal when another slot falls behind).
+    pub tasks_per_slot: u32,
 }
 
 /// Backwards-compatible name for the outputs+timing of one request.
 pub type RealOutcome = RunOutcome;
+
+/// Per-slot engine handed to the launcher: one [`ChunkRunner`] shared by
+/// every worker, serialized behind the client's gate in `pjrt` builds.
+struct SlotTaskRunner<'r, 'a> {
+    runner: &'r ChunkRunner<'a>,
+    sct: &'r Sct,
+    args: &'r RequestArgs,
+}
+
+impl<'r, 'a> TaskRunner for SlotTaskRunner<'r, 'a> {
+    fn run_task(
+        &self,
+        _slot: crate::decompose::ExecSlot,
+        task: &Task,
+    ) -> Result<TaskOutput> {
+        let _exclusive = if cfg!(feature = "pjrt") {
+            Some(self.runner.client.exclusive())
+        } else {
+            None
+        };
+        // Time inside the gate: the busy clock must hold pure execution
+        // time — gate waits would make every slot look equally slow.
+        let start = Instant::now();
+        let outputs = self.runner.run_tree(
+            self.sct,
+            self.args,
+            task.partition.start_unit,
+            task.partition.units,
+        )?;
+        Ok(TaskOutput {
+            outputs,
+            busy: Some(start.elapsed().as_secs_f64()),
+        })
+    }
+}
 
 impl<'a> RealScheduler<'a> {
     pub fn new(
@@ -53,6 +102,7 @@ impl<'a> RealScheduler<'a> {
             launches: 0,
             timings: Default::default(),
             tuning_args: RequestArgs::default(),
+            tasks_per_slot: 4,
         }
     }
 
@@ -80,10 +130,10 @@ impl<'a> RealScheduler<'a> {
                 // state update on the host with a global sync point.
                 let mut local = args.clone();
                 let mut outputs = Vec::new();
-                let mut slot_acc: Vec<f64> = Vec::new();
+                let mut clock = SlotClock::default();
                 for it in 0..state.max_iters {
-                    let (outs, times) = self.run_plan(body, &local, &p)?;
-                    accumulate(&mut slot_acc, &times);
+                    let (outs, it_clock) = self.run_plan(body, &local, &p)?;
+                    clock.accumulate(&it_clock);
                     outputs = outs;
                     if let Some(update) = &state.update {
                         let mut vecs: Vec<ArgValue> =
@@ -97,42 +147,34 @@ impl<'a> RealScheduler<'a> {
                         }
                     }
                 }
-                Ok(self.outcome(&p, outputs, slot_acc))
+                Ok(self.outcome(outputs, clock))
             }
             Sct::MapReduce { map, reduce } => {
-                let (partials, times) = self.run_plan_partials(map, args, &p)?;
-                let merged = match reduce {
-                    Reduction::Host(m) => fold_partials(&partials, *m)?,
-                    Reduction::HostFn(f) => {
-                        let firsts: Vec<ArgValue> =
-                            partials.iter().map(|p| p[0].clone()).collect();
-                        vec![f(&firsts)]
-                    }
-                    Reduction::Device(_) => {
-                        // Device reduction: reduce each partition's partial
-                        // on-device (already folded into partials by the map
-                        // tree), then fold across partitions on the host.
-                        fold_partials(&partials, Merge::Add)?
-                    }
-                };
-                Ok(self.outcome(&p, merged, times))
+                // Reductions fold per-partition partials, so tasks stay at
+                // partition granularity (no chunk splitting): splitting
+                // would change the fold arity for order-sensitive merges.
+                let queues = WorkQueues::from_plan(&p);
+                let (partials, clock) = self.drain(map, args, queues)?;
+                let merged = reduce_partials(reduce, &partials)?;
+                Ok(self.outcome(merged, clock))
             }
             _ => {
-                let (outs, times) = self.run_plan(sct, args, &p)?;
-                Ok(self.outcome(&p, outs, times))
+                let (outs, clock) = self.run_plan(sct, args, &p)?;
+                Ok(self.outcome(outs, clock))
             }
         }
     }
 
     /// Run a (loop-free) tree over every partition; concat outputs in unit
-    /// order. Returns (outputs, per-active-slot times).
+    /// order. Returns (outputs, per-slot clocks).
     fn run_plan(
         &mut self,
         sct: &Sct,
         args: &RequestArgs,
         p: &PartitionPlan,
-    ) -> Result<(Vec<ArgValue>, Vec<f64>)> {
-        let (partials, times) = self.run_plan_partials(sct, args, p)?;
+    ) -> Result<(Vec<ArgValue>, SlotClock)> {
+        let queues = WorkQueues::from_plan_chunked(p, self.tasks_per_slot);
+        let (partials, clock) = self.drain(sct, args, queues)?;
         let n_out = partials.first().map(|o| o.len()).unwrap_or(0);
         let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); n_out];
         for part in &partials {
@@ -140,58 +182,43 @@ impl<'a> RealScheduler<'a> {
                 o.extend_from_slice(val.as_f32()?);
             }
         }
-        Ok((outputs.into_iter().map(ArgValue::F32).collect(), times))
+        Ok((outputs.into_iter().map(ArgValue::F32).collect(), clock))
     }
 
-    /// Run a tree over every partition; keep per-partition partials.
-    fn run_plan_partials(
+    /// Drain prepared queues concurrently; partials come back seq-sorted
+    /// (unit order), with per-slot busy clocks measured on the workers.
+    fn drain(
         &mut self,
         sct: &Sct,
         args: &RequestArgs,
-        p: &PartitionPlan,
-    ) -> Result<(Vec<Vec<ArgValue>>, Vec<f64>)> {
-        let mut queues = WorkQueues::from_plan(p);
-        let tasks = queues.drain_round_robin();
+        queues: WorkQueues,
+    ) -> Result<(Vec<Vec<ArgValue>>, SlotClock)> {
         let runner =
             ChunkRunner::new(self.client, self.manifest).with_timings(self.timings.clone());
-        // seq -> partial, preserving unit order for the merge.
-        let mut partials: Vec<(usize, Vec<ArgValue>)> = Vec::with_capacity(tasks.len());
-        let mut times = Vec::with_capacity(tasks.len());
-        for task in tasks {
-            let start = Instant::now();
-            let outs = runner.run_tree(
-                sct,
-                args,
-                task.partition.start_unit,
-                task.partition.units,
-            )?;
-            times.push(start.elapsed().as_secs_f64());
-            partials.push((task.seq, outs));
-        }
-        self.launches += runner.launches.get();
-        partials.sort_by_key(|(seq, _)| *seq);
-        Ok((partials.into_iter().map(|(_, o)| o).collect(), times))
+        let task_runner = SlotTaskRunner {
+            runner: &runner,
+            sct,
+            args,
+        };
+        let out = launch(queues, &task_runner)?;
+        self.launches += runner.launch_count();
+        let clock = out.clock.clone();
+        Ok((out.into_outputs(), clock))
     }
 
-    fn outcome(&self, p: &PartitionPlan, outputs: Vec<ArgValue>, times: Vec<f64>) -> RunOutcome {
-        // Active partitions in plan order correspond 1:1 with `times` after
-        // the seq sort; classify by slot type.
-        let mut cpu_t = 0.0f64;
-        let mut gpu_t = 0.0f64;
-        for (part, &t) in p.active().zip(&times) {
-            if part.slot.is_cpu() {
-                cpu_t = cpu_t.max(t);
-            } else {
-                gpu_t = gpu_t.max(t);
-            }
-        }
+    fn outcome(&self, outputs: Vec<ArgValue>, clock: SlotClock) -> RunOutcome {
+        let cpu_t = clock.cpu_time();
+        let gpu_t = clock.gpu_time();
         RunOutcome {
             outputs,
             exec: ExecOutcome {
-                total: cpu_t.max(gpu_t),
+                // Wall time of the concurrent drain: the max over
+                // overlapping slots (plus scheduling overhead), never the
+                // serial sum the old single-thread launcher reported.
+                total: clock.elapsed.max(cpu_t.max(gpu_t)),
                 cpu_time: cpu_t,
                 gpu_time: gpu_t,
-                slot_times: times,
+                slot_times: clock.active_times(),
             },
         }
     }
@@ -235,12 +262,18 @@ impl<'a> ExecEnv for RealScheduler<'a> {
     }
 }
 
-fn accumulate(acc: &mut Vec<f64>, times: &[f64]) {
-    if acc.len() < times.len() {
-        acc.resize(times.len(), 0.0);
-    }
-    for (a, t) in acc.iter_mut().zip(times) {
-        *a += t;
+/// Merge per-partition partials under the request's reduction.
+fn reduce_partials(reduce: &Reduction, partials: &[Vec<ArgValue>]) -> Result<Vec<ArgValue>> {
+    match reduce {
+        Reduction::Host(m) => fold_partials(partials, *m),
+        Reduction::HostFn(f) => {
+            let firsts: Vec<ArgValue> = partials.iter().map(|p| p[0].clone()).collect();
+            Ok(vec![f(&firsts)])
+        }
+        // Device reduction: each partition's partial is already folded
+        // on-device by the map tree; partials combine across partitions
+        // with the reduction's own merge operator.
+        Reduction::Device { combine, .. } => fold_partials(partials, *combine),
     }
 }
 
@@ -252,13 +285,26 @@ fn fold_partials(partials: &[Vec<ArgValue>], m: Merge) -> Result<Vec<ArgValue>> 
         .iter()
         .map(|v| v.as_f32().map(|s| s.to_vec()))
         .collect::<Result<_>>()?;
-    for part in &partials[1..] {
-        for (acc, val) in out.iter_mut().zip(part) {
+    for (pi, part) in partials.iter().enumerate().skip(1) {
+        if part.len() != out.len() {
+            return Err(Error::Spec(format!(
+                "partial #{pi} has {} outputs, expected {} — reduction \
+                 partials must be same-shaped",
+                part.len(),
+                out.len()
+            )));
+        }
+        for (oi, (acc, val)) in out.iter_mut().zip(part).enumerate() {
             let v = val.as_f32()?;
-            // Elementwise fold over the shorter length (partition partials
-            // of reductions are same-shaped).
-            let n = acc.len().min(v.len());
-            for i in 0..n {
+            if v.len() != acc.len() {
+                return Err(Error::Spec(format!(
+                    "partial #{pi} output #{oi} has {} elements, expected {} \
+                     — refusing to fold shape-mismatched partials",
+                    v.len(),
+                    acc.len()
+                )));
+            }
+            for i in 0..acc.len() {
                 acc[i] = m.fold(acc[i], v[i]);
             }
         }
@@ -269,6 +315,7 @@ fn fold_partials(partials: &[Vec<ArgValue>], m: Merge) -> Result<Vec<ArgValue>> 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sct::{KernelSpec, ParamSpec};
 
     #[test]
     fn fold_partials_adds_elementwise() {
@@ -279,10 +326,50 @@ mod tests {
     }
 
     #[test]
-    fn accumulate_grows() {
-        let mut acc = Vec::new();
-        accumulate(&mut acc, &[1.0, 2.0]);
-        accumulate(&mut acc, &[0.5, 0.5, 3.0]);
-        assert_eq!(acc, vec![1.5, 2.5, 3.0]);
+    fn fold_partials_rejects_shape_mismatch() {
+        // Historically the fold silently truncated to the shorter length,
+        // producing a wrong (partially-merged) reduction.
+        let a = vec![ArgValue::F32(vec![1.0, 2.0, 3.0])];
+        let b = vec![ArgValue::F32(vec![10.0])];
+        let err = fold_partials(&[a, b], Merge::Add).unwrap_err();
+        assert!(format!("{err}").contains("shape-mismatched"));
+        // Output-arity mismatch is rejected too.
+        let a = vec![ArgValue::F32(vec![1.0]), ArgValue::F32(vec![2.0])];
+        let b = vec![ArgValue::F32(vec![1.0])];
+        assert!(fold_partials(&[a, b], Merge::Add).is_err());
+    }
+
+    #[test]
+    fn device_reduction_folds_with_its_own_merge_op() {
+        // A product-reduction kernel must combine partition partials with
+        // Mul — the old code hard-coded Add for every Device reduction.
+        let reduce = Reduction::device(
+            KernelSpec::new("prod", vec![ParamSpec::VecIn], 1),
+            Merge::Mul,
+        );
+        let partials = vec![
+            vec![ArgValue::F32(vec![2.0, 3.0])],
+            vec![ArgValue::F32(vec![4.0, 5.0])],
+        ];
+        let out = reduce_partials(&reduce, &partials).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[8.0, 15.0]);
+    }
+
+    #[test]
+    fn host_fn_reduction_receives_every_partial() {
+        use std::sync::Arc;
+        let reduce = Reduction::HostFn(Arc::new(|firsts: &[ArgValue]| {
+            let sum: f32 = firsts
+                .iter()
+                .map(|v| v.as_f32().unwrap().iter().sum::<f32>())
+                .sum();
+            ArgValue::F32(vec![sum])
+        }));
+        let partials = vec![
+            vec![ArgValue::F32(vec![1.0, 2.0])],
+            vec![ArgValue::F32(vec![3.0])],
+        ];
+        let out = reduce_partials(&reduce, &partials).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[6.0]);
     }
 }

@@ -43,15 +43,31 @@ impl std::fmt::Debug for LoopState {
 /// Reduction stage of MapReduce: on-device kernel or host function.
 #[derive(Clone)]
 pub enum Reduction {
-    Device(KernelSpec),
+    /// On-device reduction kernel. Each partition folds its own partial on
+    /// device; `combine` is the operator that merges per-partition partials
+    /// on the host (it must match the kernel's semantics — a product-tree
+    /// kernel combines with `Merge::Mul`, not the historic hard-coded Add).
+    Device {
+        kernel: KernelSpec,
+        combine: Merge,
+    },
     Host(Merge),
     HostFn(HostReduce),
+}
+
+impl Reduction {
+    /// On-device reduction combining partition partials with `combine`.
+    pub fn device(kernel: KernelSpec, combine: Merge) -> Reduction {
+        Reduction::Device { kernel, combine }
+    }
 }
 
 impl std::fmt::Debug for Reduction {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            Reduction::Device(k) => write!(f, "Device({})", k.family),
+            Reduction::Device { kernel, combine } => {
+                write!(f, "Device({},{combine:?})", kernel.family)
+            }
             Reduction::Host(m) => write!(f, "Host({m:?})"),
             Reduction::HostFn(_) => write!(f, "HostFn(<fn>)"),
         }
@@ -131,8 +147,8 @@ impl Sct {
             Sct::Map(t) => t.collect_kernels(out),
             Sct::MapReduce { map, reduce } => {
                 map.collect_kernels(out);
-                if let Reduction::Device(k) = reduce {
-                    out.push(k);
+                if let Reduction::Device { kernel, .. } = reduce {
+                    out.push(kernel);
                 }
             }
         }
@@ -187,7 +203,7 @@ impl Sct {
             Sct::Map(t) => format!("map({})", t.id()),
             Sct::MapReduce { map, reduce } => {
                 let r = match reduce {
-                    Reduction::Device(k) => k.family.clone(),
+                    Reduction::Device { kernel, .. } => kernel.family.clone(),
                     Reduction::Host(m) => format!("host:{m:?}"),
                     Reduction::HostFn(_) => "host:fn".to_string(),
                 };
@@ -274,7 +290,11 @@ mod tests {
 
     #[test]
     fn map_reduce_device_kernel_listed() {
-        let sct = Sct::map_reduce(Sct::kernel(k("m", 1)), Reduction::Device(k("r", 1)));
+        use crate::data::vector::Merge;
+        let sct = Sct::map_reduce(
+            Sct::kernel(k("m", 1)),
+            Reduction::device(k("r", 1), Merge::Add),
+        );
         let names: Vec<&str> = sct.kernels().iter().map(|k| k.family.as_str()).collect();
         assert_eq!(names, vec!["m", "r"]);
     }

@@ -14,19 +14,32 @@
 //!
 //! ```text
 //! let comp = Computation::from(workloads::saxpy(1 << 20));
-//! let mut s = Session::simulated(i7_hd7950(1), 42);
+//! let s = Session::simulated(i7_hd7950(1), 42);
 //! let out = s.run(&comp, &RequestArgs::default())?;   // cold start: builds
 //! let out = s.run(&comp, &RequestArgs::default())?;   // KB hit, monitored
 //! ```
+//!
+//! **Concurrency model.** A `Session` is shareable: every public entry
+//! point takes `&self`, so N client threads can drive one session (or N
+//! pooled sessions can share one knowledge base — see [`serve`]). The
+//! knowledge base sits behind an `Arc<RwLock<..>>` (concurrent lookups,
+//! exclusive stores), the per-(SCT, workload) balancing state behind a
+//! mutex (the lbt monitor observes interleaved slot-time streams in
+//! arrival order), and the backend behind its own mutex — one in-flight
+//! execution per backend, which is exactly the paper's one-machine
+//! contract; cross-request parallelism comes from pooling sessions over a
+//! shared KB.
 //!
 //! The facade is the only place in the tree that wires
 //! `SimEnv`/`RealScheduler`/`FrameworkConfig` together; examples, the CLI
 //! and the benches all go through it.
 
 pub mod computation;
+pub mod serve;
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 use crate::balance::{AdaptiveBinarySearch, Monitor};
 use crate::data::vector::ArgValue;
@@ -44,6 +57,7 @@ use crate::tuner::builder::{build_profile, TunerOpts};
 use crate::tuner::profile::{FrameworkConfig, Profile, ProfileOrigin};
 
 pub use computation::Computation;
+pub use serve::{ServeOpts, ServeReport, ServeRequest, SessionPool};
 
 /// How [`Session::run`] obtained the configuration of one request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -189,15 +203,19 @@ struct BalanceState {
     abs: AdaptiveBinarySearch,
 }
 
-/// The unified execution session.
+/// The unified execution session. Shareable across threads: see the module
+/// docs for the locking discipline.
 pub struct Session<E: ExecEnv> {
-    env: E,
-    kb: KnowledgeBase,
+    /// The backend. One execution in flight per backend; concurrent `run`
+    /// calls on one session serialize here (pool sessions for parallelism).
+    env: Mutex<E>,
+    /// The knowledge base, shareable between sessions ([`Session::shared_kb`]).
+    kb: Arc<RwLock<KnowledgeBase>>,
     tuner: TunerOpts,
     /// Balance threshold `maxDev` handed to new monitors (Section 3.3).
     max_dev: f64,
-    states: HashMap<String, BalanceState>,
-    stats: SessionStats,
+    states: Mutex<HashMap<String, BalanceState>>,
+    stats: Mutex<SessionStats>,
 }
 
 impl Session<SimEnv> {
@@ -228,24 +246,31 @@ impl<E: ExecEnv> Session<E> {
     /// A session over any execution environment.
     pub fn new(env: E) -> Session<E> {
         Session {
-            env,
-            kb: KnowledgeBase::in_memory(),
+            env: Mutex::new(env),
+            kb: Arc::new(RwLock::new(KnowledgeBase::in_memory())),
             tuner: TunerOpts::default(),
             max_dev: 0.85,
-            states: HashMap::new(),
-            stats: SessionStats::default(),
+            states: Mutex::new(HashMap::new()),
+            stats: Mutex::new(SessionStats::default()),
         }
     }
 
     /// Replace the knowledge base (e.g. one warmed by a simulated session).
     pub fn with_kb(mut self, kb: KnowledgeBase) -> Session<E> {
+        self.kb = Arc::new(RwLock::new(kb));
+        self
+    }
+
+    /// Share another session's knowledge base: concurrent sessions pooled
+    /// over one KB all see each other's profiles (see [`serve`]).
+    pub fn with_shared_kb(mut self, kb: Arc<RwLock<KnowledgeBase>>) -> Session<E> {
         self.kb = kb;
         self
     }
 
     /// Use a JSON-backed knowledge base at `path` (created when missing).
     pub fn with_kb_path(mut self, path: &Path) -> Result<Session<E>> {
-        self.kb = KnowledgeBase::open(path)?;
+        self.kb = Arc::new(RwLock::new(KnowledgeBase::open(path)?));
         Ok(self)
     }
 
@@ -269,91 +294,120 @@ impl<E: ExecEnv> Session<E> {
     /// feed the tuner's probe executions on backends that run real kernels
     /// (analytic backends ignore them).
     pub fn resolve_config(
-        &mut self,
+        &self,
         comp: &Computation,
         args: &RequestArgs,
     ) -> Result<(FrameworkConfig, ConfigOrigin)> {
         let (sct, w, units) = comp.spec()?;
         let id = sct.id();
-        if let Some(p) = self.kb.lookup(&id, w) {
-            self.stats.kb_hits += 1;
-            return Ok((p.config.clone(), ConfigOrigin::KbHit));
+        {
+            let kb = self.kb.read().unwrap();
+            if let Some(p) = kb.lookup(&id, w) {
+                let cfg = p.config.clone();
+                drop(kb);
+                self.bump(|s| s.kb_hits += 1);
+                return Ok((cfg, ConfigOrigin::KbHit));
+            }
+            if let Some(cfg) = kb.derive(&id, w) {
+                drop(kb);
+                self.bump(|s| s.derived += 1);
+                return Ok((cfg, ConfigOrigin::Derived));
+            }
         }
-        if let Some(cfg) = self.kb.derive(&id, w) {
-            self.stats.derived += 1;
-            return Ok((cfg, ConfigOrigin::Derived));
-        }
-        self.env.set_copy_bytes(comp.get_copy_bytes());
-        self.env.bind_tuning_args(args);
-        let p = build_profile(&mut self.env, sct, w, units, &self.tuner)?;
+        // Cold start: Algorithm 1 on the backend. Two threads racing the
+        // same cold pair may both build; the KB's best-time store keeps the
+        // better profile — wasteful but correct (documented in DESIGN.md).
+        let p = {
+            let mut env = self.env.lock().unwrap();
+            env.set_copy_bytes(comp.get_copy_bytes());
+            env.bind_tuning_args(args);
+            build_profile(&mut *env, sct, w, units, &self.tuner)?
+        };
         let cfg = p.config.clone();
-        self.kb.store(p);
-        self.stats.built += 1;
+        self.kb.write().unwrap().store(p);
+        self.bump(|s| s.built += 1);
         Ok((cfg, ConfigOrigin::Built))
     }
 
     /// Execute a computation under the KB-resolved configuration, monitor
     /// the execution, rebalance if the monitor triggers, and feed the
     /// outcome back into the knowledge base.
-    pub fn run(&mut self, comp: &Computation, args: &RequestArgs) -> Result<SessionOutcome> {
-        self.env.set_copy_bytes(comp.get_copy_bytes());
-        self.env.bind_tuning_args(args);
+    pub fn run(&self, comp: &Computation, args: &RequestArgs) -> Result<SessionOutcome> {
         let (cfg, origin) = self.resolve_config(comp, args)?;
         let (sct, w, units) = comp.spec()?;
         let id = sct.id();
-        let out = self.env.run_request(sct, args, units, &cfg)?;
+        let (out, launches) = {
+            let mut env = self.env.lock().unwrap();
+            env.set_copy_bytes(comp.get_copy_bytes());
+            env.bind_tuning_args(args);
+            let out = env.run_request(sct, args, units, &cfg)?;
+            let launches = env.launch_count();
+            (out, launches)
+        };
 
         // Section 3.3: monitor every execution; adapt when lbt triggers.
+        // The per-computation state lives behind one lock, so interleaved
+        // requests from N threads feed the monitor in arrival order.
         let key = format!("{id}|{}", w.id());
-        let max_dev = self.max_dev;
-        let st = self.states.entry(key).or_insert_with(|| BalanceState {
-            monitor: Monitor::new(max_dev),
-            abs: AdaptiveBinarySearch::new(cfg.cpu_share),
-        });
-        let status = st.monitor.observe(&out.exec.slot_times);
-        if status.unbalanced {
-            self.stats.unbalanced_runs += 1;
-        }
         let mut stored_cfg = cfg.clone();
         let mut rebalanced = false;
-        if status.trigger && !cfg.overlap.is_empty() {
-            stored_cfg.cpu_share = st.abs.propose(out.exec.cpu_time, out.exec.gpu_time);
-            st.monitor.reset_lbt();
-            self.stats.balance_ops += 1;
-            rebalanced = true;
-        } else {
-            st.abs.track(cfg.cpu_share);
-        }
+        let status = {
+            let mut states = self.states.lock().unwrap();
+            let st = states.entry(key).or_insert_with(|| BalanceState {
+                monitor: Monitor::new(self.max_dev),
+                abs: AdaptiveBinarySearch::new(cfg.cpu_share),
+            });
+            let status = st.monitor.observe(&out.exec.slot_times);
+            if status.trigger && !cfg.overlap.is_empty() {
+                stored_cfg.cpu_share = st.abs.propose(out.exec.cpu_time, out.exec.gpu_time);
+                st.monitor.reset_lbt();
+                rebalanced = true;
+            } else {
+                st.abs.track(cfg.cpu_share);
+            }
+            status
+        };
+        self.bump(|s| {
+            if status.unbalanced {
+                s.unbalanced_runs += 1;
+            }
+            if rebalanced {
+                s.balance_ops += 1;
+            }
+            s.runs += 1;
+        });
 
         // Feed the observed outcome back into the KB: refined profiles
         // replace the stored distribution; plain runs keep the best time of
         // the configuration they actually ran under (Refined entries bypass
         // the store's best-time guard, so the min is taken here).
-        let existing = self.kb.lookup(&id, w);
-        let store_origin = if rebalanced {
-            ProfileOrigin::Refined
-        } else {
-            match origin {
-                ConfigOrigin::Built => ProfileOrigin::Built,
-                ConfigOrigin::Derived => ProfileOrigin::Derived,
-                _ => existing.map(|p| p.origin).unwrap_or(ProfileOrigin::Built),
-            }
-        };
-        let best_time = match existing {
-            Some(p) if !rebalanced && p.config == stored_cfg => {
-                out.exec.total.min(p.best_time)
-            }
-            _ => out.exec.total,
-        };
-        self.kb.store(Profile {
-            sct_id: id,
-            workload: w.clone(),
-            config: stored_cfg,
-            best_time,
-            origin: store_origin,
-        });
+        {
+            let mut kb = self.kb.write().unwrap();
+            let existing = kb.lookup(&id, w);
+            let store_origin = if rebalanced {
+                ProfileOrigin::Refined
+            } else {
+                match origin {
+                    ConfigOrigin::Built => ProfileOrigin::Built,
+                    ConfigOrigin::Derived => ProfileOrigin::Derived,
+                    _ => existing.map(|p| p.origin).unwrap_or(ProfileOrigin::Built),
+                }
+            };
+            let best_time = match existing {
+                Some(p) if !rebalanced && p.config == stored_cfg => {
+                    out.exec.total.min(p.best_time)
+                }
+                _ => out.exec.total,
+            };
+            kb.store(Profile {
+                sct_id: id,
+                workload: w.clone(),
+                config: stored_cfg,
+                best_time,
+                origin: store_origin,
+            });
+        }
 
-        self.stats.runs += 1;
         Ok(SessionOutcome {
             outputs: out.outputs,
             exec: out.exec,
@@ -361,7 +415,7 @@ impl<E: ExecEnv> Session<E> {
             origin,
             unbalanced: status.unbalanced,
             rebalanced,
-            launches: self.env.launch_count(),
+            launches,
         })
     }
 
@@ -369,17 +423,24 @@ impl<E: ExecEnv> Session<E> {
     /// override), bypassing the KB and the balancer — the escape hatch for
     /// reproducing fixed table rows and A/B comparisons.
     pub fn run_with(
-        &mut self,
+        &self,
         comp: &Computation,
         args: &RequestArgs,
         ovr: ConfigOverride,
     ) -> Result<SessionOutcome> {
         let (sct, _, units) = comp.spec()?;
-        self.env.set_copy_bytes(comp.get_copy_bytes());
-        let cfg = ovr.apply(baseline_config(self.env.machine()));
-        let out = self.env.run_request(sct, args, units, &cfg)?;
-        self.stats.runs += 1;
-        self.stats.pinned += 1;
+        let (out, cfg, launches) = {
+            let mut env = self.env.lock().unwrap();
+            env.set_copy_bytes(comp.get_copy_bytes());
+            let cfg = ovr.apply(baseline_config(env.machine()));
+            let out = env.run_request(sct, args, units, &cfg)?;
+            let launches = env.launch_count();
+            (out, cfg, launches)
+        };
+        self.bump(|s| {
+            s.runs += 1;
+            s.pinned += 1;
+        });
         Ok(SessionOutcome {
             outputs: out.outputs,
             exec: out.exec,
@@ -387,66 +448,82 @@ impl<E: ExecEnv> Session<E> {
             origin: ConfigOrigin::Pinned,
             unbalanced: false,
             rebalanced: false,
-            launches: self.env.launch_count(),
+            launches,
         })
     }
 
     /// Run Algorithm 1 for a computation and persist the profile in the
     /// session's knowledge base.
-    pub fn profile(&mut self, comp: &Computation) -> Result<Profile> {
+    pub fn profile(&self, comp: &Computation) -> Result<Profile> {
         self.profile_with_args(comp, &RequestArgs::default())
     }
 
     /// Like [`Session::profile`], binding `args` for the tuner's probe
     /// executions (real backends need actual buffers).
     pub fn profile_with_args(
-        &mut self,
+        &self,
         comp: &Computation,
         args: &RequestArgs,
     ) -> Result<Profile> {
         let (sct, w, units) = comp.spec()?;
-        self.env.set_copy_bytes(comp.get_copy_bytes());
-        self.env.bind_tuning_args(args);
-        let p = build_profile(&mut self.env, sct, w, units, &self.tuner)?;
-        self.kb.store(p.clone());
-        self.stats.built += 1;
+        let p = {
+            let mut env = self.env.lock().unwrap();
+            env.set_copy_bytes(comp.get_copy_bytes());
+            env.bind_tuning_args(args);
+            build_profile(&mut *env, sct, w, units, &self.tuner)?
+        };
+        self.kb.write().unwrap().store(p.clone());
+        self.bump(|s| s.built += 1);
         Ok(p)
     }
 
     // --- accessors --------------------------------------------------------
 
-    pub fn kb(&self) -> &KnowledgeBase {
-        &self.kb
+    /// Read access to the knowledge base. Hold the guard briefly — stores
+    /// from other threads block while it lives.
+    pub fn kb(&self) -> RwLockReadGuard<'_, KnowledgeBase> {
+        self.kb.read().unwrap()
     }
 
-    pub fn kb_mut(&mut self) -> &mut KnowledgeBase {
-        &mut self.kb
+    /// Write access to the knowledge base (e.g. to pre-seed profiles).
+    pub fn kb_mut(&self) -> RwLockWriteGuard<'_, KnowledgeBase> {
+        self.kb.write().unwrap()
     }
 
-    /// Hand the knowledge base over (e.g. sim-warmed KB into a real session).
+    /// The shared handle to the knowledge base, for pooling sessions.
+    pub fn shared_kb(&self) -> Arc<RwLock<KnowledgeBase>> {
+        self.kb.clone()
+    }
+
+    /// Hand the knowledge base over (e.g. sim-warmed KB into a real
+    /// session). Clones if other sessions still share it.
     pub fn into_kb(self) -> KnowledgeBase {
-        self.kb
+        match Arc::try_unwrap(self.kb) {
+            Ok(lock) => lock.into_inner().unwrap(),
+            Err(shared) => shared.read().unwrap().clone(),
+        }
     }
 
     /// Persist the knowledge base (no-op for in-memory KBs).
     pub fn save_kb(&self) -> Result<()> {
-        self.kb.save()
+        self.kb.read().unwrap().save()
     }
 
-    pub fn env(&self) -> &E {
-        &self.env
+    /// Exclusive access to the backend (blocks while a request runs).
+    pub fn env(&self) -> MutexGuard<'_, E> {
+        self.env.lock().unwrap()
     }
 
-    pub fn env_mut(&mut self) -> &mut E {
-        &mut self.env
+    pub fn machine(&self) -> Machine {
+        self.env.lock().unwrap().machine().clone()
     }
 
-    pub fn machine(&self) -> &Machine {
-        self.env.machine()
+    pub fn stats(&self) -> SessionStats {
+        self.stats.lock().unwrap().clone()
     }
 
-    pub fn stats(&self) -> &SessionStats {
-        &self.stats
+    fn bump<F: FnOnce(&mut SessionStats)>(&self, f: F) {
+        f(&mut self.stats.lock().unwrap());
     }
 }
 
@@ -468,7 +545,7 @@ mod tests {
     #[test]
     fn pinned_run_reports_origin_and_skips_kb() {
         let comp = Computation::from(workloads::saxpy(1 << 20));
-        let mut s = Session::simulated(i7_hd7950(1), 5);
+        let s = Session::simulated(i7_hd7950(1), 5);
         let out = s
             .run_with(&comp, &RequestArgs::default(), ConfigOverride::new().gpu_only())
             .unwrap();
@@ -482,12 +559,31 @@ mod tests {
     fn cpu_only_machine_never_rebalances() {
         use crate::platform::device::opteron_6272_quad;
         let comp = Computation::from(workloads::fft(16));
-        let mut s = Session::simulated(opteron_6272_quad(), 9);
+        let s = Session::simulated(opteron_6272_quad(), 9);
         for _ in 0..10 {
             let out = s.run(&comp, &RequestArgs::default()).unwrap();
             assert!(!out.rebalanced);
             assert_eq!(out.config.cpu_share, 1.0);
         }
         assert_eq!(s.stats().balance_ops, 0);
+    }
+
+    #[test]
+    fn session_is_shareable_across_threads() {
+        // Compile-time + runtime smoke: &Session crosses thread boundaries
+        // and concurrent pinned runs all complete.
+        let comp = Computation::from(workloads::saxpy(1 << 20));
+        let s = Session::simulated(i7_hd7950(1), 13);
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                let s = &s;
+                let comp = &comp;
+                scope.spawn(move || {
+                    s.run_with(comp, &RequestArgs::default(), ConfigOverride::new())
+                        .unwrap();
+                });
+            }
+        });
+        assert_eq!(s.stats().runs, 3);
     }
 }

@@ -1,0 +1,331 @@
+//! The multi-request serve path: a pool of sessions sharing one knowledge
+//! base drains a stream of requests under an admission cap — the first
+//! building block of the ROADMAP's "heavy traffic" north star.
+//!
+//! [`SessionPool`] owns N [`Session`]s (one backend each — the paper's
+//! one-machine contract) wired to a single shared KB, so the first cold
+//! start warms every worker: whichever session builds a profile, the rest
+//! resolve the same computation as KB hits. [`SessionPool::serve`] spawns
+//! one scoped worker thread per session; workers pull requests off a shared
+//! cursor until the stream drains, recording per-request latency for the
+//! p50/p99 report.
+//!
+//! Analytic backends price an execution and return immediately, which
+//! makes a throughput number meaningless; [`ServeOpts::pace`] inserts a
+//! fixed per-request service floor (sleep) that stands in for device
+//! occupancy, so requests/sec measures genuine admission-cap scaling. Real
+//! backends leave `pace` at 0.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+use crate::kb::KnowledgeBase;
+use crate::platform::device::Machine;
+use crate::runtime::exec::RequestArgs;
+use crate::scheduler::ExecEnv;
+use crate::session::{Computation, ConfigOrigin, Session, SessionStats};
+use crate::util::stats::percentile;
+
+/// One queued request: a computation plus its arguments.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub comp: Computation,
+    pub args: RequestArgs,
+}
+
+impl From<Computation> for ServeRequest {
+    fn from(comp: Computation) -> ServeRequest {
+        ServeRequest {
+            comp,
+            args: RequestArgs::default(),
+        }
+    }
+}
+
+/// Serving knobs.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Admission cap: how many requests may be in flight at once (bounded
+    /// by the pool size).
+    pub concurrency: usize,
+    /// Per-request service floor in seconds (see module docs). 0 disables.
+    pub pace: f64,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            concurrency: 1,
+            pace: 0.0,
+        }
+    }
+}
+
+/// One served request's record.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestTrace {
+    /// Index into the request stream.
+    pub index: usize,
+    /// Which pool worker served it.
+    pub worker: usize,
+    /// Wall seconds from admission to completion (including the pace floor).
+    pub latency: f64,
+    pub origin: ConfigOrigin,
+    /// The execution's own completion time.
+    pub exec_total: f64,
+}
+
+/// Aggregate outcome of one serve run.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub completed: usize,
+    pub concurrency: usize,
+    pub wall_secs: f64,
+    pub requests_per_sec: f64,
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+    pub mean_latency: f64,
+    /// Session counters for this serve run (pool-summed delta, so reusing
+    /// a pool across serve calls still reports per-run numbers).
+    pub stats: SessionStats,
+    pub traces: Vec<RequestTrace>,
+}
+
+impl ServeReport {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests in {:.3}s @ concurrency {} -> {:.1} req/s \
+             (p50 {:.2}ms, p99 {:.2}ms; {} kb hits, {} built, {} derived)",
+            self.completed,
+            self.wall_secs,
+            self.concurrency,
+            self.requests_per_sec,
+            self.p50_latency * 1e3,
+            self.p99_latency * 1e3,
+            self.stats.kb_hits,
+            self.stats.built,
+            self.stats.derived
+        )
+    }
+}
+
+/// A pool of sessions over one shared knowledge base.
+pub struct SessionPool<E: ExecEnv + Send> {
+    sessions: Vec<Session<E>>,
+}
+
+impl<E: ExecEnv + Send> SessionPool<E> {
+    /// Build a pool of `n` sessions from a factory; every session after
+    /// the first is re-wired onto the first one's knowledge base.
+    pub fn build<F: FnMut(usize) -> Session<E>>(n: usize, mut mk: F) -> SessionPool<E> {
+        let mut sessions: Vec<Session<E>> = Vec::with_capacity(n.max(1));
+        let mut shared: Option<Arc<RwLock<KnowledgeBase>>> = None;
+        for i in 0..n.max(1) {
+            let s = mk(i);
+            let s = match &shared {
+                None => {
+                    shared = Some(s.shared_kb());
+                    s
+                }
+                Some(kb) => s.with_shared_kb(kb.clone()),
+            };
+            sessions.push(s);
+        }
+        SessionPool { sessions }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    pub fn sessions(&self) -> &[Session<E>] {
+        &self.sessions
+    }
+
+    /// The pool's shared knowledge base handle.
+    pub fn shared_kb(&self) -> Arc<RwLock<KnowledgeBase>> {
+        self.sessions[0].shared_kb()
+    }
+
+    /// Session counters summed over the pool (lifetime totals).
+    fn summed_stats(&self) -> SessionStats {
+        let mut stats = SessionStats::default();
+        for s in &self.sessions {
+            let st = s.stats();
+            stats.runs += st.runs;
+            stats.kb_hits += st.kb_hits;
+            stats.derived += st.derived;
+            stats.built += st.built;
+            stats.pinned += st.pinned;
+            stats.balance_ops += st.balance_ops;
+            stats.unbalanced_runs += st.unbalanced_runs;
+        }
+        stats
+    }
+
+    /// Drain a request stream: up to `opts.concurrency` workers (bounded by
+    /// the pool size) pull requests in order. The first error cancels the
+    /// remaining stream and is returned.
+    pub fn serve(&self, requests: &[ServeRequest], opts: &ServeOpts) -> Result<ServeReport> {
+        let workers = opts.concurrency.clamp(1, self.sessions.len());
+        // Snapshot so the report's stats cover this run only, even when the
+        // pool is reused across serve calls.
+        let stats_before = self.summed_stats();
+        let next = AtomicUsize::new(0);
+        let traces: Mutex<Vec<RequestTrace>> = Mutex::new(Vec::with_capacity(requests.len()));
+        let failure: Mutex<Option<crate::error::Error>> = Mutex::new(None);
+
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for (w, session) in self.sessions.iter().take(workers).enumerate() {
+                let next = &next;
+                let traces = &traces;
+                let failure = &failure;
+                let pace = opts.pace;
+                scope.spawn(move || loop {
+                    if failure.lock().unwrap().is_some() {
+                        break;
+                    }
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= requests.len() {
+                        break;
+                    }
+                    let req = &requests[i];
+                    let admitted = Instant::now();
+                    match session.run(&req.comp, &req.args) {
+                        Ok(out) => {
+                            if pace > 0.0 {
+                                std::thread::sleep(Duration::from_secs_f64(pace));
+                            }
+                            traces.lock().unwrap().push(RequestTrace {
+                                index: i,
+                                worker: w,
+                                latency: admitted.elapsed().as_secs_f64(),
+                                origin: out.origin,
+                                exec_total: out.exec.total,
+                            });
+                        }
+                        Err(e) => {
+                            let mut f = failure.lock().unwrap();
+                            if f.is_none() {
+                                *f = Some(e);
+                            }
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        let wall_secs = t0.elapsed().as_secs_f64().max(1e-9);
+
+        if let Some(e) = failure.into_inner().unwrap() {
+            return Err(e);
+        }
+        let mut traces = traces.into_inner().unwrap();
+        traces.sort_by_key(|t| t.index);
+        let latencies: Vec<f64> = traces.iter().map(|t| t.latency).collect();
+        let mean_latency = if latencies.is_empty() {
+            0.0
+        } else {
+            latencies.iter().sum::<f64>() / latencies.len() as f64
+        };
+        let after = self.summed_stats();
+        let stats = SessionStats {
+            runs: after.runs - stats_before.runs,
+            kb_hits: after.kb_hits - stats_before.kb_hits,
+            derived: after.derived - stats_before.derived,
+            built: after.built - stats_before.built,
+            pinned: after.pinned - stats_before.pinned,
+            balance_ops: after.balance_ops - stats_before.balance_ops,
+            unbalanced_runs: after.unbalanced_runs - stats_before.unbalanced_runs,
+        };
+        Ok(ServeReport {
+            completed: traces.len(),
+            concurrency: workers,
+            wall_secs,
+            requests_per_sec: traces.len() as f64 / wall_secs,
+            p50_latency: percentile(&latencies, 50.0),
+            p99_latency: percentile(&latencies, 99.0),
+            mean_latency,
+            stats,
+            traces,
+        })
+    }
+}
+
+/// Serve a request stream over a pool of simulated sessions for `machine`
+/// (one per admitted request), sharing one knowledge base.
+pub fn serve_simulated(
+    machine: &Machine,
+    seed: u64,
+    requests: &[ServeRequest],
+    opts: &ServeOpts,
+) -> Result<ServeReport> {
+    let pool = SessionPool::build(opts.concurrency.max(1), |i| {
+        Session::simulated(machine.clone(), seed + i as u64)
+    });
+    pool.serve(requests, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workloads;
+    use crate::platform::device::i7_hd7950;
+
+    fn requests(n: usize) -> Vec<ServeRequest> {
+        (0..n)
+            .map(|_| ServeRequest::from(Computation::from(workloads::saxpy(1 << 20))))
+            .collect()
+    }
+
+    #[test]
+    fn pool_shares_one_kb_across_sessions() {
+        let pool = SessionPool::build(3, |i| Session::simulated(i7_hd7950(1), 40 + i as u64));
+        let reqs = requests(6);
+        let report = pool
+            .serve(&reqs, &ServeOpts { concurrency: 3, pace: 0.0 })
+            .unwrap();
+        assert_eq!(report.completed, 6);
+        // One cold start warms the whole pool: exactly one build (plus any
+        // same-instant racers), and the shared KB holds one profile.
+        assert_eq!(pool.shared_kb().read().unwrap().len(), 1);
+        assert!(report.stats.kb_hits + report.stats.derived >= 3);
+    }
+
+    #[test]
+    fn serve_reports_latency_percentiles() {
+        let reqs = requests(8);
+        let report = serve_simulated(
+            &i7_hd7950(1),
+            7,
+            &reqs,
+            &ServeOpts { concurrency: 2, pace: 0.002 },
+        )
+        .unwrap();
+        assert_eq!(report.completed, 8);
+        assert!(report.requests_per_sec > 0.0);
+        assert!(report.p50_latency >= 0.002);
+        assert!(report.p99_latency >= report.p50_latency);
+        // Every request is accounted for exactly once, in stream order.
+        let idx: Vec<usize> = report.traces.iter().map(|t| t.index).collect();
+        assert_eq!(idx, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concurrency_is_capped_by_pool_size() {
+        let pool = SessionPool::build(2, |i| Session::simulated(i7_hd7950(1), i as u64));
+        let report = pool
+            .serve(&requests(4), &ServeOpts { concurrency: 16, pace: 0.0 })
+            .unwrap();
+        assert_eq!(report.concurrency, 2);
+        assert_eq!(report.completed, 4);
+    }
+}

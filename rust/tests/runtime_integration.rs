@@ -60,7 +60,7 @@ fn saxpy_partition_chunks_match_host() {
         assert!((got[i] - (3.0 * x[i] + y[i])).abs() < 1e-4, "elem {i}");
     }
     // 8192 = 2 x 4096-chunks.
-    assert_eq!(runner.launches.get(), 2);
+    assert_eq!(runner.launch_count(), 2);
 }
 
 #[test]
@@ -79,7 +79,7 @@ fn super_chunk_selection_reduces_launches() {
     let runner = ChunkRunner::new(&client, &man);
     runner.run_tree(&b.sct, &args, 0, n).unwrap();
     // 32768 divides the 32768-chunk artifact: exactly one launch.
-    assert_eq!(runner.launches.get(), 1);
+    assert_eq!(runner.launch_count(), 1);
 }
 
 #[test]

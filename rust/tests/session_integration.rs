@@ -24,7 +24,7 @@ fn kb_hit_resolution_uses_stored_profile() {
         0.3,
         1.0,
     ));
-    let mut s = Session::simulated(i7_hd7950(1), 1).with_kb(kb);
+    let s = Session::simulated(i7_hd7950(1), 1).with_kb(kb);
     let out = s.run(&comp, &RequestArgs::default()).unwrap();
     assert_eq!(out.origin, ConfigOrigin::KbHit);
     assert!((out.config.cpu_share - 0.3).abs() < 1e-12);
@@ -38,7 +38,7 @@ fn rbf_derivation_interpolates_between_stored_sizes() {
     let mut kb = KnowledgeBase::in_memory();
     kb.store(mk_profile(&id, Workload::d1(1 << 20), FissionLevel::L2, vec![4], 0.10, 1.0));
     kb.store(mk_profile(&id, Workload::d1(1 << 24), FissionLevel::L2, vec![4], 0.30, 1.0));
-    let mut s = Session::simulated(i7_hd7950(1), 2).with_kb(kb);
+    let s = Session::simulated(i7_hd7950(1), 2).with_kb(kb);
     let out = s.run(&comp, &RequestArgs::default()).unwrap();
     assert_eq!(out.origin, ConfigOrigin::Derived);
     assert!(
@@ -47,8 +47,11 @@ fn rbf_derivation_interpolates_between_stored_sizes() {
         out.config.cpu_share
     );
     // The derived outcome is fed back: the next request is an exact hit.
-    let p = s.kb().lookup(&id, &Workload::d1(1 << 22)).expect("stored");
-    assert_eq!(p.origin, ProfileOrigin::Derived);
+    {
+        let kb = s.kb();
+        let p = kb.lookup(&id, &Workload::d1(1 << 22)).expect("stored");
+        assert_eq!(p.origin, ProfileOrigin::Derived);
+    }
     let again = s.run(&comp, &RequestArgs::default()).unwrap();
     assert_eq!(again.origin, ConfigOrigin::KbHit);
 }
@@ -58,7 +61,7 @@ fn cold_start_builds_profile_and_caches_it() {
     // Same machine/workload/seed regime as the tuner's own hybrid test, so
     // the expected distribution band is already validated there.
     let comp = Computation::from(workloads::saxpy(1 << 24));
-    let mut s = Session::simulated(i7_hd7950(1), 9);
+    let s = Session::simulated(i7_hd7950(1), 9);
     assert!(s.kb().is_empty());
     let out = s.run(&comp, &RequestArgs::default()).unwrap();
     assert_eq!(out.origin, ConfigOrigin::Built);
@@ -87,7 +90,7 @@ fn repeated_runs_converge_cpu_share_via_balancer() {
         0.85,
         1.0,
     ));
-    let mut s = Session::simulated(i7_hd7950(1), 7).with_kb(kb);
+    let s = Session::simulated(i7_hd7950(1), 7).with_kb(kb);
 
     let args = RequestArgs::default();
     let first = s.run(&comp, &args).unwrap();
@@ -128,8 +131,8 @@ fn repeated_runs_converge_cpu_share_via_balancer() {
         last.exec.total
     );
     // The refined distribution is persisted for future sessions.
-    let p = s
-        .kb()
+    let kb = s.kb();
+    let p = kb
         .lookup(&comp.sct_id(), &Workload::d1(1 << 22))
         .expect("profile kept");
     assert_eq!(p.origin, ProfileOrigin::Refined);
@@ -142,7 +145,7 @@ fn session_kb_persists_across_sessions() {
     let _ = std::fs::remove_file(&path);
     let comp = Computation::from(workloads::saxpy(1 << 20));
     {
-        let mut s = Session::simulated(i7_hd7950(1), 5)
+        let s = Session::simulated(i7_hd7950(1), 5)
             .with_kb_path(&path)
             .unwrap();
         let out = s.run(&comp, &RequestArgs::default()).unwrap();
@@ -150,7 +153,7 @@ fn session_kb_persists_across_sessions() {
         s.save_kb().unwrap();
     }
     {
-        let mut s = Session::simulated(i7_hd7950(1), 6)
+        let s = Session::simulated(i7_hd7950(1), 6)
             .with_kb_path(&path)
             .unwrap();
         let out = s.run(&comp, &RequestArgs::default()).unwrap();
