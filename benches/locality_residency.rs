@@ -1,0 +1,133 @@
+//! Locality/residency bench: the buffer-residency layer's effect on the
+//! serve path (BENCH_pr3.json, the PR-3 perf-trajectory point).
+//!
+//! Two workloads exercise the two reuse axes — a 3-stage filter Pipeline
+//! (stage intermediates stay device-resident) and the NBody global-sync
+//! Loop (iteration inputs stay resident, only COPY state re-ships) — each
+//! served twice through a pool of simulated sessions: once with the
+//! residency layer on, once disabled (the PR-2 baseline, every request
+//! re-uploading). Reported: uploads avoided, MB uploaded, and requests/sec
+//! of the driver under a fixed pace floor.
+
+use marrow::bench::workloads;
+use marrow::platform::device::i7_hd7950;
+use marrow::session::serve::{ServeOpts, ServeRequest, SessionPool};
+use marrow::session::{Computation, Session};
+
+const REQUESTS: usize = 32;
+const CONCURRENCY: usize = 2;
+const PACE_MS: f64 = 1.0;
+
+struct Point {
+    workload: &'static str,
+    residency: bool,
+    uploads_avoided: u64,
+    mb_uploaded: f64,
+    req_per_sec: f64,
+}
+
+fn serve_case(name: &'static str, comp: &Computation, residency: bool) -> Point {
+    let machine = i7_hd7950(1);
+    let pool = SessionPool::build(CONCURRENCY, |i| {
+        Session::simulated(machine.clone(), 42 + i as u64)
+    });
+    for s in pool.sessions() {
+        s.set_residency_enabled(residency);
+    }
+    let requests: Vec<ServeRequest> = (0..REQUESTS)
+        .map(|_| ServeRequest::from(comp.clone()))
+        .collect();
+    let report = pool
+        .serve(
+            &requests,
+            &ServeOpts {
+                concurrency: CONCURRENCY,
+                pace: PACE_MS * 1e-3,
+                tasks_per_slot: None,
+            },
+        )
+        .expect("serve");
+    Point {
+        workload: name,
+        residency,
+        uploads_avoided: report.stats.uploads_avoided,
+        mb_uploaded: report.stats.bytes_uploaded as f64 / 1e6,
+        req_per_sec: report.requests_per_sec,
+    }
+}
+
+fn main() {
+    let pipeline = Computation::from(workloads::filter_pipeline(2048, 2048, false));
+    let nbody = Computation::from(workloads::nbody(16384, 10));
+
+    println!(
+        "locality/residency: {REQUESTS} requests per case, concurrency \
+         {CONCURRENCY}, pace floor {PACE_MS} ms (simulated backends)\n"
+    );
+    println!(
+        "{:<22} {:>9} {:>15} {:>12} {:>9}",
+        "workload", "residency", "uploads avoided", "MB uploaded", "req/s"
+    );
+
+    let mut points = Vec::new();
+    for (name, comp) in [("filter_pipeline", &pipeline), ("nbody_loop", &nbody)] {
+        for residency in [true, false] {
+            let p = serve_case(name, comp, residency);
+            println!(
+                "{:<22} {:>9} {:>15} {:>12.1} {:>9.1}",
+                p.workload,
+                if p.residency { "on" } else { "off" },
+                p.uploads_avoided,
+                p.mb_uploaded,
+                p.req_per_sec
+            );
+            points.push(p);
+        }
+    }
+
+    let upload_ratio = |w: &str| {
+        let on = points
+            .iter()
+            .find(|p| p.workload == w && p.residency)
+            .map(|p| p.mb_uploaded)
+            .unwrap_or(0.0);
+        let off = points
+            .iter()
+            .find(|p| p.workload == w && !p.residency)
+            .map(|p| p.mb_uploaded)
+            .unwrap_or(0.0);
+        if on > 0.0 {
+            off / on
+        } else {
+            f64::INFINITY
+        }
+    };
+    println!(
+        "\nupload reduction (off/on): filter_pipeline {:.1}x, nbody_loop {:.1}x",
+        upload_ratio("filter_pipeline"),
+        upload_ratio("nbody_loop")
+    );
+
+    let json_points: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"workload\": \"{}\", \"residency\": {}, \
+                 \"uploads_avoided\": {}, \"mb_uploaded\": {:.3}, \
+                 \"req_per_sec\": {:.2}}}",
+                p.workload, p.residency, p.uploads_avoided, p.mb_uploaded, p.req_per_sec
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"locality_residency\",\n  \"pr\": 3,\n  \
+         \"requests\": {REQUESTS},\n  \"concurrency\": {CONCURRENCY},\n  \
+         \"pace_ms\": {PACE_MS},\n  \"points\": [\n{}\n  ]\n}}\n",
+        json_points.join(",\n")
+    );
+    let path = "BENCH_pr3.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -39,6 +39,7 @@ fn main() {
             &ServeOpts {
                 concurrency,
                 pace: PACE_MS * 1e-3,
+                tasks_per_slot: None,
             },
         )
         .expect("serve");

@@ -95,6 +95,54 @@ impl ArgValue {
             ArgValue::I32(v) => ArgValue::I32(v[start..start + len].to_vec()),
         }
     }
+
+    /// Cheap content probe for request fingerprinting: length plus 32
+    /// elements sampled at even strides across the buffer (all of it when
+    /// shorter). O(1) — it distinguishes different datasets of the same
+    /// shape without hashing whole buffers; in-place rewrites are covered
+    /// by [`VectorArg::bump_version`], not by this probe.
+    pub fn probe(&self) -> u64 {
+        const SAMPLES: usize = 32;
+        let mut h: u64 = 0x9e3779b97f4a7c15 ^ self.len() as u64;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.rotate_left(17).wrapping_mul(0x100000001b3);
+        };
+        let n = self.len();
+        let step = (n / SAMPLES).max(1);
+        match self {
+            ArgValue::F32(v) => {
+                for x in v.iter().step_by(step).take(SAMPLES) {
+                    mix(x.to_bits() as u64);
+                }
+                if let Some(last) = v.last() {
+                    mix(last.to_bits() as u64);
+                }
+            }
+            ArgValue::I32(v) => {
+                for x in v.iter().step_by(step).take(SAMPLES) {
+                    mix(*x as u32 as u64);
+                }
+                if let Some(last) = v.last() {
+                    mix(*last as u32 as u64);
+                }
+            }
+        }
+        h
+    }
+
+    /// Exact content equality (same variant, same elements) — used by the
+    /// Loop update path to detect which arguments the host actually
+    /// rewrote, so untouched args keep their buffer residency.
+    pub fn same_contents(&self, other: &ArgValue) -> bool {
+        match (self, other) {
+            (ArgValue::F32(a), ArgValue::F32(b)) => {
+                a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+            }
+            (ArgValue::I32(a), ArgValue::I32(b)) => a == b,
+            _ => false,
+        }
+    }
 }
 
 /// A vector argument to an execution request: the host object plus its
@@ -107,6 +155,10 @@ pub struct VectorArg {
     /// Row size in elements: an epu unit of this vector spans
     /// `elems_per_unit` consecutive elements (e.g. one image line = width).
     pub elems_per_unit: u64,
+    /// Residency version: bumped whenever the host rewrites `value` (e.g.
+    /// a global-sync Loop update), so device-resident ranges of the old
+    /// contents stop matching in the buffer-residency pool.
+    pub version: u64,
 }
 
 impl VectorArg {
@@ -116,6 +168,7 @@ impl VectorArg {
             value: ArgValue::F32(data),
             transfer: Transfer::Partition,
             elems_per_unit,
+            version: 0,
         }
     }
 
@@ -125,7 +178,14 @@ impl VectorArg {
             value: ArgValue::F32(data),
             transfer: Transfer::Copy,
             elems_per_unit: 1,
+            version: 0,
         }
+    }
+
+    /// Mark the vector's contents as rewritten by the host: resident
+    /// copies of the previous version are no longer valid.
+    pub fn bump_version(&mut self) {
+        self.version += 1;
     }
 
     /// Number of epu units this vector holds.
@@ -168,6 +228,25 @@ mod tests {
     fn copy_mode_rejects_slicing() {
         let v = VectorArg::copied_f32("all", vec![1.0; 8]);
         assert!(v.slice_units(0, 1).is_err());
+    }
+
+    #[test]
+    fn probe_distinguishes_interior_changes() {
+        let a = ArgValue::F32((0..4096).map(|i| i as f32).collect());
+        let mut data: Vec<f32> = (0..4096).map(|i| i as f32).collect();
+        data[2048] = -1.0; // same head/tail, different interior
+        let b = ArgValue::F32(data);
+        assert_ne!(a.probe(), b.probe());
+        assert_eq!(a.probe(), a.probe());
+    }
+
+    #[test]
+    fn same_contents_is_exact() {
+        let a = ArgValue::F32(vec![1.0, 2.0, 3.0]);
+        assert!(a.same_contents(&ArgValue::F32(vec![1.0, 2.0, 3.0])));
+        assert!(!a.same_contents(&ArgValue::F32(vec![1.0, 2.0, 4.0])));
+        assert!(!a.same_contents(&ArgValue::F32(vec![1.0, 2.0])));
+        assert!(!a.same_contents(&ArgValue::I32(vec![1, 2, 3])));
     }
 
     #[test]

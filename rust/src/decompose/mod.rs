@@ -26,6 +26,18 @@ impl ExecSlot {
     pub fn is_cpu(&self) -> bool {
         matches!(self, ExecSlot::CpuSub { .. })
     }
+
+    /// Whether two slots share one physical device (and therefore one
+    /// memory): CPU sub-devices all read host memory; a GPU's overlap
+    /// slots share its device memory. Migrating work between same-device
+    /// slots moves no data; across devices it forfeits residency.
+    pub fn same_device(&self, other: &ExecSlot) -> bool {
+        match (self, other) {
+            (ExecSlot::CpuSub { .. }, ExecSlot::CpuSub { .. }) => true,
+            (ExecSlot::GpuSlot { gpu: a, .. }, ExecSlot::GpuSlot { gpu: b, .. }) => a == b,
+            _ => false,
+        }
+    }
 }
 
 /// A contiguous range of epu units assigned to one execution slot.

@@ -63,8 +63,8 @@ marrow — multi-CPU/multi-GPU execution of compound multi-kernel computations
 usage:
   marrow eval <table2|table3|table4|table5|fig11|ablations|all>
   marrow profile --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--kb <path>]
-  marrow run --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--runs <r>] [--kb <path>] [--concurrency <c>]
-  marrow serve --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--requests <r>] [--concurrency <c>] [--pace-ms <m>] [--kb <path>]
+  marrow run --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--runs <r>] [--kb <path>] [--concurrency <c>] [--tasks-per-slot <t>]
+  marrow serve --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--requests <r>] [--concurrency <c>] [--pace-ms <m>] [--kb <path>] [--tasks-per-slot <t>]
   marrow shoc
   marrow info";
 
@@ -120,6 +120,15 @@ fn pick_machine(args: &Args) -> Result<Machine> {
     })
 }
 
+/// Optional `--tasks-per-slot` (steal-slack knob; backend default when
+/// absent).
+fn pick_tasks_per_slot(args: &Args) -> Result<Option<u32>> {
+    Ok(match args.get("tasks-per-slot") {
+        None => None,
+        Some(_) => Some(args.get_u64("tasks-per-slot", 4)?.max(1) as u32),
+    })
+}
+
 /// Build a simulated session honouring the optional `--kb <path>` flag.
 fn sim_session(
     args: &Args,
@@ -172,6 +181,9 @@ fn run_cmd(args: &Args) -> Result<()> {
     let name = b.name.clone();
     let comp = Computation::from(b);
     let session = sim_session(args, pick_machine(args)?, 11)?;
+    if let Some(t) = pick_tasks_per_slot(args)? {
+        session.set_tasks_per_slot(t);
+    }
     println!("benchmark: {name} ({} runs, simulated clock)", runs);
     println!(" run | origin  | GPU share | exec time | balanced?");
     println!("-----+---------+-----------+-----------+----------");
@@ -196,6 +208,14 @@ fn run_cmd(args: &Args) -> Result<()> {
         "\n{} runs: {} kb hits, {} derived, {} built, {} balance ops",
         st.runs, st.kb_hits, st.derived, st.built, st.balance_ops
     );
+    println!(
+        "transfers: {:.1} MB uploaded, {:.1} MB downloaded, {} uploads \
+         avoided, {} steal migrations",
+        st.bytes_uploaded as f64 / 1e6,
+        st.bytes_downloaded as f64 / 1e6,
+        st.uploads_avoided,
+        st.steal_migrations
+    );
     session.save_kb()?;
     if args.get("kb").is_some() {
         println!("knowledge base persisted ({} profiles)", session.kb().len());
@@ -216,6 +236,7 @@ fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
     let n_requests = args.get_u64("requests", default_requests)? as usize;
     let concurrency = (args.get_u64("concurrency", 4)? as usize).max(1);
     let pace = args.get_f64("pace-ms", 2.0)? * 1e-3;
+    let tasks_per_slot = pick_tasks_per_slot(args)?;
     let name = b.name.clone();
     let comp = Computation::from(b);
     let machine = pick_machine(args)?;
@@ -235,7 +256,7 @@ fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
          (pace floor {:.1} ms/request, simulated clock)",
         pace * 1e3
     );
-    let report = pool.serve(&requests, &ServeOpts { concurrency, pace })?;
+    let report = pool.serve(&requests, &ServeOpts { concurrency, pace, tasks_per_slot })?;
     println!("{}", report.summary());
     if args.get("kb").is_some() {
         let kb = pool.shared_kb();

@@ -8,11 +8,23 @@
 //! by this runner — the locality-aware decomposition guarantees consecutive
 //! kernels see identical partitionings, so no re-partitioning happens
 //! between stages.
+//!
+//! Input marshalling goes through the buffer-residency pool
+//! ([`crate::runtime::residency`], DESIGN.md §2.6): each (argument, chunk
+//! range, version) is staged at most once per execution slot — repeated
+//! chunk launches over the same range (Loop iterations, repeated requests
+//! when the scheduler shares its pool) reuse the staged buffer instead of
+//! re-slicing, and the pool's counters record what a device-resident
+//! backend avoids re-uploading.
+
+use std::sync::Arc;
 
 use crate::data::vector::{ArgValue, ScalarTrait, VectorArg};
+use crate::decompose::ExecSlot;
 use crate::error::{Error, Result};
 use crate::runtime::artifacts::Manifest;
 use crate::runtime::client::{literal_f32, literal_i32, to_vec_f32, RtClient};
+use crate::runtime::residency::{ArgKey, ResidencyKey, ResidencyPool};
 use crate::sct::{KernelSpec, ParamSpec, Sct};
 
 /// Execution mode: real PJRT numerics or simulated (cost-model) timing.
@@ -45,11 +57,21 @@ pub struct ChunkRunner<'a> {
     /// (EXPERIMENTS.md §Perf, iteration 2). Shared so the knowledge
     /// persists across requests (the scheduler owns it).
     timings: TimingCache,
+    /// Buffer-residency pool: staged input ranges keyed per slot. The
+    /// scheduler shares its own so residency persists across requests.
+    residency: Arc<ResidencyPool>,
+    /// Request fingerprint the pool keys are scoped by (distinct requests
+    /// over different data never alias).
+    request_id: u64,
 }
 
 /// Shared per-artifact timing knowledge, keyed by artifact name.
 pub type TimingCache =
     std::sync::Arc<std::sync::Mutex<std::collections::HashMap<String, (f64, u64)>>>;
+
+/// The slot `run_tree` attributes residency to when the caller does not
+/// say (single-slot use outside the scheduler, e.g. direct runner tests).
+const DEFAULT_SLOT: ExecSlot = ExecSlot::CpuSub { idx: 0 };
 
 impl<'a> ChunkRunner<'a> {
     pub fn new(client: &'a RtClient, manifest: &'a Manifest) -> ChunkRunner<'a> {
@@ -58,6 +80,8 @@ impl<'a> ChunkRunner<'a> {
             manifest,
             launches: std::sync::atomic::AtomicU64::new(0),
             timings: TimingCache::default(),
+            residency: Arc::new(ResidencyPool::new()),
+            request_id: 0,
         }
     }
 
@@ -73,13 +97,22 @@ impl<'a> ChunkRunner<'a> {
         self
     }
 
-    /// Execute an SCT over the unit range [start, start+units). Returns the
-    /// final output buffers (one per kernel output), concatenated across
-    /// chunks in unit order.
-    ///
-    /// Handles Kernel, Pipeline (stage chaining), Map (transparent) and
-    /// non-global-sync Loop; request-level skeleton stages (global-sync
-    /// loops, reductions, merging) belong to the scheduler.
+    /// Share an existing residency pool (the scheduler passes its own so
+    /// resident ranges survive across requests) and scope its keys by the
+    /// request fingerprint.
+    pub fn with_residency(mut self, pool: Arc<ResidencyPool>, request_id: u64) -> Self {
+        self.residency = pool;
+        self.request_id = request_id;
+        self
+    }
+
+    /// The runner's residency pool (counter access for tests/benches).
+    pub fn residency(&self) -> &ResidencyPool {
+        &self.residency
+    }
+
+    /// Execute an SCT over the unit range [start, start+units) on the
+    /// default slot. See [`ChunkRunner::run_tree_on`].
     pub fn run_tree(
         &self,
         sct: &Sct,
@@ -87,9 +120,27 @@ impl<'a> ChunkRunner<'a> {
         start_unit: u64,
         units: u64,
     ) -> Result<Vec<ArgValue>> {
+        self.run_tree_on(DEFAULT_SLOT, sct, args, start_unit, units)
+    }
+
+    /// Execute an SCT over the unit range [start, start+units), attributing
+    /// buffer residency to `slot`. Returns the final output buffers (one
+    /// per kernel output), concatenated across chunks in unit order.
+    ///
+    /// Handles Kernel, Pipeline (stage chaining), Map (transparent) and
+    /// non-global-sync Loop; request-level skeleton stages (global-sync
+    /// loops, reductions, merging) belong to the scheduler.
+    pub fn run_tree_on(
+        &self,
+        slot: ExecSlot,
+        sct: &Sct,
+        args: &RequestArgs,
+        start_unit: u64,
+        units: u64,
+    ) -> Result<Vec<ArgValue>> {
         match sct {
-            Sct::Kernel(k) => self.run_kernel(k, args, None, start_unit, units),
-            Sct::Map(inner) => self.run_tree(inner, args, start_unit, units),
+            Sct::Kernel(k) => self.run_kernel(slot, k, args, None, start_unit, units),
+            Sct::Map(inner) => self.run_tree_on(slot, inner, args, start_unit, units),
             Sct::Pipeline(stages) => {
                 let mut carried: Option<ArgValue> = None;
                 let mut cursor = ArgCursor::default();
@@ -106,6 +157,7 @@ impl<'a> ChunkRunner<'a> {
                         }
                     };
                     outs = self.run_kernel_with_cursor(
+                        slot,
                         k,
                         args,
                         carried.take(),
@@ -126,7 +178,7 @@ impl<'a> ChunkRunner<'a> {
                 let mut outs = Vec::new();
                 let mut local = args.clone();
                 for it in 0..state.max_iters {
-                    outs = self.run_tree(body, &local, start_unit, units)?;
+                    outs = self.run_tree_on(slot, body, &local, start_unit, units)?;
                     if let Some(update) = &state.update {
                         let mut vecs: Vec<ArgValue> = local
                             .vectors
@@ -135,7 +187,16 @@ impl<'a> ChunkRunner<'a> {
                             .collect();
                         let go = update(it, &mut vecs, &outs);
                         for (v, nv) in local.vectors.iter_mut().zip(vecs) {
+                            // Only rewritten args invalidate: resident
+                            // ranges of changed contents must not be
+                            // reused, while untouched args keep their
+                            // residency across iterations — the
+                            // Loop-iteration reuse the paper banks on.
+                            let changed = !v.value.same_contents(&nv);
                             v.value = nv;
+                            if changed {
+                                v.bump_version();
+                            }
                         }
                         if !go {
                             break;
@@ -147,13 +208,14 @@ impl<'a> ChunkRunner<'a> {
             Sct::MapReduce { map, .. } => {
                 // Reduction handled at the request level by the scheduler;
                 // per-partition we produce the map stage's partials.
-                self.run_tree(map, args, start_unit, units)
+                self.run_tree_on(slot, map, args, start_unit, units)
             }
         }
     }
 
     fn run_kernel(
         &self,
+        slot: ExecSlot,
         k: &KernelSpec,
         args: &RequestArgs,
         carried: Option<ArgValue>,
@@ -161,14 +223,16 @@ impl<'a> ChunkRunner<'a> {
         units: u64,
     ) -> Result<Vec<ArgValue>> {
         let mut cursor = ArgCursor::default();
-        self.run_kernel_with_cursor(k, args, carried, start_unit, units, &mut cursor)
+        self.run_kernel_with_cursor(slot, k, args, carried, start_unit, units, &mut cursor)
     }
 
     /// Execute one kernel leaf over the unit range, consuming request args
     /// through `cursor`. When `carried` is set (pipeline chaining), the
     /// kernel's first VecIn binds to it instead of a request vector.
+    #[allow(clippy::too_many_arguments)]
     fn run_kernel_with_cursor(
         &self,
+        slot: ExecSlot,
         k: &KernelSpec,
         args: &RequestArgs,
         carried: Option<ArgValue>,
@@ -188,7 +252,13 @@ impl<'a> ChunkRunner<'a> {
         let exe = self.client.executable(info)?;
         let chunk = info.chunk_units;
         let n_chunks = units / chunk;
-        let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); info.outputs.len()];
+        // Preallocate the concatenated outputs from the partition size —
+        // chunk appends never reallocate mid-drain.
+        let mut outputs: Vec<Vec<f32>> = info
+            .outputs
+            .iter()
+            .map(|o| Vec::with_capacity((o.elems() * n_chunks) as usize))
+            .collect();
 
         for c in 0..n_chunks {
             let off = start_unit + c * chunk;
@@ -201,18 +271,53 @@ impl<'a> ChunkRunner<'a> {
                         let local = (off - start_unit) as usize * epu;
                         let len = chunk as usize * epu;
                         let spec = &info.inputs[literals.len()];
+                        // The producing stage left this range on-device —
+                        // a device-resident backend never re-uploads a
+                        // pipeline intermediate. Contents change on every
+                        // invocation, so this is accounting only: the
+                        // literal is rebuilt from the carried host buffer
+                        // rather than cached under an `ArgKey::Stage` key.
+                        self.residency.note_reuse(1, (len * 4) as u64);
                         literal_f32(&buf[local..local + len], &spec.shape)?
                     }
                     (ParamSpec::VecIn, Bind::Vector(i)) => {
                         let v = &args.vectors[*i];
-                        let sl = v.slice_units(off, chunk)?;
                         let spec = &info.inputs[literals.len()];
-                        literal_f32(sl.as_f32()?, &spec.shape)?
+                        let bytes = chunk * v.elems_per_unit * 4;
+                        let key = ResidencyKey {
+                            arg: ArgKey::Input {
+                                request: self.request_id,
+                                idx: *i as u32,
+                            },
+                            start_unit: off,
+                            units: chunk,
+                            version: v.version,
+                        };
+                        let staged = self.residency.acquire(slot, key, bytes, || {
+                            Ok(Arc::new(v.slice_units(off, chunk)?.as_f32()?.to_vec()))
+                        })?;
+                        literal_f32(&staged, &spec.shape)?
                     }
                     (ParamSpec::VecCopy, Bind::Vector(i)) => {
                         let v = &args.vectors[*i];
                         let spec = &info.inputs[literals.len()];
-                        literal_f32(v.value.as_f32()?, &spec.shape)?
+                        let bytes = v.value.len() as u64 * 4;
+                        // COPY vectors are replicated whole: resident per
+                        // slot after the first chunk touches them, instead
+                        // of re-marshalled on every launch.
+                        let key = ResidencyKey {
+                            arg: ArgKey::Input {
+                                request: self.request_id,
+                                idx: *i as u32,
+                            },
+                            start_unit: 0,
+                            units: v.units(),
+                            version: v.version,
+                        };
+                        let staged = self.residency.acquire(slot, key, bytes, || {
+                            Ok(Arc::new(v.value.as_f32()?.to_vec()))
+                        })?;
+                        literal_f32(&staged, &spec.shape)?
                     }
                     (ParamSpec::ScalarF32(tr), Bind::Scalar(i)) => {
                         let base = args.scalars.get(*i).copied().unwrap_or(0.0);
@@ -245,8 +350,10 @@ impl<'a> ChunkRunner<'a> {
             }
             self.launches
                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            for (slot, lit) in outputs.iter_mut().zip(&outs) {
-                slot.extend_from_slice(&to_vec_f32(lit)?);
+            for (out, lit) in outputs.iter_mut().zip(&outs) {
+                let host = to_vec_f32(lit)?;
+                self.residency.note_download(host.len() as u64 * 4);
+                out.extend_from_slice(&host);
             }
         }
         // NBody-style chunk offsets are relative to the partition for the

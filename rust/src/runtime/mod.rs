@@ -5,9 +5,11 @@
 pub mod artifacts;
 pub mod client;
 pub mod exec;
+pub mod residency;
 #[cfg(not(feature = "pjrt"))]
 pub mod stub;
 
 pub use artifacts::{ArtifactInfo, Manifest};
 pub use client::RtClient;
 pub use exec::{ChunkRunner, ExecMode};
+pub use residency::{ResidencyPool, ResidencyView, TransferStats};

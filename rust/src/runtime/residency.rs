@@ -1,0 +1,634 @@
+//! Buffer-residency layer (DESIGN.md §2.6): keeps partition data
+//! device-resident across chunk launches, pipeline stages, `Loop`
+//! iterations and — because the pool outlives a request — repeated requests
+//! over the same workload.
+//!
+//! The paper attributes a large share of its gains to exactly this
+//! property: consecutive kernels see identical partitionings, so a
+//! partition's data is uploaded once and never moves between devices
+//! (Section 3.1). The pool makes that contract explicit: each execution
+//! slot owns a map of resident ranges keyed by `(argument, unit range,
+//! version)`. An upload is performed at most once per key per slot;
+//! host-side updates invalidate by bumping the version (stale entries are
+//! evicted lazily or via [`ResidencyPool::invalidate_arg`]).
+//!
+//! Two backends share the layer:
+//!  * the real chunk runner caches the *staged* host buffer per key, so
+//!    repeated launches skip the slice-copy and the accounting mirrors what
+//!    a device-resident backend avoids re-uploading;
+//!  * the simulator books the same uploads / reuses / migrations against
+//!    its analytic clock, so Sim and Real agree in shape.
+//!
+//! The pool is also the oracle for locality-aware stealing: a thief prices
+//! a candidate steal by the victim task's resident bytes
+//! ([`ResidencyView::resident_range_bytes`]) and books the migration when
+//! it goes through ([`ResidencyView::note_migration`]).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::decompose::ExecSlot;
+use crate::error::Result;
+
+/// Identity of one argument stream inside the pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArgKey {
+    /// Request input vector `idx` (`request` is the workload fingerprint:
+    /// hash of SCT id, domain size and argument data — see
+    /// [`request_fingerprint`]).
+    Input { request: u64, idx: u32 },
+    /// Pipeline-stage intermediate: output `out` of stage `stage`.
+    Stage { request: u64, stage: u32, out: u32 },
+}
+
+/// One resident range: `(argument, unit range, version)`. Bumping the
+/// version makes every older entry unreachable (host updates after a
+/// global-sync `Loop` iteration invalidate this way).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ResidencyKey {
+    pub arg: ArgKey,
+    pub start_unit: u64,
+    pub units: u64,
+    pub version: u64,
+}
+
+/// Transfer accounting of one request (or one pool lifetime). All counters
+/// are monotonic; per-request numbers are deltas between two snapshots.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransferStats {
+    /// Bytes actually shipped host -> device.
+    pub bytes_uploaded: u64,
+    /// Bytes shipped device -> host (result readback).
+    pub bytes_downloaded: u64,
+    /// Uploads performed (distinct transfer events).
+    pub uploads: u64,
+    /// Uploads skipped because the range was already resident (chunk
+    /// re-launches, pipeline intermediates, Loop iterations, repeated
+    /// requests).
+    pub uploads_avoided: u64,
+    /// Steals that moved a task away from data it had resident (booked by
+    /// the locality-aware launcher).
+    pub steal_migrations: u64,
+    /// Bytes those migrations forfeited (they must re-upload at the thief).
+    pub migrated_bytes: u64,
+    /// Steal attempts the launcher rejected because the estimated
+    /// migration cost exceeded the expected wait.
+    pub steals_skipped: u64,
+}
+
+impl TransferStats {
+    /// Delta of `self` since `earlier` (both snapshots of one pool).
+    pub fn minus(&self, earlier: &TransferStats) -> TransferStats {
+        TransferStats {
+            bytes_uploaded: self.bytes_uploaded - earlier.bytes_uploaded,
+            bytes_downloaded: self.bytes_downloaded - earlier.bytes_downloaded,
+            uploads: self.uploads - earlier.uploads,
+            uploads_avoided: self.uploads_avoided - earlier.uploads_avoided,
+            steal_migrations: self.steal_migrations - earlier.steal_migrations,
+            migrated_bytes: self.migrated_bytes - earlier.migrated_bytes,
+            steals_skipped: self.steals_skipped - earlier.steals_skipped,
+        }
+    }
+
+    /// Fold another request's counters in.
+    pub fn accumulate(&mut self, other: &TransferStats) {
+        self.bytes_uploaded += other.bytes_uploaded;
+        self.bytes_downloaded += other.bytes_downloaded;
+        self.uploads += other.uploads;
+        self.uploads_avoided += other.uploads_avoided;
+        self.steal_migrations += other.steal_migrations;
+        self.migrated_bytes += other.migrated_bytes;
+        self.steals_skipped += other.steals_skipped;
+    }
+}
+
+/// Estimated seconds to move `bytes` across a `link_gbps` GB/s link — the
+/// shared migration-cost estimate used by the steal policy and the
+/// simulator (one formula so Sim and Real agree in shape).
+pub fn migration_secs(bytes: u64, link_gbps: f64) -> f64 {
+    bytes as f64 / (link_gbps.max(1e-9) * 1e9)
+}
+
+/// The read side the work-stealing launcher needs: how much of a task's
+/// data is resident on its home slot, and the hook to book a migration.
+pub trait ResidencyView: Sync {
+    /// Bytes of `[start_unit, start_unit+units)` resident on `slot`.
+    fn resident_range_bytes(&self, slot: ExecSlot, start_unit: u64, units: u64) -> u64;
+
+    /// Record that a steal moved the range off `from` (its residency there
+    /// is forfeited and must re-upload at the thief). Returns the bytes
+    /// the move forfeited.
+    fn note_migration(&self, from: ExecSlot, to: ExecSlot, start_unit: u64, units: u64) -> u64;
+
+    /// Record a steal attempt rejected on migration cost.
+    fn note_steal_skipped(&self);
+}
+
+/// One resident entry: size, the staged host buffer (real runner only) and
+/// an LRU tick.
+struct Resident {
+    bytes: u64,
+    staged: Option<Arc<Vec<f32>>>,
+    tick: u64,
+}
+
+#[derive(Default)]
+struct SlotPool {
+    entries: HashMap<ResidencyKey, Resident>,
+    total_bytes: u64,
+}
+
+/// The per-slot residency pool. Shared by reference across the launcher's
+/// worker threads; every counter is atomic and the maps lock internally.
+pub struct ResidencyPool {
+    slots: Mutex<HashMap<ExecSlot, SlotPool>>,
+    /// When disabled, every acquire re-uploads (the ablation baseline).
+    enabled: AtomicBool,
+    /// Per-slot byte budget; 0 = unbounded. LRU eviction on overflow.
+    capacity_bytes: AtomicU64,
+    tick: AtomicU64,
+    bytes_uploaded: AtomicU64,
+    bytes_downloaded: AtomicU64,
+    uploads: AtomicU64,
+    uploads_avoided: AtomicU64,
+    steal_migrations: AtomicU64,
+    migrated_bytes: AtomicU64,
+    steals_skipped: AtomicU64,
+}
+
+impl Default for ResidencyPool {
+    fn default() -> ResidencyPool {
+        ResidencyPool::new()
+    }
+}
+
+impl ResidencyPool {
+    pub fn new() -> ResidencyPool {
+        ResidencyPool {
+            slots: Mutex::new(HashMap::new()),
+            enabled: AtomicBool::new(true),
+            capacity_bytes: AtomicU64::new(0),
+            tick: AtomicU64::new(0),
+            bytes_uploaded: AtomicU64::new(0),
+            bytes_downloaded: AtomicU64::new(0),
+            uploads: AtomicU64::new(0),
+            uploads_avoided: AtomicU64::new(0),
+            steal_migrations: AtomicU64::new(0),
+            migrated_bytes: AtomicU64::new(0),
+            steals_skipped: AtomicU64::new(0),
+        }
+    }
+
+    /// Bound each slot's resident set (bytes); LRU-evicts on overflow.
+    pub fn with_capacity(self, bytes: u64) -> ResidencyPool {
+        self.capacity_bytes.store(bytes, Ordering::Relaxed);
+        self
+    }
+
+    /// Toggle the layer (off = every acquire uploads; the A/B baseline).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    fn next_tick(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn count_upload(&self, bytes: u64) {
+        self.uploads.fetch_add(1, Ordering::Relaxed);
+        self.bytes_uploaded.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Accounting-only residency check (the simulator's path): records an
+    /// upload when the key is absent, an avoided upload when present.
+    /// Returns whether the range was already resident.
+    pub fn ensure_resident(&self, slot: ExecSlot, key: ResidencyKey, bytes: u64) -> bool {
+        if !self.enabled() {
+            self.count_upload(bytes);
+            return false;
+        }
+        let tick = self.next_tick();
+        let capacity = self.capacity_bytes.load(Ordering::Relaxed);
+        let resident = {
+            let mut slots = self.slots.lock().unwrap();
+            let pool = slots.entry(slot).or_default();
+            if let Some(e) = pool.entries.get_mut(&key) {
+                e.tick = tick;
+                true
+            } else {
+                pool.entries.insert(
+                    key,
+                    Resident {
+                        bytes,
+                        staged: None,
+                        tick,
+                    },
+                );
+                pool.total_bytes += bytes;
+                Self::evict_over_capacity(pool, capacity);
+                false
+            }
+        };
+        if resident {
+            self.uploads_avoided.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.count_upload(bytes);
+        }
+        resident
+    }
+
+    /// Staged-buffer acquire (the real chunk runner's path): returns the
+    /// cached host-staged buffer for `key` on `slot`, or fills it with
+    /// `stage` and records the upload. A cache hit counts as an avoided
+    /// upload — the range is already resident on the slot.
+    pub fn acquire<F>(
+        &self,
+        slot: ExecSlot,
+        key: ResidencyKey,
+        bytes: u64,
+        stage: F,
+    ) -> Result<Arc<Vec<f32>>>
+    where
+        F: FnOnce() -> Result<Arc<Vec<f32>>>,
+    {
+        if !self.enabled() {
+            self.count_upload(bytes);
+            return stage();
+        }
+        let tick = self.next_tick();
+        let cached: Option<Arc<Vec<f32>>> = {
+            let mut slots = self.slots.lock().unwrap();
+            slots.get_mut(&slot).and_then(|pool| {
+                pool.entries.get_mut(&key).and_then(|e| {
+                    e.tick = tick;
+                    e.staged.clone()
+                })
+            })
+        };
+        if let Some(staged) = cached {
+            self.uploads_avoided.fetch_add(1, Ordering::Relaxed);
+            return Ok(staged);
+        }
+        let staged = stage()?;
+        {
+            let mut slots = self.slots.lock().unwrap();
+            let pool = slots.entry(slot).or_default();
+            if pool
+                .entries
+                .insert(
+                    key,
+                    Resident {
+                        bytes,
+                        staged: Some(staged.clone()),
+                        tick,
+                    },
+                )
+                .is_none()
+            {
+                pool.total_bytes += bytes;
+            }
+            Self::evict_over_capacity(pool, self.capacity_bytes.load(Ordering::Relaxed));
+        }
+        self.count_upload(bytes);
+        Ok(staged)
+    }
+
+    fn evict_over_capacity(pool: &mut SlotPool, capacity: u64) {
+        if capacity == 0 {
+            return;
+        }
+        while pool.total_bytes > capacity && pool.entries.len() > 1 {
+            let oldest = pool
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(k, _)| *k);
+            match oldest {
+                Some(k) => {
+                    if let Some(e) = pool.entries.remove(&k) {
+                        pool.total_bytes -= e.bytes;
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Record a result readback.
+    pub fn note_download(&self, bytes: u64) {
+        self.bytes_downloaded.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Record an un-keyed upload (e.g. COPY-state re-broadcast at a global
+    /// sync point — always re-shipped, never resident).
+    pub fn note_upload(&self, bytes: u64) {
+        self.count_upload(bytes);
+    }
+
+    /// Record `count` uploads (of `bytes` total) that residency made
+    /// unnecessary without a keyed lookup — pipeline intermediates staying
+    /// on-device, Loop iterations re-reading unchanged inputs. With the
+    /// layer disabled these become real uploads (the ablation baseline).
+    pub fn note_reuse(&self, count: u64, bytes: u64) {
+        if self.enabled() {
+            self.uploads_avoided.fetch_add(count, Ordering::Relaxed);
+        } else {
+            self.uploads.fetch_add(count, Ordering::Relaxed);
+            self.bytes_uploaded.fetch_add(bytes, Ordering::Relaxed);
+        }
+    }
+
+    /// Drop every resident range of `arg` on every slot (host rewrote the
+    /// argument; version-bumped keys would never match again, this frees
+    /// the memory eagerly).
+    pub fn invalidate_arg(&self, arg: ArgKey) {
+        let mut slots = self.slots.lock().unwrap();
+        for pool in slots.values_mut() {
+            let stale: Vec<ResidencyKey> = pool
+                .entries
+                .keys()
+                .filter(|k| k.arg == arg)
+                .copied()
+                .collect();
+            for k in stale {
+                if let Some(e) = pool.entries.remove(&k) {
+                    pool.total_bytes -= e.bytes;
+                }
+            }
+        }
+    }
+
+    /// Bytes resident on `slot` in total.
+    pub fn resident_bytes(&self, slot: ExecSlot) -> u64 {
+        self.slots
+            .lock()
+            .unwrap()
+            .get(&slot)
+            .map(|p| p.total_bytes)
+            .unwrap_or(0)
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> TransferStats {
+        TransferStats {
+            bytes_uploaded: self.bytes_uploaded.load(Ordering::Relaxed),
+            bytes_downloaded: self.bytes_downloaded.load(Ordering::Relaxed),
+            uploads: self.uploads.load(Ordering::Relaxed),
+            uploads_avoided: self.uploads_avoided.load(Ordering::Relaxed),
+            steal_migrations: self.steal_migrations.load(Ordering::Relaxed),
+            migrated_bytes: self.migrated_bytes.load(Ordering::Relaxed),
+            steals_skipped: self.steals_skipped.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl ResidencyView for ResidencyPool {
+    fn resident_range_bytes(&self, slot: ExecSlot, start_unit: u64, units: u64) -> u64 {
+        let q_end = start_unit + units;
+        let slots = self.slots.lock().unwrap();
+        let Some(pool) = slots.get(&slot) else {
+            return 0;
+        };
+        let mut bytes = 0u64;
+        for (k, e) in &pool.entries {
+            let e_end = k.start_unit + k.units;
+            let lo = k.start_unit.max(start_unit);
+            let hi = e_end.min(q_end);
+            if hi > lo && k.units > 0 {
+                // Proportional share of the entry overlapping the query.
+                bytes += e.bytes * (hi - lo) / k.units;
+            }
+        }
+        bytes
+    }
+
+    fn note_migration(&self, from: ExecSlot, to: ExecSlot, start_unit: u64, units: u64) -> u64 {
+        let _ = to;
+        let q_end = start_unit + units;
+        let mut forfeited = 0u64;
+        {
+            let mut slots = self.slots.lock().unwrap();
+            if let Some(pool) = slots.get_mut(&from) {
+                // Only ranges fully contained in the stolen task's span
+                // move with it. Wider entries — whole-vector COPY
+                // replicas, ranges of other tasks that merely overlap
+                // numerically — stay useful to the victim and survive.
+                let stale: Vec<ResidencyKey> = pool
+                    .entries
+                    .keys()
+                    .filter(|k| k.start_unit >= start_unit && k.start_unit + k.units <= q_end)
+                    .copied()
+                    .collect();
+                for k in stale {
+                    if let Some(e) = pool.entries.remove(&k) {
+                        pool.total_bytes -= e.bytes;
+                        forfeited += e.bytes;
+                    }
+                }
+            }
+        }
+        if forfeited > 0 {
+            self.steal_migrations.fetch_add(1, Ordering::Relaxed);
+            self.migrated_bytes.fetch_add(forfeited, Ordering::Relaxed);
+        }
+        forfeited
+    }
+
+    fn note_steal_skipped(&self) {
+        self.steals_skipped.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Stable fingerprint of one request identity: SCT id + domain size + a
+/// cheap content probe of each vector argument (length plus head/tail
+/// words). Two requests with the same fingerprint are assumed to carry the
+/// same data, so their resident ranges are interchangeable; any host-side
+/// rewrite in between must bump the argument version instead.
+pub fn request_fingerprint(sct_id: &str, total_units: u64, vector_probes: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    for b in sct_id.as_bytes() {
+        mix(*b as u64);
+    }
+    mix(total_units);
+    for p in vector_probes {
+        mix(*p);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpu(slot: u32) -> ExecSlot {
+        ExecSlot::GpuSlot { gpu: 0, slot }
+    }
+
+    fn key(idx: u32, start: u64, units: u64, version: u64) -> ResidencyKey {
+        ResidencyKey {
+            arg: ArgKey::Input { request: 1, idx },
+            start_unit: start,
+            units,
+            version,
+        }
+    }
+
+    #[test]
+    fn second_ensure_is_avoided() {
+        let pool = ResidencyPool::new();
+        assert!(!pool.ensure_resident(gpu(0), key(0, 0, 128, 0), 512));
+        assert!(pool.ensure_resident(gpu(0), key(0, 0, 128, 0), 512));
+        let s = pool.stats();
+        assert_eq!(s.uploads, 1);
+        assert_eq!(s.bytes_uploaded, 512);
+        assert_eq!(s.uploads_avoided, 1);
+    }
+
+    #[test]
+    fn residency_is_per_slot() {
+        let pool = ResidencyPool::new();
+        pool.ensure_resident(gpu(0), key(0, 0, 128, 0), 512);
+        assert!(!pool.ensure_resident(gpu(1), key(0, 0, 128, 0), 512));
+        assert_eq!(pool.stats().uploads, 2);
+    }
+
+    #[test]
+    fn version_bump_invalidates() {
+        let pool = ResidencyPool::new();
+        pool.ensure_resident(gpu(0), key(0, 0, 128, 0), 512);
+        assert!(!pool.ensure_resident(gpu(0), key(0, 0, 128, 1), 512));
+    }
+
+    #[test]
+    fn acquire_caches_staged_buffer() {
+        let pool = ResidencyPool::new();
+        let a = pool
+            .acquire(gpu(0), key(0, 0, 4, 0), 16, || {
+                Ok(Arc::new(vec![1.0, 2.0, 3.0, 4.0]))
+            })
+            .unwrap();
+        let b = pool
+            .acquire(gpu(0), key(0, 0, 4, 0), 16, || {
+                panic!("must not re-stage a resident range")
+            })
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(pool.stats().uploads_avoided, 1);
+    }
+
+    #[test]
+    fn disabled_pool_always_uploads() {
+        let pool = ResidencyPool::new();
+        pool.set_enabled(false);
+        pool.ensure_resident(gpu(0), key(0, 0, 128, 0), 512);
+        pool.ensure_resident(gpu(0), key(0, 0, 128, 0), 512);
+        let s = pool.stats();
+        assert_eq!(s.uploads, 2);
+        assert_eq!(s.uploads_avoided, 0);
+    }
+
+    #[test]
+    fn capacity_evicts_lru() {
+        let pool = ResidencyPool::new().with_capacity(1024);
+        pool.ensure_resident(gpu(0), key(0, 0, 128, 0), 600);
+        pool.ensure_resident(gpu(0), key(1, 0, 128, 0), 600); // evicts key 0
+        assert!(!pool.ensure_resident(gpu(0), key(0, 0, 128, 0), 600));
+        assert!(pool.resident_bytes(gpu(0)) <= 1024 + 600);
+    }
+
+    #[test]
+    fn range_bytes_are_proportional_to_overlap() {
+        let pool = ResidencyPool::new();
+        pool.ensure_resident(gpu(0), key(0, 0, 100, 0), 1000);
+        assert_eq!(pool.resident_range_bytes(gpu(0), 0, 100), 1000);
+        assert_eq!(pool.resident_range_bytes(gpu(0), 50, 50), 500);
+        assert_eq!(pool.resident_range_bytes(gpu(0), 100, 50), 0);
+        assert_eq!(
+            pool.resident_range_bytes(ExecSlot::CpuSub { idx: 0 }, 0, 100),
+            0
+        );
+    }
+
+    #[test]
+    fn migration_forfeits_residency_and_books_counters() {
+        let pool = ResidencyPool::new();
+        pool.ensure_resident(gpu(0), key(0, 0, 100, 0), 1000);
+        let moved = pool.note_migration(gpu(0), ExecSlot::CpuSub { idx: 0 }, 0, 100);
+        assert_eq!(moved, 1000);
+        assert_eq!(pool.resident_range_bytes(gpu(0), 0, 100), 0);
+        let s = pool.stats();
+        assert_eq!(s.steal_migrations, 1);
+        assert_eq!(s.migrated_bytes, 1000);
+        // Re-acquiring after the migration re-uploads (at the thief).
+        assert!(!pool.ensure_resident(ExecSlot::CpuSub { idx: 0 }, key(0, 0, 100, 0), 1000));
+    }
+
+    #[test]
+    fn migration_keeps_wider_copy_replicas() {
+        // A steal of the task spanning [0, 64) must not wipe the victim's
+        // whole-vector COPY replica (keyed over the full range).
+        let pool = ResidencyPool::new();
+        pool.ensure_resident(gpu(0), key(0, 0, 64, 0), 256);
+        pool.ensure_resident(gpu(0), key(1, 0, 1024, 0), 4096);
+        let moved = pool.note_migration(gpu(0), ExecSlot::CpuSub { idx: 0 }, 0, 64);
+        assert_eq!(moved, 256, "only the contained task range moves");
+        assert!(
+            pool.ensure_resident(gpu(0), key(1, 0, 1024, 0), 4096),
+            "the COPY replica must survive the steal"
+        );
+    }
+
+    #[test]
+    fn invalidate_arg_drops_every_range() {
+        let pool = ResidencyPool::new();
+        pool.ensure_resident(gpu(0), key(0, 0, 64, 0), 256);
+        pool.ensure_resident(gpu(1), key(0, 64, 64, 0), 256);
+        pool.ensure_resident(gpu(0), key(1, 0, 64, 0), 256);
+        pool.invalidate_arg(ArgKey::Input { request: 1, idx: 0 });
+        assert!(!pool.ensure_resident(gpu(0), key(0, 0, 64, 0), 256));
+        // Arg 1 untouched.
+        assert!(pool.ensure_resident(gpu(0), key(1, 0, 64, 0), 256));
+    }
+
+    #[test]
+    fn fingerprint_separates_workloads() {
+        let a = request_fingerprint("pipeline(a,b)", 1024, &[7]);
+        let b = request_fingerprint("pipeline(a,b)", 2048, &[7]);
+        let c = request_fingerprint("pipeline(a,b)", 1024, &[8]);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, request_fingerprint("pipeline(a,b)", 1024, &[7]));
+    }
+
+    #[test]
+    fn migration_estimate_scales_with_bytes() {
+        assert!(migration_secs(1 << 30, 8.0) > migration_secs(1 << 20, 8.0));
+        assert!((migration_secs(8_000_000_000, 8.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_delta_and_accumulate() {
+        let pool = ResidencyPool::new();
+        pool.ensure_resident(gpu(0), key(0, 0, 128, 0), 512);
+        let before = pool.stats();
+        pool.ensure_resident(gpu(0), key(0, 0, 128, 0), 512);
+        pool.note_download(64);
+        let d = pool.stats().minus(&before);
+        assert_eq!(d.uploads, 0);
+        assert_eq!(d.uploads_avoided, 1);
+        assert_eq!(d.bytes_downloaded, 64);
+        let mut acc = TransferStats::default();
+        acc.accumulate(&d);
+        acc.accumulate(&d);
+        assert_eq!(acc.uploads_avoided, 2);
+    }
+}

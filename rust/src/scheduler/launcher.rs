@@ -17,6 +17,7 @@ use std::time::Instant;
 use crate::data::vector::ArgValue;
 use crate::decompose::ExecSlot;
 use crate::error::Result;
+use crate::runtime::residency::ResidencyView;
 use crate::scheduler::queues::{SharedQueues, Task, WorkQueues};
 
 /// One slot-execution engine the launcher drives: runs a single task and
@@ -115,6 +116,32 @@ pub struct LaunchOutput {
     pub clock: SlotClock,
     /// Tasks executed by a slot other than the one they were queued on.
     pub stolen: u64,
+    /// Steal candidates rejected because the estimated migration cost
+    /// exceeded the expected wait (locality-aware stealing only).
+    pub steals_skipped: u64,
+}
+
+/// Locality-aware steal pricing (DESIGN.md §2.6): a thief only takes a
+/// task when moving its resident data costs less than waiting for the
+/// victim to drain it locally.
+pub struct StealPolicy<'p> {
+    /// Where the task's data lives (the scheduler's residency pool).
+    pub residency: &'p dyn ResidencyView,
+    /// Seconds to migrate one byte across devices (1 / link bytes-per-sec;
+    /// see [`crate::runtime::residency::migration_secs`]).
+    pub secs_per_byte: f64,
+    /// Expected seconds per queued task before any task has completed
+    /// (afterwards the drain's measured mean is used).
+    pub default_task_secs: f64,
+}
+
+/// Knobs of one concurrent drain.
+#[derive(Default)]
+pub struct LaunchOpts<'p> {
+    /// When set, steals are admitted by migration cost vs expected wait
+    /// and booked against the residency pool; when `None`, stealing is
+    /// unconditional (the PR-2 behavior).
+    pub policy: Option<StealPolicy<'p>>,
 }
 
 impl LaunchOutput {
@@ -124,16 +151,33 @@ impl LaunchOutput {
     }
 }
 
-/// Drain the queues concurrently: one scoped worker thread per queue, local
-/// front pops then back-of-longest-queue steals. The first task error stops
-/// every worker and is returned; partials are seq-sorted on return.
+/// Drain the queues concurrently with unconditional stealing (see
+/// [`launch_with`] for the locality-aware variant).
 pub fn launch<R: TaskRunner>(queues: WorkQueues, runner: &R) -> Result<LaunchOutput> {
+    launch_with(queues, runner, LaunchOpts::default())
+}
+
+/// Drain the queues concurrently: one scoped worker thread per queue, local
+/// front pops then back-of-longest-queue steals. With a [`StealPolicy`], a
+/// thief prices each steal candidate — estimated migration cost (the
+/// task's bytes resident on its home slot, free between same-device slots)
+/// against the expected wait for the victim to drain it (queue length x
+/// the drain's measured mean task time) — books admitted migrations
+/// against the residency pool, and skips candidates not worth moving. The
+/// first task error stops every worker and is returned; partials are
+/// seq-sorted on return.
+pub fn launch_with<R: TaskRunner>(
+    queues: WorkQueues,
+    runner: &R,
+    opts: LaunchOpts<'_>,
+) -> Result<LaunchOutput> {
     let n = queues.n_queues();
     if n == 0 {
         return Ok(LaunchOutput {
             partials: Vec::new(),
             clock: SlotClock::default(),
             stolen: 0,
+            steals_skipped: 0,
         });
     }
     let slots: Vec<ExecSlot> = (0..n).map(|i| queues.slot(i)).collect();
@@ -142,6 +186,12 @@ pub fn launch<R: TaskRunner>(queues: WorkQueues, runner: &R) -> Result<LaunchOut
     let failure: Mutex<Option<crate::error::Error>> = Mutex::new(None);
     let stop = AtomicBool::new(false);
     let stolen = AtomicU64::new(0);
+    let steals_skipped = AtomicU64::new(0);
+    // Mean task duration of this drain (nanoseconds / completions): the
+    // expected-wait side of the steal pricing.
+    let task_nanos = AtomicU64::new(0);
+    let task_count = AtomicU64::new(0);
+    let opts = &opts;
 
     let t0 = Instant::now();
     let busy: Vec<f64> = std::thread::scope(|scope| {
@@ -152,29 +202,82 @@ pub fn launch<R: TaskRunner>(queues: WorkQueues, runner: &R) -> Result<LaunchOut
                 let failure = &failure;
                 let stop = &stop;
                 let stolen = &stolen;
+                let steals_skipped = &steals_skipped;
+                let task_nanos = &task_nanos;
+                let task_count = &task_count;
                 scope.spawn(move || {
+                    let my_slot = shared.slot(i);
                     let mut busy = 0.0f64;
                     loop {
                         if stop.load(Ordering::Relaxed) {
                             break;
                         }
                         let task = match shared.pop_local(i) {
-                            Some(t) => t,
-                            None => match shared.steal(i) {
-                                Some(t) => {
-                                    stolen.fetch_add(1, Ordering::Relaxed);
-                                    t
+                            Some(t) => Some(t),
+                            None => match &opts.policy {
+                                None => shared.steal(i),
+                                Some(pol) => {
+                                    let done = task_count.load(Ordering::Relaxed);
+                                    let avg_secs = if done > 0 {
+                                        task_nanos.load(Ordering::Relaxed) as f64
+                                            / done as f64
+                                            * 1e-9
+                                    } else {
+                                        pol.default_task_secs
+                                    };
+                                    let out = shared.steal_where(i, |t, victim_len| {
+                                        let p = &t.partition;
+                                        let bytes = if p.slot.same_device(&my_slot) {
+                                            0
+                                        } else {
+                                            pol.residency.resident_range_bytes(
+                                                p.slot,
+                                                p.start_unit,
+                                                p.units,
+                                            )
+                                        };
+                                        let migration = bytes as f64 * pol.secs_per_byte;
+                                        migration <= victim_len as f64 * avg_secs
+                                    });
+                                    if out.skipped > 0 {
+                                        steals_skipped.fetch_add(out.skipped, Ordering::Relaxed);
+                                        for _ in 0..out.skipped {
+                                            pol.residency.note_steal_skipped();
+                                        }
+                                    }
+                                    if let Some(t) = &out.task {
+                                        let p = &t.partition;
+                                        if !p.slot.same_device(&my_slot) {
+                                            pol.residency.note_migration(
+                                                p.slot,
+                                                my_slot,
+                                                p.start_unit,
+                                                p.units,
+                                            );
+                                        }
+                                    }
+                                    out.task
                                 }
-                                None => break,
                             },
                         };
+                        let task = match task {
+                            Some(t) => {
+                                if t.partition.slot != my_slot {
+                                    stolen.fetch_add(1, Ordering::Relaxed);
+                                }
+                                t
+                            }
+                            None => break,
+                        };
                         let start = Instant::now();
-                        match runner.run_task(shared.slot(i), &task) {
+                        match runner.run_task(my_slot, &task) {
                             Ok(out) => {
                                 let dt = out
                                     .busy
                                     .unwrap_or_else(|| start.elapsed().as_secs_f64());
                                 busy += dt;
+                                task_nanos.fetch_add((dt * 1e9) as u64, Ordering::Relaxed);
+                                task_count.fetch_add(1, Ordering::Relaxed);
                                 results.lock().unwrap().push((task.seq, out.outputs, dt));
                             }
                             Err(e) => {
@@ -208,6 +311,7 @@ pub fn launch<R: TaskRunner>(queues: WorkQueues, runner: &R) -> Result<LaunchOut
             elapsed,
         },
         stolen: stolen.into_inner(),
+        steals_skipped: steals_skipped.into_inner(),
     })
 }
 
@@ -329,6 +433,102 @@ mod tests {
         let out = launch(queues, &sleepy(1)).unwrap();
         assert!(out.stolen > 0, "idle slot must have stolen work");
         // Every task completed exactly once, seq-sorted.
+        let seqs: Vec<usize> = out.partials.iter().map(|(s, _, _)| *s).collect();
+        assert_eq!(seqs, (0..seqs.len()).collect::<Vec<_>>());
+    }
+
+    /// A residency oracle with a fixed per-task resident byte count, and
+    /// counters for the migrations/skips the launcher books against it.
+    struct FakeResidency {
+        bytes: u64,
+        migrations: AtomicU64,
+        skips: AtomicU64,
+    }
+
+    impl FakeResidency {
+        fn with_bytes(bytes: u64) -> FakeResidency {
+            FakeResidency {
+                bytes,
+                migrations: AtomicU64::new(0),
+                skips: AtomicU64::new(0),
+            }
+        }
+    }
+
+    impl ResidencyView for FakeResidency {
+        fn resident_range_bytes(&self, _slot: ExecSlot, _start: u64, _units: u64) -> u64 {
+            self.bytes
+        }
+
+        fn note_migration(&self, _f: ExecSlot, _t: ExecSlot, _s: u64, _u: u64) -> u64 {
+            self.migrations.fetch_add(1, Ordering::Relaxed);
+            self.bytes
+        }
+
+        fn note_steal_skipped(&self) {
+            self.skips.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    #[test]
+    fn steal_skipped_when_migration_cost_exceeds_expected_wait() {
+        // The CPU slot idles while the GPU slot holds 8 stealable tasks
+        // whose data is (per the oracle) fully resident on the GPU: with a
+        // migration price far above the expected wait, the thief must
+        // leave the work where its data lives.
+        let p = two_slot_plan(64, 8);
+        let queues = WorkQueues::from_plan_chunked(&p, 8);
+        let residency = FakeResidency::with_bytes(1 << 30);
+        let out = launch_with(
+            queues,
+            &sleepy(1),
+            LaunchOpts {
+                policy: Some(StealPolicy {
+                    residency: &residency,
+                    secs_per_byte: 1.0, // 1 GiB "costs" ~1e9 s to move
+                    default_task_secs: 1e-6,
+                }),
+            },
+        )
+        .unwrap();
+        assert_eq!(out.stolen, 0, "no task may migrate away from its data");
+        assert!(out.steals_skipped > 0, "the rejected candidates must be counted");
+        assert_eq!(residency.migrations.load(Ordering::Relaxed), 0);
+        assert_eq!(
+            residency.skips.load(Ordering::Relaxed),
+            out.steals_skipped,
+            "skips are booked against the pool"
+        );
+        // The drain still completes: every task ran on its home slot.
+        assert_eq!(out.partials.len(), 16);
+    }
+
+    #[test]
+    fn steal_booked_as_migration_when_cheaper_than_waiting() {
+        // Same shape, but migration is free per the oracle's pricing: the
+        // idle CPU slot must steal GPU-homed tasks and every cross-device
+        // steal must be booked against the pool.
+        let p = two_slot_plan(64, 8);
+        let queues = WorkQueues::from_plan_chunked(&p, 8);
+        let residency = FakeResidency::with_bytes(64);
+        let out = launch_with(
+            queues,
+            &sleepy(1),
+            LaunchOpts {
+                policy: Some(StealPolicy {
+                    residency: &residency,
+                    secs_per_byte: 1e-12,
+                    default_task_secs: 0.05,
+                }),
+            },
+        )
+        .unwrap();
+        assert!(out.stolen > 0, "cheap migrations must be admitted");
+        assert!(
+            residency.migrations.load(Ordering::Relaxed) >= out.stolen,
+            "every cross-device steal books a migration"
+        );
+        // Every task still completes exactly once, seq-sorted.
         let seqs: Vec<usize> = out.partials.iter().map(|(s, _, _)| *s).collect();
         assert_eq!(seqs, (0..seqs.len()).collect::<Vec<_>>());
     }

@@ -123,6 +123,14 @@ pub struct SharedQueues {
     queues: Vec<(ExecSlot, Mutex<VecDeque<Task>>)>,
 }
 
+/// What one steal attempt produced: a task (when some victim's candidate
+/// was admitted) and how many candidates were rejected on migration cost.
+#[derive(Debug, Default)]
+pub struct StealOutcome {
+    pub task: Option<Task>,
+    pub skipped: u64,
+}
+
 impl SharedQueues {
     pub fn n_queues(&self) -> usize {
         self.queues.len()
@@ -141,16 +149,58 @@ impl SharedQueues {
     /// longest other queue (the victim keeps draining its front, the thief
     /// peels units off the far end — the classic deque-stealing rule).
     pub fn steal(&self, thief: usize) -> Option<Task> {
-        let victim = self
+        self.steal_where(thief, |_, _| true).task
+    }
+
+    /// Locality-aware steal: victims are visited longest-queue-first; the
+    /// candidate task (the victim's back) is offered to `admit(task,
+    /// victim_len)` and only popped when admitted. A rejection counts as a
+    /// skipped steal and the next victim is tried — so a thief refuses
+    /// work whose migration would cost more than waiting it out, without
+    /// giving up on cheaper work elsewhere.
+    pub fn steal_where<F>(&self, thief: usize, admit: F) -> StealOutcome
+    where
+        F: Fn(&Task, usize) -> bool,
+    {
+        let mut victims: Vec<(usize, usize)> = self
             .queues
             .iter()
             .enumerate()
             .filter(|(i, _)| *i != thief)
             .map(|(i, (_, q))| (i, q.lock().unwrap().len()))
             .filter(|(_, len)| *len > 0)
-            .max_by_key(|(_, len)| *len)?
-            .0;
-        self.queues[victim].1.lock().unwrap().pop_back()
+            .collect();
+        victims.sort_by_key(|(_, len)| std::cmp::Reverse(*len));
+        let mut skipped = 0u64;
+        for (v, _) in victims {
+            // Snapshot the candidate, then price it with the victim's
+            // lock released — `admit` may consult the residency pool,
+            // and the victim must keep draining its front meanwhile.
+            let (cand, len) = {
+                let q = self.queues[v].1.lock().unwrap();
+                match q.back() {
+                    Some(t) => (*t, q.len()),
+                    None => continue,
+                }
+            };
+            if admit(&cand, len) {
+                let mut q = self.queues[v].1.lock().unwrap();
+                // Pop only if the back is still the priced candidate; a
+                // raced-away task is neither stolen nor skipped.
+                if q.back().map(|t| t.seq) == Some(cand.seq) {
+                    return StealOutcome {
+                        task: q.pop_back(),
+                        skipped,
+                    };
+                }
+            } else {
+                skipped += 1;
+            }
+        }
+        StealOutcome {
+            task: None,
+            skipped,
+        }
     }
 
     pub fn remaining(&self) -> usize {
@@ -250,6 +300,99 @@ mod tests {
         let stolen = shared.steal(0).expect("other queues still hold work");
         assert_eq!(shared.remaining(), before - 1);
         assert_ne!(stolen.partition.slot, shared.slot(0));
+    }
+
+    #[test]
+    fn prop_chunked_queues_cover_partitions_aligned_and_ordered() {
+        use crate::util::propcheck::forall;
+        // For random (domain size, tasks_per_slot, cpu share, quantum):
+        //  * the pieces of each partition tile it exactly;
+        //  * every non-tail piece of a partition is quantum-aligned;
+        //  * seq numbers are globally ordered by start unit.
+        forall(
+            0x5EA1,
+            250,
+            |r| {
+                (
+                    r.below(1 << 13) + 1, // total units
+                    r.below(8) + 1,       // tasks per slot
+                    r.below(101),         // cpu share %
+                )
+            },
+            |&(total, tps, share)| {
+                let sct = Sct::kernel(KernelSpec::new("k", vec![ParamSpec::VecIn], 1));
+                let plan = decompose(
+                    &sct,
+                    total,
+                    &DecomposeConfig {
+                        cpu_subdevices: 3,
+                        gpu_overlap: vec![2],
+                        gpu_weights: vec![1.0],
+                        cpu_share: share as f64 / 100.0,
+                        wgs: 1,
+                        chunk_quantum: 16,
+                    },
+                )
+                .map_err(|e| format!("{e}"))?;
+                let q = WorkQueues::from_plan_chunked(&plan, tps as u32);
+                let shared = q.into_shared();
+                let mut tasks = Vec::new();
+                for i in 0..shared.n_queues() {
+                    while let Some(t) = shared.pop_local(i) {
+                        tasks.push(t);
+                    }
+                }
+                tasks.sort_by_key(|t| t.seq);
+                // seq order == unit order, gap-free tiling of the domain.
+                let mut cursor = 0u64;
+                for t in &tasks {
+                    if t.partition.start_unit != cursor {
+                        return Err(format!(
+                            "seq {} starts at {} expected {cursor}",
+                            t.seq, t.partition.start_unit
+                        ));
+                    }
+                    if t.partition.units == 0 {
+                        return Err(format!("seq {} is empty", t.seq));
+                    }
+                    cursor += t.partition.units;
+                }
+                if cursor != total {
+                    return Err(format!("tiled {cursor} of {total}"));
+                }
+                // Every piece that is not the tail of its partition must
+                // be quantum-aligned (the tail absorbs the residue).
+                for pair in tasks.windows(2) {
+                    let (a, b) = (&pair[0], &pair[1]);
+                    if a.partition.slot == b.partition.slot
+                        && a.partition.units % plan.quantum != 0
+                    {
+                        return Err(format!(
+                            "non-tail piece at seq {} ({} units) off the \
+                             quantum {}",
+                            a.seq, a.partition.units, plan.quantum
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn steal_where_rejections_count_and_fall_through() {
+        let p = plan();
+        let shared = WorkQueues::from_plan_chunked(&p, 4).into_shared();
+        while shared.pop_local(0).is_some() {}
+        // Reject everything: no task moves, every victim counted.
+        let out = shared.steal_where(0, |_, _| false);
+        assert!(out.task.is_none());
+        assert!(out.skipped > 0);
+        // Admit only tasks owned by CPU slots: the steal falls through
+        // rejected victims to an admissible one.
+        let out = shared.steal_where(0, |t, _| t.partition.slot.is_cpu());
+        let stolen = out.task.expect("cpu-owned task must be admitted");
+        assert!(stolen.partition.slot.is_cpu());
     }
 
     #[test]

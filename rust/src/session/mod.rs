@@ -113,6 +113,12 @@ pub struct SessionStats {
     pub pinned: u64,
     pub balance_ops: u64,
     pub unbalanced_runs: u64,
+    /// Transfer accounting summed over every request this session ran
+    /// (buffer-residency layer, DESIGN.md §2.6).
+    pub bytes_uploaded: u64,
+    pub bytes_downloaded: u64,
+    pub uploads_avoided: u64,
+    pub steal_migrations: u64,
 }
 
 /// Per-configuration tweaks for [`Session::run_with`]: applied on top of a
@@ -286,6 +292,25 @@ impl<E: ExecEnv> Session<E> {
         self
     }
 
+    /// Stealable tasks generated per execution slot (steal slack; default
+    /// 4 on backends with work queues).
+    pub fn with_tasks_per_slot(self, n: u32) -> Session<E> {
+        self.set_tasks_per_slot(n);
+        self
+    }
+
+    /// Runtime form of [`Session::with_tasks_per_slot`] (the serve path
+    /// applies the knob to pooled sessions).
+    pub fn set_tasks_per_slot(&self, n: u32) {
+        self.env.lock().unwrap().set_tasks_per_slot(n);
+    }
+
+    /// Toggle the buffer-residency layer (on by default; off is the A/B
+    /// baseline for the locality benches).
+    pub fn set_residency_enabled(&self, on: bool) {
+        self.env.lock().unwrap().set_residency_enabled(on);
+    }
+
     // --- the seamless path ------------------------------------------------
 
     /// Resolve the framework configuration for a computation through the
@@ -367,6 +392,7 @@ impl<E: ExecEnv> Session<E> {
             }
             status
         };
+        let t = out.exec.transfers;
         self.bump(|s| {
             if status.unbalanced {
                 s.unbalanced_runs += 1;
@@ -375,6 +401,10 @@ impl<E: ExecEnv> Session<E> {
                 s.balance_ops += 1;
             }
             s.runs += 1;
+            s.bytes_uploaded += t.bytes_uploaded;
+            s.bytes_downloaded += t.bytes_downloaded;
+            s.uploads_avoided += t.uploads_avoided;
+            s.steal_migrations += t.steal_migrations;
         });
 
         // Feed the observed outcome back into the KB: refined profiles
@@ -437,9 +467,14 @@ impl<E: ExecEnv> Session<E> {
             let launches = env.launch_count();
             (out, cfg, launches)
         };
+        let t = out.exec.transfers;
         self.bump(|s| {
             s.runs += 1;
             s.pinned += 1;
+            s.bytes_uploaded += t.bytes_uploaded;
+            s.bytes_downloaded += t.bytes_downloaded;
+            s.uploads_avoided += t.uploads_avoided;
+            s.steal_migrations += t.steal_migrations;
         });
         Ok(SessionOutcome {
             outputs: out.outputs,

@@ -52,6 +52,9 @@ pub struct ServeOpts {
     pub concurrency: usize,
     /// Per-request service floor in seconds (see module docs). 0 disables.
     pub pace: f64,
+    /// Override the stealable-tasks-per-slot knob on every pooled session
+    /// (`--tasks-per-slot`); `None` keeps the backend default.
+    pub tasks_per_slot: Option<u32>,
 }
 
 impl Default for ServeOpts {
@@ -59,6 +62,7 @@ impl Default for ServeOpts {
         ServeOpts {
             concurrency: 1,
             pace: 0.0,
+            tasks_per_slot: None,
         }
     }
 }
@@ -98,7 +102,8 @@ impl ServeReport {
     pub fn summary(&self) -> String {
         format!(
             "{} requests in {:.3}s @ concurrency {} -> {:.1} req/s \
-             (p50 {:.2}ms, p99 {:.2}ms; {} kb hits, {} built, {} derived)",
+             (p50 {:.2}ms, p99 {:.2}ms; {} kb hits, {} built, {} derived; \
+             {:.1} MB uploaded, {} uploads avoided, {} steal migrations)",
             self.completed,
             self.wall_secs,
             self.concurrency,
@@ -107,7 +112,10 @@ impl ServeReport {
             self.p99_latency * 1e3,
             self.stats.kb_hits,
             self.stats.built,
-            self.stats.derived
+            self.stats.derived,
+            self.stats.bytes_uploaded as f64 / 1e6,
+            self.stats.uploads_avoided,
+            self.stats.steal_migrations
         )
     }
 }
@@ -166,6 +174,10 @@ impl<E: ExecEnv + Send> SessionPool<E> {
             stats.pinned += st.pinned;
             stats.balance_ops += st.balance_ops;
             stats.unbalanced_runs += st.unbalanced_runs;
+            stats.bytes_uploaded += st.bytes_uploaded;
+            stats.bytes_downloaded += st.bytes_downloaded;
+            stats.uploads_avoided += st.uploads_avoided;
+            stats.steal_migrations += st.steal_migrations;
         }
         stats
     }
@@ -175,6 +187,11 @@ impl<E: ExecEnv + Send> SessionPool<E> {
     /// remaining stream and is returned.
     pub fn serve(&self, requests: &[ServeRequest], opts: &ServeOpts) -> Result<ServeReport> {
         let workers = opts.concurrency.clamp(1, self.sessions.len());
+        if let Some(n) = opts.tasks_per_slot {
+            for s in &self.sessions {
+                s.set_tasks_per_slot(n);
+            }
+        }
         // Snapshot so the report's stats cover this run only, even when the
         // pool is reused across serve calls.
         let stats_before = self.summed_stats();
@@ -245,6 +262,10 @@ impl<E: ExecEnv + Send> SessionPool<E> {
             pinned: after.pinned - stats_before.pinned,
             balance_ops: after.balance_ops - stats_before.balance_ops,
             unbalanced_runs: after.unbalanced_runs - stats_before.unbalanced_runs,
+            bytes_uploaded: after.bytes_uploaded - stats_before.bytes_uploaded,
+            bytes_downloaded: after.bytes_downloaded - stats_before.bytes_downloaded,
+            uploads_avoided: after.uploads_avoided - stats_before.uploads_avoided,
+            steal_migrations: after.steal_migrations - stats_before.steal_migrations,
         };
         Ok(ServeReport {
             completed: traces.len(),
@@ -291,7 +312,7 @@ mod tests {
         let pool = SessionPool::build(3, |i| Session::simulated(i7_hd7950(1), 40 + i as u64));
         let reqs = requests(6);
         let report = pool
-            .serve(&reqs, &ServeOpts { concurrency: 3, pace: 0.0 })
+            .serve(&reqs, &ServeOpts { concurrency: 3, pace: 0.0, tasks_per_slot: None })
             .unwrap();
         assert_eq!(report.completed, 6);
         // One cold start warms the whole pool: exactly one build (plus any
@@ -307,7 +328,7 @@ mod tests {
             &i7_hd7950(1),
             7,
             &reqs,
-            &ServeOpts { concurrency: 2, pace: 0.002 },
+            &ServeOpts { concurrency: 2, pace: 0.002, tasks_per_slot: None },
         )
         .unwrap();
         assert_eq!(report.completed, 8);
@@ -323,7 +344,7 @@ mod tests {
     fn concurrency_is_capped_by_pool_size() {
         let pool = SessionPool::build(2, |i| Session::simulated(i7_hd7950(1), i as u64));
         let report = pool
-            .serve(&requests(4), &ServeOpts { concurrency: 16, pace: 0.0 })
+            .serve(&requests(4), &ServeOpts { concurrency: 16, pace: 0.0, tasks_per_slot: None })
             .unwrap();
         assert_eq!(report.concurrency, 2);
         assert_eq!(report.completed, 4);
