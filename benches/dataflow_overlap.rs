@@ -1,0 +1,133 @@
+//! Dataflow-overlap bench: barrier vs dataflow drains on multi-stage work
+//! (BENCH_pr4.json, the PR-4 perf-trajectory point).
+//!
+//! Two workloads, both stage-structured: the 3-stage staged filter
+//! pipeline and a global-sync Loop over a 2-stage body. Each is priced by
+//! the simulated backend under both drain modes (DESIGN.md §2.7): Barrier
+//! sums per-stage maxima plus a sync-priced gate per stage boundary;
+//! Dataflow overlaps stages, so the makespan is the slowest slot's total
+//! work. Reported per (workload, mode): makespan and mean slot idle% —
+//! the acceptance numbers (dataflow strictly lower on both) that
+//! `rust/tests/dataflow_integration.rs` asserts.
+
+use marrow::bench::workloads;
+use marrow::platform::cpu::FissionLevel;
+use marrow::platform::device::i7_hd7950;
+use marrow::runtime::exec::RequestArgs;
+use marrow::scheduler::{DrainMode, ExecEnv, SimEnv};
+use marrow::sct::Sct;
+use marrow::sim::machine::SimMachine;
+use marrow::tuner::profile::FrameworkConfig;
+
+const RUNS: usize = 16;
+
+struct Point {
+    workload: &'static str,
+    mode: &'static str,
+    makespan_ms: f64,
+    idle_pct: f64,
+}
+
+fn cfg() -> FrameworkConfig {
+    FrameworkConfig {
+        fission: FissionLevel::L2,
+        overlap: vec![2],
+        wgs: 256,
+        cpu_share: 0.25,
+    }
+}
+
+fn price(name: &'static str, sct: &Sct, units: u64, mode: DrainMode) -> Point {
+    let mut env = SimEnv::new(SimMachine::new(i7_hd7950(1), 42));
+    env.set_drain_mode(mode);
+    let (mut makespan, mut idle) = (0.0f64, 0.0f64);
+    for _ in 0..RUNS {
+        let out = env
+            .run_request(sct, &RequestArgs::default(), units, &cfg())
+            .expect("sim request")
+            .exec;
+        makespan += out.total;
+        idle += out.mean_idle_frac();
+    }
+    Point {
+        workload: name,
+        mode: mode.label(),
+        makespan_ms: makespan / RUNS as f64 * 1e3,
+        idle_pct: idle / RUNS as f64 * 100.0,
+    }
+}
+
+fn main() {
+    let pipeline = workloads::filter_pipeline(2048, 2048, false);
+    let loop_body = Sct::pipeline(vec![
+        Sct::kernel(pipeline.sct.kernels()[0].clone()),
+        Sct::kernel(pipeline.sct.kernels()[1].clone()),
+    ]);
+    let looped = Sct::for_loop(loop_body, 5, true);
+
+    println!(
+        "dataflow overlap: {RUNS} runs per case, i7+HD7950, simulated clock\n"
+    );
+    println!(
+        "{:<18} {:>9} {:>13} {:>8}",
+        "workload", "drain", "makespan ms", "idle%"
+    );
+
+    let mut points = Vec::new();
+    for (name, sct, units) in [
+        ("pipeline_3stage", &pipeline.sct, pipeline.total_units),
+        ("loop_2stage_x5", &looped, 1024u64),
+    ] {
+        for mode in [DrainMode::Barrier, DrainMode::Dataflow] {
+            let p = price(name, sct, units, mode);
+            println!(
+                "{:<18} {:>9} {:>13.3} {:>7.1}%",
+                p.workload, p.mode, p.makespan_ms, p.idle_pct
+            );
+            points.push(p);
+        }
+    }
+
+    let speedup = |w: &str| {
+        let get = |m: &str| {
+            points
+                .iter()
+                .find(|p| p.workload == w && p.mode == m)
+                .map(|p| p.makespan_ms)
+                .unwrap_or(0.0)
+        };
+        let df = get("dataflow");
+        if df > 0.0 {
+            get("barrier") / df
+        } else {
+            f64::INFINITY
+        }
+    };
+    println!(
+        "\nbarrier/dataflow makespan ratio: pipeline_3stage {:.2}x, \
+         loop_2stage_x5 {:.2}x",
+        speedup("pipeline_3stage"),
+        speedup("loop_2stage_x5")
+    );
+
+    let json_points: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"workload\": \"{}\", \"drain\": \"{}\", \
+                 \"makespan_ms\": {:.4}, \"idle_pct\": {:.2}}}",
+                p.workload, p.mode, p.makespan_ms, p.idle_pct
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"dataflow_overlap\",\n  \"pr\": 4,\n  \
+         \"runs\": {RUNS},\n  \"points\": [\n{}\n  ]\n}}\n",
+        json_points.join(",\n")
+    );
+    let path = "BENCH_pr4.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -44,6 +44,7 @@ fn serve_case(name: &'static str, comp: &Computation, residency: bool) -> Point 
                 concurrency: CONCURRENCY,
                 pace: PACE_MS * 1e-3,
                 tasks_per_slot: None,
+                drain_mode: None,
             },
         )
         .expect("serve");

@@ -40,6 +40,7 @@ fn main() {
                 concurrency,
                 pace: PACE_MS * 1e-3,
                 tasks_per_slot: None,
+                drain_mode: None,
             },
         )
         .expect("serve");

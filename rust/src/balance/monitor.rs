@@ -142,6 +142,31 @@ mod tests {
     }
 
     #[test]
+    fn whole_request_busy_does_not_false_trigger_on_short_stages() {
+        // Regression (DESIGN.md §2.7): a 3-stage request whose short
+        // stages are each skewed in a different direction, while the
+        // whole-request busy sums are perfectly balanced. Feeding the
+        // monitor per-stage slot times — what a stage-by-stage drain
+        // would observe — triggers the balancing process on pure stage
+        // skew; the session must feed whole-request sums instead.
+        let stage_times = [[1.0, 0.4], [0.2, 0.5], [0.3, 0.6]];
+        let mut per_stage = Monitor::new(0.85);
+        let mut triggered = false;
+        for _ in 0..2 {
+            for st in &stage_times {
+                triggered |= per_stage.observe(&st[..]).trigger;
+            }
+        }
+        assert!(triggered, "per-stage times must (wrongly) trigger the lbt");
+        // Whole-request busy sums: 1.5 vs 1.5 — balanced, never triggers.
+        let mut whole = Monitor::new(0.85);
+        for _ in 0..10 {
+            let s = whole.observe(&[1.0 + 0.2 + 0.3, 0.4 + 0.5 + 0.6]);
+            assert!(!s.unbalanced && !s.trigger, "balanced sums must stay quiet");
+        }
+    }
+
+    #[test]
     fn min_dev_tracks_calibration() {
         let mut m = Monitor::new(0.0); // never unbalanced; just record
         m.observe(&[1.0, 0.93]);

@@ -1,0 +1,583 @@
+//! The dataflow task graph (DESIGN.md §2.7): one node per (stage ×
+//! partition chunk) with explicit dependency edges, replacing the per-stage
+//! barrier drain.
+//!
+//! `decompose` guarantees identical partitioning across consecutive kernels
+//! (Section 3.1), so a consumer chunk depends on exactly the producer chunk
+//! covering its unit range — a 1:1 edge. The only surviving barriers are
+//! *sync nodes*: `Loop` condition reductions / host state updates (which
+//! also re-broadcast COPY arguments) and `MapReduce` fan-ins. Everything
+//! else drains as soon as its dependencies retire, so a fast GPU slot can
+//! start stage 2 of its chunks while a slow CPU sub-device is still
+//! finishing stage 1 of its own — the cross-stage overlap the paper's
+//! compound computations leave on the table under a barrier drain.
+//!
+//! The graph is built from a flattened *stage program* ([`flatten_stages`])
+//! that both the builder and the executor interpret, so the node a worker
+//! pops always agrees with the subtree it must run.
+
+use crate::decompose::{chunk_partition, Partition, PartitionPlan};
+use crate::error::{Error, Result};
+use crate::sct::{LoopState, ParamSpec, Reduction, Sct};
+
+/// One flattened stage of an execution request.
+pub enum StageOp<'s> {
+    /// Run this subtree over each chunk on a device slot. `carried` marks
+    /// stages that consume the previous compute stage's first output
+    /// (pipeline chaining); `vec_off`/`scalar_off` position the
+    /// request-argument cursor at this stage (earlier stages already
+    /// consumed their own request vectors and scalars).
+    Compute {
+        sct: &'s Sct,
+        carried: bool,
+        vec_off: usize,
+        scalar_off: usize,
+    },
+    /// Host-side global sync: `Loop` stage 3 for iteration `iter` —
+    /// stoppage condition + state update + COPY re-broadcast.
+    LoopSync { state: &'s LoopState, iter: u32 },
+    /// Host-side reduction fan-in (`MapReduce`).
+    Reduce { reduce: &'s Reduction },
+}
+
+impl StageOp<'_> {
+    pub fn is_sync(&self) -> bool {
+        !matches!(self, StageOp::Compute { .. })
+    }
+
+    /// Human label for DOT dumps and error messages.
+    pub fn label(&self) -> String {
+        match self {
+            StageOp::Compute { sct, .. } => sct.id(),
+            StageOp::LoopSync { iter, .. } => format!("loop-sync it{iter}"),
+            StageOp::Reduce { .. } => "reduce".to_string(),
+        }
+    }
+}
+
+/// Flatten a device-side subtree into compute stages: a pipeline of
+/// kernels splits into one stage per kernel (that split is what buys
+/// cross-stage overlap); anything else runs whole as a single compute
+/// stage per chunk — exactly the shapes the barrier executor's
+/// tree-traversal supports, so both drain modes cover the same SCTs.
+fn flatten_compute<'s>(sct: &'s Sct, out: &mut Vec<StageOp<'s>>) {
+    match sct {
+        Sct::Pipeline(stages)
+            if stages.len() > 1 && stages.iter().all(|s| matches!(s, Sct::Kernel(_))) =>
+        {
+            let mut vec_off = 0usize;
+            let mut scalar_off = 0usize;
+            for (i, s) in stages.iter().enumerate() {
+                let k = match s {
+                    Sct::Kernel(k) => k,
+                    _ => unreachable!("guarded by the match arm"),
+                };
+                let carried = i > 0;
+                out.push(StageOp::Compute {
+                    sct: s,
+                    carried,
+                    vec_off,
+                    scalar_off,
+                });
+                // Advance the request-arg cursor past this stage's params;
+                // the first VecIn of a carried stage binds the pipeline
+                // intermediate, not a request vector (mirrors the chunk
+                // runner's bind_params).
+                let mut first_vecin = true;
+                for p in &k.params {
+                    match p {
+                        ParamSpec::VecIn => {
+                            if !(carried && first_vecin) {
+                                vec_off += 1;
+                            }
+                            first_vecin = false;
+                        }
+                        ParamSpec::VecCopy => vec_off += 1,
+                        ParamSpec::ScalarF32(_) | ParamSpec::ScalarI32(_) => scalar_off += 1,
+                    }
+                }
+            }
+        }
+        Sct::Map(inner) => flatten_compute(inner, out),
+        other => out.push(StageOp::Compute {
+            sct: other,
+            carried: false,
+            vec_off: 0,
+            scalar_off: 0,
+        }),
+    }
+}
+
+/// Flatten a request's SCT into the linear stage program the task graph is
+/// built over. Top-level global-sync `Loop`s expand to `max_iters` copies
+/// of (body stages + a `LoopSync` node); top-level `MapReduce` appends a
+/// `Reduce` fan-in after its map stages. These mirror the request-level
+/// skeleton handling of the barrier scheduler, so both modes execute the
+/// same structure — only the draining differs.
+pub fn flatten_stages(sct: &Sct) -> Result<Vec<StageOp<'_>>> {
+    let mut out = Vec::new();
+    match sct {
+        Sct::Loop { body, state } if state.global_sync => {
+            for iter in 0..state.max_iters {
+                flatten_compute(body, &mut out);
+                out.push(StageOp::LoopSync { state, iter });
+            }
+        }
+        Sct::MapReduce { map, reduce } => {
+            flatten_compute(map, &mut out);
+            out.push(StageOp::Reduce { reduce });
+        }
+        other => flatten_compute(other, &mut out),
+    }
+    if out.is_empty() {
+        return Err(Error::Spec(
+            "SCT flattens to an empty stage program (zero-iteration loop?)".into(),
+        ));
+    }
+    Ok(out)
+}
+
+/// Node kind: device-side chunk work, or a host-side global sync point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeKind {
+    Compute,
+    Sync,
+}
+
+/// One task node: a (stage × chunk) unit of work.
+#[derive(Clone, Debug)]
+pub struct TaskNode {
+    pub id: usize,
+    /// Index into the stage program.
+    pub stage: u32,
+    pub kind: NodeKind,
+    /// The chunk this node covers (sync nodes span the whole domain and
+    /// are homed on the first slot, freely stealable host work).
+    pub partition: Partition,
+    /// Unit-order position within the stage: sorting a stage's outputs by
+    /// `seq` reconstructs the domain.
+    pub seq: usize,
+    /// Producer node whose first output chains into this node's carried
+    /// input (pipeline stages only).
+    pub carried_from: Option<usize>,
+}
+
+/// The dependency graph of one execution request.
+#[derive(Clone, Debug, Default)]
+pub struct TaskGraph {
+    pub nodes: Vec<TaskNode>,
+    /// `deps[i]`: nodes that must retire before node `i` may start.
+    pub deps: Vec<Vec<usize>>,
+    /// `consumers[i]`: nodes waiting on node `i` (reverse edges).
+    pub consumers: Vec<Vec<usize>>,
+    pub n_stages: u32,
+}
+
+/// Build the task graph for a stage program over a partition plan. Compute
+/// stages share one chunk layout (the same splitter the chunked barrier
+/// queues use, so both modes see identical chunk boundaries); `MapReduce`
+/// programs stay at partition granularity — splitting would change the
+/// fold arity for order-sensitive merges.
+pub fn build_graph(
+    stages: &[StageOp<'_>],
+    plan: &PartitionPlan,
+    tasks_per_slot: u32,
+) -> Result<TaskGraph> {
+    let reduce_present = stages.iter().any(|s| matches!(s, StageOp::Reduce { .. }));
+    let chunks: Vec<Partition> = if reduce_present {
+        plan.active().copied().collect()
+    } else {
+        let mut v = Vec::new();
+        for part in plan.active() {
+            v.extend(chunk_partition(part, plan.quantum, tasks_per_slot));
+        }
+        v
+    };
+    if chunks.is_empty() {
+        return Err(Error::Decompose(
+            "no active partitions to build a task graph over".into(),
+        ));
+    }
+    let sync_slot = chunks[0].slot;
+    let total_units = plan.total_units();
+
+    let mut g = TaskGraph {
+        n_stages: stages.len() as u32,
+        ..TaskGraph::default()
+    };
+    let mut prev: Vec<usize> = Vec::new();
+    let mut prev_compute = false;
+    for (s, op) in stages.iter().enumerate() {
+        let mut cur = Vec::new();
+        match op {
+            StageOp::Compute { carried, .. } => {
+                for (c, chunk) in chunks.iter().enumerate() {
+                    let id = g.nodes.len();
+                    let mut deps = Vec::new();
+                    let mut carried_from = None;
+                    if !prev.is_empty() {
+                        if prev_compute {
+                            // Identical partitioning across consecutive
+                            // kernels: the consumer chunk depends on the
+                            // single producer chunk covering its range.
+                            deps.push(prev[c]);
+                            if *carried {
+                                carried_from = Some(prev[c]);
+                            }
+                        } else {
+                            // Fan-out from the preceding sync node.
+                            deps.push(prev[0]);
+                        }
+                    }
+                    g.nodes.push(TaskNode {
+                        id,
+                        stage: s as u32,
+                        kind: NodeKind::Compute,
+                        partition: *chunk,
+                        seq: c,
+                        carried_from,
+                    });
+                    g.deps.push(deps);
+                    cur.push(id);
+                }
+                prev_compute = true;
+            }
+            StageOp::LoopSync { .. } | StageOp::Reduce { .. } => {
+                let id = g.nodes.len();
+                g.nodes.push(TaskNode {
+                    id,
+                    stage: s as u32,
+                    kind: NodeKind::Sync,
+                    partition: Partition {
+                        slot: sync_slot,
+                        start_unit: 0,
+                        units: total_units,
+                    },
+                    seq: 0,
+                    carried_from: None,
+                });
+                // Fan-in: every chunk of the previous stage gates the sync.
+                g.deps.push(prev.clone());
+                cur.push(id);
+                prev_compute = false;
+            }
+        }
+        prev = cur;
+    }
+
+    g.consumers = vec![Vec::new(); g.nodes.len()];
+    for (i, deps) in g.deps.iter().enumerate() {
+        for &d in deps {
+            g.consumers[d].push(i);
+        }
+    }
+    Ok(g)
+}
+
+impl TaskGraph {
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Nodes nothing depends on — the final frontier whose outputs are the
+    /// request's result (unless a sync node overrides them).
+    pub fn sinks(&self) -> Vec<usize> {
+        (0..self.nodes.len())
+            .filter(|&i| self.consumers[i].is_empty())
+            .collect()
+    }
+
+    /// Kahn topological order; `None` means the graph has a cycle (which
+    /// the builder can never produce — property-tested).
+    pub fn topo_order(&self) -> Option<Vec<usize>> {
+        let mut indeg: Vec<usize> = self.deps.iter().map(|d| d.len()).collect();
+        let mut ready: Vec<usize> = (0..self.nodes.len())
+            .filter(|&i| indeg[i] == 0)
+            .collect();
+        let mut order = Vec::with_capacity(self.nodes.len());
+        while let Some(n) = ready.pop() {
+            order.push(n);
+            for &c in &self.consumers[n] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    ready.push(c);
+                }
+            }
+        }
+        if order.len() == self.nodes.len() {
+            Some(order)
+        } else {
+            None
+        }
+    }
+
+    /// GraphViz DOT dump (the `marrow graph` subcommand): compute nodes
+    /// labelled stage/chunk/slot, sync nodes highlighted.
+    pub fn to_dot(&self, stage_labels: &[String]) -> String {
+        let mut out = String::from(
+            "digraph taskgraph {\n  rankdir=LR;\n  node [shape=box, fontsize=10];\n",
+        );
+        for n in &self.nodes {
+            let label = stage_labels
+                .get(n.stage as usize)
+                .cloned()
+                .unwrap_or_default();
+            match n.kind {
+                NodeKind::Compute => {
+                    out.push_str(&format!(
+                        "  n{} [label=\"s{} {}\\nchunk {} [{}] {}u\"];\n",
+                        n.id, n.stage, label, n.seq, n.partition.slot, n.partition.units
+                    ));
+                }
+                NodeKind::Sync => {
+                    out.push_str(&format!(
+                        "  n{} [label=\"s{} {}\\nSYNC {}u\", shape=doubleoctagon, \
+                         style=filled, fillcolor=gold];\n",
+                        n.id, n.stage, label, n.partition.units
+                    ));
+                }
+            }
+        }
+        for (i, deps) in self.deps.iter().enumerate() {
+            for &d in deps {
+                out.push_str(&format!("  n{d} -> n{i};\n"));
+            }
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decompose::{decompose, DecomposeConfig};
+    use crate::sct::{KernelSpec, ParamSpec, Sct};
+    use crate::util::propcheck::forall;
+
+    fn kernel(name: &str) -> Sct {
+        Sct::kernel(KernelSpec::new(name, vec![ParamSpec::VecIn], 1))
+    }
+
+    fn pipe(n: usize) -> Sct {
+        Sct::pipeline((0..n).map(|i| kernel(&format!("k{i}"))).collect())
+    }
+
+    fn plan_for(sct: &Sct, total: u64, quantum: u64) -> PartitionPlan {
+        decompose(
+            sct,
+            total,
+            &DecomposeConfig {
+                cpu_subdevices: 3,
+                gpu_overlap: vec![2],
+                gpu_weights: vec![1.0],
+                cpu_share: 0.4,
+                wgs: 1,
+                chunk_quantum: quantum,
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn pipeline_flattens_per_kernel_with_cursor_offsets() {
+        use crate::data::vector::ScalarTrait;
+        // Stage 0: VecIn + scalar (consumes vec 0, scalar 0); stage 1:
+        // VecIn binds the carried intermediate + VecCopy consumes vec 1.
+        let mut a = KernelSpec::new("a", vec![ParamSpec::VecIn], 1);
+        a.params.push(ParamSpec::ScalarF32(ScalarTrait::Bound));
+        let b = KernelSpec::new("b", vec![ParamSpec::VecIn, ParamSpec::VecCopy], 1);
+        let c = KernelSpec::new("c", vec![ParamSpec::VecIn], 1);
+        let sct = Sct::pipeline(vec![Sct::kernel(a), Sct::kernel(b), Sct::kernel(c)]);
+        let stages = flatten_stages(&sct).unwrap();
+        assert_eq!(stages.len(), 3);
+        match &stages[0] {
+            StageOp::Compute {
+                carried,
+                vec_off,
+                scalar_off,
+                ..
+            } => {
+                assert!(!carried);
+                assert_eq!((*vec_off, *scalar_off), (0, 0));
+            }
+            _ => panic!("stage 0 must be compute"),
+        }
+        match &stages[1] {
+            StageOp::Compute {
+                carried,
+                vec_off,
+                scalar_off,
+                ..
+            } => {
+                assert!(*carried);
+                assert_eq!((*vec_off, *scalar_off), (1, 1));
+            }
+            _ => panic!("stage 1 must be compute"),
+        }
+        match &stages[2] {
+            StageOp::Compute { vec_off, .. } => {
+                // Stage 1 consumed only the VecCopy (its VecIn was carried).
+                assert_eq!(*vec_off, 2);
+            }
+            _ => panic!("stage 2 must be compute"),
+        }
+    }
+
+    #[test]
+    fn global_sync_loop_expands_to_iterations_with_sync_nodes() {
+        let sct = Sct::for_loop(pipe(2), 3, true);
+        let stages = flatten_stages(&sct).unwrap();
+        assert_eq!(stages.len(), 9); // 3 x (2 compute + 1 sync)
+        assert!(stages[2].is_sync() && stages[5].is_sync() && stages[8].is_sync());
+        let p = plan_for(&sct, 1024, 8);
+        let g = build_graph(&stages, &p, 2).unwrap();
+        // Sync nodes are exactly the per-iteration barriers, and the last
+        // node is the final sync (the graph's only sink).
+        let syncs: Vec<&TaskNode> = g
+            .nodes
+            .iter()
+            .filter(|n| n.kind == NodeKind::Sync)
+            .collect();
+        assert_eq!(syncs.len(), 3);
+        assert_eq!(g.sinks(), vec![g.n_nodes() - 1]);
+        assert_eq!(g.nodes[g.n_nodes() - 1].kind, NodeKind::Sync);
+        // Fan-in: each sync waits on every chunk of the previous stage;
+        // fan-out: each first-body-stage node of the next iteration waits
+        // on the sync alone.
+        let chunks = g.nodes.iter().filter(|n| n.stage == 0).count();
+        assert!(chunks >= 2);
+        assert_eq!(g.deps[syncs[0].id].len(), chunks);
+        for n in g.nodes.iter().filter(|n| n.stage == 3) {
+            assert_eq!(g.deps[n.id], vec![syncs[0].id]);
+            assert!(n.carried_from.is_none());
+        }
+    }
+
+    #[test]
+    fn map_reduce_stays_at_partition_granularity() {
+        use crate::data::vector::Merge;
+        let sct = Sct::map_reduce(kernel("m"), Reduction::Host(Merge::Add));
+        let stages = flatten_stages(&sct).unwrap();
+        assert_eq!(stages.len(), 2);
+        let p = plan_for(&sct, 1000, 1);
+        let g = build_graph(&stages, &p, 4).unwrap();
+        let map_nodes = g.nodes.iter().filter(|n| n.stage == 0).count();
+        assert_eq!(map_nodes, p.active().count(), "no chunk splitting");
+        assert_eq!(g.sinks(), vec![g.n_nodes() - 1]);
+    }
+
+    #[test]
+    fn dot_dump_highlights_sync_nodes() {
+        let sct = Sct::for_loop(kernel("body"), 2, true);
+        let stages = flatten_stages(&sct).unwrap();
+        let labels: Vec<String> = stages.iter().map(|s| s.label()).collect();
+        let p = plan_for(&sct, 256, 1);
+        let g = build_graph(&stages, &p, 2).unwrap();
+        let dot = g.to_dot(&labels);
+        assert!(dot.starts_with("digraph"));
+        assert!(dot.contains("doubleoctagon"), "sync nodes highlighted");
+        assert!(dot.contains("loop-sync it0"));
+        assert!(dot.contains("->"));
+    }
+
+    #[test]
+    fn prop_graph_edges_respect_ranges_and_topology() {
+        // For random (domain size, tasks per slot, pipeline depth, share):
+        //  * a topological order exists (no cycles);
+        //  * compute nodes have fan-in <= 1, and a compute->compute edge
+        //    connects identical unit ranges (the 1:1 locality contract);
+        //  * sync nodes are the only fan-ins wider than 1;
+        //  * every compute stage's chunks tile the domain exactly.
+        forall(
+            0x6A4F,
+            200,
+            |r| {
+                (
+                    r.below(1 << 12) + 1, // total units
+                    r.below(6) + 1,       // tasks per slot
+                    r.below(4) + 1,       // pipeline depth
+                    r.below(101),         // cpu share %
+                )
+            },
+            |&(total, tps, depth, share)| {
+                let sct = if depth == 1 {
+                    kernel("k0")
+                } else {
+                    pipe(depth as usize)
+                };
+                let plan = decompose(
+                    &sct,
+                    total,
+                    &DecomposeConfig {
+                        cpu_subdevices: 2,
+                        gpu_overlap: vec![2],
+                        gpu_weights: vec![1.0],
+                        cpu_share: share as f64 / 100.0,
+                        wgs: 1,
+                        chunk_quantum: 8,
+                    },
+                )
+                .map_err(|e| format!("{e}"))?;
+                let stages = flatten_stages(&sct).map_err(|e| format!("{e}"))?;
+                if stages.len() != depth as usize {
+                    return Err(format!("{} stages for depth {depth}", stages.len()));
+                }
+                let g = build_graph(&stages, &plan, tps as u32)
+                    .map_err(|e| format!("{e}"))?;
+                if g.topo_order().is_none() {
+                    return Err("cycle in task graph".to_string());
+                }
+                for n in &g.nodes {
+                    let fan_in = g.deps[n.id].len();
+                    match n.kind {
+                        NodeKind::Compute => {
+                            if fan_in > 1 {
+                                return Err(format!(
+                                    "compute node {} has fan-in {fan_in}",
+                                    n.id
+                                ));
+                            }
+                            for &d in &g.deps[n.id] {
+                                let dep = &g.nodes[d];
+                                if dep.kind == NodeKind::Compute
+                                    && (dep.partition.start_unit != n.partition.start_unit
+                                        || dep.partition.units != n.partition.units)
+                                {
+                                    return Err(format!(
+                                        "edge {d}->{} crosses unit ranges",
+                                        n.id
+                                    ));
+                                }
+                            }
+                        }
+                        NodeKind::Sync => {}
+                    }
+                }
+                // Each stage tiles [0, total).
+                for s in 0..g.n_stages {
+                    let mut stage_nodes: Vec<&TaskNode> = g
+                        .nodes
+                        .iter()
+                        .filter(|n| n.stage == s && n.kind == NodeKind::Compute)
+                        .collect();
+                    stage_nodes.sort_by_key(|n| n.seq);
+                    let mut cursor = 0u64;
+                    for n in &stage_nodes {
+                        if n.partition.start_unit != cursor {
+                            return Err(format!(
+                                "stage {s} gap at {cursor} (node {})",
+                                n.id
+                            ));
+                        }
+                        cursor += n.partition.units;
+                    }
+                    if cursor != total {
+                        return Err(format!("stage {s} tiles {cursor} of {total}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -8,6 +8,8 @@
 //! common multiple of every kernel's granularity constraint plus the AOT
 //! chunk-menu constraint (static HLO shapes; DESIGN.md §1.2).
 
+pub mod graph;
+
 use crate::error::{Error, Result};
 use crate::sct::Sct;
 
@@ -40,12 +42,50 @@ impl ExecSlot {
     }
 }
 
+impl std::fmt::Display for ExecSlot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecSlot::CpuSub { idx } => write!(f, "cpu{idx}"),
+            ExecSlot::GpuSlot { gpu, slot } => write!(f, "gpu{gpu}.{slot}"),
+        }
+    }
+}
+
 /// A contiguous range of epu units assigned to one execution slot.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Partition {
     pub slot: ExecSlot,
     pub start_unit: u64,
     pub units: u64,
+}
+
+/// Split one partition into roughly `tasks_per_slot` stealable chunks,
+/// every piece aligned to `quantum` (the last piece absorbs the remainder,
+/// preserving whatever residue the partition carried). Both the chunked
+/// work queues and the dataflow task graph use this single splitter, so
+/// barrier and dataflow drains see byte-identical chunk boundaries.
+pub fn chunk_partition(part: &Partition, quantum: u64, tasks_per_slot: u32) -> Vec<Partition> {
+    let q = quantum.max(1);
+    let pieces = tasks_per_slot.max(1) as u64;
+    let grain = (part.units / pieces / q).max(1) * q;
+    let mut out = Vec::new();
+    let mut start = part.start_unit;
+    let mut left = part.units;
+    while left > grain + grain / 2 {
+        out.push(Partition {
+            slot: part.slot,
+            start_unit: start,
+            units: grain,
+        });
+        start += grain;
+        left -= grain;
+    }
+    out.push(Partition {
+        slot: part.slot,
+        start_unit: start,
+        units: left,
+    });
+    out
 }
 
 /// The decomposition of one execution request across the machine.

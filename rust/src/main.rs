@@ -16,10 +16,16 @@
 //!       multi-request serve path: a pool of sessions over one shared KB
 //!       drains the request stream under the admission cap; reports
 //!       requests/sec and p50/p99 latency
+//!   graph --bench <name> --size <n> [--gpus <g>] [--tasks-per-slot <t>]
+//!       dump the benchmark's dataflow TaskGraph as GraphViz DOT (nodes
+//!       labelled stage/chunk/slot, sync nodes highlighted)
 //!   shoc
 //!       install-time calibration: host microbenchmarks + GPU ranking
 //!   info
 //!       machine descriptions and artifact inventory
+//!
+//! `run` and `serve` accept `--drain <barrier|dataflow>` to pin the drain
+//! mode (default dataflow; barrier is the A/B baseline).
 
 use std::path::PathBuf;
 
@@ -28,8 +34,10 @@ use marrow::bench::workloads::{self, Benchmark};
 use marrow::cli::Args;
 use marrow::kb::KnowledgeBase;
 use marrow::platform::device::{i7_hd7950, opteron_6272_quad, Machine};
+use marrow::decompose::graph::{build_graph, flatten_stages};
 use marrow::runtime::artifacts::Manifest;
 use marrow::runtime::exec::RequestArgs;
+use marrow::scheduler::DrainMode;
 use marrow::session::serve::{ServeOpts, ServeRequest, SessionPool};
 use marrow::session::{Computation, Session};
 use marrow::sim::shoc;
@@ -49,6 +57,7 @@ fn run() -> Result<()> {
         Some("profile") => profile(&args),
         Some("run") => run_cmd(&args),
         Some("serve") => serve_cmd(&args),
+        Some("graph") => graph_cmd(&args),
         Some("shoc") => shoc_cmd(),
         Some("info") => info(),
         _ => {
@@ -63,8 +72,9 @@ marrow — multi-CPU/multi-GPU execution of compound multi-kernel computations
 usage:
   marrow eval <table2|table3|table4|table5|fig11|ablations|all>
   marrow profile --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--kb <path>]
-  marrow run --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--runs <r>] [--kb <path>] [--concurrency <c>] [--tasks-per-slot <t>]
-  marrow serve --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--requests <r>] [--concurrency <c>] [--pace-ms <m>] [--kb <path>] [--tasks-per-slot <t>]
+  marrow run --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--runs <r>] [--kb <path>] [--concurrency <c>] [--tasks-per-slot <t>] [--drain <barrier|dataflow>]
+  marrow serve --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--requests <r>] [--concurrency <c>] [--pace-ms <m>] [--kb <path>] [--tasks-per-slot <t>] [--drain <barrier|dataflow>]
+  marrow graph --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--tasks-per-slot <t>] [--kb <path>]
   marrow shoc
   marrow info";
 
@@ -129,6 +139,19 @@ fn pick_tasks_per_slot(args: &Args) -> Result<Option<u32>> {
     })
 }
 
+/// Optional `--drain <barrier|dataflow>` (backend default — dataflow —
+/// when absent).
+fn pick_drain_mode(args: &Args) -> Result<Option<DrainMode>> {
+    match args.get("drain") {
+        None => Ok(None),
+        Some(s) => DrainMode::parse(s).map(Some).ok_or_else(|| {
+            marrow::Error::Usage(format!(
+                "--drain expects 'barrier' or 'dataflow', got '{s}'"
+            ))
+        }),
+    }
+}
+
 /// Build a simulated session honouring the optional `--kb <path>` flag.
 fn sim_session(
     args: &Args,
@@ -184,16 +207,23 @@ fn run_cmd(args: &Args) -> Result<()> {
     if let Some(t) = pick_tasks_per_slot(args)? {
         session.set_tasks_per_slot(t);
     }
-    println!("benchmark: {name} ({} runs, simulated clock)", runs);
-    println!(" run | origin  | GPU share | exec time | balanced?");
-    println!("-----+---------+-----------+-----------+----------");
+    let drain = pick_drain_mode(args)?.unwrap_or_default();
+    session.set_drain_mode(drain);
+    println!(
+        "benchmark: {name} ({} runs, simulated clock, {} drain)",
+        runs,
+        drain.label()
+    );
+    println!(" run | origin  | GPU share | exec time | idle% | balanced?");
+    println!("-----+---------+-----------+-----------+-------+----------");
     for run in 0..runs {
         let out = session.run(&comp, &RequestArgs::default())?;
         println!(
-            " {run:>3} | {:<7} |   {:>5.1}%  | {:>7.3}ms | {}",
+            " {run:>3} | {:<7} |   {:>5.1}%  | {:>7.3}ms | {:>4.1}% | {}",
             out.origin.label(),
             100.0 * out.config.gpu_share(),
             out.exec.total * 1e3,
+            100.0 * out.exec.mean_idle_frac(),
             if out.rebalanced {
                 "rebalanced"
             } else if out.unbalanced {
@@ -210,11 +240,12 @@ fn run_cmd(args: &Args) -> Result<()> {
     );
     println!(
         "transfers: {:.1} MB uploaded, {:.1} MB downloaded, {} uploads \
-         avoided, {} steal migrations",
+         avoided, {} steal migrations; mean slot idle {:.1}%",
         st.bytes_uploaded as f64 / 1e6,
         st.bytes_downloaded as f64 / 1e6,
         st.uploads_avoided,
-        st.steal_migrations
+        st.steal_migrations,
+        st.mean_idle_pct()
     );
     session.save_kb()?;
     if args.get("kb").is_some() {
@@ -237,6 +268,7 @@ fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
     let concurrency = (args.get_u64("concurrency", 4)? as usize).max(1);
     let pace = args.get_f64("pace-ms", 2.0)? * 1e-3;
     let tasks_per_slot = pick_tasks_per_slot(args)?;
+    let drain_mode = pick_drain_mode(args)?;
     let name = b.name.clone();
     let comp = Computation::from(b);
     let machine = pick_machine(args)?;
@@ -256,7 +288,15 @@ fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
          (pace floor {:.1} ms/request, simulated clock)",
         pace * 1e3
     );
-    let report = pool.serve(&requests, &ServeOpts { concurrency, pace, tasks_per_slot })?;
+    let report = pool.serve(
+        &requests,
+        &ServeOpts {
+            concurrency,
+            pace,
+            tasks_per_slot,
+            drain_mode,
+        },
+    )?;
     println!("{}", report.summary());
     if args.get("kb").is_some() {
         let kb = pool.shared_kb();
@@ -264,6 +304,41 @@ fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
         kb.save()?;
         println!("knowledge base persisted ({} profiles)", kb.len());
     }
+    Ok(())
+}
+
+/// Dump the dataflow TaskGraph of a benchmark as GraphViz DOT (stderr gets
+/// a shape summary; stdout is pipeable into `dot -Tsvg`). The framework
+/// configuration is resolved through the same KB chain `marrow run` uses
+/// (honouring `--kb`), so the dumped schedule is the one a run would
+/// actually execute — not a hardcoded baseline.
+fn graph_cmd(args: &Args) -> Result<()> {
+    use marrow::decompose::graph::NodeKind;
+    let b = pick_benchmark(args)?;
+    let name = b.name.clone();
+    let machine = pick_machine(args)?;
+    let tasks_per_slot = pick_tasks_per_slot(args)?.unwrap_or(4);
+    let comp = Computation::from(b);
+    let session = sim_session(args, machine.clone(), 11)?;
+    let (cfg, origin) = session.resolve_config(&comp, &RequestArgs::default())?;
+    let (sct, _, units) = comp.spec()?;
+    let p = marrow::scheduler::plan(&machine, sct, units, &cfg, 1)?;
+    let stages = flatten_stages(sct)?;
+    let labels: Vec<String> = stages.iter().map(|s| s.label()).collect();
+    let g = build_graph(&stages, &p, tasks_per_slot)?;
+    eprintln!(
+        "# {}: {} nodes ({} sync) over {} stages, {} chunks in stage 0 \
+         (config {}: GPU {:.1}% / CPU {:.1}%)",
+        name,
+        g.n_nodes(),
+        g.nodes.iter().filter(|n| n.kind == NodeKind::Sync).count(),
+        g.n_stages,
+        g.nodes.iter().filter(|n| n.stage == 0).count(),
+        origin.label(),
+        100.0 * cfg.gpu_share(),
+        100.0 * cfg.cpu_share
+    );
+    println!("{}", g.to_dot(&labels));
     Ok(())
 }
 

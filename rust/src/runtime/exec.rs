@@ -226,6 +226,41 @@ impl<'a> ChunkRunner<'a> {
         self.run_kernel_with_cursor(slot, k, args, carried, start_unit, units, &mut cursor)
     }
 
+    /// Execute one flattened dataflow stage over a chunk (DESIGN.md §2.7).
+    ///
+    /// A kernel stage consumes request arguments from the cursor offsets
+    /// the graph builder computed for it (`vec_off`/`scalar_off` — earlier
+    /// stages already consumed theirs) and binds `carried` — the producer
+    /// chunk's first output — to its first VecIn, exactly like the
+    /// pipeline chaining in [`ChunkRunner::run_tree_on`]. Non-kernel
+    /// stages run whole through the tree traversal (they never carry).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_stage_on(
+        &self,
+        slot: ExecSlot,
+        stage: &Sct,
+        args: &RequestArgs,
+        carried: Option<ArgValue>,
+        vec_off: usize,
+        scalar_off: usize,
+        start_unit: u64,
+        units: u64,
+    ) -> Result<Vec<ArgValue>> {
+        match stage {
+            Sct::Kernel(k) => {
+                let mut cursor = ArgCursor {
+                    vec: vec_off,
+                    scalar: scalar_off,
+                };
+                self.run_kernel_with_cursor(slot, k, args, carried, start_unit, units, &mut cursor)
+            }
+            other => {
+                debug_assert!(carried.is_none(), "only kernel stages chain intermediates");
+                self.run_tree_on(slot, other, args, start_unit, units)
+            }
+        }
+    }
+
     /// Execute one kernel leaf over the unit range, consuming request args
     /// through `cursor`. When `carried` is set (pipeline chaining), the
     /// kernel's first VecIn binds to it instead of a request vector.

@@ -125,12 +125,16 @@ pub trait ResidencyView: Sync {
     fn note_steal_skipped(&self);
 }
 
-/// One resident entry: size, the staged host buffer (real runner only) and
-/// an LRU tick.
+/// One resident entry: size, the staged host buffer (real runner only), an
+/// LRU tick, and a consumer-refcount pin. Pinned entries (produced
+/// intermediates whose consumer chunks have not all retired yet —
+/// DESIGN.md §2.7) are exempt from LRU eviction: an intermediate must
+/// never be dropped while a task still needs it on that device.
 struct Resident {
     bytes: u64,
     staged: Option<Arc<Vec<f32>>>,
     tick: u64,
+    pins: u32,
 }
 
 #[derive(Default)]
@@ -227,6 +231,7 @@ impl ResidencyPool {
                         bytes,
                         staged: None,
                         tick,
+                        pins: 0,
                     },
                 );
                 pool.total_bytes += bytes;
@@ -286,6 +291,7 @@ impl ResidencyPool {
                         bytes,
                         staged: Some(staged.clone()),
                         tick,
+                        pins: 0,
                     },
                 )
                 .is_none()
@@ -303,9 +309,12 @@ impl ResidencyPool {
             return;
         }
         while pool.total_bytes > capacity && pool.entries.len() > 1 {
+            // Pinned entries (live intermediates) are not eviction
+            // candidates — their consumers have not retired yet.
             let oldest = pool
                 .entries
                 .iter()
+                .filter(|(_, e)| e.pins == 0)
                 .min_by_key(|(_, e)| e.tick)
                 .map(|(k, _)| *k);
             match oldest {
@@ -315,6 +324,51 @@ impl ResidencyPool {
                     }
                 }
                 None => break,
+            }
+        }
+    }
+
+    /// Record an intermediate *produced on-device* (a pipeline stage's
+    /// output landing on `slot`): resident without an upload — it never
+    /// crossed the link — and pinned by its consumer count. The entry
+    /// makes the range visible to the steal pricing
+    /// ([`ResidencyView::resident_range_bytes`]) and is exempt from LRU
+    /// eviction until [`ResidencyPool::unpin`] drops the last pin.
+    pub fn pin_range(&self, slot: ExecSlot, key: ResidencyKey, bytes: u64, pins: u32) {
+        if !self.enabled() {
+            return;
+        }
+        let tick = self.next_tick();
+        let mut slots = self.slots.lock().unwrap();
+        let pool = slots.entry(slot).or_default();
+        match pool.entries.get_mut(&key) {
+            Some(e) => {
+                e.tick = tick;
+                e.pins = e.pins.saturating_add(pins);
+            }
+            None => {
+                pool.entries.insert(
+                    key,
+                    Resident {
+                        bytes,
+                        staged: None,
+                        tick,
+                        pins,
+                    },
+                );
+                pool.total_bytes += bytes;
+            }
+        }
+    }
+
+    /// Drop one pin of `key` wherever it is resident (the producing slot is
+    /// unknown to the caller when the consumer ran elsewhere). Entries stay
+    /// resident once unpinned — they just become ordinary LRU candidates.
+    pub fn unpin(&self, key: &ResidencyKey) {
+        let mut slots = self.slots.lock().unwrap();
+        for pool in slots.values_mut() {
+            if let Some(e) = pool.entries.get_mut(key) {
+                e.pins = e.pins.saturating_sub(1);
             }
         }
     }
@@ -543,6 +597,58 @@ mod tests {
         pool.ensure_resident(gpu(0), key(1, 0, 128, 0), 600); // evicts key 0
         assert!(!pool.ensure_resident(gpu(0), key(0, 0, 128, 0), 600));
         assert!(pool.resident_bytes(gpu(0)) <= 1024 + 600);
+    }
+
+    #[test]
+    fn pinned_intermediates_survive_eviction_until_unpinned() {
+        let pool = ResidencyPool::new().with_capacity(1024);
+        let stage_key = ResidencyKey {
+            arg: ArgKey::Stage {
+                request: 1,
+                stage: 0,
+                out: 0,
+            },
+            start_unit: 0,
+            units: 64,
+            version: 0,
+        };
+        // A produced intermediate counts no upload and pins its entry.
+        pool.pin_range(gpu(0), stage_key, 600, 1);
+        assert_eq!(pool.stats().uploads, 0, "on-device output never uploads");
+        assert_eq!(pool.resident_range_bytes(gpu(0), 0, 64), 600);
+        // Pressure that would evict the (older) intermediate under plain
+        // LRU must evict the newer unpinned entry instead.
+        pool.ensure_resident(gpu(0), key(7, 0, 128, 0), 600);
+        assert_eq!(
+            pool.resident_range_bytes(gpu(0), 0, 64),
+            600,
+            "pinned intermediate must survive capacity pressure"
+        );
+        // Last consumer retired: the entry unpins and becomes evictable.
+        pool.unpin(&stage_key);
+        pool.ensure_resident(gpu(0), key(8, 0, 128, 0), 600);
+        pool.ensure_resident(gpu(0), key(9, 0, 128, 0), 600);
+        assert!(pool.resident_bytes(gpu(0)) <= 1024 + 600);
+    }
+
+    #[test]
+    fn pin_accumulates_and_unpin_is_per_consumer() {
+        let pool = ResidencyPool::new().with_capacity(1024);
+        let k0 = key(0, 0, 32, 0);
+        pool.pin_range(gpu(0), k0, 400, 2);
+        pool.unpin(&k0);
+        // One of two consumers retired: still pinned, so overflow evicts
+        // the older *unpinned* neighbour instead.
+        pool.ensure_resident(gpu(0), key(1, 0, 32, 0), 400);
+        pool.ensure_resident(gpu(0), key(2, 0, 32, 0), 400);
+        assert!(
+            pool.resident_range_bytes(gpu(0), 0, 32) >= 400,
+            "half-unpinned intermediate must still be resident"
+        );
+        // Last consumer retired: the next overflow may evict it.
+        pool.unpin(&k0);
+        pool.ensure_resident(gpu(0), key(3, 0, 32, 0), 400);
+        assert!(pool.resident_bytes(gpu(0)) <= 1024 + 400);
     }
 
     #[test]

@@ -10,15 +10,16 @@
 //! drift apart (the drain-order/plan-order mismatch the serial launcher
 //! suffered from). Per-slot busy clocks feed the execution monitor.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::data::vector::ArgValue;
+use crate::decompose::graph::{NodeKind, TaskGraph, TaskNode};
 use crate::decompose::ExecSlot;
 use crate::error::Result;
 use crate::runtime::residency::ResidencyView;
-use crate::scheduler::queues::{SharedQueues, Task, WorkQueues};
+use crate::scheduler::queues::{ReadyQueues, SharedQueues, Task, WorkQueues};
 
 /// One slot-execution engine the launcher drives: runs a single task and
 /// returns its partial outputs. Implementations decide how much real
@@ -315,6 +316,391 @@ pub fn launch_with<R: TaskRunner>(
     })
 }
 
+/// What a sync node decided about the rest of the request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncVerdict {
+    /// Release the downstream stages.
+    Continue,
+    /// Stoppage condition hit: cancel every node past this sync.
+    Break,
+}
+
+/// A sync node's result.
+pub struct SyncOutcome {
+    pub verdict: SyncVerdict,
+    /// Whole-request outputs produced by the sync: a reduction's folded
+    /// result, or a `Loop`'s concatenated body outputs when the sync ends
+    /// the request (sink or `Break`). `None` lets the final compute
+    /// stage's chunk partials stand.
+    pub outputs: Option<Vec<ArgValue>>,
+}
+
+/// The engine the dataflow drain drives: per-node chunk execution, host
+/// sync points, and optional incremental absorption of partials.
+pub trait GraphRunner: Sync {
+    /// Run one compute node on `slot`. `carried` is the producer chunk's
+    /// outputs when the node's stage chains a pipeline intermediate.
+    fn run_node(
+        &self,
+        slot: ExecSlot,
+        node: &TaskNode,
+        carried: Option<&[ArgValue]>,
+    ) -> Result<TaskOutput>;
+
+    /// Incrementally absorb a completed node's outputs (e.g. fold a
+    /// reduction partial the moment the sibling chunk retires, instead of
+    /// once per stage). Return `true` when absorbed — the launcher then
+    /// drops the buffers instead of slabbing them for the downstream sync.
+    fn absorb(&self, node: &TaskNode, outputs: &[ArgValue]) -> Result<bool> {
+        let _ = (node, outputs);
+        Ok(false)
+    }
+
+    /// Run a sync node host-side. `gathered` holds the non-absorbed
+    /// dependency outputs in seq (unit) order; `is_sink` marks the
+    /// request's final node.
+    fn run_sync(
+        &self,
+        node: &TaskNode,
+        gathered: &[(usize, Arc<Vec<ArgValue>>)],
+        is_sink: bool,
+    ) -> Result<SyncOutcome>;
+
+    /// A produced intermediate's last consumer retired — release whatever
+    /// the runner pinned for it (residency refcount hook).
+    fn retire_output(&self, node: &TaskNode) {
+        let _ = node;
+    }
+}
+
+/// Everything one dataflow drain produced.
+pub struct GraphOutput {
+    /// Final-frontier chunk partials in seq (unit) order — empty when a
+    /// sync node produced `outputs` instead.
+    pub partials: Vec<(usize, Vec<ArgValue>)>,
+    /// Whole-request outputs a sync node produced (reductions, loop ends).
+    pub outputs: Option<Vec<ArgValue>>,
+    pub clock: SlotClock,
+    pub stolen: u64,
+    pub steals_skipped: u64,
+    /// Nodes actually executed (cancelled nodes past a `Break` excluded).
+    pub executed: u64,
+}
+
+/// Drain a task graph with dependency-driven scheduling: per-slot ready
+/// deques admit a node when its dependency count hits zero; completions
+/// decrement consumers and wake parked workers; idle workers steal from
+/// the back of the longest ready deque. With a [`StealPolicy`], a steal
+/// candidate is priced against the *graph critical path*: its resident
+/// bytes on the home device are charged once for the node itself plus once
+/// per consumer chunk homed on the same device (their carried input now
+/// lands on the thief and must migrate too). Only sync nodes barrier; the
+/// first error stops every worker.
+pub fn launch_graph<R: GraphRunner>(
+    graph: &TaskGraph,
+    runner: &R,
+    opts: LaunchOpts<'_>,
+) -> Result<GraphOutput> {
+    let n = graph.n_nodes();
+    if n == 0 {
+        return Ok(GraphOutput {
+            partials: Vec::new(),
+            outputs: None,
+            clock: SlotClock::default(),
+            stolen: 0,
+            steals_skipped: 0,
+            executed: 0,
+        });
+    }
+    let node_slots: Vec<ExecSlot> = graph.nodes.iter().map(|nd| nd.partition.slot).collect();
+    let ready = ReadyQueues::new(&node_slots);
+    let nq = ready.n_queues();
+    let home: Vec<usize> = graph
+        .nodes
+        .iter()
+        .map(|nd| ready.queue_of(nd.partition.slot))
+        .collect();
+    let indeg: Vec<AtomicUsize> = graph
+        .deps
+        .iter()
+        .map(|d| AtomicUsize::new(d.len()))
+        .collect();
+    // Per-node remaining-consumer refcounts: an intermediate is dropped
+    // (and the runner's pin released) when its last consumer retires.
+    let pending: Vec<AtomicUsize> = graph
+        .consumers
+        .iter()
+        .map(|c| AtomicUsize::new(c.len()))
+        .collect();
+    let slab: Vec<Mutex<Option<Arc<Vec<ArgValue>>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    for (i, d) in graph.deps.iter().enumerate() {
+        if d.is_empty() {
+            ready.push(home[i], i);
+        }
+    }
+    let retired = AtomicUsize::new(0);
+    let executed = AtomicU64::new(0);
+    let stop = AtomicBool::new(false);
+    let failure: Mutex<Option<crate::error::Error>> = Mutex::new(None);
+    let final_outputs: Mutex<Option<Vec<ArgValue>>> = Mutex::new(None);
+    let stolen = AtomicU64::new(0);
+    let steals_skipped = AtomicU64::new(0);
+    let task_nanos = AtomicU64::new(0);
+    let task_count = AtomicU64::new(0);
+    let opts = &opts;
+
+    let t0 = Instant::now();
+    let busy: Vec<f64> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..nq)
+            .map(|i| {
+                let ready = &ready;
+                let home = &home;
+                let indeg = &indeg;
+                let pending = &pending;
+                let slab = &slab;
+                let retired = &retired;
+                let executed = &executed;
+                let stop = &stop;
+                let failure = &failure;
+                let final_outputs = &final_outputs;
+                let stolen = &stolen;
+                let steals_skipped = &steals_skipped;
+                let task_nanos = &task_nanos;
+                let task_count = &task_count;
+                scope.spawn(move || {
+                    let my_slot = ready.slot(i);
+                    let mut busy = 0.0f64;
+                    loop {
+                        if stop.load(Ordering::Relaxed)
+                            || retired.load(Ordering::Relaxed) >= n
+                        {
+                            ready.wake_all();
+                            break;
+                        }
+                        let epoch = ready.epoch();
+                        let id = match ready.pop_local(i) {
+                            Some(t) => Some(t),
+                            None => {
+                                let admit = |cand: usize, victim_len: usize| -> bool {
+                                    let nd = &graph.nodes[cand];
+                                    // Sync nodes are host work: free to move.
+                                    if nd.kind == NodeKind::Sync {
+                                        return true;
+                                    }
+                                    let pol = match &opts.policy {
+                                        None => return true,
+                                        Some(p) => p,
+                                    };
+                                    let p = &nd.partition;
+                                    if p.slot.same_device(&my_slot) {
+                                        return true;
+                                    }
+                                    let done = task_count.load(Ordering::Relaxed);
+                                    let avg = if done > 0 {
+                                        task_nanos.load(Ordering::Relaxed) as f64
+                                            / done as f64
+                                            * 1e-9
+                                    } else {
+                                        pol.default_task_secs
+                                    };
+                                    // Critical-path pricing: every consumer
+                                    // chunk homed on the victim's device
+                                    // will have to migrate its carried
+                                    // input too once this node's output
+                                    // lands on the thief.
+                                    let downstream = graph.consumers[cand]
+                                        .iter()
+                                        .filter(|&&c| {
+                                            let cn = &graph.nodes[c];
+                                            cn.kind == NodeKind::Compute
+                                                && cn.carried_from == Some(cand)
+                                                && cn.partition.slot.same_device(&p.slot)
+                                        })
+                                        .count()
+                                        as u64;
+                                    let bytes = pol
+                                        .residency
+                                        .resident_range_bytes(p.slot, p.start_unit, p.units)
+                                        .saturating_mul(1 + downstream);
+                                    let migration = bytes as f64 * pol.secs_per_byte;
+                                    migration <= victim_len as f64 * avg
+                                };
+                                let (t, skipped) = ready.steal_where(i, admit);
+                                if skipped > 0 {
+                                    steals_skipped.fetch_add(skipped, Ordering::Relaxed);
+                                    if let Some(pol) = &opts.policy {
+                                        for _ in 0..skipped {
+                                            pol.residency.note_steal_skipped();
+                                        }
+                                    }
+                                }
+                                if let Some(id) = t {
+                                    let nd = &graph.nodes[id];
+                                    if nd.kind == NodeKind::Compute
+                                        && !nd.partition.slot.same_device(&my_slot)
+                                    {
+                                        if let Some(pol) = &opts.policy {
+                                            pol.residency.note_migration(
+                                                nd.partition.slot,
+                                                my_slot,
+                                                nd.partition.start_unit,
+                                                nd.partition.units,
+                                            );
+                                        }
+                                    }
+                                }
+                                t
+                            }
+                        };
+                        let id = match id {
+                            Some(id) => id,
+                            None => {
+                                if stop.load(Ordering::Relaxed)
+                                    || retired.load(Ordering::Relaxed) >= n
+                                {
+                                    ready.wake_all();
+                                    break;
+                                }
+                                ready.wait_change(epoch);
+                                continue;
+                            }
+                        };
+                        let node = &graph.nodes[id];
+                        if node.kind == NodeKind::Compute && node.partition.slot != my_slot {
+                            stolen.fetch_add(1, Ordering::Relaxed);
+                        }
+
+                        // Run the node; any error stops the whole drain.
+                        let mut broke = false;
+                        let run_result: Result<()> = match node.kind {
+                            NodeKind::Compute => (|| {
+                                let carried: Option<Arc<Vec<ArgValue>>> =
+                                    match node.carried_from {
+                                        Some(p) => slab[p].lock().unwrap().clone(),
+                                        None => None,
+                                    };
+                                let start = Instant::now();
+                                let out = runner.run_node(
+                                    my_slot,
+                                    node,
+                                    carried.as_ref().map(|c| c.as_slice()),
+                                )?;
+                                let dt = out
+                                    .busy
+                                    .unwrap_or_else(|| start.elapsed().as_secs_f64());
+                                busy += dt;
+                                task_nanos.fetch_add((dt * 1e9) as u64, Ordering::Relaxed);
+                                task_count.fetch_add(1, Ordering::Relaxed);
+                                if !runner.absorb(node, &out.outputs)? {
+                                    *slab[id].lock().unwrap() =
+                                        Some(Arc::new(out.outputs));
+                                }
+                                Ok(())
+                            })(),
+                            NodeKind::Sync => (|| {
+                                let start = Instant::now();
+                                let mut gathered: Vec<(usize, Arc<Vec<ArgValue>>)> =
+                                    graph.deps[id]
+                                        .iter()
+                                        .filter_map(|&d| {
+                                            slab[d]
+                                                .lock()
+                                                .unwrap()
+                                                .clone()
+                                                .map(|o| (graph.nodes[d].seq, o))
+                                        })
+                                        .collect();
+                                gathered.sort_by_key(|(s, _)| *s);
+                                let is_sink = graph.consumers[id].is_empty();
+                                let out = runner.run_sync(node, &gathered, is_sink)?;
+                                busy += start.elapsed().as_secs_f64();
+                                if let Some(outs) = out.outputs {
+                                    *final_outputs.lock().unwrap() = Some(outs);
+                                }
+                                broke = out.verdict == SyncVerdict::Break;
+                                Ok(())
+                            })(),
+                        };
+                        if let Err(e) = run_result {
+                            let mut f = failure.lock().unwrap();
+                            if f.is_none() {
+                                *f = Some(e);
+                            }
+                            stop.store(true, Ordering::Relaxed);
+                            ready.wake_all();
+                            break;
+                        }
+                        executed.fetch_add(1, Ordering::Relaxed);
+
+                        // Release the inputs this node consumed: when a
+                        // producer's last consumer retires, its buffers
+                        // drop and the runner unpins its residency.
+                        for &d in &graph.deps[id] {
+                            if pending[d].fetch_sub(1, Ordering::Relaxed) == 1 {
+                                *slab[d].lock().unwrap() = None;
+                                runner.retire_output(&graph.nodes[d]);
+                            }
+                        }
+                        retired.fetch_add(1, Ordering::Relaxed);
+                        if broke {
+                            // Stoppage condition: every node past this sync
+                            // is cancelled (none can have started — the
+                            // sync gates them all transitively).
+                            retired.store(n, Ordering::Relaxed);
+                            ready.wake_all();
+                            continue;
+                        }
+                        // Wake consumers whose dependency count hit zero.
+                        for &c in &graph.consumers[id] {
+                            if indeg[c].fetch_sub(1, Ordering::Relaxed) == 1 {
+                                ready.push(home[c], c);
+                            }
+                        }
+                        if retired.load(Ordering::Relaxed) >= n {
+                            ready.wake_all();
+                        }
+                    }
+                    busy
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    if let Some(e) = failure.into_inner().unwrap() {
+        return Err(e);
+    }
+    let outputs = final_outputs.into_inner().unwrap();
+    let mut partials: Vec<(usize, Vec<ArgValue>)> = Vec::new();
+    if outputs.is_none() {
+        for id in graph.sinks() {
+            if graph.nodes[id].kind != NodeKind::Compute {
+                continue;
+            }
+            if let Some(o) = slab[id].lock().unwrap().take() {
+                let o = Arc::try_unwrap(o).unwrap_or_else(|a| (*a).clone());
+                partials.push((graph.nodes[id].seq, o));
+            }
+        }
+        partials.sort_by_key(|(s, _)| *s);
+    }
+    let slots: Vec<ExecSlot> = (0..nq).map(|i| ready.slot(i)).collect();
+    Ok(GraphOutput {
+        partials,
+        outputs,
+        clock: SlotClock {
+            slots,
+            busy,
+            elapsed,
+        },
+        stolen: stolen.into_inner(),
+        steals_skipped: steals_skipped.into_inner(),
+        executed: executed.into_inner(),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -552,6 +938,193 @@ mod tests {
         let queues = WorkQueues::from_plan_chunked(&p, 4);
         let err = launch(queues, &FailPast(4)).unwrap_err();
         assert!(format!("{err}").contains("injected"));
+    }
+
+    mod graph {
+        use super::two_slot_plan;
+        use crate::data::vector::ArgValue;
+        use crate::decompose::graph::{build_graph, flatten_stages};
+        use crate::decompose::ExecSlot;
+        use crate::error::{Error, Result};
+        use crate::scheduler::launcher::{
+            launch_graph, GraphRunner, LaunchOpts, SyncOutcome, SyncVerdict, TaskOutput,
+        };
+        use crate::sct::{KernelSpec, ParamSpec, Sct};
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use std::sync::Arc;
+
+        fn kernel(name: &str) -> Sct {
+            Sct::kernel(KernelSpec::new(name, vec![ParamSpec::VecIn], 1))
+        }
+
+        /// Stage s maps each element x -> x + 1; stage 0 seeds from the
+        /// chunk's unit indices. The final frontier must therefore hold
+        /// `unit + n_stages` — and only if every chunk chained through its
+        /// own producers in order.
+        struct StageAdder;
+
+        impl GraphRunner for StageAdder {
+            fn run_node(
+                &self,
+                _slot: ExecSlot,
+                node: &crate::decompose::graph::TaskNode,
+                carried: Option<&[ArgValue]>,
+            ) -> Result<TaskOutput> {
+                let base: Vec<f32> = match carried {
+                    Some(c) => c[0].as_f32()?.to_vec(),
+                    None => (node.partition.start_unit
+                        ..node.partition.start_unit + node.partition.units)
+                        .map(|u| u as f32)
+                        .collect(),
+                };
+                Ok(vec![ArgValue::F32(base.iter().map(|x| x + 1.0).collect())].into())
+            }
+
+            fn run_sync(
+                &self,
+                _node: &crate::decompose::graph::TaskNode,
+                _gathered: &[(usize, Arc<Vec<ArgValue>>)],
+                _is_sink: bool,
+            ) -> Result<SyncOutcome> {
+                Ok(SyncOutcome {
+                    verdict: SyncVerdict::Continue,
+                    outputs: None,
+                })
+            }
+        }
+
+        #[test]
+        fn pipeline_chunks_chain_through_their_own_producers() {
+            let sct = Sct::pipeline(vec![kernel("a"), kernel("b"), kernel("c")]);
+            let plan = two_slot_plan(8, 8);
+            let stages = flatten_stages(&sct).unwrap();
+            let graph = build_graph(&stages, &plan, 2).unwrap();
+            assert!(graph.n_nodes() >= 3 * 2, "3 stages x >= 2 chunks");
+            let out = launch_graph(&graph, &StageAdder, LaunchOpts::default()).unwrap();
+            assert!(out.outputs.is_none());
+            let mut vals = Vec::new();
+            for (_, o) in &out.partials {
+                vals.extend_from_slice(o[0].as_f32().unwrap());
+            }
+            let want: Vec<f32> = (0..16).map(|u| u as f32 + 3.0).collect();
+            assert_eq!(vals, want);
+            assert_eq!(out.executed as usize, graph.n_nodes());
+        }
+
+        /// Loop sync that breaks after a fixed iteration, returning the
+        /// concatenated body outputs of the final executed iteration.
+        struct LoopBreaker {
+            break_after: u32,
+            fan_ins: AtomicU64,
+        }
+
+        impl GraphRunner for LoopBreaker {
+            fn run_node(
+                &self,
+                _slot: ExecSlot,
+                node: &crate::decompose::graph::TaskNode,
+                _carried: Option<&[ArgValue]>,
+            ) -> Result<TaskOutput> {
+                // Value encodes the iteration (stage pairs [C, S] per iter).
+                let iter = node.stage / 2;
+                Ok(vec![ArgValue::F32(vec![
+                    iter as f32;
+                    node.partition.units as usize
+                ])]
+                .into())
+            }
+
+            fn run_sync(
+                &self,
+                node: &crate::decompose::graph::TaskNode,
+                gathered: &[(usize, Arc<Vec<ArgValue>>)],
+                is_sink: bool,
+            ) -> Result<SyncOutcome> {
+                self.fan_ins.fetch_add(gathered.len() as u64, Ordering::Relaxed);
+                let iter = node.stage / 2;
+                let brk = iter >= self.break_after;
+                let outputs = if brk || is_sink {
+                    let mut whole = Vec::new();
+                    for (_, o) in gathered {
+                        whole.extend_from_slice(o[0].as_f32()?);
+                    }
+                    Some(vec![ArgValue::F32(whole)])
+                } else {
+                    None
+                };
+                Ok(SyncOutcome {
+                    verdict: if brk {
+                        SyncVerdict::Break
+                    } else {
+                        SyncVerdict::Continue
+                    },
+                    outputs,
+                })
+            }
+        }
+
+        #[test]
+        fn loop_break_cancels_later_iterations() {
+            let sct = Sct::for_loop(kernel("body"), 5, true);
+            let plan = two_slot_plan(8, 8);
+            let stages = flatten_stages(&sct).unwrap();
+            let graph = build_graph(&stages, &plan, 2).unwrap();
+            let runner = LoopBreaker {
+                break_after: 1,
+                fan_ins: AtomicU64::new(0),
+            };
+            let out = launch_graph(&graph, &runner, LaunchOpts::default()).unwrap();
+            // The sync of iteration 1 broke: its gathered outputs are the
+            // request's result, and iterations 2-4 never executed.
+            let outs = out.outputs.expect("breaking sync must produce outputs");
+            assert_eq!(outs[0].as_f32().unwrap(), &vec![1.0f32; 16][..]);
+            assert!(
+                (out.executed as usize) < graph.n_nodes(),
+                "cancelled nodes must not run ({} of {})",
+                out.executed,
+                graph.n_nodes()
+            );
+            // Every executed sync gathered one partial per chunk.
+            let chunks = graph.nodes.iter().filter(|n| n.stage == 0).count() as u64;
+            assert_eq!(runner.fan_ins.load(Ordering::Relaxed), 2 * chunks);
+        }
+
+        #[test]
+        fn graph_errors_stop_the_drain() {
+            struct FailStage1;
+            impl GraphRunner for FailStage1 {
+                fn run_node(
+                    &self,
+                    _slot: ExecSlot,
+                    node: &crate::decompose::graph::TaskNode,
+                    _carried: Option<&[ArgValue]>,
+                ) -> Result<TaskOutput> {
+                    if node.stage == 1 {
+                        Err(Error::Runtime("boom".into()))
+                    } else {
+                        Ok(vec![ArgValue::F32(vec![0.0])].into())
+                    }
+                }
+
+                fn run_sync(
+                    &self,
+                    _node: &crate::decompose::graph::TaskNode,
+                    _gathered: &[(usize, Arc<Vec<ArgValue>>)],
+                    _is_sink: bool,
+                ) -> Result<SyncOutcome> {
+                    Ok(SyncOutcome {
+                        verdict: SyncVerdict::Continue,
+                        outputs: None,
+                    })
+                }
+            }
+            let sct = Sct::pipeline(vec![kernel("a"), kernel("b")]);
+            let plan = two_slot_plan(4, 4);
+            let stages = flatten_stages(&sct).unwrap();
+            let graph = build_graph(&stages, &plan, 2).unwrap();
+            let err = launch_graph(&graph, &FailStage1, LaunchOpts::default()).unwrap_err();
+            assert!(format!("{err}").contains("boom"));
+        }
     }
 
     #[test]

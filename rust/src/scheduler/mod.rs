@@ -32,9 +32,42 @@ use crate::sim::machine::SimMachine;
 use crate::tuner::profile::FrameworkConfig;
 
 pub use launcher::{
-    launch, launch_with, LaunchOpts, LaunchOutput, SlotClock, StealPolicy, TaskRunner,
+    launch, launch_graph, launch_with, GraphOutput, GraphRunner, LaunchOpts, LaunchOutput,
+    SlotClock, StealPolicy, SyncOutcome, SyncVerdict, TaskRunner,
 };
-pub use queues::{SharedQueues, Task, WorkQueues};
+pub use queues::{ReadyQueues, SharedQueues, Task, WorkQueues};
+
+/// How an execution request drains its tasks (DESIGN.md §2.7).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DrainMode {
+    /// Every stage of the request runs to a global barrier before the next
+    /// stage starts — the pre-dataflow behavior, kept as the A/B baseline
+    /// and for order-sensitive debugging.
+    Barrier,
+    /// Dependency-driven task graph: a consumer chunk starts as soon as the
+    /// producer chunks covering its unit range retire; only global-sync
+    /// points (Loop condition reductions, MapReduce fan-ins) barrier.
+    #[default]
+    Dataflow,
+}
+
+impl DrainMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DrainMode::Barrier => "barrier",
+            DrainMode::Dataflow => "dataflow",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<DrainMode> {
+        match s {
+            "barrier" => Some(DrainMode::Barrier),
+            "dataflow" => Some(DrainMode::Dataflow),
+            _ => None,
+        }
+    }
+}
 
 /// Result of one SCT execution request, as seen by the adaptation layer.
 #[derive(Clone, Debug)]
@@ -44,13 +77,40 @@ pub struct ExecOutcome {
     /// Per-device-type completion times.
     pub cpu_time: f64,
     pub gpu_time: f64,
-    /// Per-slot times of every *active* parallel execution.
+    /// Per-slot *busy* times of every active parallel execution, summed
+    /// over the whole request (never per-stage — the monitor must not
+    /// mistake a short unbalanced stage for a load spike).
     pub slot_times: Vec<f64>,
     /// Transfer accounting of this request (uploads, reuses, migrations)
     /// from the buffer-residency layer (DESIGN.md §2.6). Both backends
     /// fill it: Real from the chunk runner's pool, Sim from the priced
     /// model, so the two agree in shape.
     pub transfers: TransferStats,
+}
+
+impl ExecOutcome {
+    /// Idle seconds per active slot: wall clock minus the slot's busy time
+    /// (the overlap win dataflow draining buys is visible exactly here).
+    pub fn slot_idle(&self) -> Vec<f64> {
+        self.slot_times
+            .iter()
+            .map(|&busy| (self.total - busy).max(0.0))
+            .collect()
+    }
+
+    /// Mean idle fraction over the active slots (0 = perfectly packed,
+    /// 1 = slots idled the whole request).
+    pub fn mean_idle_frac(&self) -> f64 {
+        if self.total <= 0.0 || self.slot_times.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .slot_idle()
+            .iter()
+            .map(|&idle| idle / self.total)
+            .sum();
+        sum / self.slot_times.len() as f64
+    }
 }
 
 /// Outputs + timing of one full execution request. Timing-only backends
@@ -127,6 +187,12 @@ pub trait ExecEnv {
     fn set_residency_enabled(&mut self, on: bool) {
         let _ = on;
     }
+
+    /// Select the drain mode (default [`DrainMode::Dataflow`]; backends
+    /// without a stage structure ignore it).
+    fn set_drain_mode(&mut self, mode: DrainMode) {
+        let _ = mode;
+    }
 }
 
 /// Build the decomposition config for a framework configuration.
@@ -174,6 +240,13 @@ pub struct SimEnv {
     /// probes (the tuner's hypotheticals) never touch it — only full
     /// [`ExecEnv::run_request`]s move data.
     pub residency: ResidencyPool,
+    /// Drain model (DESIGN.md §2.7): `Dataflow` prices the aggregate cost
+    /// once — stages overlap, the makespan is the slowest slot's total
+    /// work. `Barrier` prices stage by stage, sums the per-stage maxima
+    /// and charges a sync-priced gate per stage boundary — the makespan a
+    /// per-stage drain actually exhibits. Both report whole-request
+    /// per-slot busy times, so tuner/KB entries stay comparable.
+    pub drain_mode: DrainMode,
 }
 
 impl SimEnv {
@@ -186,6 +259,62 @@ impl SimEnv {
             // over varying workloads must not grow the key set forever.
             residency: ResidencyPool::new()
                 .with_capacity(crate::scheduler::real::DEFAULT_RESIDENCY_CAPACITY),
+            drain_mode: DrainMode::default(),
+        }
+    }
+
+    /// Price one request under the drain mode. `cost` is the aggregate
+    /// cost profile (possibly transfer-discounted by the residency model);
+    /// barrier mode re-derives the per-stage split and carries the same
+    /// discount into each stage's transfer term.
+    fn price(
+        &mut self,
+        p: &PartitionPlan,
+        cost: &SctCost,
+        sct: &Sct,
+        cfg: &FrameworkConfig,
+        occ: f64,
+    ) -> crate::sim::machine::SimOutcome {
+        if self.drain_mode == DrainMode::Dataflow {
+            return self
+                .sim
+                .execute(p, cost, cfg.fission, occ, &cfg.overlap, self.chunk_units);
+        }
+        let mut stages = SctCost::stage_costs(sct, cost.copy_bytes);
+        let base = SctCost::from_sct(sct, cost.copy_bytes);
+        if base.transfer_bytes_per_unit > 0.0 {
+            let scale = cost.transfer_bytes_per_unit / base.transfer_bytes_per_unit;
+            for s in &mut stages {
+                s.transfer_bytes_per_unit *= scale;
+            }
+        }
+        let n_active = p.active().count();
+        let mut busy: Vec<f64> = vec![0.0; p.partitions.len()];
+        let (mut total, mut cpu_t, mut gpu_t) = (0.0f64, 0.0f64, 0.0f64);
+        for sc in &stages {
+            let out = self
+                .sim
+                .execute(p, sc, cfg.fission, occ, &cfg.overlap, self.chunk_units);
+            for (b, t) in busy.iter_mut().zip(&out.slot_times) {
+                *b += t;
+            }
+            // A barrier drain idles every slot until the stage's slowest
+            // finishes: the makespan is the *sum of per-stage maxima*,
+            // while each slot's busy clock only accumulates its own work.
+            total += out.total;
+            cpu_t += out.cpu_time;
+            gpu_t += out.gpu_time;
+        }
+        // Each stage boundary is a global sync point of the barrier drain
+        // (join every worker, re-dispatch the next stage's queues), priced
+        // like the other sync points; loops barrier once per iteration.
+        let boundaries = stages.len().saturating_sub(1) as f64 * cost.iter_factor.max(1.0);
+        total += self.sim.params.sync_us_per_slot * 1e-6 * n_active as f64 * boundaries;
+        crate::sim::machine::SimOutcome {
+            slot_times: busy,
+            total,
+            cpu_time: cpu_t,
+            gpu_time: gpu_t,
         }
     }
 
@@ -220,9 +349,7 @@ impl ExecEnv for SimEnv {
         let p = plan(&self.sim.machine, sct, total_units, cfg, 1)?;
         let cost = SctCost::from_sct(sct, self.copy_bytes);
         let occ = self.occupancy(sct, cfg);
-        let out = self
-            .sim
-            .execute(&p, &cost, cfg.fission, occ, &cfg.overlap, self.chunk_units);
+        let out = self.price(&p, &cost, sct, cfg, occ);
         Ok(ExecOutcome {
             total: out.total,
             cpu_time: out.cpu_time,
@@ -301,9 +428,7 @@ impl ExecEnv for SimEnv {
             let frac = gpu_resident_bytes as f64 / gpu_in_bytes as f64;
             priced.transfer_bytes_per_unit *= 1.0 - 0.5 * frac;
         }
-        let out = self
-            .sim
-            .execute(&p, &priced, cfg.fission, occ, &cfg.overlap, self.chunk_units);
+        let out = self.price(&p, &priced, sct, cfg, occ);
         Ok(RunOutcome {
             outputs: Vec::new(),
             exec: ExecOutcome {
@@ -327,6 +452,10 @@ impl ExecEnv for SimEnv {
 
     fn set_residency_enabled(&mut self, on: bool) {
         self.residency.set_enabled(on);
+    }
+
+    fn set_drain_mode(&mut self, mode: DrainMode) {
+        self.drain_mode = mode;
     }
 }
 
@@ -413,6 +542,73 @@ mod tests {
         };
         let want = occupancy::occupancy(gpu, &hog_fp, c.wgs);
         assert!((a - want).abs() < 1e-12, "hog constrains: {a} vs {want}");
+    }
+
+    #[test]
+    fn barrier_drain_prices_above_dataflow_on_pipelines() {
+        // Noise-free machines so the comparison is structural: the barrier
+        // drain's makespan is the sum of per-stage maxima plus a gate per
+        // stage boundary, which strictly exceeds the dataflow drain's
+        // max-over-slots — and its slots idle strictly more.
+        use crate::sim::cost::CostParams;
+        let quiet = CostParams {
+            cpu_noise: 0.0,
+            gpu_noise: 0.0,
+            straggler_p: 0.0,
+            ..CostParams::default()
+        };
+        let b = crate::bench::workloads::filter_pipeline(2048, 2048, false);
+        let mut df =
+            SimEnv::new(SimMachine::new(i7_hd7950(1), 17).with_params(quiet.clone()));
+        let mut bar = SimEnv::new(SimMachine::new(i7_hd7950(1), 17).with_params(quiet));
+        bar.set_drain_mode(DrainMode::Barrier);
+        let c = cfg(0.25);
+        let d = df.execute(&b.sct, b.total_units, &c).unwrap();
+        let r = bar.execute(&b.sct, b.total_units, &c).unwrap();
+        assert!(
+            r.total > d.total,
+            "barrier {} must exceed dataflow {}",
+            r.total,
+            d.total
+        );
+        assert!(
+            r.mean_idle_frac() > d.mean_idle_frac(),
+            "barrier idle {} must exceed dataflow idle {}",
+            r.mean_idle_frac(),
+            d.mean_idle_frac()
+        );
+        // Both report whole-request busy clocks over the same active slots.
+        assert_eq!(r.slot_times.len(), d.slot_times.len());
+        assert!(r.slot_times.iter().all(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn idle_fractions_derive_from_slot_times() {
+        let out = ExecOutcome {
+            total: 2.0,
+            cpu_time: 2.0,
+            gpu_time: 1.0,
+            slot_times: vec![2.0, 1.0],
+            transfers: TransferStats::default(),
+        };
+        assert_eq!(out.slot_idle(), vec![0.0, 1.0]);
+        assert!((out.mean_idle_frac() - 0.25).abs() < 1e-12);
+        let empty = ExecOutcome {
+            total: 0.0,
+            cpu_time: 0.0,
+            gpu_time: 0.0,
+            slot_times: Vec::new(),
+            transfers: TransferStats::default(),
+        };
+        assert_eq!(empty.mean_idle_frac(), 0.0);
+    }
+
+    #[test]
+    fn drain_mode_parses_and_labels() {
+        assert_eq!(DrainMode::parse("barrier"), Some(DrainMode::Barrier));
+        assert_eq!(DrainMode::parse("dataflow"), Some(DrainMode::Dataflow));
+        assert_eq!(DrainMode::parse("nope"), None);
+        assert_eq!(DrainMode::default().label(), "dataflow");
     }
 
     #[test]

@@ -10,9 +10,9 @@
 //! unit order no matter which slot ultimately ran a task.
 
 use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
-use crate::decompose::{ExecSlot, Partition, PartitionPlan};
+use crate::decompose::{chunk_partition, ExecSlot, Partition, PartitionPlan};
 
 /// One task: execute the SCT over a partition on a slot.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -44,28 +44,7 @@ impl WorkQueues {
     /// something to steal when another slot falls behind.
     pub fn from_plan_chunked(plan: &PartitionPlan, tasks_per_slot: u32) -> WorkQueues {
         let q = plan.quantum.max(1);
-        Self::build(plan, |part| {
-            let pieces = tasks_per_slot.max(1) as u64;
-            let grain = (part.units / pieces / q).max(1) * q;
-            let mut out = Vec::new();
-            let mut start = part.start_unit;
-            let mut left = part.units;
-            while left > grain + grain / 2 {
-                out.push(Partition {
-                    slot: part.slot,
-                    start_unit: start,
-                    units: grain,
-                });
-                start += grain;
-                left -= grain;
-            }
-            out.push(Partition {
-                slot: part.slot,
-                start_unit: start,
-                units: left,
-            });
-            out
-        })
+        Self::build(plan, |part| chunk_partition(part, q, tasks_per_slot))
     }
 
     fn build<F: Fn(&Partition) -> Vec<Partition>>(plan: &PartitionPlan, split: F) -> WorkQueues {
@@ -205,6 +184,128 @@ impl SharedQueues {
 
     pub fn remaining(&self) -> usize {
         self.queues.iter().map(|(_, q)| q.lock().unwrap().len()).sum()
+    }
+}
+
+/// Ready-set scheduler for the dataflow drain (DESIGN.md §2.7): per-slot
+/// deques of *node ids* that are admitted only when their dependency count
+/// hits zero. Completions on the launcher's workers push newly-released
+/// consumers here and bump an epoch counter, waking any parked worker —
+/// the dataflow replacement for the fixed per-stage queues above.
+pub struct ReadyQueues {
+    queues: Vec<(ExecSlot, Mutex<VecDeque<usize>>)>,
+    /// Epoch counter: bumped on every push / wake so a worker that saw
+    /// empty queues at epoch `e` can sleep without missing a wake-up
+    /// (recheck-then-wait on the same epoch).
+    epoch: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl ReadyQueues {
+    /// One deque per distinct execution slot, in first-seen (unit) order.
+    pub fn new(slots: &[ExecSlot]) -> ReadyQueues {
+        let mut queues: Vec<(ExecSlot, Mutex<VecDeque<usize>>)> = Vec::new();
+        for s in slots {
+            if !queues.iter().any(|(q, _)| q == s) {
+                queues.push((*s, Mutex::new(VecDeque::new())));
+            }
+        }
+        ReadyQueues {
+            queues,
+            epoch: Mutex::new(0),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn n_queues(&self) -> usize {
+        self.queues.len()
+    }
+
+    pub fn slot(&self, i: usize) -> ExecSlot {
+        self.queues[i].0
+    }
+
+    /// Queue index owning `slot` (queue 0 when the slot is unknown — sync
+    /// nodes are homed there and freely stealable).
+    pub fn queue_of(&self, slot: ExecSlot) -> usize {
+        self.queues
+            .iter()
+            .position(|(s, _)| *s == slot)
+            .unwrap_or(0)
+    }
+
+    /// Admit a node whose dependency count hit zero, then wake sleepers.
+    pub fn push(&self, queue: usize, node: usize) {
+        self.queues[queue].1.lock().unwrap().push_back(node);
+        self.bump();
+    }
+
+    pub fn pop_local(&self, i: usize) -> Option<usize> {
+        self.queues[i].1.lock().unwrap().pop_front()
+    }
+
+    /// Steal from the back of the longest other queue; `admit(node,
+    /// victim_len)` prices the candidate (same contract as
+    /// [`SharedQueues::steal_where`]). Returns the stolen node and how many
+    /// candidates were rejected on price.
+    pub fn steal_where<F>(&self, thief: usize, admit: F) -> (Option<usize>, u64)
+    where
+        F: Fn(usize, usize) -> bool,
+    {
+        let mut victims: Vec<(usize, usize)> = self
+            .queues
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != thief)
+            .map(|(i, (_, q))| (i, q.lock().unwrap().len()))
+            .filter(|(_, len)| *len > 0)
+            .collect();
+        victims.sort_by_key(|(_, len)| std::cmp::Reverse(*len));
+        let mut skipped = 0u64;
+        for (v, _) in victims {
+            let (cand, len) = {
+                let q = self.queues[v].1.lock().unwrap();
+                match q.back() {
+                    Some(&n) => (n, q.len()),
+                    None => continue,
+                }
+            };
+            if admit(cand, len) {
+                let mut q = self.queues[v].1.lock().unwrap();
+                if q.back() == Some(&cand) {
+                    q.pop_back();
+                    return (Some(cand), skipped);
+                }
+            } else {
+                skipped += 1;
+            }
+        }
+        (None, skipped)
+    }
+
+    /// Current epoch; pass it to [`ReadyQueues::wait_change`] after a
+    /// fruitless scan so an interleaved push can never be missed.
+    pub fn epoch(&self) -> u64 {
+        *self.epoch.lock().unwrap()
+    }
+
+    /// Park until the epoch moves past `seen` (returns immediately when it
+    /// already has).
+    pub fn wait_change(&self, seen: u64) {
+        let mut e = self.epoch.lock().unwrap();
+        while *e == seen {
+            e = self.cv.wait(e).unwrap();
+        }
+    }
+
+    /// Wake every parked worker (drain finished, error, or cancellation).
+    pub fn wake_all(&self) {
+        self.bump();
+    }
+
+    fn bump(&self) {
+        *self.epoch.lock().unwrap() += 1;
+        self.cv.notify_all();
     }
 }
 
@@ -393,6 +494,35 @@ mod tests {
         let out = shared.steal_where(0, |t, _| t.partition.slot.is_cpu());
         let stolen = out.task.expect("cpu-owned task must be admitted");
         assert!(stolen.partition.slot.is_cpu());
+    }
+
+    #[test]
+    fn ready_queues_release_steal_and_wake() {
+        let slots = [
+            ExecSlot::CpuSub { idx: 0 },
+            ExecSlot::GpuSlot { gpu: 0, slot: 0 },
+            ExecSlot::CpuSub { idx: 0 }, // duplicate collapses
+        ];
+        let rq = ReadyQueues::new(&slots);
+        assert_eq!(rq.n_queues(), 2);
+        assert_eq!(rq.queue_of(ExecSlot::GpuSlot { gpu: 0, slot: 0 }), 1);
+        assert_eq!(rq.queue_of(ExecSlot::GpuSlot { gpu: 9, slot: 9 }), 0);
+        rq.push(1, 7);
+        rq.push(1, 8);
+        // A thief takes the back of the longest other queue.
+        let (n, skipped) = rq.steal_where(0, |_, _| true);
+        assert_eq!(n, Some(8));
+        assert_eq!(skipped, 0);
+        // Rejections are counted, nothing moves.
+        let (n, skipped) = rq.steal_where(0, |_, _| false);
+        assert_eq!(n, None);
+        assert_eq!(skipped, 1);
+        assert_eq!(rq.pop_local(1), Some(7));
+        assert_eq!(rq.pop_local(1), None);
+        // wait_change on a stale epoch returns immediately.
+        let e = rq.epoch();
+        rq.wake_all();
+        rq.wait_change(e);
     }
 
     #[test]

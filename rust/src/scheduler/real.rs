@@ -19,22 +19,27 @@
 //! per-slot accounting are identical in both builds; the stub build runs
 //! fully parallel.
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 use crate::data::vector::{ArgValue, Merge};
+use crate::decompose::graph::{
+    build_graph, flatten_stages, NodeKind, StageOp, TaskGraph, TaskNode,
+};
 use crate::decompose::PartitionPlan;
 use crate::error::{Error, Result};
 use crate::platform::device::Machine;
 use crate::runtime::artifacts::Manifest;
 use crate::runtime::client::RtClient;
 use crate::runtime::exec::{ChunkRunner, RequestArgs};
-use crate::runtime::residency::{self, ArgKey, ResidencyPool, TransferStats};
+use crate::runtime::residency::{self, ArgKey, ResidencyKey, ResidencyPool, TransferStats};
 use crate::scheduler::launcher::{
-    launch_with, LaunchOpts, SlotClock, StealPolicy, TaskOutput, TaskRunner,
+    launch_graph, launch_with, GraphRunner, LaunchOpts, SlotClock, StealPolicy, SyncOutcome,
+    SyncVerdict, TaskOutput, TaskRunner,
 };
 use crate::scheduler::queues::{Task, WorkQueues};
-use crate::scheduler::{plan, ExecEnv, ExecOutcome, RunOutcome};
+use crate::scheduler::{plan, DrainMode, ExecEnv, ExecOutcome, RunOutcome};
 use crate::sct::{Reduction, Sct};
 use crate::tuner::profile::FrameworkConfig;
 
@@ -59,6 +64,10 @@ pub struct RealScheduler<'a> {
     /// upload (DESIGN.md §2.6). Shared with every [`ChunkRunner`] this
     /// scheduler spawns and consulted by the steal policy.
     pub residency: Arc<ResidencyPool>,
+    /// Drain mode (DESIGN.md §2.7): `Dataflow` (default) drains the
+    /// request's dependency-driven task graph with cross-stage overlap;
+    /// `Barrier` keeps the per-stage chunked-queue drain for A/B runs.
+    pub drain_mode: DrainMode,
 }
 
 /// Backwards-compatible name for the outputs+timing of one request.
@@ -125,6 +134,7 @@ impl<'a> RealScheduler<'a> {
             residency: Arc::new(
                 ResidencyPool::new().with_capacity(DEFAULT_RESIDENCY_CAPACITY),
             ),
+            drain_mode: DrainMode::default(),
         }
     }
 
@@ -177,6 +187,14 @@ impl<'a> RealScheduler<'a> {
         let request = self.request_id(sct, args, total_units);
         let before = self.residency.stats();
         let mut skipped = 0u64;
+        if self.drain_mode == DrainMode::Dataflow {
+            let (outputs, clock, skips) = self.run_graph(sct, args, &p, request)?;
+            let mut out = self.outcome(outputs, clock);
+            let mut transfers = self.residency.stats().minus(&before);
+            transfers.steals_skipped = skips;
+            out.exec.transfers = transfers;
+            return Ok(out);
+        }
         let out = match sct {
             Sct::Loop { body, state } if state.global_sync => {
                 // Stage 1-3 per iteration (Section 3.1): body on devices,
@@ -238,6 +256,56 @@ impl<'a> RealScheduler<'a> {
         Ok(out)
     }
 
+    /// Dataflow drain (DESIGN.md §2.7): flatten the request into its stage
+    /// program, build the (stage × chunk) task graph, and drain it with
+    /// dependency-driven scheduling — consumer chunks start the moment
+    /// their producer chunk retires, and only sync nodes barrier. Returns
+    /// (merged outputs, per-slot clocks, skipped steals).
+    fn run_graph(
+        &mut self,
+        sct: &Sct,
+        args: &RequestArgs,
+        p: &PartitionPlan,
+        request: u64,
+    ) -> Result<(Vec<ArgValue>, SlotClock, u64)> {
+        let stages = flatten_stages(sct)?;
+        let graph = build_graph(&stages, p, self.tasks_per_slot)?;
+        let chunk_runner = ChunkRunner::new(self.client, self.manifest)
+            .with_timings(self.timings.clone())
+            .with_residency(self.residency.clone(), request);
+        let runner = GraphTaskRunner {
+            runner: &chunk_runner,
+            stages: &stages,
+            graph: &graph,
+            args: RwLock::new(args.clone()),
+            request,
+            residency: self.residency.clone(),
+            fold: Mutex::new(IncrementalFold::default()),
+        };
+        let out = launch_graph(
+            &graph,
+            &runner,
+            LaunchOpts {
+                policy: Some(StealPolicy {
+                    residency: self.residency.as_ref(),
+                    secs_per_byte: self.steal_secs_per_byte(),
+                    default_task_secs: 1e-3,
+                }),
+            },
+        )?;
+        self.launches += chunk_runner.launch_count();
+        let outputs = match out.outputs {
+            Some(o) => o,
+            None => {
+                // partials come back seq-sorted (unit order).
+                let parts: Vec<Vec<ArgValue>> =
+                    out.partials.into_iter().map(|(_, o)| o).collect();
+                assemble_partials(&parts)?
+            }
+        };
+        Ok((outputs, out.clock, out.steals_skipped))
+    }
+
     /// Run a (loop-free) tree over every partition; concat outputs in unit
     /// order. Returns (outputs, per-slot clocks, skipped steals).
     fn run_plan(
@@ -249,24 +317,7 @@ impl<'a> RealScheduler<'a> {
     ) -> Result<(Vec<ArgValue>, SlotClock, u64)> {
         let queues = WorkQueues::from_plan_chunked(p, self.tasks_per_slot);
         let (partials, clock, skipped) = self.drain(sct, args, queues, request)?;
-        let n_out = partials.first().map(|o| o.len()).unwrap_or(0);
-        // Preallocate each concatenated output from the partials' total
-        // size — merging never reallocates mid-copy.
-        let mut outputs: Vec<Vec<f32>> = (0..n_out)
-            .map(|j| {
-                Vec::with_capacity(partials.iter().map(|part| part[j].len()).sum())
-            })
-            .collect();
-        for part in &partials {
-            for (o, val) in outputs.iter_mut().zip(part) {
-                o.extend_from_slice(val.as_f32()?);
-            }
-        }
-        Ok((
-            outputs.into_iter().map(ArgValue::F32).collect(),
-            clock,
-            skipped,
-        ))
+        Ok((assemble_partials(&partials)?, clock, skipped))
     }
 
     /// Drain prepared queues concurrently; partials come back seq-sorted
@@ -370,6 +421,285 @@ impl<'a> ExecEnv for RealScheduler<'a> {
     fn set_residency_enabled(&mut self, on: bool) {
         self.residency.set_enabled(on);
     }
+
+    fn set_drain_mode(&mut self, mode: DrainMode) {
+        self.drain_mode = mode;
+    }
+}
+
+/// Concatenate unit-ordered chunk partials into whole-request outputs —
+/// the single assembly both drains use, preallocated from the partials'
+/// total size so appends never reallocate mid-copy, and bit-identical
+/// across modes by construction.
+fn assemble_partials(partials: &[Vec<ArgValue>]) -> Result<Vec<ArgValue>> {
+    let n_out = partials.first().map(|o| o.len()).unwrap_or(0);
+    let mut outputs: Vec<Vec<f32>> = (0..n_out)
+        .map(|j| Vec::with_capacity(partials.iter().map(|part| part[j].len()).sum()))
+        .collect();
+    for part in partials {
+        for (o, val) in outputs.iter_mut().zip(part) {
+            o.extend_from_slice(val.as_f32()?);
+        }
+    }
+    Ok(outputs.into_iter().map(ArgValue::F32).collect())
+}
+
+/// Fold one same-shaped partial into the accumulator — shared by the
+/// barrier drain's end-of-stage fold and the dataflow drain's incremental
+/// fold, so the two paths can never drift apart.
+fn fold_into(acc: &mut [Vec<f32>], part: &[Vec<f32>], m: Merge, label: usize) -> Result<()> {
+    if part.len() != acc.len() {
+        return Err(Error::Spec(format!(
+            "partial #{label} has {} outputs, expected {} — reduction \
+             partials must be same-shaped",
+            part.len(),
+            acc.len()
+        )));
+    }
+    for (oi, (a, v)) in acc.iter_mut().zip(part).enumerate() {
+        if v.len() != a.len() {
+            return Err(Error::Spec(format!(
+                "partial #{label} output #{oi} has {} elements, expected {} \
+                 — refusing to fold shape-mismatched partials",
+                v.len(),
+                a.len()
+            )));
+        }
+        for i in 0..a.len() {
+            a[i] = m.fold(a[i], v[i]);
+        }
+    }
+    Ok(())
+}
+
+/// Order-preserving incremental reduction fold: partials fold the moment
+/// they arrive, but strictly in seq order (out-of-order arrivals are
+/// stashed), so the result is bit-identical to the barrier drain's
+/// end-of-stage [`fold_partials`] — float folds are rounding-order
+/// sensitive, and the two modes must agree to the bit.
+#[derive(Default)]
+struct IncrementalFold {
+    next_seq: usize,
+    acc: Option<Vec<Vec<f32>>>,
+    stash: HashMap<usize, Vec<Vec<f32>>>,
+}
+
+impl IncrementalFold {
+    fn absorb(&mut self, seq: usize, outputs: &[ArgValue], m: Merge) -> Result<()> {
+        let conv: Vec<Vec<f32>> = outputs
+            .iter()
+            .map(|v| v.as_f32().map(|s| s.to_vec()))
+            .collect::<Result<_>>()?;
+        self.stash.insert(seq, conv);
+        while let Some(part) = self.stash.remove(&self.next_seq) {
+            match &mut self.acc {
+                None => self.acc = Some(part),
+                Some(acc) => fold_into(acc, &part, m, self.next_seq)?,
+            }
+            self.next_seq += 1;
+        }
+        Ok(())
+    }
+
+    fn take_result(&mut self) -> Result<Vec<ArgValue>> {
+        if !self.stash.is_empty() {
+            return Err(Error::Spec(
+                "reduction fold is missing a partial (seq gap)".into(),
+            ));
+        }
+        let acc = self
+            .acc
+            .take()
+            .ok_or_else(|| Error::Spec("no partials to reduce".into()))?;
+        self.next_seq = 0;
+        Ok(acc.into_iter().map(ArgValue::F32).collect())
+    }
+}
+
+/// The dataflow drain's engine: executes one stage subtree per node
+/// through the shared [`ChunkRunner`], runs host sync points (Loop state
+/// updates, reductions), pins produced intermediates in the residency pool
+/// until their last consumer retires, and folds reduction partials
+/// incrementally as sibling chunks complete.
+struct GraphTaskRunner<'r, 'a, 's> {
+    runner: &'r ChunkRunner<'a>,
+    stages: &'r [StageOp<'s>],
+    graph: &'r TaskGraph,
+    /// Request arguments, host-updated by global-sync Loop nodes. Compute
+    /// nodes hold the read lock while executing; a sync node's write can
+    /// never deadlock because every reader is (transitively) one of its
+    /// dependencies and has retired by the time the sync runs.
+    args: RwLock<RequestArgs>,
+    request: u64,
+    residency: Arc<ResidencyPool>,
+    fold: Mutex<IncrementalFold>,
+}
+
+impl GraphTaskRunner<'_, '_, '_> {
+    fn stage_key(&self, node: &TaskNode) -> ResidencyKey {
+        ResidencyKey {
+            arg: ArgKey::Stage {
+                request: self.request,
+                stage: node.stage,
+                out: 0,
+            },
+            start_unit: node.partition.start_unit,
+            units: node.partition.units,
+            version: 0,
+        }
+    }
+}
+
+impl GraphRunner for GraphTaskRunner<'_, '_, '_> {
+    fn run_node(
+        &self,
+        slot: crate::decompose::ExecSlot,
+        node: &TaskNode,
+        carried: Option<&[ArgValue]>,
+    ) -> Result<TaskOutput> {
+        let (stage_sct, vec_off, scalar_off) = match &self.stages[node.stage as usize] {
+            StageOp::Compute {
+                sct,
+                vec_off,
+                scalar_off,
+                ..
+            } => (*sct, *vec_off, *scalar_off),
+            _ => {
+                return Err(Error::Spec(
+                    "sync node dispatched to a compute worker".into(),
+                ))
+            }
+        };
+        let carried_val = carried.map(|c| c[0].clone());
+        let _exclusive = if cfg!(feature = "pjrt") {
+            Some(self.runner.client.exclusive())
+        } else {
+            None
+        };
+        // Busy time measured inside the gate (pure execution, no lock
+        // waits); residency attributed to the slot *executing* the node.
+        let start = Instant::now();
+        let outputs = {
+            let args = self.args.read().unwrap();
+            self.runner.run_stage_on(
+                slot,
+                stage_sct,
+                &args,
+                carried_val,
+                vec_off,
+                scalar_off,
+                node.partition.start_unit,
+                node.partition.units,
+            )?
+        };
+        let busy = start.elapsed().as_secs_f64();
+        // Pin the produced intermediate for each consumer that will carry
+        // it: the range stays device-resident (and visible to the steal
+        // pricing) until the last consumer retires.
+        let carried_consumers = self.graph.consumers[node.id]
+            .iter()
+            .filter(|&&c| self.graph.nodes[c].carried_from == Some(node.id))
+            .count() as u32;
+        if carried_consumers > 0 {
+            let bytes = outputs.first().map(|o| o.len() as u64 * 4).unwrap_or(0);
+            self.residency
+                .pin_range(slot, self.stage_key(node), bytes, carried_consumers);
+        }
+        Ok(TaskOutput {
+            outputs,
+            busy: Some(busy),
+        })
+    }
+
+    fn absorb(&self, node: &TaskNode, outputs: &[ArgValue]) -> Result<bool> {
+        // Only the direct producers of a foldable reduction absorb: their
+        // partials fold as they complete instead of once at the fan-in.
+        let reduce = match self.stages.get(node.stage as usize + 1) {
+            Some(StageOp::Reduce { reduce }) => reduce,
+            _ => return Ok(false),
+        };
+        let m = match reduce {
+            Reduction::Host(m) => *m,
+            Reduction::Device { combine, .. } => *combine,
+            // Host functions need every partial at once, in order.
+            Reduction::HostFn(_) => return Ok(false),
+        };
+        self.fold.lock().unwrap().absorb(node.seq, outputs, m)?;
+        Ok(true)
+    }
+
+    fn run_sync(
+        &self,
+        node: &TaskNode,
+        gathered: &[(usize, Arc<Vec<ArgValue>>)],
+        is_sink: bool,
+    ) -> Result<SyncOutcome> {
+        match &self.stages[node.stage as usize] {
+            StageOp::LoopSync { state, iter } => {
+                // Stage 3 of the Loop (Section 3.1): concatenate the
+                // iteration's body outputs, run the host update, bump the
+                // versions of rewritten args (their residency is stale).
+                let parts: Vec<Vec<ArgValue>> =
+                    gathered.iter().map(|(_, o)| o.as_ref().clone()).collect();
+                let outs = assemble_partials(&parts)?;
+                let mut go = true;
+                if let Some(update) = &state.update {
+                    let mut local = self.args.write().unwrap();
+                    let mut vecs: Vec<ArgValue> =
+                        local.vectors.iter().map(|v| v.value.clone()).collect();
+                    go = update(*iter, &mut vecs, &outs);
+                    for (i, (v, nv)) in local.vectors.iter_mut().zip(vecs).enumerate() {
+                        let changed = !v.value.same_contents(&nv);
+                        v.value = nv;
+                        if changed {
+                            v.bump_version();
+                            self.residency.invalidate_arg(ArgKey::Input {
+                                request: self.request,
+                                idx: i as u32,
+                            });
+                        }
+                    }
+                }
+                let brk = !go;
+                Ok(SyncOutcome {
+                    verdict: if brk {
+                        SyncVerdict::Break
+                    } else {
+                        SyncVerdict::Continue
+                    },
+                    // The request's outputs are this iteration's body
+                    // outputs when the loop ends here (break or last
+                    // iteration); otherwise they are transient.
+                    outputs: if brk || is_sink { Some(outs) } else { None },
+                })
+            }
+            StageOp::Reduce { reduce } => {
+                let outs = match reduce {
+                    Reduction::HostFn(f) => {
+                        let firsts: Vec<ArgValue> =
+                            gathered.iter().map(|(_, p)| p[0].clone()).collect();
+                        vec![f(&firsts)]
+                    }
+                    Reduction::Host(_) | Reduction::Device { .. } => {
+                        self.fold.lock().unwrap().take_result()?
+                    }
+                };
+                Ok(SyncOutcome {
+                    verdict: SyncVerdict::Continue,
+                    outputs: Some(outs),
+                })
+            }
+            StageOp::Compute { .. } => Err(Error::Spec(
+                "compute node dispatched to the sync path".into(),
+            )),
+        }
+    }
+
+    fn retire_output(&self, node: &TaskNode) {
+        if node.kind == NodeKind::Compute {
+            self.residency.unpin(&self.stage_key(node));
+        }
+    }
 }
 
 /// Merge per-partition partials under the request's reduction.
@@ -396,28 +726,11 @@ fn fold_partials(partials: &[Vec<ArgValue>], m: Merge) -> Result<Vec<ArgValue>> 
         .map(|v| v.as_f32().map(|s| s.to_vec()))
         .collect::<Result<_>>()?;
     for (pi, part) in partials.iter().enumerate().skip(1) {
-        if part.len() != out.len() {
-            return Err(Error::Spec(format!(
-                "partial #{pi} has {} outputs, expected {} — reduction \
-                 partials must be same-shaped",
-                part.len(),
-                out.len()
-            )));
-        }
-        for (oi, (acc, val)) in out.iter_mut().zip(part).enumerate() {
-            let v = val.as_f32()?;
-            if v.len() != acc.len() {
-                return Err(Error::Spec(format!(
-                    "partial #{pi} output #{oi} has {} elements, expected {} \
-                     — refusing to fold shape-mismatched partials",
-                    v.len(),
-                    acc.len()
-                )));
-            }
-            for i in 0..acc.len() {
-                acc[i] = m.fold(acc[i], v[i]);
-            }
-        }
+        let conv: Vec<Vec<f32>> = part
+            .iter()
+            .map(|v| v.as_f32().map(|s| s.to_vec()))
+            .collect::<Result<_>>()?;
+        fold_into(&mut out, &conv, m, pi)?;
     }
     Ok(out.into_iter().map(ArgValue::F32).collect())
 }
@@ -463,6 +776,46 @@ mod tests {
         ];
         let out = reduce_partials(&reduce, &partials).unwrap();
         assert_eq!(out[0].as_f32().unwrap(), &[8.0, 15.0]);
+    }
+
+    #[test]
+    fn incremental_fold_matches_barrier_fold_bitwise() {
+        // Partials arrive out of order (the dataflow drain's completion
+        // order), but the stash folds them strictly in seq order — the
+        // result must equal the barrier drain's fold_partials to the bit
+        // (float folds are rounding-order sensitive).
+        let parts: Vec<Vec<ArgValue>> = (0..5)
+            .map(|i| {
+                vec![ArgValue::F32(vec![
+                    0.1 * i as f32 + 0.333,
+                    1.0 / (i as f32 + 1.0),
+                ])]
+            })
+            .collect();
+        let want = fold_partials(&parts, Merge::Add).unwrap();
+        let mut f = IncrementalFold::default();
+        for seq in [3usize, 0, 4, 1, 2] {
+            f.absorb(seq, &parts[seq], Merge::Add).unwrap();
+        }
+        let got = f.take_result().unwrap();
+        let bits = |v: &ArgValue| -> Vec<u32> {
+            v.as_f32().unwrap().iter().map(|x| x.to_bits()).collect()
+        };
+        assert_eq!(bits(&got[0]), bits(&want[0]));
+    }
+
+    #[test]
+    fn incremental_fold_rejects_gaps_and_shape_mismatch() {
+        let mut f = IncrementalFold::default();
+        f.absorb(1, &[ArgValue::F32(vec![1.0])], Merge::Add).unwrap();
+        assert!(f.take_result().is_err(), "seq 0 never arrived");
+        let mut f = IncrementalFold::default();
+        f.absorb(0, &[ArgValue::F32(vec![1.0, 2.0])], Merge::Add)
+            .unwrap();
+        let err = f
+            .absorb(1, &[ArgValue::F32(vec![1.0])], Merge::Add)
+            .unwrap_err();
+        assert!(format!("{err}").contains("shape-mismatched"));
     }
 
     #[test]

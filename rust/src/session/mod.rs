@@ -51,7 +51,7 @@ use crate::runtime::artifacts::Manifest;
 use crate::runtime::client::RtClient;
 use crate::runtime::exec::RequestArgs;
 use crate::scheduler::real::RealScheduler;
-use crate::scheduler::{ExecEnv, ExecOutcome, SimEnv};
+use crate::scheduler::{DrainMode, ExecEnv, ExecOutcome, SimEnv};
 use crate::sim::machine::SimMachine;
 use crate::tuner::builder::{build_profile, TunerOpts};
 use crate::tuner::profile::{FrameworkConfig, Profile, ProfileOrigin};
@@ -119,6 +119,21 @@ pub struct SessionStats {
     pub bytes_downloaded: u64,
     pub uploads_avoided: u64,
     pub steal_migrations: u64,
+    /// Sum over runs of the request's mean slot-idle fraction
+    /// ([`ExecOutcome::mean_idle_frac`]) — divide by `runs` for the mean;
+    /// the overlap win of the dataflow drain shows up here.
+    pub idle_frac_sum: f64,
+}
+
+impl SessionStats {
+    /// Mean slot idle percentage over every run (0 when nothing ran).
+    pub fn mean_idle_pct(&self) -> f64 {
+        if self.runs == 0 {
+            0.0
+        } else {
+            100.0 * self.idle_frac_sum / self.runs as f64
+        }
+    }
 }
 
 /// Per-configuration tweaks for [`Session::run_with`]: applied on top of a
@@ -311,6 +326,19 @@ impl<E: ExecEnv> Session<E> {
         self.env.lock().unwrap().set_residency_enabled(on);
     }
 
+    /// Select the drain mode (default [`DrainMode::Dataflow`]; `Barrier`
+    /// restores the per-stage drain for A/B comparisons — DESIGN.md §2.7).
+    pub fn with_drain_mode(self, mode: DrainMode) -> Session<E> {
+        self.set_drain_mode(mode);
+        self
+    }
+
+    /// Runtime form of [`Session::with_drain_mode`] (the serve path
+    /// applies the knob to pooled sessions).
+    pub fn set_drain_mode(&self, mode: DrainMode) {
+        self.env.lock().unwrap().set_drain_mode(mode);
+    }
+
     // --- the seamless path ------------------------------------------------
 
     /// Resolve the framework configuration for a computation through the
@@ -393,6 +421,7 @@ impl<E: ExecEnv> Session<E> {
             status
         };
         let t = out.exec.transfers;
+        let idle = out.exec.mean_idle_frac();
         self.bump(|s| {
             if status.unbalanced {
                 s.unbalanced_runs += 1;
@@ -405,6 +434,7 @@ impl<E: ExecEnv> Session<E> {
             s.bytes_downloaded += t.bytes_downloaded;
             s.uploads_avoided += t.uploads_avoided;
             s.steal_migrations += t.steal_migrations;
+            s.idle_frac_sum += idle;
         });
 
         // Feed the observed outcome back into the KB: refined profiles
@@ -468,6 +498,7 @@ impl<E: ExecEnv> Session<E> {
             (out, cfg, launches)
         };
         let t = out.exec.transfers;
+        let idle = out.exec.mean_idle_frac();
         self.bump(|s| {
             s.runs += 1;
             s.pinned += 1;
@@ -475,6 +506,7 @@ impl<E: ExecEnv> Session<E> {
             s.bytes_downloaded += t.bytes_downloaded;
             s.uploads_avoided += t.uploads_avoided;
             s.steal_migrations += t.steal_migrations;
+            s.idle_frac_sum += idle;
         });
         Ok(SessionOutcome {
             outputs: out.outputs,

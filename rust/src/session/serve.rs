@@ -24,7 +24,7 @@ use crate::error::Result;
 use crate::kb::KnowledgeBase;
 use crate::platform::device::Machine;
 use crate::runtime::exec::RequestArgs;
-use crate::scheduler::ExecEnv;
+use crate::scheduler::{DrainMode, ExecEnv};
 use crate::session::{Computation, ConfigOrigin, Session, SessionStats};
 use crate::util::stats::percentile;
 
@@ -55,6 +55,9 @@ pub struct ServeOpts {
     /// Override the stealable-tasks-per-slot knob on every pooled session
     /// (`--tasks-per-slot`); `None` keeps the backend default.
     pub tasks_per_slot: Option<u32>,
+    /// Override the drain mode on every pooled session (`--drain`);
+    /// `None` keeps the backend default ([`DrainMode::Dataflow`]).
+    pub drain_mode: Option<DrainMode>,
 }
 
 impl Default for ServeOpts {
@@ -63,6 +66,7 @@ impl Default for ServeOpts {
             concurrency: 1,
             pace: 0.0,
             tasks_per_slot: None,
+            drain_mode: None,
         }
     }
 }
@@ -103,7 +107,8 @@ impl ServeReport {
         format!(
             "{} requests in {:.3}s @ concurrency {} -> {:.1} req/s \
              (p50 {:.2}ms, p99 {:.2}ms; {} kb hits, {} built, {} derived; \
-             {:.1} MB uploaded, {} uploads avoided, {} steal migrations)",
+             {:.1} MB uploaded, {} uploads avoided, {} steal migrations; \
+             mean slot idle {:.1}%)",
             self.completed,
             self.wall_secs,
             self.concurrency,
@@ -115,7 +120,8 @@ impl ServeReport {
             self.stats.derived,
             self.stats.bytes_uploaded as f64 / 1e6,
             self.stats.uploads_avoided,
-            self.stats.steal_migrations
+            self.stats.steal_migrations,
+            self.stats.mean_idle_pct()
         )
     }
 }
@@ -178,6 +184,7 @@ impl<E: ExecEnv + Send> SessionPool<E> {
             stats.bytes_downloaded += st.bytes_downloaded;
             stats.uploads_avoided += st.uploads_avoided;
             stats.steal_migrations += st.steal_migrations;
+            stats.idle_frac_sum += st.idle_frac_sum;
         }
         stats
     }
@@ -190,6 +197,11 @@ impl<E: ExecEnv + Send> SessionPool<E> {
         if let Some(n) = opts.tasks_per_slot {
             for s in &self.sessions {
                 s.set_tasks_per_slot(n);
+            }
+        }
+        if let Some(mode) = opts.drain_mode {
+            for s in &self.sessions {
+                s.set_drain_mode(mode);
             }
         }
         // Snapshot so the report's stats cover this run only, even when the
@@ -266,6 +278,7 @@ impl<E: ExecEnv + Send> SessionPool<E> {
             bytes_downloaded: after.bytes_downloaded - stats_before.bytes_downloaded,
             uploads_avoided: after.uploads_avoided - stats_before.uploads_avoided,
             steal_migrations: after.steal_migrations - stats_before.steal_migrations,
+            idle_frac_sum: after.idle_frac_sum - stats_before.idle_frac_sum,
         };
         Ok(ServeReport {
             completed: traces.len(),
@@ -312,7 +325,7 @@ mod tests {
         let pool = SessionPool::build(3, |i| Session::simulated(i7_hd7950(1), 40 + i as u64));
         let reqs = requests(6);
         let report = pool
-            .serve(&reqs, &ServeOpts { concurrency: 3, pace: 0.0, tasks_per_slot: None })
+            .serve(&reqs, &ServeOpts { concurrency: 3, pace: 0.0, tasks_per_slot: None, drain_mode: None })
             .unwrap();
         assert_eq!(report.completed, 6);
         // One cold start warms the whole pool: exactly one build (plus any
@@ -328,7 +341,7 @@ mod tests {
             &i7_hd7950(1),
             7,
             &reqs,
-            &ServeOpts { concurrency: 2, pace: 0.002, tasks_per_slot: None },
+            &ServeOpts { concurrency: 2, pace: 0.002, tasks_per_slot: None, drain_mode: None },
         )
         .unwrap();
         assert_eq!(report.completed, 8);
@@ -344,7 +357,7 @@ mod tests {
     fn concurrency_is_capped_by_pool_size() {
         let pool = SessionPool::build(2, |i| Session::simulated(i7_hd7950(1), i as u64));
         let report = pool
-            .serve(&requests(4), &ServeOpts { concurrency: 16, pace: 0.0, tasks_per_slot: None })
+            .serve(&requests(4), &ServeOpts { concurrency: 16, pace: 0.0, tasks_per_slot: None, drain_mode: None })
             .unwrap();
         assert_eq!(report.concurrency, 2);
         assert_eq!(report.completed, 4);

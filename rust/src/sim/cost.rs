@@ -107,6 +107,65 @@ impl SctCost {
             iter_factor: iter,
         }
     }
+
+    /// Per-stage cost profiles, one per kernel leaf in execution order —
+    /// what a *barrier* drain prices stage by stage (DESIGN.md §2.7: the
+    /// dataflow drain overlaps stages, so it prices the aggregate instead).
+    ///
+    /// The stage costs partition the aggregate: per-stage flops/passes carry
+    /// the leaf's own loop-iteration multiplier, host<->device transfer is
+    /// split evenly across stages (intermediates stay device-resident, so
+    /// only the domain crosses the link once in and once out), and the
+    /// COPY re-broadcast plus every global sync point land on the last
+    /// stage — a global sync gates the whole iteration, not one kernel.
+    pub fn stage_costs(sct: &Sct, copy_bytes: f64) -> Vec<SctCost> {
+        fn collect(sct: &Sct, mult: f64, out: &mut Vec<(f64, f64, f64)>) {
+            match sct {
+                Sct::Kernel(k) => {
+                    out.push((k.flops_per_unit * mult, k.bytes_per_unit, k.passes * mult))
+                }
+                Sct::Pipeline(stages) => {
+                    for s in stages {
+                        collect(s, mult, out);
+                    }
+                }
+                Sct::Loop { body, state } => {
+                    collect(body, mult * state.max_iters as f64, out)
+                }
+                Sct::Map(t) => collect(t, mult, out),
+                Sct::MapReduce { map, reduce } => {
+                    collect(map, mult, out);
+                    if let crate::sct::Reduction::Device { kernel, .. } = reduce {
+                        out.push((
+                            kernel.flops_per_unit * mult,
+                            kernel.bytes_per_unit,
+                            kernel.passes * mult,
+                        ));
+                    }
+                }
+            }
+        }
+        let full = SctCost::from_sct(sct, copy_bytes);
+        let mut leaves = Vec::new();
+        collect(sct, 1.0, &mut leaves);
+        let n = leaves.len().max(1);
+        leaves
+            .iter()
+            .enumerate()
+            .map(|(i, &(flops, bytes, passes))| {
+                let last = i + 1 == n;
+                SctCost {
+                    flops_per_unit: flops,
+                    bytes_per_unit: bytes,
+                    passes,
+                    transfer_bytes_per_unit: full.transfer_bytes_per_unit / n as f64,
+                    copy_bytes: if last { full.copy_bytes } else { 0.0 },
+                    sync_points: if last { full.sync_points } else { 0 },
+                    iter_factor: full.iter_factor,
+                }
+            })
+            .collect()
+    }
 }
 
 /// Time (seconds, noise-free) for a CPU sub-device to execute `units` of the
@@ -323,6 +382,42 @@ mod tests {
         let p = CostParams::default();
         let t_small = cpu_partition_time(64, &sub, &m.cpu, &cost, &p, 1.0, 256, 10);
         assert!(t_small > p.sync_us_per_slot * 1e-6 * 50.0 * 0.9);
+    }
+
+    #[test]
+    fn stage_costs_partition_the_aggregate() {
+        // 3-stage pipeline: per-stage flops/passes must sum to the
+        // aggregate, transfer must split evenly, and the global-sync /
+        // COPY terms must land on the last stage only.
+        let mut a = streaming_kernel();
+        a.family = "a".into();
+        let mut b = streaming_kernel();
+        b.family = "b".into();
+        b.flops_per_unit = 8.0;
+        let sct = Sct::for_loop(
+            Sct::pipeline(vec![Sct::kernel(a), Sct::kernel(b)]),
+            5,
+            true,
+        );
+        let full = SctCost::from_sct(&sct, 1024.0);
+        let stages = SctCost::stage_costs(&sct, 1024.0);
+        assert_eq!(stages.len(), 2);
+        let flops: f64 = stages.iter().map(|s| s.flops_per_unit).sum();
+        assert!((flops - full.flops_per_unit).abs() < 1e-9);
+        let transfer: f64 = stages.iter().map(|s| s.transfer_bytes_per_unit).sum();
+        assert!((transfer - full.transfer_bytes_per_unit).abs() < 1e-9);
+        assert_eq!(stages[0].sync_points, 0);
+        assert_eq!(stages[1].sync_points, full.sync_points);
+        assert_eq!(stages[0].copy_bytes, 0.0);
+        assert_eq!(stages[1].copy_bytes, full.copy_bytes);
+        assert_eq!(stages[0].iter_factor, 5.0);
+        // A single-kernel tree yields one stage equal to the aggregate.
+        let single = SctCost::stage_costs(&Sct::kernel(streaming_kernel()), 0.0);
+        assert_eq!(single.len(), 1);
+        assert!((single[0].flops_per_unit
+            - SctCost::from_sct(&Sct::kernel(streaming_kernel()), 0.0).flops_per_unit)
+            .abs()
+            < 1e-9);
     }
 
     #[test]

@@ -102,6 +102,36 @@ impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
     }
 }
 
+impl<A: Shrink, B: Shrink, C: Shrink, D: Shrink> Shrink for (A, B, C, D) {
+    fn shrink(&self) -> Vec<(A, B, C, D)> {
+        let mut out: Vec<(A, B, C, D)> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone(), self.3.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink()
+                .into_iter()
+                .map(|b| (self.0.clone(), b, self.2.clone(), self.3.clone())),
+        );
+        out.extend(
+            self.2
+                .shrink()
+                .into_iter()
+                .map(|c| (self.0.clone(), self.1.clone(), c, self.3.clone())),
+        );
+        out.extend(
+            self.3
+                .shrink()
+                .into_iter()
+                .map(|d| (self.0.clone(), self.1.clone(), self.2.clone(), d)),
+        );
+        out
+    }
+}
+
 /// Run `prop` on `cases` random inputs; shrink and panic on failure.
 pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
 where

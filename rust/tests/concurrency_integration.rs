@@ -146,7 +146,7 @@ fn serve_throughput_scales_with_concurrency() {
     // Warm the profile once, then share it with both pools, so the
     // comparison measures admission-cap scaling, not cold-start tuning.
     pool1
-        .serve(&requests[..1], &ServeOpts { concurrency: 1, pace: 0.0, tasks_per_slot: None })
+        .serve(&requests[..1], &ServeOpts { concurrency: 1, pace: 0.0, tasks_per_slot: None, drain_mode: None })
         .unwrap();
     *pool4.shared_kb().write().unwrap() = pool1.shared_kb().read().unwrap().clone();
     let serial = pool1
@@ -156,6 +156,7 @@ fn serve_throughput_scales_with_concurrency() {
                 concurrency: 1,
                 pace,
                 tasks_per_slot: None,
+                drain_mode: None,
             },
         )
         .unwrap();
@@ -166,6 +167,7 @@ fn serve_throughput_scales_with_concurrency() {
                 concurrency: 4,
                 pace,
                 tasks_per_slot: None,
+                drain_mode: None,
             },
         )
         .unwrap();

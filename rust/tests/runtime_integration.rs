@@ -289,3 +289,52 @@ fn gpu_only_and_hybrid_agree_numerically() {
         b2.outputs[0].as_f32().unwrap()
     );
 }
+
+#[test]
+fn drain_modes_agree_bitwise_on_pipeline_and_loop() {
+    // DESIGN.md §2.7: the dataflow task-graph drain must produce outputs
+    // bit-identical to the per-stage barrier drain — on a staged pipeline
+    // (cross-stage overlap, carried intermediates) and on a global-sync
+    // Loop (host update + COPY re-broadcast between iterations).
+    use marrow::scheduler::DrainMode;
+    let Some(man) = manifest() else { return };
+    let client = RtClient::cpu().unwrap();
+
+    let (h, w) = (64usize, 512usize);
+    let img = image(23, h, w);
+    let filter_args = RequestArgs {
+        vectors: vec![VectorArg::partitioned_f32("img", img, w as u64)],
+        scalars: vec![17.0, 0.0, 100.0],
+    };
+    let staged = workloads::filter_pipeline(h as u64, w as u64, false);
+
+    let n = 512usize;
+    let pos0 = bodies(24, n);
+    let nb = workloads::nbody(n as u64, 2);
+    let nbody_args = RequestArgs {
+        vectors: vec![VectorArg::copied_f32("pos", pos0)],
+        scalars: vec![0.0],
+    };
+
+    let cases: Vec<(&Sct, &RequestArgs, u64, f64)> = vec![
+        (&staged.sct, &filter_args, h as u64, 0.25),
+        (&nb.sct, &nbody_args, n as u64, 0.0),
+    ];
+    for (sct, args, units, share) in cases {
+        let run = |mode: DrainMode| {
+            let mut s = RealScheduler::new(i7_hd7950(1), &client, &man);
+            s.drain_mode = mode;
+            s.run_request(sct, args, units, &cfg(share)).unwrap()
+        };
+        let barrier = run(DrainMode::Barrier);
+        let dataflow = run(DrainMode::Dataflow);
+        assert_eq!(barrier.outputs.len(), dataflow.outputs.len());
+        for (a, b) in barrier.outputs.iter().zip(&dataflow.outputs) {
+            let (a, b) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+            assert_eq!(a.len(), b.len());
+            for i in 0..a.len() {
+                assert_eq!(a[i].to_bits(), b[i].to_bits(), "elem {i} diverges");
+            }
+        }
+    }
+}
