@@ -1,0 +1,142 @@
+//! Co-scheduling serve bench (BENCH_pr5.json): a mixed stream of CPU- and
+//! GPU-leaning requests served with the PR 2 whole-pool admission vs the
+//! device-space co-scheduler (DESIGN.md §2.8).
+//!
+//! Two metrics per mode:
+//!  * `requests_per_sec` — wall-clock driver throughput (pool, admission,
+//!    reservation gating); noisy on loaded CI runners, reported for trend.
+//!  * `virtual_req_per_sec` — request count over the virtual-timeline
+//!    makespan, where conflicting reservations stack and disjoint ones
+//!    overlap. Noise-free on the quiet simulated machine, so the CI bench
+//!    gate (`tools/bench_gate.rs`) compares exactly this number.
+
+use marrow::bench::workloads;
+use marrow::kb::mk_profile;
+use marrow::platform::cpu::FissionLevel;
+use marrow::platform::device::i7_hd7950;
+use marrow::scheduler::SimEnv;
+use marrow::session::serve::{ServeOpts, ServeRequest, SessionPool};
+use marrow::session::{Computation, Session};
+use marrow::sim::cost::CostParams;
+use marrow::sim::machine::SimMachine;
+
+const REQUESTS: usize = 32;
+const CONCURRENCY: usize = 4;
+const PACE_MS: f64 = 0.5;
+
+fn quiet_session(seed: u64) -> Session<SimEnv> {
+    let quiet = CostParams {
+        cpu_noise: 0.0,
+        gpu_noise: 0.0,
+        straggler_p: 0.0,
+        ..CostParams::default()
+    };
+    Session::sim(SimMachine::new(i7_hd7950(1), seed).with_params(quiet))
+}
+
+/// The mixed stream: alternating CPU-leaning and GPU-leaning requests
+/// (same kernel, different sizes, so they hold distinct KB entries), with
+/// profiles pre-seeded so admission prices a warm KB and the run is
+/// deterministic end to end.
+fn build_pool_and_stream() -> (SessionPool<SimEnv>, Vec<ServeRequest>) {
+    let pool = SessionPool::build(CONCURRENCY, |i| quiet_session(500 + i as u64));
+    let cpu_comp = Computation::from(workloads::saxpy(1 << 20));
+    let gpu_comp = Computation::from(workloads::saxpy(1 << 21));
+    for (comp, share) in [(&cpu_comp, 0.9), (&gpu_comp, 0.1)] {
+        let (sct, w, _) = comp.spec().unwrap();
+        pool.shared_kb().write().unwrap().store(mk_profile(
+            &sct.id(),
+            w.clone(),
+            FissionLevel::L2,
+            vec![4],
+            share,
+            1e-3,
+        ));
+    }
+    let requests = (0..REQUESTS)
+        .map(|i| {
+            ServeRequest::from(if i % 2 == 0 {
+                cpu_comp.clone()
+            } else {
+                gpu_comp.clone()
+            })
+        })
+        .collect();
+    (pool, requests)
+}
+
+struct Point {
+    name: &'static str,
+    wall_rps: f64,
+    virt_rps: f64,
+    virt_makespan: f64,
+}
+
+fn run_mode(name: &'static str, co_schedule: bool) -> Point {
+    let (pool, requests) = build_pool_and_stream();
+    let report = pool
+        .serve(
+            &requests,
+            &ServeOpts {
+                concurrency: CONCURRENCY,
+                pace: PACE_MS * 1e-3,
+                co_schedule,
+                ..Default::default()
+            },
+        )
+        .expect("serve");
+    Point {
+        name,
+        wall_rps: report.requests_per_sec,
+        virt_rps: report.virtual_req_per_sec(),
+        virt_makespan: report.virtual_makespan,
+    }
+}
+
+fn main() {
+    println!(
+        "co-scheduling serve: {REQUESTS} mixed requests (cpu-/gpu-leaning), \
+         concurrency {CONCURRENCY}, pace floor {PACE_MS} ms\n"
+    );
+    println!(
+        "{:>26} {:>12} {:>14} {:>16}",
+        "mode", "wall req/s", "virtual req/s", "virt makespan s"
+    );
+    let serialized = run_mode("mixed_serve_serialized", false);
+    let coscheduled = run_mode("mixed_serve_coscheduled", true);
+    for p in [&serialized, &coscheduled] {
+        println!(
+            "{:>26} {:>12.1} {:>14.1} {:>16.4}",
+            p.name, p.wall_rps, p.virt_rps, p.virt_makespan
+        );
+    }
+    let speedup = if coscheduled.virt_makespan > 0.0 {
+        serialized.virt_makespan / coscheduled.virt_makespan
+    } else {
+        0.0
+    };
+    println!("\nco-scheduling virtual speedup: {speedup:.2}x (device-time makespan)");
+
+    let workloads_json: Vec<String> = [&serialized, &coscheduled]
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"name\": \"{}\", \"requests_per_sec\": {:.2}, \
+                 \"virtual_req_per_sec\": {:.2}, \"virtual_makespan_s\": {:.6}}}",
+                p.name, p.wall_rps, p.virt_rps, p.virt_makespan
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"coschedule_serve\",\n  \"pr\": 5,\n  \
+         \"requests\": {REQUESTS},\n  \"concurrency\": {CONCURRENCY},\n  \
+         \"pace_ms\": {PACE_MS},\n  \"workloads\": [\n{}\n  ],\n  \
+         \"co_speedup_virtual\": {speedup:.3}\n}}\n",
+        workloads_json.join(",\n")
+    );
+    let path = "BENCH_pr5.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

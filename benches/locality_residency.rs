@@ -43,8 +43,7 @@ fn serve_case(name: &'static str, comp: &Computation, residency: bool) -> Point 
             &ServeOpts {
                 concurrency: CONCURRENCY,
                 pace: PACE_MS * 1e-3,
-                tasks_per_slot: None,
-                drain_mode: None,
+                ..Default::default()
             },
         )
         .expect("serve");

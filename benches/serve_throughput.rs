@@ -39,8 +39,7 @@ fn main() {
             &ServeOpts {
                 concurrency,
                 pace: PACE_MS * 1e-3,
-                tasks_per_slot: None,
-                drain_mode: None,
+                ..Default::default()
             },
         )
         .expect("serve");

@@ -188,10 +188,18 @@ pub fn decompose(sct: &Sct, total_units: u64, cfg: &DecomposeConfig) -> Result<P
     // across that device's overlap slots.
     if has_gpu && gpu_total > 0 {
         let mut remaining = gpu_total;
+        // The remainder-absorbing device must be able to hold units: the
+        // last GPU *with overlap slots*. A trailing GPU masked out by a
+        // reservation projection (overlap 0, DESIGN.md §2.8) has no slots
+        // to place the residue on — routing it there would silently drop
+        // the tail of the domain.
+        let last_active = cfg.gpu_overlap.iter().rposition(|&o| o > 0);
         for (g, (&overlap, &weight)) in
             cfg.gpu_overlap.iter().zip(&cfg.gpu_weights).enumerate()
         {
-            let dev_units = if g + 1 == cfg.gpu_overlap.len() {
+            let dev_units = if overlap == 0 {
+                0
+            } else if Some(g) == last_active {
                 remaining
             } else {
                 round_to(gpu_total as f64 * weight, quantum).min(remaining)
@@ -346,6 +354,28 @@ mod tests {
             .map(|p| p.units)
             .sum();
         assert!((g0 as f64 / 4000.0 - 0.75).abs() < 0.01);
+    }
+
+    #[test]
+    fn residue_never_routed_to_a_zero_overlap_gpu() {
+        // A trailing GPU with no overlap slots (masked out by a
+        // reservation projection) must not become the remainder absorber:
+        // the whole domain lands on the GPUs that still have slots.
+        let c = DecomposeConfig {
+            cpu_subdevices: 1,
+            gpu_overlap: vec![2, 0],
+            gpu_weights: vec![0.5, 0.5],
+            cpu_share: 0.0,
+            wgs: 256,
+            chunk_quantum: 1,
+        };
+        let plan = decompose(&line_sct(), 1024, &c).unwrap();
+        assert_eq!(plan.total_units(), 1024);
+        assert!(plan
+            .partitions
+            .iter()
+            .all(|p| !matches!(p.slot, ExecSlot::GpuSlot { gpu: 1, .. })));
+        assert_eq!(plan.gpu_units(), 1024);
     }
 
     #[test]

@@ -131,6 +131,43 @@ impl KnowledgeBase {
     pub fn entries(&self) -> &[Profile] {
         &self.entries
     }
+
+    /// Best-known completion estimate for a (SCT, workload) pair — the
+    /// cost side of the co-scheduling admission control (DESIGN.md §2.8).
+    /// An exact entry's `best_time` when present; otherwise the best time
+    /// of the *nearest* profile (by workload features, like
+    /// [`interpolate_config`]'s discrete fields) over the same
+    /// progressively-widening scopes [`KnowledgeBase::derive`] uses (same
+    /// SCT and dimensionality, then same workload, then same
+    /// dimensionality) — a scope *minimum* would price a large request at
+    /// the smallest workload ever recorded. `None` on a cold KB — callers
+    /// fall back to an observed mean.
+    pub fn estimate_time(&self, sct_id: &str, workload: &Workload) -> Option<f64> {
+        if let Some(p) = self.lookup(sct_id, workload) {
+            return Some(p.best_time);
+        }
+        let target = workload.features();
+        let nearest = |pred: &dyn Fn(&Profile) -> bool| -> Option<f64> {
+            self.entries
+                .iter()
+                .filter(|p| pred(p))
+                .min_by(|a, b| {
+                    let da = crate::util::linalg::dist(&a.workload.features(), &target);
+                    let db = crate::util::linalg::dist(&b.workload.features(), &target);
+                    da.partial_cmp(&db).unwrap()
+                })
+                .map(|p| p.best_time)
+        };
+        nearest(&|p: &Profile| {
+            p.sct_id == sct_id && p.workload.dimensionality() == workload.dimensionality()
+        })
+        .or_else(|| nearest(&|p: &Profile| p.workload.id() == workload.id()))
+        .or_else(|| {
+            nearest(&|p: &Profile| {
+                p.workload.dimensionality() == workload.dimensionality()
+            })
+        })
+    }
 }
 
 /// Interpolate a configuration from scoped profiles: continuous fields
@@ -263,6 +300,24 @@ mod tests {
         let mut kb2 = KnowledgeBase::in_memory();
         kb2.store(mk_profile("a", Workload::d1(100), FissionLevel::L1, vec![], 1.0, 1.0));
         assert!(kb2.derive("a", &wl(10, 10)).is_none());
+    }
+
+    #[test]
+    fn estimate_time_narrows_scope_like_derive() {
+        let mut kb = KnowledgeBase::in_memory();
+        assert!(kb.estimate_time("f", &wl(1024, 1024)).is_none());
+        kb.store(mk_profile("f", wl(1024, 1024), FissionLevel::L2, vec![4], 0.2, 2.5));
+        // Exact hit.
+        assert_eq!(kb.estimate_time("f", &wl(1024, 1024)), Some(2.5));
+        // Same SCT, other size: the *nearest* profile's time, so a big
+        // request is not priced at the smallest workload on record.
+        kb.store(mk_profile("f", wl(4096, 4096), FissionLevel::L2, vec![4], 0.2, 9.0));
+        assert_eq!(kb.estimate_time("f", &wl(1500, 1500)), Some(2.5));
+        assert_eq!(kb.estimate_time("f", &wl(3500, 3500)), Some(9.0));
+        // Unknown SCT of the same dimensionality still estimates.
+        assert_eq!(kb.estimate_time("fresh", &wl(1500, 1500)), Some(2.5));
+        // Wrong dimensionality stays cold.
+        assert!(kb.estimate_time("f", &Workload::d1(64)).is_none());
     }
 
     #[test]

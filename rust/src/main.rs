@@ -12,10 +12,13 @@
 //!       execution monitoring and adaptive rebalancing, per-run trace
 //!       (with --concurrency > 1 the requests drain through a session pool)
 //!   serve --bench <name> --size <n> [--requests <r>] [--concurrency <c>]
-//!       [--pace-ms <m>] [--kb <path>]
+//!       [--pace-ms <m>] [--kb <path>] [--co-schedule]
 //!       multi-request serve path: a pool of sessions over one shared KB
 //!       drains the request stream under the admission cap; reports
-//!       requests/sec and p50/p99 latency
+//!       requests/sec and p50/p99 latency. With --co-schedule each request
+//!       is admitted onto the KB-cost-priced device subset minimizing its
+//!       predicted completion (DESIGN.md 2.8) instead of time-sharing the
+//!       whole pool
 //!   graph --bench <name> --size <n> [--gpus <g>] [--tasks-per-slot <t>]
 //!       dump the benchmark's dataflow TaskGraph as GraphViz DOT (nodes
 //!       labelled stage/chunk/slot, sync nodes highlighted)
@@ -73,7 +76,7 @@ usage:
   marrow eval <table2|table3|table4|table5|fig11|ablations|all>
   marrow profile --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--kb <path>]
   marrow run --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--runs <r>] [--kb <path>] [--concurrency <c>] [--tasks-per-slot <t>] [--drain <barrier|dataflow>]
-  marrow serve --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--requests <r>] [--concurrency <c>] [--pace-ms <m>] [--kb <path>] [--tasks-per-slot <t>] [--drain <barrier|dataflow>]
+  marrow serve --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--requests <r>] [--concurrency <c>] [--pace-ms <m>] [--kb <path>] [--tasks-per-slot <t>] [--drain <barrier|dataflow>] [--co-schedule]
   marrow graph --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--tasks-per-slot <t>] [--kb <path>]
   marrow shoc
   marrow info";
@@ -269,6 +272,7 @@ fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
     let pace = args.get_f64("pace-ms", 2.0)? * 1e-3;
     let tasks_per_slot = pick_tasks_per_slot(args)?;
     let drain_mode = pick_drain_mode(args)?;
+    let co_schedule = args.has("co-schedule");
     let name = b.name.clone();
     let comp = Computation::from(b);
     let machine = pick_machine(args)?;
@@ -285,8 +289,13 @@ fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
         .collect();
     println!(
         "serving {n_requests} x {name} at concurrency {concurrency} \
-         (pace floor {:.1} ms/request, simulated clock)",
-        pace * 1e3
+         (pace floor {:.1} ms/request, simulated clock, {} admission)",
+        pace * 1e3,
+        if co_schedule {
+            "co-scheduled"
+        } else {
+            "whole-pool"
+        }
     );
     let report = pool.serve(
         &requests,
@@ -295,9 +304,25 @@ fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
             pace,
             tasks_per_slot,
             drain_mode,
+            co_schedule,
         },
     )?;
     println!("{}", report.summary());
+    if co_schedule {
+        let mut counts: std::collections::BTreeMap<String, usize> = Default::default();
+        for t in &report.traces {
+            if let Some(m) = &t.mask {
+                *counts.entry(m.label()).or_default() += 1;
+            }
+        }
+        let placements: Vec<String> =
+            counts.into_iter().map(|(m, n)| format!("{m} x{n}")).collect();
+        println!(
+            "placements: {} (virtual device-time {:.1} req/s)",
+            placements.join(", "),
+            report.virtual_req_per_sec()
+        );
+    }
     if args.get("kb").is_some() {
         let kb = pool.shared_kb();
         let kb = kb.read().unwrap();

@@ -417,6 +417,19 @@ impl ResidencyPool {
         }
     }
 
+    /// Total bytes resident on every slot matching `pred` (e.g. the
+    /// devices a reservation mask excludes — the migration term of the
+    /// co-scheduling admission price, DESIGN.md §2.8).
+    pub fn resident_bytes_where<F: Fn(ExecSlot) -> bool>(&self, pred: F) -> u64 {
+        self.slots
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(slot, _)| pred(**slot))
+            .map(|(_, p)| p.total_bytes)
+            .sum()
+    }
+
     /// Bytes resident on `slot` in total.
     pub fn resident_bytes(&self, slot: ExecSlot) -> u64 {
         self.slots

@@ -20,6 +20,7 @@ use crate::decompose::ExecSlot;
 use crate::error::Result;
 use crate::runtime::residency::ResidencyView;
 use crate::scheduler::queues::{ReadyQueues, SharedQueues, Task, WorkQueues};
+use crate::scheduler::reservation::SlotMask;
 
 /// One slot-execution engine the launcher drives: runs a single task and
 /// returns its partial outputs. Implementations decide how much real
@@ -143,6 +144,11 @@ pub struct LaunchOpts<'p> {
     /// and booked against the residency pool; when `None`, stealing is
     /// unconditional (the PR-2 behavior).
     pub policy: Option<StealPolicy<'p>>,
+    /// Reservation boundary (DESIGN.md §2.8): when set, workers exist only
+    /// for slots inside the mask, so no steal can cross into (or execute
+    /// on) a device another request has reserved. `None` drains on every
+    /// slot the plan names.
+    pub mask: Option<SlotMask>,
 }
 
 impl LaunchOutput {
@@ -168,10 +174,13 @@ pub fn launch<R: TaskRunner>(queues: WorkQueues, runner: &R) -> Result<LaunchOut
 /// first task error stops every worker and is returned; partials are
 /// seq-sorted on return.
 pub fn launch_with<R: TaskRunner>(
-    queues: WorkQueues,
+    mut queues: WorkQueues,
     runner: &R,
     opts: LaunchOpts<'_>,
 ) -> Result<LaunchOutput> {
+    if let Some(mask) = &opts.mask {
+        queues.restrict(mask);
+    }
     let n = queues.n_queues();
     if n == 0 {
         return Ok(LaunchOutput {
@@ -412,7 +421,18 @@ pub fn launch_graph<R: GraphRunner>(
             executed: 0,
         });
     }
-    let node_slots: Vec<ExecSlot> = graph.nodes.iter().map(|nd| nd.partition.slot).collect();
+    let mut node_slots: Vec<ExecSlot> =
+        graph.nodes.iter().map(|nd| nd.partition.slot).collect();
+    // Reservation boundary: only slots inside the mask get a ready deque
+    // (and a worker). Nodes homed outside — a plan that routed units past
+    // the mask — fall back to queue 0 via `queue_of`, so they still run,
+    // on a granted slot. An all-excluding mask is ignored: an empty
+    // reservation cannot drain a graph.
+    if let Some(mask) = &opts.mask {
+        if node_slots.iter().any(|s| mask.allows(s)) {
+            node_slots.retain(|s| mask.allows(s));
+        }
+    }
     let ready = ReadyQueues::new(&node_slots);
     let nq = ready.n_queues();
     let home: Vec<usize> = graph
@@ -874,6 +894,7 @@ mod tests {
                     secs_per_byte: 1.0, // 1 GiB "costs" ~1e9 s to move
                     default_task_secs: 1e-6,
                 }),
+                mask: None,
             },
         )
         .unwrap();
@@ -906,6 +927,7 @@ mod tests {
                     secs_per_byte: 1e-12,
                     default_task_secs: 0.05,
                 }),
+                mask: None,
             },
         )
         .unwrap();

@@ -17,6 +17,7 @@
 pub mod launcher;
 pub mod queues;
 pub mod real;
+pub mod reservation;
 
 use crate::data::vector::ArgValue;
 use crate::decompose::{decompose, DecomposeConfig, PartitionPlan};
@@ -36,6 +37,9 @@ pub use launcher::{
     SlotClock, StealPolicy, SyncOutcome, SyncVerdict, TaskRunner,
 };
 pub use queues::{ReadyQueues, SharedQueues, Task, WorkQueues};
+pub use reservation::{
+    candidate_masks, ReservationGuard, SlotMask, SlotReservations, VirtualTimeline,
+};
 
 /// How an execution request drains its tasks (DESIGN.md §2.7).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -193,6 +197,25 @@ pub trait ExecEnv {
     fn set_drain_mode(&mut self, mode: DrainMode) {
         let _ = mode;
     }
+
+    /// Restrict every subsequent request to a device-space subset of the
+    /// machine (DESIGN.md §2.8): configurations are projected onto the
+    /// mask, excluded devices receive no work, and stealing never crosses
+    /// the boundary. `None` restores the whole machine. Backends without a
+    /// slot structure ignore it.
+    fn set_slot_mask(&mut self, mask: Option<SlotMask>) {
+        let _ = mask;
+    }
+
+    /// Estimated seconds to migrate this backend's device-resident data
+    /// off the devices `mask` excludes (the residency term of the
+    /// admission price — data parked on an excluded GPU must re-cross
+    /// PCIe before a masked request can use it elsewhere). 0 for backends
+    /// without a residency pool.
+    fn mask_migration_secs(&self, mask: &SlotMask) -> f64 {
+        let _ = mask;
+        0.0
+    }
 }
 
 /// Build the decomposition config for a framework configuration.
@@ -202,10 +225,25 @@ pub fn decompose_config(
     chunk_quantum: u64,
 ) -> DecomposeConfig {
     let cpu = CpuPlatform::new(machine.cpu.clone());
+    // A GPU with no overlap slots (masked out by a reservation projection,
+    // DESIGN.md §2.8) can hold no units: zero its weight and renormalize
+    // the rest, or the decomposer would route units to a slotless device.
+    let mut gpu_weights = machine.gpu_weights();
+    for (g, w) in gpu_weights.iter_mut().enumerate() {
+        if cfg.overlap.get(g).copied().unwrap_or(0) == 0 {
+            *w = 0.0;
+        }
+    }
+    let total: f64 = gpu_weights.iter().sum();
+    if total > 0.0 {
+        for w in &mut gpu_weights {
+            *w /= total;
+        }
+    }
     DecomposeConfig {
         cpu_subdevices: cpu.subdevice_count(cfg.fission),
         gpu_overlap: cfg.overlap.clone(),
-        gpu_weights: machine.gpu_weights(),
+        gpu_weights,
         cpu_share: cfg.cpu_share,
         wgs: cfg.wgs,
         chunk_quantum,
@@ -247,6 +285,11 @@ pub struct SimEnv {
     /// per-stage drain actually exhibits. Both report whole-request
     /// per-slot busy times, so tuner/KB entries stay comparable.
     pub drain_mode: DrainMode,
+    /// Co-scheduling reservation (DESIGN.md §2.8): when set, every request
+    /// is projected onto this device subset before planning and pricing,
+    /// so the simulator prices exactly the hardware the reservation
+    /// granted — the analytic twin of the real scheduler's masked drain.
+    pub slot_mask: Option<SlotMask>,
 }
 
 impl SimEnv {
@@ -260,6 +303,16 @@ impl SimEnv {
             residency: ResidencyPool::new()
                 .with_capacity(crate::scheduler::real::DEFAULT_RESIDENCY_CAPACITY),
             drain_mode: DrainMode::default(),
+            slot_mask: None,
+        }
+    }
+
+    /// The configuration a request actually runs under: the caller's,
+    /// projected onto the installed reservation mask when one is set.
+    fn masked_cfg(&self, cfg: &FrameworkConfig) -> FrameworkConfig {
+        match &self.slot_mask {
+            Some(m) => m.project(cfg),
+            None => cfg.clone(),
         }
     }
 
@@ -346,6 +399,7 @@ impl ExecEnv for SimEnv {
         total_units: u64,
         cfg: &FrameworkConfig,
     ) -> Result<ExecOutcome> {
+        let cfg = &self.masked_cfg(cfg);
         let p = plan(&self.sim.machine, sct, total_units, cfg, 1)?;
         let cost = SctCost::from_sct(sct, self.copy_bytes);
         let occ = self.occupancy(sct, cfg);
@@ -378,6 +432,7 @@ impl ExecEnv for SimEnv {
         cfg: &FrameworkConfig,
     ) -> Result<RunOutcome> {
         let _ = args;
+        let cfg = &self.masked_cfg(cfg);
         let p = plan(&self.sim.machine, sct, total_units, cfg, 1)?;
         let cost = SctCost::from_sct(sct, self.copy_bytes);
         let occ = self.occupancy(sct, cfg);
@@ -456,6 +511,33 @@ impl ExecEnv for SimEnv {
 
     fn set_drain_mode(&mut self, mode: DrainMode) {
         self.drain_mode = mode;
+    }
+
+    fn set_slot_mask(&mut self, mask: Option<SlotMask>) {
+        self.slot_mask = mask;
+    }
+
+    fn mask_migration_secs(&self, mask: &SlotMask) -> f64 {
+        let gbps = self
+            .sim
+            .machine
+            .gpus
+            .iter()
+            .map(|g| g.pcie_gbps)
+            .fold(f64::INFINITY, f64::min);
+        if !gbps.is_finite() || gbps <= 0.0 {
+            return 0.0;
+        }
+        // Data modeled as resident on a GPU the mask excludes must re-cross
+        // PCIe before the masked request can use it elsewhere; host-side
+        // (CPU) residency moves for free.
+        let bytes = self.residency.resident_bytes_where(|s| match s {
+            crate::decompose::ExecSlot::GpuSlot { gpu, .. } => {
+                !mask.allows_gpu(gpu as usize)
+            }
+            crate::decompose::ExecSlot::CpuSub { .. } => false,
+        });
+        residency::migration_secs(bytes, gbps)
     }
 }
 
@@ -580,6 +662,40 @@ mod tests {
         // Both report whole-request busy clocks over the same active slots.
         assert_eq!(r.slot_times.len(), d.slot_times.len());
         assert!(r.slot_times.iter().all(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn slot_mask_projects_sim_pricing_onto_the_subset() {
+        // A CPU-only reservation must price exactly like an explicit
+        // cpu_share=1 config with no GPU slots — bit-identically, since
+        // quiet cost params make the pricing a pure function.
+        use crate::sim::cost::CostParams;
+        let quiet = CostParams {
+            cpu_noise: 0.0,
+            gpu_noise: 0.0,
+            straggler_p: 0.0,
+            ..CostParams::default()
+        };
+        let mk = || SimEnv::new(SimMachine::new(i7_hd7950(1), 5).with_params(quiet.clone()));
+        let c = cfg(0.25);
+        let mut full = mk();
+        let f = full.execute(&saxpy(), 1 << 22, &c).unwrap();
+        assert!(f.gpu_time > 0.0);
+        let mut masked = mk();
+        masked.set_slot_mask(Some(SlotMask::cpu_only(&i7_hd7950(1))));
+        let m = masked.execute(&saxpy(), 1 << 22, &c).unwrap();
+        assert_eq!(m.gpu_time, 0.0, "masked request must not touch the GPU");
+        assert!(m.cpu_time > 0.0);
+        let mut pinned = mk();
+        let mut c1 = c.clone();
+        c1.cpu_share = 1.0;
+        c1.overlap = vec![0];
+        let want = pinned.execute(&saxpy(), 1 << 22, &c1).unwrap();
+        assert_eq!(m.total.to_bits(), want.total.to_bits());
+        // Clearing the mask restores whole-machine pricing.
+        masked.set_slot_mask(None);
+        let back = masked.execute(&saxpy(), 1 << 22, &c).unwrap();
+        assert!(back.gpu_time > 0.0);
     }
 
     #[test]

@@ -13,6 +13,7 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 
 use crate::decompose::{chunk_partition, ExecSlot, Partition, PartitionPlan};
+use crate::scheduler::reservation::SlotMask;
 
 /// One task: execute the SCT over a partition on a slot.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -77,6 +78,31 @@ impl WorkQueues {
 
     pub fn n_tasks(&self) -> usize {
         self.queues.iter().map(|(_, q)| q.len()).sum()
+    }
+
+    /// Restrict the queues to a reservation mask (DESIGN.md §2.8): queues
+    /// owned by excluded slots are removed — no worker thread is spawned
+    /// for them and no thief can reach across the boundary. Any tasks such
+    /// a queue still held (a plan that routed units outside the mask)
+    /// migrate to the first allowed queue rather than silently dropping
+    /// work. A mask excluding every queue leaves the queues untouched —
+    /// an empty reservation cannot execute anything.
+    pub fn restrict(&mut self, mask: &SlotMask) {
+        if !self.queues.iter().any(|(s, _)| mask.allows(s)) {
+            return;
+        }
+        let mut displaced: VecDeque<Task> = VecDeque::new();
+        self.queues.retain_mut(|(slot, q)| {
+            if mask.allows(slot) {
+                true
+            } else {
+                displaced.append(q);
+                false
+            }
+        });
+        if !displaced.is_empty() {
+            self.queues[0].1.append(&mut displaced);
+        }
     }
 
     /// The slot owning queue `i`.
@@ -523,6 +549,31 @@ mod tests {
         let e = rq.epoch();
         rq.wake_all();
         rq.wait_change(e);
+    }
+
+    #[test]
+    fn restrict_drops_excluded_queues_without_losing_work() {
+        let p = plan();
+        let mut q = WorkQueues::from_plan_chunked(&p, 2);
+        let total = q.n_tasks();
+        // CPU-only reservation: GPU queues disappear, their tasks migrate.
+        q.restrict(&SlotMask {
+            cpu: true,
+            gpus: vec![false],
+        });
+        assert!(q.n_queues() > 0);
+        for i in 0..q.n_queues() {
+            assert!(q.slot(i).is_cpu(), "excluded slot survived the mask");
+        }
+        assert_eq!(q.n_tasks(), total, "displaced tasks must be reassigned");
+        // An all-excluding mask is ignored — something must drain the work.
+        let mut q2 = WorkQueues::from_plan_chunked(&p, 2);
+        let nq = q2.n_queues();
+        q2.restrict(&SlotMask {
+            cpu: false,
+            gpus: vec![false],
+        });
+        assert_eq!(q2.n_queues(), nq);
     }
 
     #[test]

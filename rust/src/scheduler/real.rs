@@ -39,6 +39,7 @@ use crate::scheduler::launcher::{
     SyncVerdict, TaskOutput, TaskRunner,
 };
 use crate::scheduler::queues::{Task, WorkQueues};
+use crate::scheduler::reservation::SlotMask;
 use crate::scheduler::{plan, DrainMode, ExecEnv, ExecOutcome, RunOutcome};
 use crate::sct::{Reduction, Sct};
 use crate::tuner::profile::FrameworkConfig;
@@ -68,6 +69,11 @@ pub struct RealScheduler<'a> {
     /// request's dependency-driven task graph with cross-stage overlap;
     /// `Barrier` keeps the per-stage chunked-queue drain for A/B runs.
     pub drain_mode: DrainMode,
+    /// Co-scheduling reservation (DESIGN.md §2.8): when set, requests are
+    /// projected onto this device subset before planning, and the launcher
+    /// spawns workers only for granted slots — stealing can never cross
+    /// the reservation boundary.
+    pub slot_mask: Option<SlotMask>,
 }
 
 /// Backwards-compatible name for the outputs+timing of one request.
@@ -135,6 +141,16 @@ impl<'a> RealScheduler<'a> {
                 ResidencyPool::new().with_capacity(DEFAULT_RESIDENCY_CAPACITY),
             ),
             drain_mode: DrainMode::default(),
+            slot_mask: None,
+        }
+    }
+
+    /// The configuration a request actually runs under: the caller's,
+    /// projected onto the installed reservation mask when one is set.
+    fn masked_cfg(&self, cfg: &FrameworkConfig) -> FrameworkConfig {
+        match &self.slot_mask {
+            Some(m) => m.project(cfg),
+            None => cfg.clone(),
         }
     }
 
@@ -183,6 +199,7 @@ impl<'a> RealScheduler<'a> {
         cfg: &FrameworkConfig,
     ) -> Result<RunOutcome> {
         let quantum = self.sct_chunk_quantum(sct);
+        let cfg = &self.masked_cfg(cfg);
         let p = plan(&self.machine, sct, total_units, cfg, quantum)?;
         let request = self.request_id(sct, args, total_units);
         let before = self.residency.stats();
@@ -291,6 +308,7 @@ impl<'a> RealScheduler<'a> {
                     secs_per_byte: self.steal_secs_per_byte(),
                     default_task_secs: 1e-3,
                 }),
+                mask: self.slot_mask.clone(),
             },
         )?;
         self.launches += chunk_runner.launch_count();
@@ -350,6 +368,7 @@ impl<'a> RealScheduler<'a> {
                     // cold steals of resident data stay rare.
                     default_task_secs: 1e-3,
                 }),
+                mask: self.slot_mask.clone(),
             },
         )?;
         self.launches += runner.launch_count();
@@ -424,6 +443,27 @@ impl<'a> ExecEnv for RealScheduler<'a> {
 
     fn set_drain_mode(&mut self, mode: DrainMode) {
         self.drain_mode = mode;
+    }
+
+    fn set_slot_mask(&mut self, mask: Option<SlotMask>) {
+        self.slot_mask = mask;
+    }
+
+    fn mask_migration_secs(&self, mask: &SlotMask) -> f64 {
+        let secs_per_byte = self.steal_secs_per_byte();
+        if secs_per_byte <= 0.0 {
+            return 0.0;
+        }
+        // Data resident on a GPU the mask excludes must re-cross PCIe
+        // before a masked request can use it elsewhere; host-side staging
+        // (CPU sub-devices) moves for free.
+        let bytes = self.residency.resident_bytes_where(|s| match s {
+            crate::decompose::ExecSlot::GpuSlot { gpu, .. } => {
+                !mask.allows_gpu(gpu as usize)
+            }
+            crate::decompose::ExecSlot::CpuSub { .. } => false,
+        });
+        bytes as f64 * secs_per_byte
     }
 }
 

@@ -51,7 +51,7 @@ use crate::runtime::artifacts::Manifest;
 use crate::runtime::client::RtClient;
 use crate::runtime::exec::RequestArgs;
 use crate::scheduler::real::RealScheduler;
-use crate::scheduler::{DrainMode, ExecEnv, ExecOutcome, SimEnv};
+use crate::scheduler::{DrainMode, ExecEnv, ExecOutcome, SimEnv, SlotMask};
 use crate::sim::machine::SimMachine;
 use crate::tuner::builder::{build_profile, TunerOpts};
 use crate::tuner::profile::{FrameworkConfig, Profile, ProfileOrigin};
@@ -237,6 +237,11 @@ pub struct Session<E: ExecEnv> {
     max_dev: f64,
     states: Mutex<HashMap<String, BalanceState>>,
     stats: Mutex<SessionStats>,
+    /// The installed reservation mask (DESIGN.md §2.8). While set, runs
+    /// execute on a hardware subset, so their skewed slot times and
+    /// derated totals must feed neither the balance monitor nor the
+    /// shared knowledge base — both describe the whole machine.
+    slot_mask: Mutex<Option<SlotMask>>,
 }
 
 impl Session<SimEnv> {
@@ -273,6 +278,7 @@ impl<E: ExecEnv> Session<E> {
             max_dev: 0.85,
             states: Mutex::new(HashMap::new()),
             stats: Mutex::new(SessionStats::default()),
+            slot_mask: Mutex::new(None),
         }
     }
 
@@ -339,6 +345,46 @@ impl<E: ExecEnv> Session<E> {
         self.env.lock().unwrap().set_drain_mode(mode);
     }
 
+    /// Restrict (or release, with `None`) the backend to a device-space
+    /// reservation (DESIGN.md §2.8): every request until the next call
+    /// runs on — and steals within — the masked subset only, and neither
+    /// the balance monitor nor the knowledge base learns from the masked
+    /// (hardware-skewed) outcomes. The serve path installs the admitted
+    /// mask around each co-scheduled request.
+    pub fn set_slot_mask(&self, mask: Option<SlotMask>) {
+        self.env.lock().unwrap().set_slot_mask(mask.clone());
+        *self.slot_mask.lock().unwrap() = mask;
+    }
+
+    /// Unwind-safe [`Session::set_slot_mask`]`(None)`: tolerates poisoned
+    /// locks so a drop guard clearing the mask during a panicking request
+    /// cannot double-panic (serve's co-scheduler resets through this).
+    pub(crate) fn clear_slot_mask_quiet(&self) {
+        match self.env.lock() {
+            Ok(mut env) => env.set_slot_mask(None),
+            Err(poisoned) => poisoned.into_inner().set_slot_mask(None),
+        }
+        match self.slot_mask.lock() {
+            Ok(mut m) => *m = None,
+            Err(poisoned) => *poisoned.into_inner() = None,
+        }
+    }
+
+    /// Estimated seconds to migrate the backend's device-resident data off
+    /// the devices `mask` excludes (the residency term of the admission
+    /// price; 0 for backends without a residency pool).
+    pub fn mask_migration_secs(&self, mask: &SlotMask) -> f64 {
+        self.env.lock().unwrap().mask_migration_secs(mask)
+    }
+
+    /// KB-estimated completion seconds for a computation
+    /// ([`KnowledgeBase::estimate_time`]); `None` on a cold KB. Reads the
+    /// knowledge base only — no counters move, no backend runs.
+    pub fn kb_estimate(&self, comp: &Computation) -> Option<f64> {
+        let (sct, w, _) = comp.spec().ok()?;
+        self.kb.read().unwrap().estimate_time(&sct.id(), w)
+    }
+
     // --- the seamless path ------------------------------------------------
 
     /// Resolve the framework configuration for a computation through the
@@ -374,7 +420,7 @@ impl<E: ExecEnv> Session<E> {
             let mut env = self.env.lock().unwrap();
             env.set_copy_bytes(comp.get_copy_bytes());
             env.bind_tuning_args(args);
-            build_profile(&mut *env, sct, w, units, &self.tuner)?
+            self.build_unmasked(&mut *env, sct, w, units)?
         };
         let cfg = p.config.clone();
         self.kb.write().unwrap().store(p);
@@ -401,47 +447,40 @@ impl<E: ExecEnv> Session<E> {
         // Section 3.3: monitor every execution; adapt when lbt triggers.
         // The per-computation state lives behind one lock, so interleaved
         // requests from N threads feed the monitor in arrival order.
-        let key = format!("{id}|{}", w.id());
-        let mut stored_cfg = cfg.clone();
+        // Masked runs (DESIGN.md §2.8) skip both the adaptation and the
+        // KB feedback below: their slot times and totals describe a
+        // hardware subset, and learning from them would skew the shared
+        // profile for every whole-machine request that follows.
+        let masked = self.slot_mask.lock().unwrap().is_some();
+        let mut unbalanced = false;
         let mut rebalanced = false;
-        let status = {
-            let mut states = self.states.lock().unwrap();
-            let st = states.entry(key).or_insert_with(|| BalanceState {
-                monitor: Monitor::new(self.max_dev),
-                abs: AdaptiveBinarySearch::new(cfg.cpu_share),
-            });
-            let status = st.monitor.observe(&out.exec.slot_times);
-            if status.trigger && !cfg.overlap.is_empty() {
-                stored_cfg.cpu_share = st.abs.propose(out.exec.cpu_time, out.exec.gpu_time);
-                st.monitor.reset_lbt();
-                rebalanced = true;
-            } else {
-                st.abs.track(cfg.cpu_share);
-            }
-            status
-        };
-        let t = out.exec.transfers;
-        let idle = out.exec.mean_idle_frac();
-        self.bump(|s| {
-            if status.unbalanced {
-                s.unbalanced_runs += 1;
-            }
-            if rebalanced {
-                s.balance_ops += 1;
-            }
-            s.runs += 1;
-            s.bytes_uploaded += t.bytes_uploaded;
-            s.bytes_downloaded += t.bytes_downloaded;
-            s.uploads_avoided += t.uploads_avoided;
-            s.steal_migrations += t.steal_migrations;
-            s.idle_frac_sum += idle;
-        });
+        if !masked {
+            let key = format!("{id}|{}", w.id());
+            let mut stored_cfg = cfg.clone();
+            let status = {
+                let mut states = self.states.lock().unwrap();
+                let st = states.entry(key).or_insert_with(|| BalanceState {
+                    monitor: Monitor::new(self.max_dev),
+                    abs: AdaptiveBinarySearch::new(cfg.cpu_share),
+                });
+                let status = st.monitor.observe(&out.exec.slot_times);
+                if status.trigger && !cfg.overlap.is_empty() {
+                    stored_cfg.cpu_share =
+                        st.abs.propose(out.exec.cpu_time, out.exec.gpu_time);
+                    st.monitor.reset_lbt();
+                    rebalanced = true;
+                } else {
+                    st.abs.track(cfg.cpu_share);
+                }
+                status
+            };
+            unbalanced = status.unbalanced;
 
-        // Feed the observed outcome back into the KB: refined profiles
-        // replace the stored distribution; plain runs keep the best time of
-        // the configuration they actually ran under (Refined entries bypass
-        // the store's best-time guard, so the min is taken here).
-        {
+            // Feed the observed outcome back into the KB: refined profiles
+            // replace the stored distribution; plain runs keep the best
+            // time of the configuration they actually ran under (Refined
+            // entries bypass the store's best-time guard, so the min is
+            // taken here).
             let mut kb = self.kb.write().unwrap();
             let existing = kb.lookup(&id, w);
             let store_origin = if rebalanced {
@@ -467,13 +506,29 @@ impl<E: ExecEnv> Session<E> {
                 origin: store_origin,
             });
         }
+        let t = out.exec.transfers;
+        let idle = out.exec.mean_idle_frac();
+        self.bump(|s| {
+            if unbalanced {
+                s.unbalanced_runs += 1;
+            }
+            if rebalanced {
+                s.balance_ops += 1;
+            }
+            s.runs += 1;
+            s.bytes_uploaded += t.bytes_uploaded;
+            s.bytes_downloaded += t.bytes_downloaded;
+            s.uploads_avoided += t.uploads_avoided;
+            s.steal_migrations += t.steal_migrations;
+            s.idle_frac_sum += idle;
+        });
 
         Ok(SessionOutcome {
             outputs: out.outputs,
             exec: out.exec,
             config: cfg,
             origin,
-            unbalanced: status.unbalanced,
+            unbalanced,
             rebalanced,
             launches,
         })
@@ -537,11 +592,35 @@ impl<E: ExecEnv> Session<E> {
             let mut env = self.env.lock().unwrap();
             env.set_copy_bytes(comp.get_copy_bytes());
             env.bind_tuning_args(args);
-            build_profile(&mut *env, sct, w, units, &self.tuner)?
+            self.build_unmasked(&mut *env, sct, w, units)?
         };
         self.kb.write().unwrap().store(p.clone());
         self.bump(|s| s.built += 1);
         Ok(p)
+    }
+
+    /// Run Algorithm 1 with any installed reservation mask lifted for the
+    /// build's duration: a profile describes the *whole* machine, and a
+    /// build tuned on a subset would poison the shared knowledge base for
+    /// every later whole-machine request (DESIGN.md §2.8). The caller
+    /// holds the env lock, so no request can slip in between lift and
+    /// restore.
+    fn build_unmasked(
+        &self,
+        env: &mut E,
+        sct: &crate::sct::Sct,
+        w: &crate::data::workload::Workload,
+        units: u64,
+    ) -> Result<Profile> {
+        let mask = self.slot_mask.lock().unwrap().clone();
+        if mask.is_some() {
+            env.set_slot_mask(None);
+        }
+        let built = build_profile(env, sct, w, units, &self.tuner);
+        if mask.is_some() {
+            env.set_slot_mask(mask);
+        }
+        built
     }
 
     // --- accessors --------------------------------------------------------

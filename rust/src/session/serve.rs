@@ -15,6 +15,16 @@
 //! fixed per-request service floor (sleep) that stands in for device
 //! occupancy, so requests/sec measures genuine admission-cap scaling. Real
 //! backends leave `pace` at 0.
+//!
+//! **Co-scheduling** ([`ServeOpts::co_schedule`], DESIGN.md §2.8): instead
+//! of every request implicitly owning the whole device pool, admission
+//! prices each request's KB-estimated cost against every device subset
+//! ([`candidate_masks`]) — derated by the subset's capacity share, plus the
+//! migration cost of residency parked on excluded devices and the wait for
+//! conflicting reservations already admitted — and reserves the subset
+//! minimizing predicted completion. A CPU-friendly request then runs on
+//! the CPU sub-devices while a GPU-heavy one owns the GPUs, and the
+//! work-stealing launcher never crosses the reservation boundary.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -24,7 +34,9 @@ use crate::error::Result;
 use crate::kb::KnowledgeBase;
 use crate::platform::device::Machine;
 use crate::runtime::exec::RequestArgs;
-use crate::scheduler::{DrainMode, ExecEnv};
+use crate::scheduler::{
+    candidate_masks, DrainMode, ExecEnv, SlotMask, SlotReservations, VirtualTimeline,
+};
 use crate::session::{Computation, ConfigOrigin, Session, SessionStats};
 use crate::util::stats::percentile;
 
@@ -58,6 +70,11 @@ pub struct ServeOpts {
     /// Override the drain mode on every pooled session (`--drain`);
     /// `None` keeps the backend default ([`DrainMode::Dataflow`]).
     pub drain_mode: Option<DrainMode>,
+    /// Device-space co-scheduling (`--co-schedule`, DESIGN.md §2.8): admit
+    /// each request onto the KB-cost-priced device subset minimizing its
+    /// predicted completion, instead of time-sharing the whole pool. Off
+    /// by default (the PR 2 whole-pool behavior).
+    pub co_schedule: bool,
 }
 
 impl Default for ServeOpts {
@@ -67,12 +84,13 @@ impl Default for ServeOpts {
             pace: 0.0,
             tasks_per_slot: None,
             drain_mode: None,
+            co_schedule: false,
         }
     }
 }
 
 /// One served request's record.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct RequestTrace {
     /// Index into the request stream.
     pub index: usize,
@@ -83,6 +101,9 @@ pub struct RequestTrace {
     pub origin: ConfigOrigin,
     /// The execution's own completion time.
     pub exec_total: f64,
+    /// The device subset the request was admitted onto (`None` without
+    /// co-scheduling: the request implicitly owned the whole pool).
+    pub mask: Option<SlotMask>,
 }
 
 /// Aggregate outcome of one serve run.
@@ -95,6 +116,15 @@ pub struct ServeReport {
     pub p50_latency: f64,
     pub p99_latency: f64,
     pub mean_latency: f64,
+    /// Whether this run admitted requests onto device subsets.
+    pub co_scheduled: bool,
+    /// Completion time of the whole stream on the [`VirtualTimeline`]
+    /// model: requests booked on conflicting device subsets stack up,
+    /// disjoint ones overlap. Without co-scheduling every request books
+    /// the full pool, so this is the serialized sum — the A/B baseline
+    /// the co-scheduling win is measured against, noise-free even on
+    /// analytic backends.
+    pub virtual_makespan: f64,
     /// Session counters for this serve run (pool-summed delta, so reusing
     /// a pool across serve calls still reports per-run numbers).
     pub stats: SessionStats,
@@ -108,7 +138,7 @@ impl ServeReport {
             "{} requests in {:.3}s @ concurrency {} -> {:.1} req/s \
              (p50 {:.2}ms, p99 {:.2}ms; {} kb hits, {} built, {} derived; \
              {:.1} MB uploaded, {} uploads avoided, {} steal migrations; \
-             mean slot idle {:.1}%)",
+             mean slot idle {:.1}%; {} device-time {:.3}s)",
             self.completed,
             self.wall_secs,
             self.concurrency,
@@ -121,9 +151,101 @@ impl ServeReport {
             self.stats.bytes_uploaded as f64 / 1e6,
             self.stats.uploads_avoided,
             self.stats.steal_migrations,
-            self.stats.mean_idle_pct()
+            self.stats.mean_idle_pct(),
+            if self.co_scheduled {
+                "co-scheduled"
+            } else {
+                "whole-pool"
+            },
+            self.virtual_makespan
         )
     }
+
+    /// Requests per second of *device time*: the stream's size over the
+    /// virtual makespan. Deterministic on analytic backends (no wall-clock
+    /// noise), which is what the CI bench gate compares.
+    pub fn virtual_req_per_sec(&self) -> f64 {
+        if self.virtual_makespan <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / self.virtual_makespan
+        }
+    }
+}
+
+/// Width slack of the admission policy: among candidate subsets whose
+/// predicted completion is within this factor of the best, the *narrowest*
+/// (smallest capacity share) wins. A bounded solo slowdown buys free
+/// devices for concurrent requests — EngineCL's co-execution result — and
+/// a strongly CPU- or GPU-leaning request therefore leaves the other
+/// device type to the rest of the stream even when the pool is idle.
+///
+/// The tradeoff is deliberate and bounded: on a *homogeneous* stream
+/// (every request leaning the same way) the preferred subset serializes
+/// the stream at up to `1/capacity` (≤ `WIDTH_SLACK`) of the whole-pool
+/// per-request time while the other device idles — capacity held in
+/// reserve for traffic that never comes. Streams known to be homogeneous
+/// should keep `co_schedule` off (the default); under congestion the
+/// wait term grows until the idle device's candidate wins and the stream
+/// spills over, so the loss cannot compound unboundedly.
+const WIDTH_SLACK: f64 = 1.25;
+
+/// One admission decision (DESIGN.md §2.8).
+struct Admission {
+    mask: SlotMask,
+    /// Estimated execution + migration seconds on the chosen subset — the
+    /// wait later conflicting requests are charged while the reservation
+    /// is held.
+    est_secs: f64,
+}
+
+/// Drop guard clearing a session's slot mask on every exit path: a
+/// panicking masked request must not leave the pooled session restricted
+/// (or quarantined from learning) for whoever reuses the pool. Clears via
+/// the poison-tolerant path so an unwind cannot double-panic.
+struct MaskReset<'s, E: ExecEnv>(&'s Session<E>);
+
+impl<E: ExecEnv> Drop for MaskReset<'_, E> {
+    fn drop(&mut self) {
+        self.0.clear_slot_mask_quiet();
+    }
+}
+
+/// Price every candidate device subset for a request and pick the one
+/// minimizing predicted completion: `wait` (conflicting admitted work) +
+/// `base / capacity` (the KB cost estimate derated to the subset's share
+/// of the tuned throughput) + `migration` (residency parked on excluded
+/// devices). Ties within [`WIDTH_SLACK`] go to the narrowest subset.
+fn admit<E: ExecEnv + Send>(
+    session: &Session<E>,
+    machine: &Machine,
+    comp: &Computation,
+    base_secs: f64,
+    reservations: &SlotReservations,
+) -> Admission {
+    let cfg = comp
+        .spec()
+        .ok()
+        .and_then(|(sct, w, _)| session.kb().derive(&sct.id(), w))
+        .unwrap_or_else(|| super::baseline_config(machine));
+    let base = base_secs.max(1e-9);
+    let mut scored: Vec<(SlotMask, f64, f64, f64)> = Vec::new();
+    for mask in candidate_masks(machine) {
+        let cap = mask.capacity_frac(&cfg, machine);
+        if cap <= 1e-9 {
+            continue;
+        }
+        let exec = base / cap + session.mask_migration_secs(&mask);
+        let wait = reservations.pending_secs(&mask);
+        scored.push((mask, wait + exec, exec, cap));
+    }
+    let best = scored.iter().map(|s| s.1).fold(f64::INFINITY, f64::min);
+    let (mask, _, est_secs, _) = scored
+        .into_iter()
+        .filter(|s| s.1 <= best * WIDTH_SLACK)
+        .min_by(|a, b| a.3.partial_cmp(&b.3).unwrap())
+        .expect("the full mask always has capacity 1");
+    Admission { mask, est_secs }
 }
 
 /// A pool of sessions over one shared knowledge base.
@@ -207,6 +329,10 @@ impl<E: ExecEnv + Send> SessionPool<E> {
         // Snapshot so the report's stats cover this run only, even when the
         // pool is reused across serve calls.
         let stats_before = self.summed_stats();
+        let machine = self.sessions[0].machine();
+        let full_mask = SlotMask::full(&machine);
+        let reservations = SlotReservations::new();
+        let timeline = VirtualTimeline::new();
         let next = AtomicUsize::new(0);
         let traces: Mutex<Vec<RequestTrace>> = Mutex::new(Vec::with_capacity(requests.len()));
         let failure: Mutex<Option<crate::error::Error>> = Mutex::new(None);
@@ -217,7 +343,12 @@ impl<E: ExecEnv + Send> SessionPool<E> {
                 let next = &next;
                 let traces = &traces;
                 let failure = &failure;
+                let machine = &machine;
+                let full_mask = &full_mask;
+                let reservations = &reservations;
+                let timeline = &timeline;
                 let pace = opts.pace;
+                let co = opts.co_schedule;
                 scope.spawn(move || loop {
                     if failure.lock().unwrap().is_some() {
                         break;
@@ -228,17 +359,62 @@ impl<E: ExecEnv + Send> SessionPool<E> {
                     }
                     let req = &requests[i];
                     let admitted = Instant::now();
-                    match session.run(&req.comp, &req.args) {
-                        Ok(out) => {
-                            if pace > 0.0 {
+                    // Admission (DESIGN.md §2.8): price the request on every
+                    // device subset and reserve the cheapest; the guard
+                    // releases on every exit path, including unwinds.
+                    let admission = if co {
+                        match Self::admission_for(session, machine, req, traces, reservations)
+                        {
+                            Ok(a) => Some(a),
+                            Err(e) => {
+                                let mut f = failure.lock().unwrap();
+                                if f.is_none() {
+                                    *f = Some(e);
+                                }
+                                break;
+                            }
+                        }
+                    } else {
+                        None
+                    };
+                    let result = match &admission {
+                        Some(adm) => {
+                            let _guard =
+                                reservations.acquire(adm.mask.clone(), adm.est_secs);
+                            session.set_slot_mask(Some(adm.mask.clone()));
+                            let r = {
+                                let _mask_reset = MaskReset(session);
+                                session.run(&req.comp, &req.args)
+                            };
+                            if r.is_ok() && pace > 0.0 {
+                                // The pace floor stands in for device
+                                // occupancy, so it holds the reservation.
                                 std::thread::sleep(Duration::from_secs_f64(pace));
                             }
+                            r
+                        }
+                        None => {
+                            let r = session.run(&req.comp, &req.args);
+                            if r.is_ok() && pace > 0.0 {
+                                std::thread::sleep(Duration::from_secs_f64(pace));
+                            }
+                            r
+                        }
+                    };
+                    match result {
+                        Ok(out) => {
+                            let mask = admission.map(|a| a.mask);
+                            timeline.book(
+                                mask.as_ref().unwrap_or(full_mask),
+                                out.exec.total,
+                            );
                             traces.lock().unwrap().push(RequestTrace {
                                 index: i,
                                 worker: w,
                                 latency: admitted.elapsed().as_secs_f64(),
                                 origin: out.origin,
                                 exec_total: out.exec.total,
+                                mask,
                             });
                         }
                         Err(e) => {
@@ -285,12 +461,52 @@ impl<E: ExecEnv + Send> SessionPool<E> {
             concurrency: workers,
             wall_secs,
             requests_per_sec: traces.len() as f64 / wall_secs,
+            // Percentiles index into duration-sorted samples — never the
+            // completion-ordered trace (`percentile` sorts a copy, so a
+            // fast request finishing last cannot leak into p99; the
+            // known-distribution unit test below pins this invariant).
             p50_latency: percentile(&latencies, 50.0),
             p99_latency: percentile(&latencies, 99.0),
             mean_latency,
+            co_scheduled: opts.co_schedule,
+            virtual_makespan: timeline.makespan(),
             stats,
             traces,
         })
+    }
+
+    /// The co-scheduling admission pipeline for one request: KB cost
+    /// estimate (resolving the configuration first on a cold KB, so the
+    /// profile build runs on the *whole* machine — a reservation mask must
+    /// never leak into a stored profile), falling back to the mean
+    /// observed execution time of this serve run, then the subset pricing
+    /// of [`admit`]. A cold request resolved here is re-resolved inside
+    /// [`Session::run`] as a KB hit, so co-scheduled cold starts book
+    /// `built + 1` *and* `kb_hits + 1` — compare hit-rates across modes
+    /// accordingly.
+    fn admission_for(
+        session: &Session<E>,
+        machine: &Machine,
+        req: &ServeRequest,
+        traces: &Mutex<Vec<RequestTrace>>,
+        reservations: &SlotReservations,
+    ) -> Result<Admission> {
+        let base = match session.kb_estimate(&req.comp) {
+            Some(t) => Some(t),
+            None => {
+                session.resolve_config(&req.comp, &req.args)?;
+                session.kb_estimate(&req.comp)
+            }
+        };
+        let base = base.unwrap_or_else(|| {
+            let tr = traces.lock().unwrap();
+            if tr.is_empty() {
+                1e-3
+            } else {
+                tr.iter().map(|t| t.exec_total).sum::<f64>() / tr.len() as f64
+            }
+        });
+        Ok(admit(session, machine, &req.comp, base, reservations))
     }
 }
 
@@ -312,7 +528,10 @@ pub fn serve_simulated(
 mod tests {
     use super::*;
     use crate::bench::workloads;
+    use crate::kb::mk_profile;
+    use crate::platform::cpu::FissionLevel;
     use crate::platform::device::i7_hd7950;
+    use crate::scheduler::SimEnv;
 
     fn requests(n: usize) -> Vec<ServeRequest> {
         (0..n)
@@ -325,13 +544,25 @@ mod tests {
         let pool = SessionPool::build(3, |i| Session::simulated(i7_hd7950(1), 40 + i as u64));
         let reqs = requests(6);
         let report = pool
-            .serve(&reqs, &ServeOpts { concurrency: 3, pace: 0.0, tasks_per_slot: None, drain_mode: None })
+            .serve(
+                &reqs,
+                &ServeOpts {
+                    concurrency: 3,
+                    ..Default::default()
+                },
+            )
             .unwrap();
         assert_eq!(report.completed, 6);
         // One cold start warms the whole pool: exactly one build (plus any
         // same-instant racers), and the shared KB holds one profile.
         assert_eq!(pool.shared_kb().read().unwrap().len(), 1);
         assert!(report.stats.kb_hits + report.stats.derived >= 3);
+        // Without co-scheduling every request books the whole pool: the
+        // virtual makespan is the serialized sum of execution times.
+        assert!(!report.co_scheduled);
+        let sum: f64 = report.traces.iter().map(|t| t.exec_total).sum();
+        assert!((report.virtual_makespan - sum).abs() <= 1e-9 * sum.max(1.0));
+        assert!(report.traces.iter().all(|t| t.mask.is_none()));
     }
 
     #[test]
@@ -341,7 +572,11 @@ mod tests {
             &i7_hd7950(1),
             7,
             &reqs,
-            &ServeOpts { concurrency: 2, pace: 0.002, tasks_per_slot: None, drain_mode: None },
+            &ServeOpts {
+                concurrency: 2,
+                pace: 0.002,
+                ..Default::default()
+            },
         )
         .unwrap();
         assert_eq!(report.completed, 8);
@@ -354,12 +589,141 @@ mod tests {
     }
 
     #[test]
+    fn percentiles_index_duration_sorted_samples() {
+        // A known distribution handed over in *reverse completion order*:
+        // the percentiles must come from the sorted durations, so p50 of
+        // 1..=101 is exactly 51 and p99 exactly 100 — not whatever landed
+        // at those completion indices.
+        let completion_order: Vec<f64> = (1..=101).rev().map(|i| i as f64).collect();
+        let mut by_duration = completion_order.clone();
+        by_duration.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((percentile(&by_duration, 50.0) - 51.0).abs() < 1e-12);
+        assert!((percentile(&by_duration, 99.0) - 100.0).abs() < 1e-12);
+        // And the serve path reports exactly these sorted-index values.
+        let reqs = requests(3);
+        let report = serve_simulated(&i7_hd7950(1), 3, &reqs, &ServeOpts::default()).unwrap();
+        let mut lat: Vec<f64> = report.traces.iter().map(|t| t.latency).collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(report.p50_latency.to_bits(), percentile(&lat, 50.0).to_bits());
+        assert_eq!(report.p99_latency.to_bits(), percentile(&lat, 99.0).to_bits());
+    }
+
+    #[test]
     fn concurrency_is_capped_by_pool_size() {
         let pool = SessionPool::build(2, |i| Session::simulated(i7_hd7950(1), i as u64));
         let report = pool
-            .serve(&requests(4), &ServeOpts { concurrency: 16, pace: 0.0, tasks_per_slot: None, drain_mode: None })
+            .serve(
+                &requests(4),
+                &ServeOpts {
+                    concurrency: 16,
+                    ..Default::default()
+                },
+            )
             .unwrap();
         assert_eq!(report.concurrency, 2);
         assert_eq!(report.completed, 4);
+    }
+
+    /// A session over `machine` whose KB already holds a profile pinning
+    /// `cpu_share` for `comp` — the admission sees a tuned split without
+    /// running Algorithm 1.
+    fn seeded_session(comp: &Computation, cpu_share: f64, best: f64) -> Session<SimEnv> {
+        let s = Session::simulated(i7_hd7950(1), 21);
+        let (sct, w, _) = comp.spec().unwrap();
+        s.kb_mut().store(mk_profile(
+            &sct.id(),
+            w.clone(),
+            FissionLevel::L2,
+            vec![4],
+            cpu_share,
+            best,
+        ));
+        s
+    }
+
+    #[test]
+    fn admission_sends_leaning_requests_to_their_device() {
+        let machine = i7_hd7950(1);
+        let cpu_comp = Computation::from(workloads::saxpy(1 << 20));
+        let gpu_comp = Computation::from(workloads::saxpy(1 << 21));
+        let reservations = SlotReservations::new();
+        // CPU-leaning (tuned split 90% CPU): the CPU subset is within the
+        // width slack of the full pool and narrower, so it wins.
+        let s = seeded_session(&cpu_comp, 0.9, 1.0);
+        let a = admit(&s, &machine, &cpu_comp, 1.0, &reservations);
+        assert_eq!(a.mask, SlotMask::cpu_only(&machine), "got {}", a.mask);
+        // GPU-leaning: the GPU subset wins symmetrically.
+        let s = seeded_session(&gpu_comp, 0.1, 1.0);
+        let a = admit(&s, &machine, &gpu_comp, 1.0, &reservations);
+        assert_eq!(a.mask, SlotMask::single_gpu(&machine, 0), "got {}", a.mask);
+        // A balanced request keeps the whole pool: halving the hardware
+        // would double it, far past the slack.
+        let s = seeded_session(&cpu_comp, 0.5, 1.0);
+        let a = admit(&s, &machine, &cpu_comp, 1.0, &reservations);
+        assert_eq!(a.mask, SlotMask::full(&machine), "got {}", a.mask);
+    }
+
+    #[test]
+    fn admission_waits_steer_around_held_devices() {
+        let machine = i7_hd7950(1);
+        let comp = Computation::from(workloads::saxpy(1 << 20));
+        let s = seeded_session(&comp, 0.1, 1.0); // GPU-leaning
+        let reservations = SlotReservations::new();
+        // GPU held for a long time: even a GPU-leaning request is better
+        // off on the free CPU than queued behind 100 s of GPU work.
+        let _gpu = reservations
+            .try_acquire(SlotMask::all_gpus(&machine), 100.0)
+            .unwrap();
+        let a = admit(&s, &machine, &comp, 1.0, &reservations);
+        assert_eq!(a.mask, SlotMask::cpu_only(&machine), "got {}", a.mask);
+    }
+
+    #[test]
+    fn co_scheduled_serve_records_masks_and_overlapping_makespan() {
+        let machine = i7_hd7950(1);
+        let cpu_comp = Computation::from(workloads::saxpy(1 << 20));
+        let gpu_comp = Computation::from(workloads::saxpy(1 << 21));
+        let pool = SessionPool::build(2, |i| Session::simulated(machine.clone(), 60 + i as u64));
+        for comp in [(&cpu_comp, 0.9), (&gpu_comp, 0.1)] {
+            let (sct, w, _) = comp.0.spec().unwrap();
+            pool.shared_kb().write().unwrap().store(mk_profile(
+                &sct.id(),
+                w.clone(),
+                FissionLevel::L2,
+                vec![4],
+                comp.1,
+                1e-3,
+            ));
+        }
+        let reqs = vec![
+            ServeRequest::from(cpu_comp),
+            ServeRequest::from(gpu_comp),
+        ];
+        let report = pool
+            .serve(
+                &reqs,
+                &ServeOpts {
+                    concurrency: 2,
+                    co_schedule: true,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(report.completed, 2);
+        assert!(report.co_scheduled);
+        assert!(report.traces.iter().all(|t| t.mask.is_some()));
+        // Disjoint subsets overlap on the virtual timeline: the combined
+        // makespan is below the serialized sum.
+        let sum: f64 = report.traces.iter().map(|t| t.exec_total).sum();
+        assert!(
+            report.virtual_makespan < sum,
+            "makespan {} must undercut the serialized sum {}",
+            report.virtual_makespan,
+            sum
+        );
+        assert!(report.virtual_req_per_sec() > 0.0);
+        // The pool is reusable afterwards: no mask leaks past the request.
+        let again = pool.serve(&requests(2), &ServeOpts::default()).unwrap();
+        assert_eq!(again.completed, 2);
     }
 }

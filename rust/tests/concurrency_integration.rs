@@ -146,7 +146,7 @@ fn serve_throughput_scales_with_concurrency() {
     // Warm the profile once, then share it with both pools, so the
     // comparison measures admission-cap scaling, not cold-start tuning.
     pool1
-        .serve(&requests[..1], &ServeOpts { concurrency: 1, pace: 0.0, tasks_per_slot: None, drain_mode: None })
+        .serve(&requests[..1], &ServeOpts { concurrency: 1, ..Default::default() })
         .unwrap();
     *pool4.shared_kb().write().unwrap() = pool1.shared_kb().read().unwrap().clone();
     let serial = pool1
@@ -155,8 +155,7 @@ fn serve_throughput_scales_with_concurrency() {
             &ServeOpts {
                 concurrency: 1,
                 pace,
-                tasks_per_slot: None,
-                drain_mode: None,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -166,8 +165,7 @@ fn serve_throughput_scales_with_concurrency() {
             &ServeOpts {
                 concurrency: 4,
                 pace,
-                tasks_per_slot: None,
-                drain_mode: None,
+                ..Default::default()
             },
         )
         .unwrap();

@@ -1,0 +1,338 @@
+//! Device-space co-scheduling integration (DESIGN.md §2.8): the serve
+//! path's slot reservations and KB-cost admission, exercised end-to-end in
+//! `SimEnv` — no GPU required, and (with quiet cost parameters) fully
+//! deterministic, so results can be compared to the bit.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use marrow::bench::workloads;
+use marrow::data::vector::ArgValue;
+use marrow::decompose::{ExecSlot, Partition, PartitionPlan};
+use marrow::error::Result;
+use marrow::kb::mk_profile;
+use marrow::platform::cpu::FissionLevel;
+use marrow::platform::device::i7_hd7950;
+use marrow::runtime::exec::RequestArgs;
+use marrow::scheduler::launcher::TaskOutput;
+use marrow::scheduler::{
+    launch_with, LaunchOpts, SimEnv, SlotMask, SlotReservations, Task, TaskRunner, WorkQueues,
+};
+use marrow::session::serve::{ServeOpts, ServeRequest, SessionPool};
+use marrow::session::{Computation, Session};
+use marrow::sim::cost::CostParams;
+use marrow::sim::machine::SimMachine;
+
+fn quiet() -> CostParams {
+    CostParams {
+        cpu_noise: 0.0,
+        gpu_noise: 0.0,
+        straggler_p: 0.0,
+        ..CostParams::default()
+    }
+}
+
+/// A session over a noise-free simulated machine: pricing is a pure
+/// function of (plan, cost, config), so repeated runs agree to the bit.
+fn quiet_session(seed: u64) -> Session<SimEnv> {
+    Session::sim(SimMachine::new(i7_hd7950(1), seed).with_params(quiet()))
+}
+
+/// The heterogeneous pair: one CPU-leaning and one GPU-leaning request
+/// (same kernel, different sizes, so they occupy distinct KB entries),
+/// with pre-seeded profiles pinning the tuned splits — admission sees a
+/// warm KB and the test controls the leanings exactly.
+fn leaning_pair() -> (Computation, Computation) {
+    (
+        Computation::from(workloads::saxpy(1 << 20)),
+        Computation::from(workloads::saxpy(1 << 21)),
+    )
+}
+
+fn seed_kb<E: marrow::scheduler::ExecEnv>(session: &Session<E>, comp: &Computation, share: f64) {
+    let (sct, w, _) = comp.spec().unwrap();
+    session.kb_mut().store(mk_profile(
+        &sct.id(),
+        w.clone(),
+        FissionLevel::L2,
+        vec![4],
+        share,
+        1e-3,
+    ));
+}
+
+fn seeded_pool() -> (SessionPool<SimEnv>, Computation, Computation) {
+    let pool = SessionPool::build(2, |i| quiet_session(100 + i as u64));
+    let (cpu_comp, gpu_comp) = leaning_pair();
+    seed_kb(&pool.sessions()[0], &cpu_comp, 0.9);
+    seed_kb(&pool.sessions()[0], &gpu_comp, 0.1);
+    (pool, cpu_comp, gpu_comp)
+}
+
+/// The acceptance-criteria test: two concurrent heterogeneous requests
+/// finish with strictly lower combined makespan under co-scheduling than
+/// under the PR 2 whole-pool serialized drain, and each co-scheduled
+/// request's result is bit-identical to a solo run on the same subset.
+#[test]
+fn co_scheduling_beats_whole_pool_serialization_with_identical_results() {
+    let (pool, cpu_comp, gpu_comp) = seeded_pool();
+    let reqs = vec![
+        ServeRequest::from(cpu_comp.clone()),
+        ServeRequest::from(gpu_comp.clone()),
+    ];
+    let serial = pool
+        .serve(
+            &reqs,
+            &ServeOpts {
+                concurrency: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let (pool, _, _) = seeded_pool();
+    let co = pool
+        .serve(
+            &reqs,
+            &ServeOpts {
+                concurrency: 2,
+                co_schedule: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(serial.completed, 2);
+    assert_eq!(co.completed, 2);
+
+    // The CPU-leaning request lands on the CPU device, the GPU-leaning one
+    // on the GPU: disjoint subsets, so the requests genuinely co-execute.
+    let masks: Vec<&SlotMask> = co.traces.iter().map(|t| t.mask.as_ref().unwrap()).collect();
+    assert!(
+        !masks[0].conflicts(masks[1]),
+        "heterogeneous requests must land on disjoint subsets: {} vs {}",
+        masks[0],
+        masks[1]
+    );
+
+    // Strictly lower combined makespan than the serialized whole-pool
+    // drain (which stacks every request on the virtual timeline).
+    assert!(
+        co.virtual_makespan < serial.virtual_makespan,
+        "co-scheduled makespan {} must beat serialized {}",
+        co.virtual_makespan,
+        serial.virtual_makespan
+    );
+
+    // Per-request results bit-identical to solo runs: a fresh session with
+    // the same profile and the same mask prices the same execution.
+    for trace in &co.traces {
+        let comp = if trace.index == 0 { &cpu_comp } else { &gpu_comp };
+        let solo = quiet_session(999);
+        seed_kb(&solo, comp, if trace.index == 0 { 0.9 } else { 0.1 });
+        solo.set_slot_mask(trace.mask.clone());
+        let out = solo.run(comp, &RequestArgs::default()).unwrap();
+        assert_eq!(
+            out.exec.total.to_bits(),
+            trace.exec_total.to_bits(),
+            "request {} on {} must price identically solo",
+            trace.index,
+            trace.mask.as_ref().unwrap()
+        );
+    }
+}
+
+/// Masked runs are quarantined from learning: a burst of subset-restricted
+/// executions must neither refine the shared profile (their totals and
+/// slot times describe the reservation, not the machine) nor trip the
+/// balance machinery.
+#[test]
+fn masked_runs_do_not_feed_balancer_or_kb() {
+    let machine = i7_hd7950(1);
+    let comp = Computation::from(workloads::saxpy(1 << 20));
+    let s = quiet_session(77);
+    seed_kb(&s, &comp, 0.9);
+    s.set_slot_mask(Some(SlotMask::cpu_only(&machine)));
+    for _ in 0..6 {
+        s.run(&comp, &RequestArgs::default()).unwrap();
+    }
+    s.set_slot_mask(None);
+    let (sct, w, _) = comp.spec().unwrap();
+    {
+        let kb = s.kb();
+        let p = kb.lookup(&sct.id(), w).unwrap();
+        assert_eq!(p.config.cpu_share, 0.9, "masked runs must not refine");
+        assert_eq!(p.best_time, 1e-3, "masked totals must not update best_time");
+    }
+    let stats = s.stats();
+    assert_eq!(stats.runs, 6);
+    assert_eq!(stats.balance_ops, 0);
+    assert_eq!(stats.unbalanced_runs, 0);
+}
+
+/// A request needing the whole pool while subsets are held must queue —
+/// and complete once the subsets release — never deadlock.
+#[test]
+fn wide_request_queues_behind_subsets_without_deadlock() {
+    let machine = i7_hd7950(1);
+    let reg = Arc::new(SlotReservations::new());
+    let cpu = reg.try_acquire(SlotMask::cpu_only(&machine), 1.0).unwrap();
+    let gpu = reg.try_acquire(SlotMask::all_gpus(&machine), 1.0).unwrap();
+    assert!(reg.try_acquire(SlotMask::full(&machine), 1.0).is_none());
+
+    let reg2 = reg.clone();
+    let m2 = machine.clone();
+    let waiter = std::thread::spawn(move || {
+        let _g = reg2.acquire(SlotMask::full(&m2), 1.0);
+    });
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(
+        !waiter.is_finished(),
+        "full-pool request must queue while subsets are held"
+    );
+    drop(cpu);
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(!waiter.is_finished(), "one conflicting holder remains");
+    drop(gpu);
+    waiter.join().expect("queued request must complete, not deadlock");
+    assert_eq!(reg.active_len(), 0);
+}
+
+/// A reservation guard releases on unwind: a panicking request can never
+/// leak its slots.
+#[test]
+fn reservation_releases_on_request_panic() {
+    let machine = i7_hd7950(1);
+    let reg = Arc::new(SlotReservations::new());
+    let reg2 = reg.clone();
+    let m2 = machine.clone();
+    let joined = std::thread::spawn(move || {
+        let _g = reg2.acquire(SlotMask::full(&m2), 1.0);
+        panic!("request died mid-flight");
+    })
+    .join();
+    assert!(joined.is_err(), "the worker must have panicked");
+    assert_eq!(reg.active_len(), 0, "unwind must release the reservation");
+    assert!(reg.try_acquire(SlotMask::full(&machine), 1.0).is_some());
+}
+
+/// A failing request cancels the stream (serve returns the error) and the
+/// pool — sessions and masks — stays usable for the next serve call.
+#[test]
+fn failing_request_cancels_stream_and_frees_the_pool() {
+    use marrow::sct::{KernelSpec, ParamSpec, Sct};
+    let (pool, cpu_comp, _) = seeded_pool();
+    // No workload/units attached: Session::run rejects it.
+    let bad = Computation::from_sct(Sct::kernel(KernelSpec::new(
+        "orphan",
+        vec![ParamSpec::VecIn],
+        1,
+    )));
+    let reqs = vec![ServeRequest::from(bad), ServeRequest::from(cpu_comp.clone())];
+    let err = pool
+        .serve(
+            &reqs,
+            &ServeOpts {
+                concurrency: 2,
+                co_schedule: true,
+                ..Default::default()
+            },
+        )
+        .unwrap_err();
+    assert!(!format!("{err}").is_empty());
+    // The pool serves fine afterwards — no leaked mask, no poisoned state.
+    let ok = pool
+        .serve(
+            &[ServeRequest::from(cpu_comp)],
+            &ServeOpts {
+                concurrency: 2,
+                co_schedule: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(ok.completed, 1);
+}
+
+/// Two concurrent cold requests (different SCT dimensionalities, so both
+/// must build) keep the shared `Arc<RwLock<KnowledgeBase>>` consistent:
+/// one profile per (SCT, workload), both retrievable.
+#[test]
+fn concurrent_cold_requests_keep_shared_kb_consistent() {
+    let pool = SessionPool::build(2, |i| quiet_session(40 + i as u64));
+    let a = Computation::from(workloads::saxpy(1 << 18));
+    let b = Computation::from(workloads::filter_pipeline(256, 256, true));
+    let reqs: Vec<ServeRequest> = (0..8)
+        .map(|i| {
+            ServeRequest::from(if i % 2 == 0 { a.clone() } else { b.clone() })
+        })
+        .collect();
+    let report = pool
+        .serve(
+            &reqs,
+            &ServeOpts {
+                concurrency: 2,
+                co_schedule: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(report.completed, 8);
+    let kb = pool.shared_kb();
+    let kb = kb.read().unwrap();
+    assert_eq!(kb.len(), 2, "exactly one profile per (SCT, workload)");
+    for comp in [&a, &b] {
+        let (sct, w, _) = comp.spec().unwrap();
+        assert!(kb.lookup(&sct.id(), w).is_some());
+    }
+    assert!(report.stats.built >= 2, "both cold pairs must have built");
+}
+
+/// Launcher-level boundary: a masked drain completes every task without a
+/// single execution landing on an excluded slot — stealing cannot cross a
+/// reservation.
+#[test]
+fn masked_drain_never_executes_outside_the_reservation() {
+    struct SlotRecorder(Mutex<Vec<ExecSlot>>);
+    impl TaskRunner for SlotRecorder {
+        fn run_task(&self, slot: ExecSlot, task: &Task) -> Result<TaskOutput> {
+            self.0.lock().unwrap().push(slot);
+            Ok(vec![ArgValue::F32(vec![task.partition.start_unit as f32])].into())
+        }
+    }
+    let plan = PartitionPlan {
+        partitions: vec![
+            Partition {
+                slot: ExecSlot::GpuSlot { gpu: 0, slot: 0 },
+                start_unit: 0,
+                units: 64,
+            },
+            Partition {
+                slot: ExecSlot::CpuSub { idx: 0 },
+                start_unit: 64,
+                units: 64,
+            },
+        ],
+        quantum: 1,
+        gpu_share: 0.5,
+    };
+    let queues = WorkQueues::from_plan_chunked(&plan, 4);
+    let n_tasks = queues.n_tasks();
+    let recorder = SlotRecorder(Mutex::new(Vec::new()));
+    let out = launch_with(
+        queues,
+        &recorder,
+        LaunchOpts {
+            policy: None,
+            mask: Some(SlotMask {
+                cpu: true,
+                gpus: vec![false],
+            }),
+        },
+    )
+    .unwrap();
+    assert_eq!(out.partials.len(), n_tasks, "every task must still run");
+    let slots = recorder.0.into_inner().unwrap();
+    assert!(
+        slots.iter().all(|s| s.is_cpu()),
+        "no execution may land outside the reservation: {slots:?}"
+    );
+}

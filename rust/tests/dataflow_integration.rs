@@ -390,6 +390,7 @@ fn graph_steals_skipped_when_resident_data_prices_them_out() {
                 secs_per_byte: 1.0,
                 default_task_secs: 1e-6,
             }),
+            mask: None,
         },
     )
     .unwrap();
@@ -424,6 +425,7 @@ fn graph_steals_admitted_and_booked_when_migration_is_free() {
                 secs_per_byte: 1e-12,
                 default_task_secs: 0.05,
             }),
+            mask: None,
         },
     )
     .unwrap();
@@ -552,9 +554,8 @@ fn session_and_serve_expose_drain_mode_and_idle_accounting() {
             &reqs,
             &ServeOpts {
                 concurrency: 2,
-                pace: 0.0,
-                tasks_per_slot: None,
                 drain_mode: Some(DrainMode::Barrier),
+                ..Default::default()
             },
         )
         .unwrap();

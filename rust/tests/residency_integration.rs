@@ -152,9 +152,8 @@ fn pool_of_sessions_reports_transfer_stats_in_serve_report() {
             &reqs,
             &ServeOpts {
                 concurrency: 2,
-                pace: 0.0,
                 tasks_per_slot: Some(8),
-                drain_mode: None,
+                ..Default::default()
             },
         )
         .unwrap();

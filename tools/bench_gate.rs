@@ -1,0 +1,257 @@
+//! CI bench regression gate (DESIGN.md §2.8): compares the serve-workload
+//! throughput of freshly-produced `BENCH_*.json` files against the
+//! committed baselines under `benches/baselines/`, failing the job on a
+//! >15% regression, and asserts the co-scheduling invariant of
+//! `BENCH_pr5.json` (the co-scheduled virtual makespan must beat the
+//! serialized baseline). Also emits the merged markdown table the CI
+//! `bench-summary` artifact ships.
+//!
+//! Usage:
+//!   bench_gate [--fresh BENCH_pr5.json] [--baselines benches/baselines]
+//!              [--summary bench-summary.md] [--tolerance 0.15]
+//!
+//! Baselines are plain copies of previous runs' bench JSON. A baseline
+//! file without the compared keys (the committed bootstrap state) gates
+//! nothing — the gate prints the fresh values so a maintainer can pin
+//! them from the `bench-summary` artifact of a trusted run.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use marrow::cli::Args;
+use marrow::util::json::Json;
+
+/// Benches whose throughput the gate enforces: the serve workloads.
+const SERVE_BENCHES: [&str; 2] = ["serve_throughput", "coschedule_serve"];
+
+fn main() {
+    let args = Args::from_env();
+    match run(&args) {
+        Ok(()) => println!("bench gate: OK"),
+        Err(e) => {
+            eprintln!("bench gate: FAIL — {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(args: &Args) -> Result<(), String> {
+    let fresh_path = args.get_or("fresh", "BENCH_pr5.json");
+    let baseline_dir = args.get_or("baselines", "benches/baselines");
+    let tolerance = args
+        .get("tolerance")
+        .map(|t| t.parse::<f64>().map_err(|e| format!("--tolerance: {e}")))
+        .transpose()?
+        .unwrap_or(0.15);
+
+    // Summary first: the failing runs are exactly the ones whose numbers
+    // a maintainer needs to inspect (and possibly pin as new baselines).
+    if let Some(summary) = args.get("summary") {
+        write_summary(summary)?;
+    }
+    check_coschedule_invariant(&fresh_path)?;
+    check_baselines(&baseline_dir, tolerance)?;
+    Ok(())
+}
+
+/// The feature's own regression gate, baseline-free and deterministic:
+/// BENCH_pr5.json's co-scheduled run must beat the serialized run on the
+/// virtual (device-time) makespan.
+fn check_coschedule_invariant(fresh_path: &str) -> Result<(), String> {
+    let v = parse_file(Path::new(fresh_path))?;
+    let speedup = v
+        .get("co_speedup_virtual")
+        .ok()
+        .and_then(|s| s.as_f64())
+        .ok_or_else(|| format!("{fresh_path}: missing co_speedup_virtual"))?;
+    if speedup <= 1.0 {
+        return Err(format!(
+            "{fresh_path}: co-scheduling virtual speedup {speedup:.3}x does \
+             not beat the serialized whole-pool baseline"
+        ));
+    }
+    println!("co-scheduling invariant: {speedup:.2}x over serialized (OK)");
+    Ok(())
+}
+
+/// Compare every serve-workload throughput key present in both a fresh
+/// `BENCH_*.json` (cwd) and its committed baseline.
+fn check_baselines(baseline_dir: &str, tolerance: f64) -> Result<(), String> {
+    let fresh = serve_metrics_in_dir(Path::new("."))?;
+    let baseline = match std::fs::metadata(baseline_dir) {
+        Ok(_) => serve_metrics_in_dir(Path::new(baseline_dir))?,
+        Err(_) => {
+            println!("no baseline dir {baseline_dir} — recording only");
+            BTreeMap::new()
+        }
+    };
+    let mut regressions = Vec::new();
+    let mut compared = 0usize;
+    for (key, fresh_val) in &fresh {
+        match baseline.get(key) {
+            Some(base_val) if *base_val > 0.0 => {
+                compared += 1;
+                let floor = base_val * (1.0 - tolerance);
+                let verdict = if *fresh_val < floor {
+                    regressions.push(format!(
+                        "{key}: {fresh_val:.2} req/s < {floor:.2} \
+                         (baseline {base_val:.2} - {:.0}%)",
+                        tolerance * 100.0
+                    ));
+                    "REGRESSED"
+                } else {
+                    "ok"
+                };
+                println!("{key}: fresh {fresh_val:.2} vs baseline {base_val:.2} [{verdict}]");
+            }
+            _ => println!("{key}: fresh {fresh_val:.2} (no baseline — recording only)"),
+        }
+    }
+    // A pinned metric the fresh run no longer produces is itself a
+    // regression: a renamed workload or dropped point must not turn the
+    // gate green by vanishing.
+    for (key, base_val) in &baseline {
+        if *base_val > 0.0 && !fresh.contains_key(key) {
+            regressions.push(format!(
+                "{key}: pinned baseline {base_val:.2} has no fresh measurement"
+            ));
+        }
+    }
+    println!(
+        "baseline comparison: {compared} gated, {} recorded",
+        fresh.len() - compared
+    );
+    if regressions.is_empty() {
+        Ok(())
+    } else {
+        Err(format!(
+            ">{:.0}% serve-throughput regression:\n  {}",
+            tolerance * 100.0,
+            regressions.join("\n  ")
+        ))
+    }
+}
+
+/// Serve-workload throughput keys of every `BENCH_*.json` in `dir`:
+/// `bench:workload:metric -> req/s`. Deterministic virtual throughput is
+/// preferred over wall throughput when a workload reports both.
+fn serve_metrics_in_dir(dir: &Path) -> Result<BTreeMap<String, f64>, String> {
+    let mut out = BTreeMap::new();
+    for path in bench_files(dir)? {
+        let v = parse_file(&path)?;
+        let bench = match v.get("bench").ok().and_then(|b| b.as_str()) {
+            Some(b) if SERVE_BENCHES.contains(&b) => b.to_string(),
+            _ => continue,
+        };
+        if let Ok(ws) = v.get("workloads") {
+            for w in ws.as_arr().unwrap_or(&[]) {
+                let name = w.get("name").ok().and_then(|n| n.as_str()).unwrap_or("?");
+                if let Some(r) = w.get("virtual_req_per_sec").ok().and_then(|x| x.as_f64()) {
+                    out.insert(format!("{bench}:{name}:virtual_req_per_sec"), r);
+                } else if let Some(r) =
+                    w.get("requests_per_sec").ok().and_then(|x| x.as_f64())
+                {
+                    out.insert(format!("{bench}:{name}:requests_per_sec"), r);
+                }
+            }
+        }
+        if let Ok(ps) = v.get("points") {
+            for p in ps.as_arr().unwrap_or(&[]) {
+                let c = p.get("concurrency").ok().and_then(|x| x.as_u64());
+                let r = p.get("requests_per_sec").ok().and_then(|x| x.as_f64());
+                if let (Some(c), Some(r)) = (c, r) {
+                    out.insert(format!("{bench}:c{c}:requests_per_sec"), r);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// `BENCH_*.json` files directly under `dir`, sorted for stable output.
+fn bench_files(dir: &Path) -> Result<Vec<std::path::PathBuf>, String> {
+    let mut files: Vec<_> = std::fs::read_dir(dir)
+        .map_err(|e| format!("{}: {e}", dir.display()))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+                .unwrap_or(false)
+        })
+        .collect();
+    files.sort();
+    Ok(files)
+}
+
+fn parse_file(path: &Path) -> Result<Json, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// The merged markdown table shipped in the `bench-summary` artifact: one
+/// row per numeric leaf of every `BENCH_*.json` in the cwd.
+fn write_summary(out_path: &str) -> Result<(), String> {
+    let mut rows = Vec::new();
+    for path in bench_files(Path::new("."))? {
+        let v = parse_file(&path)?;
+        let file = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("?")
+            .to_string();
+        flatten(&v, "", &mut |metric, value| {
+            rows.push((file.clone(), metric.to_string(), value));
+        });
+    }
+    let mut md = String::from(
+        "# Bench summary\n\n| file | metric | value |\n|---|---|---:|\n",
+    );
+    for (file, metric, value) in &rows {
+        md.push_str(&format!("| {file} | {metric} | {value:.4} |\n"));
+    }
+    std::fs::write(out_path, &md).map_err(|e| format!("{out_path}: {e}"))?;
+    println!("wrote {out_path} ({} rows)", rows.len());
+    Ok(())
+}
+
+/// Depth-first numeric leaves with dotted paths; array elements are keyed
+/// by their `name`/`workload`/`concurrency` field when present, else index.
+fn flatten(v: &Json, prefix: &str, emit: &mut dyn FnMut(&str, f64)) {
+    match v {
+        Json::Num(n) => emit(prefix, *n),
+        Json::Obj(map) => {
+            for (k, val) in map {
+                let p = if prefix.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{prefix}.{k}")
+                };
+                flatten(val, &p, emit);
+            }
+        }
+        Json::Arr(items) => {
+            for (i, item) in items.iter().enumerate() {
+                let tag = item
+                    .get("name")
+                    .ok()
+                    .and_then(|n| n.as_str().map(str::to_string))
+                    .or_else(|| {
+                        item.get("workload")
+                            .ok()
+                            .and_then(|n| n.as_str().map(str::to_string))
+                    })
+                    .or_else(|| {
+                        item.get("concurrency")
+                            .ok()
+                            .and_then(|c| c.as_u64().map(|c| format!("c{c}")))
+                    })
+                    .unwrap_or_else(|| i.to_string());
+                flatten(item, &format!("{prefix}[{tag}]"), emit);
+            }
+        }
+        _ => {}
+    }
+}
