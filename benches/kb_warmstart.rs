@@ -1,0 +1,230 @@
+//! KB-store warm-start bench (BENCH_pr6.json): a cold fleet member builds
+//! its profiles from scratch into a durable KB store (DESIGN.md §2.9),
+//! exports a snapshot, and a second member warm-started from that snapshot
+//! serves the same stream without running Algorithm 1 at all.
+//!
+//! The gate (`tools/bench_gate.rs`) enforces three deterministic
+//! invariants from the emitted JSON:
+//!  * the warm-started serve performs ZERO cold profile builds,
+//!  * its cold-build wall seconds are strictly below the cold run's,
+//!  * merging two stores in either order exports byte-identical snapshots.
+
+use std::path::{Path, PathBuf};
+
+use marrow::bench::workloads;
+use marrow::kb::store::snapshot::KbSnapshot;
+use marrow::kb::store::{machine_digest, KbStore};
+use marrow::kb::{mk_profile, KnowledgeBase};
+use marrow::platform::cpu::FissionLevel;
+use marrow::platform::device::i7_hd7950;
+use marrow::scheduler::SimEnv;
+use marrow::session::serve::{ServeOpts, ServeRequest, SessionPool};
+use marrow::session::{Computation, Session};
+use marrow::sim::cost::CostParams;
+use marrow::sim::machine::SimMachine;
+
+const REQUESTS: usize = 24;
+const CONCURRENCY: usize = 4;
+const PACE_MS: f64 = 0.5;
+const STORE_SYNC_EVERY: usize = 8;
+/// Distinct saxpy sizes, so the stream holds three separate KB entries.
+const SIZES: [u64; 3] = [1 << 19, 1 << 20, 1 << 21];
+
+fn quiet_session(seed: u64) -> Session<SimEnv> {
+    let quiet = CostParams {
+        cpu_noise: 0.0,
+        gpu_noise: 0.0,
+        straggler_p: 0.0,
+        ..CostParams::default()
+    };
+    Session::sim(SimMachine::new(i7_hd7950(1), seed).with_params(quiet))
+}
+
+fn stream() -> Vec<ServeRequest> {
+    (0..REQUESTS)
+        .map(|i| {
+            ServeRequest::from(Computation::from(workloads::saxpy(
+                SIZES[i % SIZES.len()],
+            )))
+        })
+        .collect()
+}
+
+struct Point {
+    name: &'static str,
+    wall_rps: f64,
+    virt_rps: f64,
+    built: u64,
+    warm_hits: u64,
+    build_secs: f64,
+}
+
+/// Serve the stream through a pool whose shared KB is backed by the store
+/// at `dir`, optionally warm-started from `snapshot` first.
+fn run_serve(
+    name: &'static str,
+    dir: &Path,
+    digest: &str,
+    snapshot: Option<&KbSnapshot>,
+    seed: u64,
+) -> Point {
+    let pool = SessionPool::build(CONCURRENCY, |i| quiet_session(seed + i as u64));
+    let mut kb = KnowledgeBase::open_store(dir, digest).expect("open store");
+    if let Some(snap) = snapshot {
+        let (exact, hints) = kb.import_snapshot(snap);
+        assert!(
+            exact >= SIZES.len(),
+            "{name}: imported only {exact} exact profiles"
+        );
+        assert_eq!(hints, 0, "{name}: same-platform import produced hints");
+    }
+    *pool.shared_kb().write().unwrap() = kb;
+    let report = pool
+        .serve(
+            &stream(),
+            &ServeOpts {
+                concurrency: CONCURRENCY,
+                pace: PACE_MS * 1e-3,
+                store_sync_every: STORE_SYNC_EVERY,
+                ..Default::default()
+            },
+        )
+        .expect("serve");
+    assert_eq!(report.completed, REQUESTS);
+    Point {
+        name,
+        wall_rps: report.requests_per_sec,
+        virt_rps: report.virtual_req_per_sec(),
+        built: report.stats.built,
+        warm_hits: report.stats.warm_hits,
+        build_secs: report.stats.build_secs,
+    }
+}
+
+/// Merge snapshots `a` and `b` into a fresh store at `dir` in the given
+/// order and export the result's canonical bytes.
+fn merge_bytes(dir: &Path, digest: &str, a: &KbSnapshot, b: &KbSnapshot) -> String {
+    let mut store = KbStore::open(dir, digest).expect("open merge store");
+    a.merge_into(&mut store);
+    b.merge_into(&mut store);
+    store.flush().expect("flush merge store");
+    KbSnapshot::from_store(&store).encode()
+}
+
+fn main() {
+    let root = std::env::temp_dir().join(format!(
+        "marrow_bench_kbwarm_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    let dir = |name: &str| -> PathBuf { root.join(name) };
+    let digest = machine_digest("analytic", &i7_hd7950(1));
+
+    println!(
+        "kb warm-start: {REQUESTS} requests over {} workloads, concurrency \
+         {CONCURRENCY}, pace floor {PACE_MS} ms, store sync every \
+         {STORE_SYNC_EVERY}\n",
+        SIZES.len()
+    );
+    println!(
+        "{:>18} {:>12} {:>14} {:>7} {:>10} {:>12}",
+        "mode", "wall req/s", "virtual req/s", "built", "warm hits", "build secs"
+    );
+
+    // Cold fleet member: every distinct workload runs Algorithm 1 once.
+    let cold = run_serve("cold_kb_serve", &dir("store-a"), &digest, None, 900);
+    assert!(
+        cold.built >= SIZES.len() as u64,
+        "cold serve built only {} profiles",
+        cold.built
+    );
+    assert!(
+        cold.build_secs > 0.0,
+        "cold serve reports no Algorithm 1 wall time"
+    );
+
+    // Export the cold member's learning and warm-start a fresh one from it.
+    let store_a = KbStore::open(&dir("store-a"), &digest).expect("reopen store");
+    let snap = KbSnapshot::from_store(&store_a);
+    assert!(snap.len() >= SIZES.len());
+    let warm = run_serve(
+        "warm_start_serve",
+        &dir("store-b"),
+        &digest,
+        Some(&snap),
+        950,
+    );
+    assert_eq!(warm.built, 0, "warm-started serve ran cold builds");
+    assert!(warm.warm_hits > 0, "warm-started serve saw no warm hits");
+    assert_eq!(
+        warm.build_secs, 0.0,
+        "warm-started serve spent time in Algorithm 1"
+    );
+
+    for p in [&cold, &warm] {
+        println!(
+            "{:>18} {:>12.1} {:>14.1} {:>7} {:>10} {:>12.4}",
+            p.name, p.wall_rps, p.virt_rps, p.built, p.warm_hits, p.build_secs
+        );
+    }
+
+    // Merge determinism: the cold member's snapshot folded against a
+    // partially-overlapping hand-built store must export the same bytes in
+    // either merge order (the keep-best fold is commutative).
+    {
+        let mut store_c = KbStore::open(&dir("store-c"), &digest).expect("open store");
+        for (i, &size) in SIZES.iter().enumerate() {
+            let comp = Computation::from(workloads::saxpy(size));
+            let (sct, w, _) = comp.spec().unwrap();
+            // Odd entries beat anything learned (tiny best_time), even ones
+            // lose — so the merged result draws from both sides.
+            let best = if i % 2 == 0 { 1e3 } else { 1e-9 };
+            store_c.stage(
+                mk_profile(&sct.id(), w.clone(), FissionLevel::L2, vec![4], 0.5, best),
+                None,
+            );
+        }
+        store_c.flush().expect("flush store-c");
+        let snap_c = KbSnapshot::from_store(&store_c);
+        let ab = merge_bytes(&dir("merge-ab"), &digest, &snap, &snap_c);
+        let ba = merge_bytes(&dir("merge-ba"), &digest, &snap_c, &snap);
+        assert_eq!(ab, ba, "snapshot merge is order-dependent");
+        println!(
+            "\nmerge determinism: {} + {} records -> identical {} byte \
+             snapshots in both orders",
+            snap.len(),
+            snap_c.len(),
+            ab.len()
+        );
+    }
+
+    let workloads_json: Vec<String> = [&cold, &warm]
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"name\": \"{}\", \"requests_per_sec\": {:.2}, \
+                 \"virtual_req_per_sec\": {:.2}, \"built\": {}, \
+                 \"warm_hits\": {}, \"build_secs\": {:.6}}}",
+                p.name, p.wall_rps, p.virt_rps, p.built, p.warm_hits, p.build_secs
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"kb_warmstart\",\n  \"pr\": 6,\n  \
+         \"requests\": {REQUESTS},\n  \"concurrency\": {CONCURRENCY},\n  \
+         \"pace_ms\": {PACE_MS},\n  \"workloads\": [\n{}\n  ],\n  \
+         \"cold_build_secs_cold\": {:.6},\n  \
+         \"cold_build_secs_warm\": {:.6},\n  \
+         \"warm_cold_builds\": {},\n  \"merge_deterministic\": true\n}}\n",
+        workloads_json.join(",\n"),
+        cold.build_secs,
+        warm.build_secs,
+        warm.built
+    );
+    let path = "BENCH_pr6.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -1,28 +1,77 @@
 //! The Knowledge Base (Section 3.2.3): stores the best-known configuration
-//! per (SCT, workload) pair, persists to JSON, and *derives* configurations
+//! per (SCT, workload) pair, persists durably, and *derives* configurations
 //! for unseen pairs via multidimensional interpolation of scattered data —
 //! an RBF network for workspaces of dimension 1-3, nearest-neighbour above.
 //!
 //! Derivation narrows scope progressively: configurations of the same SCT
 //! first; failing that, configurations of the same workload regardless of
 //! SCT; failing that, any workload of the same dimensionality.
+//!
+//! Persistence has two backings (DESIGN.md §2.9): the legacy single-file
+//! JSON KB (whole-file atomic rewrite on [`save`](KnowledgeBase::save)),
+//! and the durable content-addressed [`store`] — append-only segments a
+//! `KnowledgeBase` writes through incrementally, with snapshot
+//! export/import for fleet exchange. Imported profiles whose machine
+//! manifest digest matches the local platform become exact entries
+//! (warm-start: no Algorithm 1 cold build); mismatched-digest profiles
+//! are demoted to *derivation hints* — they feed
+//! [`derive`](KnowledgeBase::derive)'s interpolation scopes but never an
+//! exact [`lookup`](KnowledgeBase::lookup).
 
 pub mod interp;
+pub mod store;
 
+use std::collections::HashSet;
 use std::path::{Path, PathBuf};
 
 use crate::data::workload::Workload;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::platform::cpu::FissionLevel;
 use crate::tuner::profile::{FrameworkConfig, Profile, ProfileOrigin};
+use crate::util::fsio::atomic_write;
 use crate::util::json::Json;
 
+use store::snapshot::KbSnapshot;
+use store::{KbStore, StoreRecord};
+
+/// `sct|workload` identity of one KB entry (machine-local, unlike the
+/// store's digest-qualified content key).
+fn pair_key(sct_id: &str, workload_id: &str) -> String {
+    format!("{sct_id}|{workload_id}")
+}
+
 /// The knowledge base. `Clone` snapshots the current profiles (used when
-/// extracting a KB that other sessions still share).
-#[derive(Clone, Default)]
+/// extracting a KB that other sessions still share) — the clone is
+/// detached from any durable store backing so two writers never share
+/// one store handle.
+#[derive(Default)]
 pub struct KnowledgeBase {
     entries: Vec<Profile>,
     path: Option<PathBuf>,
+    /// Local machine manifest digest, when known (always set for
+    /// store-backed KBs): the "exact hit" side of import compatibility.
+    manifest_digest: Option<String>,
+    /// Foreign-manifest records: derivation hints, never exact hits.
+    hints: Vec<StoreRecord>,
+    /// Pair keys whose current entry came from the store / a snapshot
+    /// rather than a local build — the warm-start provenance marker,
+    /// cleared when a local measurement replaces the entry.
+    imported: HashSet<String>,
+    /// Durable write-through backing, if any.
+    kb_store: Option<KbStore>,
+}
+
+impl Clone for KnowledgeBase {
+    fn clone(&self) -> KnowledgeBase {
+        KnowledgeBase {
+            entries: self.entries.clone(),
+            path: self.path.clone(),
+            manifest_digest: self.manifest_digest.clone(),
+            hints: self.hints.clone(),
+            imported: self.imported.clone(),
+            kb_store: None,
+        }
+    }
 }
 
 impl KnowledgeBase {
@@ -30,18 +79,42 @@ impl KnowledgeBase {
         KnowledgeBase::default()
     }
 
-    /// Open (or create) a JSON-backed KB.
+    /// Open (or create) a legacy JSON-backed KB. A present-but-corrupt
+    /// file is an error, never silently an empty KB.
     pub fn open(path: &Path) -> Result<KnowledgeBase> {
         let mut kb = KnowledgeBase {
-            entries: Vec::new(),
             path: Some(path.to_path_buf()),
+            ..KnowledgeBase::default()
         };
         if path.exists() {
             let text = std::fs::read_to_string(path)?;
-            let v = Json::parse(&text)?;
+            let v = Json::parse(&text).map_err(|e| {
+                Error::Kb(format!(
+                    "corrupt knowledge base {}: {e:?}",
+                    path.display()
+                ))
+            })?;
             for e in v.get("profiles")?.as_arr().unwrap_or(&[]) {
                 kb.entries.push(Profile::from_json(e)?);
             }
+        }
+        Ok(kb)
+    }
+
+    /// Open (or create) a durable store-backed KB (DESIGN.md §2.9):
+    /// entries load from the store's merged view, matching-digest records
+    /// as exact (warm-start) entries, foreign-digest records as
+    /// derivation hints; `store()` then writes through incrementally.
+    pub fn open_store(dir: &Path, manifest_digest: &str) -> Result<KnowledgeBase> {
+        let st = KbStore::open(dir, manifest_digest)?;
+        let mut kb = KnowledgeBase {
+            manifest_digest: Some(manifest_digest.to_string()),
+            ..KnowledgeBase::default()
+        };
+        let recs: Vec<StoreRecord> = st.records().cloned().collect();
+        kb.kb_store = Some(st);
+        for rec in &recs {
+            kb.absorb_record(rec, manifest_digest);
         }
         Ok(kb)
     }
@@ -54,38 +127,226 @@ impl KnowledgeBase {
         self.entries.is_empty()
     }
 
-    /// Persist to the backing file (no-op for in-memory KBs).
-    pub fn save(&self) -> Result<()> {
-        if let Some(path) = &self.path {
+    /// Foreign-manifest derivation hints currently held.
+    pub fn hint_count(&self) -> usize {
+        self.hints.len()
+    }
+
+    pub fn store_backed(&self) -> bool {
+        self.kb_store.is_some()
+    }
+
+    /// Store epoch of the durable backing, if any.
+    pub fn store_epoch(&self) -> Option<u64> {
+        self.kb_store.as_ref().map(|s| s.epoch())
+    }
+
+    /// Local manifest digest: the store's when backed, else whatever
+    /// [`ensure_manifest_digest`](KnowledgeBase::ensure_manifest_digest)
+    /// recorded, else empty (matches nothing).
+    fn local_digest(&self) -> String {
+        if let Some(st) = &self.kb_store {
+            return st.manifest_digest().to_string();
+        }
+        self.manifest_digest.clone().unwrap_or_default()
+    }
+
+    /// Record the local platform digest if none is known yet — lets
+    /// snapshot imports into in-memory KBs classify exact vs hint.
+    pub fn ensure_manifest_digest(&mut self, digest: &str) {
+        if self.manifest_digest.is_none() {
+            self.manifest_digest = Some(digest.to_string());
+        }
+    }
+
+    /// Persist. Store-backed: flush pending write-through records and
+    /// absorb concurrent flushes. Legacy JSON: atomic whole-file rewrite
+    /// (write-temp + fsync + rename), so a crash mid-save can never torn
+    /// -write the KB. No-op for plain in-memory KBs.
+    pub fn save(&mut self) -> Result<()> {
+        if self.kb_store.is_some() {
+            self.sync_store()?;
+            return Ok(());
+        }
+        if let Some(path) = self.path.clone() {
             let v = Json::obj(vec![(
                 "profiles",
                 Json::arr(self.entries.iter().map(|p| p.to_json()).collect()),
             )]);
-            std::fs::write(path, v.to_string_pretty())?;
+            atomic_write(&path, v.to_string_pretty().as_bytes())?;
         }
         Ok(())
     }
 
-    /// Store a profile, keeping only the best time per (SCT, workload).
-    pub fn store(&mut self, profile: Profile) {
-        if let Some(existing) = self.entries.iter_mut().find(|p| {
-            p.sct_id == profile.sct_id && p.workload.id() == profile.workload.id()
-        }) {
-            if profile.best_time <= existing.best_time
-                || profile.origin == ProfileOrigin::Refined
-            {
-                *existing = profile;
+    /// Flush pending write-through records and, when another process has
+    /// flushed segments since our last look (epoch change), absorb them.
+    /// Returns the number of records absorbed from disk.
+    pub fn sync_store(&mut self) -> Result<usize> {
+        let Some(mut st) = self.kb_store.take() else {
+            return Ok(0);
+        };
+        let result = self.sync_inner(&mut st);
+        self.kb_store = Some(st);
+        result
+    }
+
+    fn sync_inner(&mut self, st: &mut KbStore) -> Result<usize> {
+        st.flush()?;
+        if st.stale()? {
+            st.reload()?;
+        }
+        // Absorb the store's full merged view, not just what this reload
+        // folded: `flush` itself reloads concurrent segments first (to
+        // advance past them), and those records must reach the entries
+        // too. `absorb_record` is idempotent, so re-offering known
+        // records changes nothing.
+        let local = st.manifest_digest().to_string();
+        let recs: Vec<StoreRecord> = st.records().cloned().collect();
+        let mut absorbed = 0;
+        for rec in &recs {
+            if self.absorb_record(rec, &local) {
+                absorbed += 1;
+            }
+        }
+        Ok(absorbed)
+    }
+
+    /// Fold one store/snapshot record into the in-memory view: matching
+    /// digest → exact entry (marked imported) if strictly better than or
+    /// new to the current entries; foreign digest → derivation hint
+    /// (deduped per content key under the store's total order). Returns
+    /// whether anything changed.
+    fn absorb_record(&mut self, rec: &StoreRecord, local: &str) -> bool {
+        if !local.is_empty() && rec.manifest_digest == local {
+            let key = pair_key(&rec.profile.sct_id, &rec.profile.workload.id());
+            match self.entries.iter_mut().find(|p| {
+                p.sct_id == rec.profile.sct_id
+                    && p.workload.id() == rec.profile.workload.id()
+            }) {
+                Some(existing) => {
+                    if rec.profile.best_time < existing.best_time {
+                        *existing = rec.profile.clone();
+                        self.imported.insert(key);
+                        true
+                    } else {
+                        false
+                    }
+                }
+                None => {
+                    self.entries.push(rec.profile.clone());
+                    self.imported.insert(key);
+                    true
+                }
             }
         } else {
-            self.entries.push(profile);
+            match self.hints.iter_mut().find(|h| h.key == rec.key) {
+                Some(existing) => {
+                    if store::replaces(rec, existing) {
+                        *existing = rec.clone();
+                        true
+                    } else {
+                        false
+                    }
+                }
+                None => {
+                    self.hints.push(rec.clone());
+                    true
+                }
+            }
         }
     }
 
-    /// Exact lookup for a (SCT, workload) pair.
+    /// Import a snapshot: matching-digest records become exact entries
+    /// (warm-start), others derivation hints; everything is staged into
+    /// the durable store when one backs this KB. Returns
+    /// (exact entries absorbed, hints absorbed).
+    pub fn import_snapshot(&mut self, snap: &KbSnapshot) -> (usize, usize) {
+        let local = self.local_digest();
+        let (mut exact, mut hints) = (0usize, 0usize);
+        for rec in snap.records() {
+            let matches = !local.is_empty() && rec.manifest_digest == local;
+            if self.absorb_record(rec, &local) {
+                if matches {
+                    exact += 1;
+                } else {
+                    hints += 1;
+                }
+            }
+            if let Some(st) = &mut self.kb_store {
+                st.stage_record(rec.clone());
+            }
+        }
+        (exact, hints)
+    }
+
+    /// Export the full known record set (entries under the local digest
+    /// plus foreign hints; the store's merged view when backed) as a
+    /// canonical snapshot.
+    pub fn export_snapshot(&self) -> KbSnapshot {
+        if let Some(st) = &self.kb_store {
+            return KbSnapshot::from_store(st);
+        }
+        let local = self.local_digest();
+        let recs = self
+            .entries
+            .iter()
+            .map(|p| StoreRecord::new(p.clone(), &local))
+            .chain(self.hints.iter().cloned());
+        KbSnapshot::from_records(recs)
+    }
+
+    /// Did the current entry for this pair come from the store / an
+    /// imported snapshot (i.e. is a hit on it a *warm-start* hit)?
+    pub fn is_imported(&self, sct_id: &str, workload: &Workload) -> bool {
+        self.imported.contains(&pair_key(sct_id, &workload.id()))
+    }
+
+    /// Store a profile, keeping only the best time per (SCT, workload);
+    /// write-through to the durable store when one backs this KB.
+    pub fn store(&mut self, profile: Profile) {
+        let accepted = match self.entries.iter_mut().find(|p| {
+            p.sct_id == profile.sct_id && p.workload.id() == profile.workload.id()
+        }) {
+            Some(existing) => {
+                if profile.best_time <= existing.best_time
+                    || profile.origin == ProfileOrigin::Refined
+                {
+                    *existing = profile.clone();
+                    true
+                } else {
+                    false
+                }
+            }
+            None => {
+                self.entries.push(profile.clone());
+                true
+            }
+        };
+        if accepted {
+            // A local measurement now owns this pair.
+            self.imported
+                .remove(&pair_key(&profile.sct_id, &profile.workload.id()));
+            if let Some(st) = &mut self.kb_store {
+                st.stage(profile, None);
+            }
+        }
+    }
+
+    /// Exact lookup for a (SCT, workload) pair. Derivation hints are
+    /// deliberately excluded: a foreign-manifest profile is never an
+    /// exact hit.
     pub fn lookup(&self, sct_id: &str, workload: &Workload) -> Option<&Profile> {
         self.entries
             .iter()
             .find(|p| p.sct_id == sct_id && p.workload.id() == workload.id())
+    }
+
+    /// Entries plus foreign-manifest derivation hints: the profile pool
+    /// the derivation scopes interpolate over.
+    fn all_profiles(&self) -> impl Iterator<Item = &Profile> {
+        self.entries
+            .iter()
+            .chain(self.hints.iter().map(|r| &r.profile))
     }
 
     /// Derive a configuration for an unseen pair (box "Derive work
@@ -97,8 +358,7 @@ impl KnowledgeBase {
         }
         // Scope 1: same SCT.
         let same_sct: Vec<&Profile> = self
-            .entries
-            .iter()
+            .all_profiles()
             .filter(|p| {
                 p.sct_id == sct_id
                     && p.workload.dimensionality() == workload.dimensionality()
@@ -109,8 +369,7 @@ impl KnowledgeBase {
         }
         // Scope 2: same workload, any SCT.
         let same_wl: Vec<&Profile> = self
-            .entries
-            .iter()
+            .all_profiles()
             .filter(|p| p.workload.id() == workload.id())
             .collect();
         if !same_wl.is_empty() {
@@ -118,8 +377,7 @@ impl KnowledgeBase {
         }
         // Scope 3: same dimensionality.
         let same_dim: Vec<&Profile> = self
-            .entries
-            .iter()
+            .all_profiles()
             .filter(|p| p.workload.dimensionality() == workload.dimensionality())
             .collect();
         if !same_dim.is_empty() {
@@ -140,8 +398,9 @@ impl KnowledgeBase {
     /// progressively-widening scopes [`KnowledgeBase::derive`] uses (same
     /// SCT and dimensionality, then same workload, then same
     /// dimensionality) — a scope *minimum* would price a large request at
-    /// the smallest workload ever recorded. `None` on a cold KB — callers
-    /// fall back to an observed mean.
+    /// the smallest workload ever recorded. Entries only: foreign-manifest
+    /// hints carry another machine's clock and would mis-price admission.
+    /// `None` on a cold KB — callers fall back to an observed mean.
     pub fn estimate_time(&self, sct_id: &str, workload: &Workload) -> Option<f64> {
         if let Some(p) = self.lookup(sct_id, workload) {
             return Some(p.best_time);
@@ -231,7 +490,17 @@ pub fn mk_profile(
 
 impl std::fmt::Debug for KnowledgeBase {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "KnowledgeBase({} profiles)", self.entries.len())
+        write!(
+            f,
+            "KnowledgeBase({} profiles, {} hints{})",
+            self.entries.len(),
+            self.hints.len(),
+            if self.kb_store.is_some() {
+                ", store-backed"
+            } else {
+                ""
+            }
+        )
     }
 }
 
@@ -241,6 +510,10 @@ mod tests {
 
     fn wl(h: u64, w: u64) -> Workload {
         Workload::d2(h, w)
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("marrow_kb_{tag}_{}", std::process::id()))
     }
 
     #[test]
@@ -322,7 +595,7 @@ mod tests {
 
     #[test]
     fn persistence_roundtrip() {
-        let path = std::env::temp_dir().join("marrow_kb_test.json");
+        let path = tmp("roundtrip.json");
         let _ = std::fs::remove_file(&path);
         {
             let mut kb = KnowledgeBase::open(&path).unwrap();
@@ -335,5 +608,104 @@ mod tests {
         assert_eq!(p.config.fission, FissionLevel::Numa);
         assert_eq!(p.config.overlap, vec![2, 3]);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_kb_file_is_reported_not_empty() {
+        let path = tmp("corrupt.json");
+        // Torn write: a truncated prefix of a valid KB.
+        std::fs::write(&path, "{\n  \"profiles\": [\n    {\"sct_id\": \"f").unwrap();
+        let err = KnowledgeBase::open(&path);
+        assert!(err.is_err(), "truncated KB must not load as empty");
+        assert!(
+            format!("{:?}", err.unwrap_err()).contains("corrupt"),
+            "error should name the corruption"
+        );
+        // Valid JSON of the wrong shape is also an error, not empty.
+        std::fs::write(&path, "{\"x\": 1}").unwrap();
+        assert!(KnowledgeBase::open(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn save_leaves_no_temp_residue() {
+        let dir = tmp("atomic_dir");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("kb.json");
+        let mut kb = KnowledgeBase::open(&path).unwrap();
+        kb.store(mk_profile("f", wl(64, 64), FissionLevel::L2, vec![4], 0.2, 1.0));
+        kb.save().unwrap();
+        kb.save().unwrap();
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["kb.json".to_string()], "residue: {names:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn store_backed_write_through_roundtrip() {
+        let dir = tmp("writethrough");
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let mut kb = KnowledgeBase::open_store(&dir, "m0").unwrap();
+            kb.store(mk_profile("f", wl(256, 256), FissionLevel::L2, vec![4], 0.2, 1.0));
+            assert!(!kb.is_imported("f", &wl(256, 256)), "local build is not imported");
+            kb.save().unwrap();
+        }
+        let kb = KnowledgeBase::open_store(&dir, "m0").unwrap();
+        assert_eq!(kb.len(), 1);
+        assert!(kb.lookup("f", &wl(256, 256)).is_some());
+        assert!(
+            kb.is_imported("f", &wl(256, 256)),
+            "a reloaded entry is warm-start provenance"
+        );
+        // A different manifest digest sees the record as a hint only.
+        let other = KnowledgeBase::open_store(&dir, "m1").unwrap();
+        assert_eq!(other.len(), 0);
+        assert_eq!(other.hint_count(), 1);
+        assert!(other.lookup("f", &wl(256, 256)).is_none());
+        assert!(other.derive("f", &wl(256, 256)).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_import_classifies_by_digest() {
+        let mut src = KnowledgeBase::in_memory();
+        src.ensure_manifest_digest("mach-A");
+        src.store(mk_profile("f", wl(128, 128), FissionLevel::L2, vec![4], 0.2, 1.0));
+        let snap = src.export_snapshot();
+        assert_eq!(snap.len(), 1);
+
+        let mut same = KnowledgeBase::in_memory();
+        same.ensure_manifest_digest("mach-A");
+        assert_eq!(same.import_snapshot(&snap), (1, 0));
+        assert!(same.lookup("f", &wl(128, 128)).is_some());
+        assert!(same.is_imported("f", &wl(128, 128)));
+
+        let mut other = KnowledgeBase::in_memory();
+        other.ensure_manifest_digest("mach-B");
+        assert_eq!(other.import_snapshot(&snap), (0, 1));
+        assert!(other.lookup("f", &wl(128, 128)).is_none());
+        assert!(other.derive("f", &wl(128, 128)).is_some(), "hints feed derivation");
+        // Importing twice changes nothing (idempotent).
+        assert_eq!(other.import_snapshot(&snap), (0, 0));
+    }
+
+    #[test]
+    fn local_store_clears_imported_mark() {
+        let mut src = KnowledgeBase::in_memory();
+        src.ensure_manifest_digest("m");
+        src.store(mk_profile("f", wl(64, 64), FissionLevel::L2, vec![4], 0.2, 5.0));
+        let snap = src.export_snapshot();
+        let mut kb = KnowledgeBase::in_memory();
+        kb.ensure_manifest_digest("m");
+        kb.import_snapshot(&snap);
+        assert!(kb.is_imported("f", &wl(64, 64)));
+        kb.store(mk_profile("f", wl(64, 64), FissionLevel::L2, vec![4], 0.2, 4.0));
+        assert!(!kb.is_imported("f", &wl(64, 64)));
     }
 }

@@ -1,0 +1,557 @@
+//! Durable content-addressed profile store (DESIGN.md §2.9): the
+//! persistence layer beneath [`KnowledgeBase`](crate::kb::KnowledgeBase).
+//!
+//! Profiles are immutable [`StoreRecord`]s keyed by a SHA-256 content key
+//! over (SCT id, workload id, machine manifest digest). On disk a store
+//! is a directory of append-only *segment* files — each an atomic
+//! write-temp + fsync + rename commit of one flush's records — plus a
+//! `meta.json` index carrying the monotonic store epoch. The directory
+//! scan is authoritative on open/reload; `meta.json` is a hint, so two
+//! processes flushing uniquely-named segments into the same directory
+//! interleave without losing records.
+//!
+//! Replay in any order converges to the same state because records merge
+//! under a *total* order ([`replaces`]): smaller `best_time` wins, then
+//! `Refined` origin, then the lexicographically smaller canonical
+//! encoding — which is what makes snapshot merge idempotent, commutative
+//! and associative across fleet nodes.
+
+pub mod snapshot;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Error, Result};
+use crate::platform::device::Machine;
+use crate::tuner::profile::{Profile, ProfileOrigin};
+use crate::util::fsio::atomic_write;
+use crate::util::hash::sha256_hex;
+use crate::util::json::Json;
+
+/// Format tag of every segment / meta / snapshot file this code writes.
+pub const STORE_FORMAT: &str = "marrow-kb-store-v1";
+
+/// Content key of a profile: the store address of the best-known
+/// configuration for one (SCT, workload) pair *on one machine manifest*.
+pub fn content_key(sct_id: &str, workload_id: &str, manifest_digest: &str) -> String {
+    sha256_hex(
+        format!("marrow-profile-v1\0{sct_id}\0{workload_id}\0{manifest_digest}")
+            .as_bytes(),
+    )
+}
+
+/// Digest of a machine manifest under a backend kind tag ("analytic" for
+/// simulated/model-driven backends, "real" for OpenCL/PJRT schedulers,
+/// which also fold in their kernel-artifact manifest). Profiles are
+/// exchangeable as exact warm-start hits only between equal digests.
+pub fn machine_digest(kind: &str, machine: &Machine) -> String {
+    sha256_hex(format!("{kind}\0{}", machine.manifest_json().to_string()).as_bytes())
+}
+
+/// One immutable stored profile: the unit of persistence, snapshot
+/// exchange and merge.
+#[derive(Clone, Debug)]
+pub struct StoreRecord {
+    /// Content key — [`content_key`] of the fields below.
+    pub key: String,
+    /// Digest of the machine manifest the profile was measured on.
+    pub manifest_digest: String,
+    pub profile: Profile,
+}
+
+impl StoreRecord {
+    pub fn new(profile: Profile, manifest_digest: &str) -> StoreRecord {
+        StoreRecord {
+            key: content_key(&profile.sct_id, &profile.workload.id(), manifest_digest),
+            manifest_digest: manifest_digest.to_string(),
+            profile,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("key", Json::str(self.key.as_str())),
+            ("manifest_digest", Json::str(self.manifest_digest.as_str())),
+            ("profile", self.profile.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<StoreRecord> {
+        let profile = Profile::from_json(v.get("profile")?)?;
+        let manifest_digest = v
+            .get("manifest_digest")?
+            .as_str()
+            .unwrap_or("")
+            .to_string();
+        let key = v.get("key")?.as_str().unwrap_or("").to_string();
+        let expect = content_key(&profile.sct_id, &profile.workload.id(), &manifest_digest);
+        if key != expect {
+            return Err(Error::Kb(format!(
+                "store record key mismatch: {key} != {expect} (corrupt record?)"
+            )));
+        }
+        Ok(StoreRecord {
+            key,
+            manifest_digest,
+            profile,
+        })
+    }
+
+    /// Canonical single-line encoding — the merge tiebreaker and the byte
+    /// content snapshots serialize, so equal records encode equally.
+    pub fn canonical(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+fn origin_rank(o: ProfileOrigin) -> u8 {
+    match o {
+        ProfileOrigin::Refined => 2,
+        ProfileOrigin::Built => 1,
+        ProfileOrigin::Derived => 0,
+    }
+}
+
+/// Total order deciding whether `incoming` replaces `current` for the
+/// same content key: strictly better (smaller) `best_time` wins; on equal
+/// times the higher-ranked origin (`Refined` > `Built` > `Derived`) wins;
+/// a residual tie falls to the lexicographically smaller canonical
+/// encoding. Totality (no "keep whichever arrived first" case) is what
+/// makes merge order-independent. NaN times always lose.
+pub fn replaces(incoming: &StoreRecord, current: &StoreRecord) -> bool {
+    match incoming.profile.best_time.total_cmp(&current.profile.best_time) {
+        std::cmp::Ordering::Less => true,
+        std::cmp::Ordering::Greater => false,
+        std::cmp::Ordering::Equal => {
+            let (ri, rc) = (
+                origin_rank(incoming.profile.origin),
+                origin_rank(current.profile.origin),
+            );
+            if ri != rc {
+                ri > rc
+            } else {
+                incoming.canonical() < current.canonical()
+            }
+        }
+    }
+}
+
+/// Merge `rec` into a key-indexed record map under the [`replaces`]
+/// order. Returns whether the map changed (new key or replacement).
+pub fn fold_record(map: &mut BTreeMap<String, StoreRecord>, rec: StoreRecord) -> bool {
+    match map.get(&rec.key) {
+        Some(current) if !replaces(&rec, current) => false,
+        _ => {
+            map.insert(rec.key.clone(), rec);
+            true
+        }
+    }
+}
+
+/// Distinguishes segment files flushed by this process within one epoch.
+static SEG_NONCE: AtomicU64 = AtomicU64::new(0);
+
+/// Aggregate counters for `marrow kb stats`.
+#[derive(Debug, Default)]
+pub struct StoreStats {
+    pub records: usize,
+    pub segments: usize,
+    pub epoch: u64,
+    /// Records per machine manifest digest.
+    pub digests: BTreeMap<String, usize>,
+    /// Records per profile origin label.
+    pub origins: BTreeMap<&'static str, usize>,
+}
+
+/// An open store: the in-memory merged view of every segment read so
+/// far, plus records staged for the next flush.
+#[derive(Debug)]
+pub struct KbStore {
+    dir: PathBuf,
+    /// Local machine manifest digest — the default digest for staged
+    /// profiles and the "exact hit" side of warm-start compatibility.
+    manifest_digest: String,
+    records: BTreeMap<String, StoreRecord>,
+    /// Segment file names already folded into `records`.
+    loaded_segments: BTreeSet<String>,
+    /// Monotonic store epoch: bumped by every flush in any process.
+    epoch: u64,
+    /// Records staged by [`stage`](KbStore::stage) since the last flush.
+    pending: BTreeMap<String, StoreRecord>,
+}
+
+impl KbStore {
+    /// Open (creating if needed) the store directory and fold in every
+    /// segment present. A corrupt segment is an error, not an empty
+    /// store.
+    pub fn open(dir: &Path, manifest_digest: &str) -> Result<KbStore> {
+        std::fs::create_dir_all(dir)?;
+        let mut store = KbStore {
+            dir: dir.to_path_buf(),
+            manifest_digest: manifest_digest.to_string(),
+            records: BTreeMap::new(),
+            loaded_segments: BTreeSet::new(),
+            epoch: 0,
+            pending: BTreeMap::new(),
+        };
+        store.epoch = store.disk_epoch()?;
+        store.reload()?;
+        Ok(store)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn manifest_digest(&self) -> &str {
+        &self.manifest_digest
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Merged view of every record, keyed and iterated in key order.
+    pub fn records(&self) -> impl Iterator<Item = &StoreRecord> {
+        self.records.values()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&StoreRecord> {
+        self.records.get(key)
+    }
+
+    /// Stage a profile under `digest` (default: the store's local
+    /// digest). Applied to the merged view immediately; persisted by the
+    /// next [`flush`](KbStore::flush). Returns whether the merged view
+    /// improved.
+    pub fn stage(&mut self, profile: Profile, digest: Option<&str>) -> bool {
+        let digest = digest.unwrap_or(&self.manifest_digest).to_string();
+        self.stage_record(StoreRecord::new(profile, &digest))
+    }
+
+    /// Stage a pre-keyed record (snapshot import path).
+    pub fn stage_record(&mut self, rec: StoreRecord) -> bool {
+        if fold_record(&mut self.records, rec.clone()) {
+            self.pending.insert(rec.key.clone(), rec);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Commit staged records as one new segment file (atomic), bump the
+    /// epoch and rewrite `meta.json`. A no-op with nothing pending.
+    /// Returns the number of records committed.
+    pub fn flush(&mut self) -> Result<usize> {
+        if self.pending.is_empty() {
+            return Ok(0);
+        }
+        // Absorb concurrent flushes first so our epoch strictly advances
+        // past everything visible on disk.
+        self.reload()?;
+        self.epoch = self.epoch.max(self.disk_epoch()?) + 1;
+        let recs: Vec<StoreRecord> = self.pending.values().cloned().collect();
+        let name = format!(
+            "seg-{:010}-{}-{}.json",
+            self.epoch,
+            std::process::id(),
+            SEG_NONCE.fetch_add(1, Ordering::Relaxed)
+        );
+        let body = Json::obj(vec![
+            ("format", Json::str(STORE_FORMAT)),
+            ("kind", Json::str("segment")),
+            ("epoch", Json::num(self.epoch as f64)),
+            (
+                "records",
+                Json::arr(recs.iter().map(|r| r.to_json()).collect()),
+            ),
+        ]);
+        atomic_write(&self.dir.join(&name), body.to_string_pretty().as_bytes())?;
+        self.loaded_segments.insert(name);
+        self.write_meta()?;
+        self.pending.clear();
+        Ok(recs.len())
+    }
+
+    fn write_meta(&self) -> Result<()> {
+        let meta = Json::obj(vec![
+            ("format", Json::str(STORE_FORMAT)),
+            ("kind", Json::str("meta")),
+            ("epoch", Json::num(self.epoch as f64)),
+            ("segments", Json::num(self.loaded_segments.len() as f64)),
+            (
+                "manifest_digest",
+                Json::str(self.manifest_digest.as_str()),
+            ),
+        ]);
+        atomic_write(&self.dir.join("meta.json"), meta.to_string_pretty().as_bytes())
+    }
+
+    /// The newest epoch visible on disk: the max of `meta.json`'s epoch
+    /// (a hint — it can lag concurrent writers) and the segment names
+    /// (authoritative).
+    pub fn disk_epoch(&self) -> Result<u64> {
+        let mut epoch = 0u64;
+        let meta_path = self.dir.join("meta.json");
+        if meta_path.exists() {
+            let text = std::fs::read_to_string(&meta_path)?;
+            if let Ok(v) = Json::parse(&text) {
+                if let Some(e) = v.get("epoch").ok().and_then(|e| e.as_u64()) {
+                    epoch = e;
+                }
+            }
+        }
+        for name in self.segment_files()? {
+            if let Some(e) = segment_epoch(&name) {
+                epoch = epoch.max(e);
+            }
+        }
+        Ok(epoch)
+    }
+
+    /// Does the directory hold segments this store has not folded in —
+    /// i.e. has another process flushed since our last reload?
+    pub fn stale(&self) -> Result<bool> {
+        Ok(self
+            .segment_files()?
+            .iter()
+            .any(|n| !self.loaded_segments.contains(n)))
+    }
+
+    /// Fold in every segment not yet loaded. Order-independent: records
+    /// merge under the [`replaces`] total order. Returns the number of
+    /// records that changed the merged view.
+    pub fn reload(&mut self) -> Result<usize> {
+        let mut absorbed = 0;
+        for name in self.segment_files()? {
+            if self.loaded_segments.contains(&name) {
+                continue;
+            }
+            for rec in read_segment(&self.dir.join(&name))? {
+                if fold_record(&mut self.records, rec) {
+                    absorbed += 1;
+                }
+            }
+            if let Some(e) = segment_epoch(&name) {
+                self.epoch = self.epoch.max(e);
+            }
+            self.loaded_segments.insert(name);
+        }
+        Ok(absorbed)
+    }
+
+    /// Compact every live record into a single fresh segment, delete the
+    /// superseded segments and sweep orphaned `.tmp-` files. Returns
+    /// (live records, segments removed).
+    pub fn gc(&mut self) -> Result<(usize, usize)> {
+        self.reload()?;
+        let old: Vec<String> = self.segment_files()?;
+        self.epoch = self.epoch.max(self.disk_epoch()?) + 1;
+        let name = format!(
+            "seg-{:010}-{}-{}.json",
+            self.epoch,
+            std::process::id(),
+            SEG_NONCE.fetch_add(1, Ordering::Relaxed)
+        );
+        let body = Json::obj(vec![
+            ("format", Json::str(STORE_FORMAT)),
+            ("kind", Json::str("segment")),
+            ("epoch", Json::num(self.epoch as f64)),
+            (
+                "records",
+                Json::arr(self.records.values().map(|r| r.to_json()).collect()),
+            ),
+        ]);
+        atomic_write(&self.dir.join(&name), body.to_string_pretty().as_bytes())?;
+        let mut removed = 0;
+        for stale in &old {
+            if *stale != name && std::fs::remove_file(self.dir.join(stale)).is_ok() {
+                removed += 1;
+            }
+        }
+        for entry in std::fs::read_dir(&self.dir)?.filter_map(|e| e.ok()) {
+            let n = entry.file_name().to_string_lossy().into_owned();
+            if n.starts_with(".tmp-") {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+        self.loaded_segments = BTreeSet::new();
+        self.loaded_segments.insert(name);
+        self.pending.clear();
+        self.write_meta()?;
+        Ok((self.records.len(), removed))
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        let mut st = StoreStats {
+            records: self.records.len(),
+            segments: self.loaded_segments.len(),
+            epoch: self.epoch,
+            ..StoreStats::default()
+        };
+        for r in self.records.values() {
+            *st.digests.entry(r.manifest_digest.clone()).or_insert(0) += 1;
+            *st.origins.entry(r.profile.origin.label()).or_insert(0) += 1;
+        }
+        st
+    }
+
+    /// Sorted segment file names currently present in the directory.
+    fn segment_files(&self) -> Result<Vec<String>> {
+        let mut names: Vec<String> = std::fs::read_dir(&self.dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with("seg-") && n.ends_with(".json"))
+            .collect();
+        names.sort();
+        Ok(names)
+    }
+}
+
+/// Epoch parsed from a `seg-{epoch:010}-{pid}-{nonce}.json` name.
+fn segment_epoch(name: &str) -> Option<u64> {
+    name.strip_prefix("seg-")?.split('-').next()?.parse().ok()
+}
+
+/// Parse one segment file; corrupt contents are an error.
+fn read_segment(path: &Path) -> Result<Vec<StoreRecord>> {
+    let text = std::fs::read_to_string(path)?;
+    let v = Json::parse(&text).map_err(|e| {
+        Error::Kb(format!("corrupt kb segment {}: {e:?}", path.display()))
+    })?;
+    if v.get("kind").ok().and_then(|k| k.as_str()) != Some("segment") {
+        return Err(Error::Kb(format!(
+            "{}: not a kb store segment",
+            path.display()
+        )));
+    }
+    let mut out = Vec::new();
+    for r in v.get("records")?.as_arr().unwrap_or(&[]) {
+        out.push(StoreRecord::from_json(r)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::workload::Workload;
+    use crate::kb::mk_profile;
+    use crate::platform::cpu::FissionLevel;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("marrow_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn rec(sct: &str, n: u64, time: f64) -> StoreRecord {
+        StoreRecord::new(
+            mk_profile(sct, Workload::d1(n), FissionLevel::L2, vec![4], 0.2, time),
+            "m0",
+        )
+    }
+
+    #[test]
+    fn content_key_is_stable_and_digest_sensitive() {
+        let a = content_key("saxpy", "1d:1024:f32", "m0");
+        assert_eq!(a, content_key("saxpy", "1d:1024:f32", "m0"));
+        assert_ne!(a, content_key("saxpy", "1d:1024:f32", "m1"));
+        assert_ne!(a, content_key("saxpy", "1d:2048:f32", "m0"));
+        assert_eq!(a.len(), 64);
+    }
+
+    #[test]
+    fn replaces_is_a_total_order() {
+        let fast = rec("f", 1024, 1.0);
+        let slow = rec("f", 1024, 2.0);
+        assert!(replaces(&fast, &slow));
+        assert!(!replaces(&slow, &fast));
+        // Equal time: Refined beats Built.
+        let mut refined = rec("f", 1024, 1.0);
+        refined.profile.origin = ProfileOrigin::Refined;
+        assert!(replaces(&refined, &fast));
+        assert!(!replaces(&fast, &refined));
+        // Full tie: never both directions (antisymmetry).
+        assert!(!replaces(&fast, &fast.clone()));
+        // NaN always loses.
+        let nan = rec("f", 1024, f64::NAN);
+        assert!(replaces(&fast, &nan));
+        assert!(!replaces(&nan, &fast));
+    }
+
+    #[test]
+    fn flush_and_reopen_roundtrip() {
+        let dir = tmp("roundtrip");
+        {
+            let mut st = KbStore::open(&dir, "m0").unwrap();
+            assert!(st.stage(rec("f", 1024, 2.0).profile, None));
+            assert!(st.stage(rec("g", 2048, 1.0).profile, None));
+            assert_eq!(st.flush().unwrap(), 2);
+            // Better time for f replaces; flush only commits the delta.
+            assert!(st.stage(rec("f", 1024, 1.5).profile, None));
+            assert_eq!(st.flush().unwrap(), 1);
+            assert!(!st.stage(rec("f", 1024, 9.0).profile, None));
+        }
+        let st = KbStore::open(&dir, "m0").unwrap();
+        assert_eq!(st.len(), 2);
+        let key = content_key("f", "1d:1024:f32", "m0");
+        assert_eq!(st.get(&key).unwrap().profile.best_time, 1.5);
+        assert_eq!(st.epoch(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reload_absorbs_foreign_segments() {
+        let dir = tmp("reload");
+        let mut a = KbStore::open(&dir, "m0").unwrap();
+        let mut b = KbStore::open(&dir, "m0").unwrap();
+        a.stage(rec("f", 1024, 1.0).profile, None);
+        a.flush().unwrap();
+        assert!(b.stale().unwrap());
+        assert_eq!(b.reload().unwrap(), 1);
+        assert_eq!(b.len(), 1);
+        assert!(!b.stale().unwrap());
+        assert_eq!(b.epoch(), a.epoch());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_compacts_without_losing_records() {
+        let dir = tmp("gc");
+        let mut st = KbStore::open(&dir, "m0").unwrap();
+        for i in 0..3u64 {
+            st.stage(rec("f", 1024 << i, 1.0 + i as f64).profile, None);
+            st.flush().unwrap();
+        }
+        assert_eq!(st.stats().segments, 3);
+        let (live, removed) = st.gc().unwrap();
+        assert_eq!((live, removed), (3, 3));
+        assert_eq!(st.stats().segments, 1);
+        let reopened = KbStore::open(&dir, "m0").unwrap();
+        assert_eq!(reopened.len(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_segment_is_an_error() {
+        let dir = tmp("corrupt");
+        let mut st = KbStore::open(&dir, "m0").unwrap();
+        st.stage(rec("f", 1024, 1.0).profile, None);
+        st.flush().unwrap();
+        let seg = st.segment_files().unwrap().remove(0);
+        std::fs::write(dir.join(&seg), "{ \"records\": [ trunca").unwrap();
+        assert!(KbStore::open(&dir, "m0").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

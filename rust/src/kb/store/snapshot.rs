@@ -1,0 +1,168 @@
+//! Snapshot export/import (DESIGN.md §2.9): a self-describing bundle of
+//! store records fleet nodes exchange. Encoding is canonical — records
+//! sorted by content key, store-local state (epochs, segment layout)
+//! excluded — so two stores holding the same merged record set export
+//! byte-identical snapshots regardless of the order records arrived in.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::kb::store::{fold_record, KbStore, StoreRecord, STORE_FORMAT};
+use crate::util::fsio::atomic_write;
+use crate::util::json::Json;
+
+/// A portable, canonical bundle of store records.
+#[derive(Clone, Debug, Default)]
+pub struct KbSnapshot {
+    /// Records keyed by content key — iteration order is the canonical
+    /// serialization order.
+    records: BTreeMap<String, StoreRecord>,
+}
+
+impl KbSnapshot {
+    /// Snapshot of a store's full merged view (staged records included).
+    pub fn from_store(store: &KbStore) -> KbSnapshot {
+        KbSnapshot::from_records(store.records().cloned())
+    }
+
+    /// Snapshot of arbitrary records, merged under the store's total
+    /// order if keys collide.
+    pub fn from_records(records: impl IntoIterator<Item = StoreRecord>) -> KbSnapshot {
+        let mut map = BTreeMap::new();
+        for rec in records {
+            fold_record(&mut map, rec);
+        }
+        KbSnapshot { records: map }
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> impl Iterator<Item = &StoreRecord> {
+        self.records.values()
+    }
+
+    /// Distinct machine manifest digests covered, sorted.
+    pub fn manifest_digests(&self) -> Vec<String> {
+        let set: BTreeSet<String> = self
+            .records
+            .values()
+            .map(|r| r.manifest_digest.clone())
+            .collect();
+        set.into_iter().collect()
+    }
+
+    /// Canonical bytes: equal record sets encode identically.
+    pub fn encode(&self) -> String {
+        let v = Json::obj(vec![
+            ("format", Json::str(STORE_FORMAT)),
+            ("kind", Json::str("snapshot")),
+            (
+                "manifest_digests",
+                Json::arr(
+                    self.manifest_digests()
+                        .iter()
+                        .map(|d| Json::str(d.as_str()))
+                        .collect(),
+                ),
+            ),
+            ("record_count", Json::num(self.records.len() as f64)),
+            (
+                "records",
+                Json::arr(self.records.values().map(|r| r.to_json()).collect()),
+            ),
+        ]);
+        v.to_string_pretty()
+    }
+
+    pub fn parse(text: &str) -> Result<KbSnapshot> {
+        let v = Json::parse(text)?;
+        if v.get("kind").ok().and_then(|k| k.as_str()) != Some("snapshot") {
+            return Err(Error::Kb(
+                "not a kb snapshot (missing kind: \"snapshot\")".into(),
+            ));
+        }
+        let mut map = BTreeMap::new();
+        for r in v.get("records")?.as_arr().unwrap_or(&[]) {
+            fold_record(&mut map, StoreRecord::from_json(r)?);
+        }
+        Ok(KbSnapshot { records: map })
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        atomic_write(path, self.encode().as_bytes())
+    }
+
+    pub fn read(path: &Path) -> Result<KbSnapshot> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Kb(format!("{}: {e}", path.display())))?;
+        KbSnapshot::parse(&text)
+    }
+
+    /// Merge this snapshot's records into `store` (staged, not yet
+    /// flushed). Idempotent and commutative: see
+    /// [`replaces`](crate::kb::store::replaces). Returns how many
+    /// records changed the store's merged view.
+    pub fn merge_into(&self, store: &mut KbStore) -> usize {
+        self.records
+            .values()
+            .filter(|rec| store.stage_record((*rec).clone()))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::workload::Workload;
+    use crate::kb::mk_profile;
+    use crate::platform::cpu::FissionLevel;
+
+    fn rec(sct: &str, n: u64, time: f64, digest: &str) -> StoreRecord {
+        StoreRecord::new(
+            mk_profile(sct, Workload::d1(n), FissionLevel::L2, vec![4], 0.2, time),
+            digest,
+        )
+    }
+
+    #[test]
+    fn encode_parse_roundtrip_is_canonical() {
+        let snap = KbSnapshot::from_records(vec![
+            rec("b", 2048, 1.0, "m0"),
+            rec("a", 1024, 2.0, "m1"),
+        ]);
+        let text = snap.encode();
+        let back = KbSnapshot::parse(&text).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.encode(), text);
+        // Insertion order does not change the bytes.
+        let flipped = KbSnapshot::from_records(vec![
+            rec("a", 1024, 2.0, "m1"),
+            rec("b", 2048, 1.0, "m0"),
+        ]);
+        assert_eq!(flipped.encode(), text);
+        assert_eq!(snap.manifest_digests(), vec!["m0".to_string(), "m1".to_string()]);
+    }
+
+    #[test]
+    fn colliding_keys_keep_best() {
+        let snap = KbSnapshot::from_records(vec![
+            rec("a", 1024, 2.0, "m0"),
+            rec("a", 1024, 1.0, "m0"),
+        ]);
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap.records().next().unwrap().profile.best_time, 1.0);
+    }
+
+    #[test]
+    fn rejects_non_snapshot_json() {
+        assert!(KbSnapshot::parse("{\"profiles\": []}").is_err());
+        assert!(KbSnapshot::parse("not json at all").is_err());
+    }
+}

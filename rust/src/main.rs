@@ -22,19 +22,29 @@
 //!   graph --bench <name> --size <n> [--gpus <g>] [--tasks-per-slot <t>]
 //!       dump the benchmark's dataflow TaskGraph as GraphViz DOT (nodes
 //!       labelled stage/chunk/slot, sync nodes highlighted)
+//!   kb <export|import|merge|stats|gc> --store <dir>
+//!       operate on a durable content-addressed KB store (DESIGN.md 2.9)
+//!       without running a session: export a snapshot, import/merge another
+//!       store / snapshot / legacy KB file, print stats, compact segments
 //!   shoc
 //!       install-time calibration: host microbenchmarks + GPU ranking
 //!   info
 //!       machine descriptions and artifact inventory
 //!
 //! `run` and `serve` accept `--drain <barrier|dataflow>` to pin the drain
-//! mode (default dataflow; barrier is the A/B baseline).
+//! mode (default dataflow; barrier is the A/B baseline). `profile`, `run`
+//! and `serve` accept `--kb-store <dir>` (mutually exclusive with `--kb`)
+//! to back the knowledge base with the durable store; `serve` additionally
+//! takes `--import <snapshot>` for warm-starting a fleet member and
+//! `--store-sync-every <n>` for mid-stream durability.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use marrow::bench::eval::{ablations, fig11, table2, table3, table4, table5};
 use marrow::bench::workloads::{self, Benchmark};
 use marrow::cli::Args;
+use marrow::kb::store::snapshot::KbSnapshot;
+use marrow::kb::store::{machine_digest, KbStore};
 use marrow::kb::KnowledgeBase;
 use marrow::platform::device::{i7_hd7950, opteron_6272_quad, Machine};
 use marrow::decompose::graph::{build_graph, flatten_stages};
@@ -60,6 +70,7 @@ fn run() -> Result<()> {
         Some("profile") => profile(&args),
         Some("run") => run_cmd(&args),
         Some("serve") => serve_cmd(&args),
+        Some("kb") => kb_cmd(&args),
         Some("graph") => graph_cmd(&args),
         Some("shoc") => shoc_cmd(),
         Some("info") => info(),
@@ -74,9 +85,10 @@ const USAGE: &str = "\
 marrow — multi-CPU/multi-GPU execution of compound multi-kernel computations
 usage:
   marrow eval <table2|table3|table4|table5|fig11|ablations|all>
-  marrow profile --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--kb <path>]
-  marrow run --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--runs <r>] [--kb <path>] [--concurrency <c>] [--tasks-per-slot <t>] [--drain <barrier|dataflow>]
-  marrow serve --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--requests <r>] [--concurrency <c>] [--pace-ms <m>] [--kb <path>] [--tasks-per-slot <t>] [--drain <barrier|dataflow>] [--co-schedule]
+  marrow profile --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--kb <path> | --kb-store <dir>]
+  marrow run --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--runs <r>] [--kb <path> | --kb-store <dir>] [--concurrency <c>] [--tasks-per-slot <t>] [--drain <barrier|dataflow>]
+  marrow serve --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--requests <r>] [--concurrency <c>] [--pace-ms <m>] [--kb <path> | --kb-store <dir> [--import <snapshot>] [--store-sync-every <n>]] [--tasks-per-slot <t>] [--drain <barrier|dataflow>] [--co-schedule]
+  marrow kb <export|import|merge|stats|gc> --store <dir> [--from <store|snapshot|kb.json>] [--out <path>] [--gpus <g>]
   marrow graph --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--tasks-per-slot <t>] [--kb <path>]
   marrow shoc
   marrow info";
@@ -155,16 +167,22 @@ fn pick_drain_mode(args: &Args) -> Result<Option<DrainMode>> {
     }
 }
 
-/// Build a simulated session honouring the optional `--kb <path>` flag.
+/// Build a simulated session honouring the optional `--kb <path>` (legacy
+/// single-file KB) or `--kb-store <dir>` (durable content-addressed store,
+/// DESIGN.md §2.9) flag.
 fn sim_session(
     args: &Args,
     machine: Machine,
     seed: u64,
 ) -> Result<Session<marrow::scheduler::SimEnv>> {
     let s = Session::simulated(machine, seed);
-    match args.get("kb") {
-        Some(path) => s.with_kb_path(&PathBuf::from(path)),
-        None => Ok(s),
+    match (args.get("kb"), args.get("kb-store")) {
+        (Some(_), Some(_)) => Err(marrow::Error::Usage(
+            "--kb and --kb-store are mutually exclusive".into(),
+        )),
+        (Some(path), None) => s.with_kb_path(&PathBuf::from(path)),
+        (None, Some(dir)) => s.with_kb_store(&PathBuf::from(dir)),
+        (None, None) => Ok(s),
     }
 }
 
@@ -251,7 +269,7 @@ fn run_cmd(args: &Args) -> Result<()> {
         st.mean_idle_pct()
     );
     session.save_kb()?;
-    if args.get("kb").is_some() {
+    if args.get("kb").is_some() || args.get("kb-store").is_some() {
         println!("knowledge base persisted ({} profiles)", session.kb().len());
     }
     Ok(())
@@ -276,12 +294,41 @@ fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
     let name = b.name.clone();
     let comp = Computation::from(b);
     let machine = pick_machine(args)?;
+    let kb_store_dir = args.get("kb-store").map(PathBuf::from);
+    if args.get("kb").is_some() && kb_store_dir.is_some() {
+        return Err(marrow::Error::Usage(
+            "--kb and --kb-store are mutually exclusive".into(),
+        ));
+    }
+    // Mid-stream store flushes only make sense with a store backing.
+    let store_sync_every = if kb_store_dir.is_some() {
+        args.get_u64("store-sync-every", 16)? as usize
+    } else {
+        0
+    };
 
     let pool = SessionPool::build(concurrency, |i| {
         Session::simulated(machine.clone(), 11 + i as u64)
     });
     if let Some(path) = args.get("kb") {
         *pool.shared_kb().write().unwrap() = KnowledgeBase::open(&PathBuf::from(path))?;
+    }
+    if let Some(dir) = &kb_store_dir {
+        let digest = machine_digest("analytic", &machine);
+        *pool.shared_kb().write().unwrap() = KnowledgeBase::open_store(dir, &digest)?;
+    }
+    if let Some(snap_path) = args.get("import") {
+        // Warm-start a fleet member: records matching this platform's
+        // digest become exact KB entries, the rest derivation hints.
+        let snap = KbSnapshot::read(&PathBuf::from(snap_path))?;
+        let digest = machine_digest("analytic", &machine);
+        let kb = pool.shared_kb();
+        let mut kb = kb.write().unwrap();
+        kb.ensure_manifest_digest(&digest);
+        let (exact, hints) = kb.import_snapshot(&snap);
+        println!(
+            "imported {snap_path}: {exact} exact profiles, {hints} derivation hints"
+        );
     }
 
     let requests: Vec<ServeRequest> = (0..n_requests)
@@ -305,9 +352,19 @@ fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
             tasks_per_slot,
             drain_mode,
             co_schedule,
+            store_sync_every,
         },
     )?;
     println!("{}", report.summary());
+    println!(
+        "kb provenance: {} exact hits ({} warm-started), {} derived, \
+         {} cold-built ({:.2}s building)",
+        report.stats.kb_hits,
+        report.stats.warm_hits,
+        report.stats.derived,
+        report.stats.built,
+        report.stats.build_secs
+    );
     if co_schedule {
         let mut counts: std::collections::BTreeMap<String, usize> = Default::default();
         for t in &report.traces {
@@ -323,11 +380,119 @@ fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
             report.virtual_req_per_sec()
         );
     }
-    if args.get("kb").is_some() {
+    if args.get("kb").is_some() || kb_store_dir.is_some() {
         let kb = pool.shared_kb();
-        let kb = kb.read().unwrap();
+        let mut kb = kb.write().unwrap();
         kb.save()?;
-        println!("knowledge base persisted ({} profiles)", kb.len());
+        if kb.store_backed() {
+            println!(
+                "kb store persisted: epoch {}, {} profiles, {} derivation hints",
+                kb.store_epoch().unwrap_or(0),
+                kb.len(),
+                kb.hint_count()
+            );
+        } else {
+            println!("knowledge base persisted ({} profiles)", kb.len());
+        }
+    }
+    Ok(())
+}
+
+/// Load profile records from `path` for `kb import|merge`: a KB store
+/// directory, a snapshot file, or a legacy single-file `KnowledgeBase`
+/// JSON (whose entries are absorbed under `digest`, since the legacy
+/// format predates platform provenance).
+fn load_snapshot(path: &Path, digest: &str) -> Result<KbSnapshot> {
+    if path.is_dir() {
+        return Ok(KbSnapshot::from_store(&KbStore::open(path, digest)?));
+    }
+    let text = std::fs::read_to_string(path)?;
+    if let Ok(snap) = KbSnapshot::parse(&text) {
+        return Ok(snap);
+    }
+    let mut kb = KnowledgeBase::open(path)?;
+    kb.ensure_manifest_digest(digest);
+    Ok(kb.export_snapshot())
+}
+
+/// `marrow kb <export|import|merge|stats|gc>` — fleet-level operations on
+/// a durable content-addressed KB store (DESIGN.md §2.9), no session
+/// required. The platform digest for legacy imports and the stats
+/// this-machine marker follows `--gpus` like every other subcommand.
+fn kb_cmd(args: &Args) -> Result<()> {
+    let action = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("stats");
+    let store_dir = args.get("store").map(PathBuf::from).ok_or_else(|| {
+        marrow::Error::Usage("kb commands need --store <dir>".into())
+    })?;
+    let digest = machine_digest("analytic", &pick_machine(args)?);
+    match action {
+        "export" => {
+            let store = KbStore::open(&store_dir, &digest)?;
+            let out = args
+                .get("out")
+                .map(PathBuf::from)
+                .unwrap_or_else(|| PathBuf::from("kb-snapshot.json"));
+            let snap = KbSnapshot::from_store(&store);
+            snap.write(&out)?;
+            println!(
+                "exported {} profiles ({} platform digests) to {}",
+                snap.len(),
+                snap.manifest_digests().len(),
+                out.display()
+            );
+        }
+        "import" | "merge" => {
+            let from = args.get("from").ok_or_else(|| {
+                marrow::Error::Usage(format!(
+                    "kb {action} needs --from <store dir|snapshot|legacy kb json>"
+                ))
+            })?;
+            let snap = load_snapshot(&PathBuf::from(from), &digest)?;
+            let mut store = KbStore::open(&store_dir, &digest)?;
+            let folded = snap.merge_into(&mut store);
+            store.flush()?;
+            println!(
+                "merged {folded} of {} records into {} (epoch {})",
+                snap.len(),
+                store_dir.display(),
+                store.epoch()
+            );
+        }
+        "stats" => {
+            let store = KbStore::open(&store_dir, &digest)?;
+            let st = store.stats();
+            println!(
+                "kb store {}: {} records in {} segments, epoch {}",
+                store_dir.display(),
+                st.records,
+                st.segments,
+                st.epoch
+            );
+            for (origin, n) in &st.origins {
+                println!("  origin   {origin:<8} x{n}");
+            }
+            for (d, n) in &st.digests {
+                let mark = if *d == digest { " (this machine)" } else { "" };
+                println!("  platform {}..{mark} x{n}", &d[..12.min(d.len())]);
+            }
+        }
+        "gc" => {
+            let mut store = KbStore::open(&store_dir, &digest)?;
+            let (live, removed) = store.gc()?;
+            println!(
+                "compacted to one segment: {live} live records, \
+                 {removed} old segments removed"
+            );
+        }
+        other => {
+            return Err(marrow::Error::Usage(format!(
+                "unknown kb action '{other}' (export|import|merge|stats|gc)"
+            )))
+        }
     }
     Ok(())
 }

@@ -5,6 +5,8 @@
 //! the paper's Section 4 plus vendor datasheets for the parts the paper
 //! leaves implicit (GFLOPS, bandwidths).
 
+use crate::util::json::Json;
+
 /// Kind of processing unit.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum DeviceKind {
@@ -89,6 +91,69 @@ impl Machine {
             .iter()
             .map(|g| g.relative_perf / total.max(1e-12))
             .collect()
+    }
+
+    /// Canonical JSON description of the execution platform — the input
+    /// of the KB store's machine manifest digest (DESIGN.md §2.9).
+    /// Covers every field the cost models and tuner read, so two
+    /// machines with equal manifests are interchangeable for learned
+    /// profiles; keys serialize sorted, making the bytes deterministic.
+    pub fn manifest_json(&self) -> Json {
+        let cpu = &self.cpu;
+        Json::obj(vec![
+            ("name", Json::str(self.name.as_str())),
+            (
+                "cpu",
+                Json::obj(vec![
+                    ("name", Json::str(cpu.name.as_str())),
+                    ("sockets", Json::num(cpu.sockets as f64)),
+                    ("cores_per_socket", Json::num(cpu.cores_per_socket as f64)),
+                    ("l1_kib", Json::num(cpu.l1_kib as f64)),
+                    ("l2_kib", Json::num(cpu.l2_kib as f64)),
+                    ("cores_per_l2", Json::num(cpu.cores_per_l2 as f64)),
+                    ("l3_kib", Json::num(cpu.l3_kib as f64)),
+                    ("cores_per_l3", Json::num(cpu.cores_per_l3 as f64)),
+                    ("numa_nodes", Json::num(cpu.numa_nodes as f64)),
+                    ("gflops_per_core", Json::num(cpu.gflops_per_core)),
+                    ("mem_bw_gbps", Json::num(cpu.mem_bw_gbps)),
+                    ("launch_overhead_us", Json::num(cpu.launch_overhead_us)),
+                ]),
+            ),
+            (
+                "gpus",
+                Json::arr(
+                    self.gpus
+                        .iter()
+                        .map(|g| {
+                            Json::obj(vec![
+                                ("name", Json::str(g.name.as_str())),
+                                ("compute_units", Json::num(g.compute_units as f64)),
+                                ("wavefront", Json::num(g.wavefront as f64)),
+                                ("max_wg", Json::num(g.max_wg as f64)),
+                                (
+                                    "max_waves_per_cu",
+                                    Json::num(g.max_waves_per_cu as f64),
+                                ),
+                                ("max_wgs_per_cu", Json::num(g.max_wgs_per_cu as f64)),
+                                ("local_mem_kib", Json::num(g.local_mem_kib as f64)),
+                                (
+                                    "vgpr_banks_per_cu",
+                                    Json::num(g.vgpr_banks_per_cu as f64),
+                                ),
+                                ("gflops", Json::num(g.gflops)),
+                                ("mem_bw_gbps", Json::num(g.mem_bw_gbps)),
+                                ("pcie_gbps", Json::num(g.pcie_gbps)),
+                                (
+                                    "launch_overhead_us",
+                                    Json::num(g.launch_overhead_us),
+                                ),
+                                ("relative_perf", Json::num(g.relative_perf)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
     }
 }
 
@@ -182,6 +247,17 @@ mod tests {
         assert_eq!(w.len(), 2);
         assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
         assert!((w[0] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn manifest_json_distinguishes_machines() {
+        let a = i7_hd7950(1).manifest_json().to_string();
+        let b = i7_hd7950(2).manifest_json().to_string();
+        let c = opteron_6272_quad().manifest_json().to_string();
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        // Deterministic for equal machines.
+        assert_eq!(a, i7_hd7950(1).manifest_json().to_string());
     }
 
     #[test]

@@ -133,6 +133,52 @@ impl Manifest {
         Manifest::load(&dir)
     }
 
+    /// Canonical JSON fingerprint of the artifact set (DESIGN.md §2.9):
+    /// what the real scheduler folds into its KB-store manifest digest,
+    /// so profiles measured against different kernel builds never
+    /// exchange as exact warm-start hits. Families iterate sorted and
+    /// artifacts chunk-ascending, making the bytes deterministic; the
+    /// on-disk `dir` is deliberately excluded (the same build in a
+    /// different checkout is the same platform).
+    pub fn fingerprint_json(&self) -> Json {
+        let families: Vec<Json> = self
+            .by_family
+            .iter()
+            .map(|(family, arts)| {
+                Json::obj(vec![
+                    ("family", Json::str(family.as_str())),
+                    (
+                        "artifacts",
+                        Json::arr(
+                            arts.iter()
+                                .map(|a| {
+                                    Json::obj(vec![
+                                        ("name", Json::str(a.name.as_str())),
+                                        (
+                                            "chunk_units",
+                                            Json::num(a.chunk_units as f64),
+                                        ),
+                                        ("flops", Json::num(a.flops)),
+                                        ("bytes", Json::num(a.bytes)),
+                                        (
+                                            "inputs",
+                                            Json::num(a.inputs.len() as f64),
+                                        ),
+                                        (
+                                            "outputs",
+                                            Json::num(a.outputs.len() as f64),
+                                        ),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("families", Json::arr(families))])
+    }
+
     /// Artifacts of a family, chunk-size ascending.
     pub fn family(&self, family: &str) -> Result<&[ArtifactInfo]> {
         self.by_family

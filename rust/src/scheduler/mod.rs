@@ -134,6 +134,17 @@ pub struct RunOutcome {
 pub trait ExecEnv {
     fn machine(&self) -> &Machine;
 
+    /// Content digest of the execution platform this backend's learned
+    /// profiles describe (DESIGN.md §2.9): KB-store records carry it, and
+    /// imported profiles are exact warm-start hits only when digests
+    /// match. The default covers analytic backends — a hash of the
+    /// machine manifest under the "analytic" kind tag; real backends
+    /// override to fold in their kernel-artifact manifest, so simulated
+    /// and measured profiles never mix.
+    fn manifest_digest(&self) -> String {
+        crate::kb::store::machine_digest("analytic", self.machine())
+    }
+
     /// Decomposition quantum contributed by the AOT chunk menu for this SCT
     /// (1 when everything is simulated).
     fn chunk_quantum(&self, sct: &Sct) -> u64;

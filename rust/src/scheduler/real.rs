@@ -401,6 +401,21 @@ impl<'a> ExecEnv for RealScheduler<'a> {
         &self.machine
     }
 
+    /// Real measurements additionally depend on the compiled kernel set:
+    /// fold the artifact manifest into the digest so profiles from
+    /// different kernel builds (or from the analytic backend) never
+    /// exchange as exact warm-start hits (DESIGN.md §2.9).
+    fn manifest_digest(&self) -> String {
+        crate::util::hash::sha256_hex(
+            format!(
+                "real\0{}\0{}",
+                self.machine.manifest_json().to_string(),
+                self.manifest.fingerprint_json().to_string()
+            )
+            .as_bytes(),
+        )
+    }
+
     fn chunk_quantum(&self, sct: &Sct) -> u64 {
         self.sct_chunk_quantum(sct)
     }

@@ -40,10 +40,12 @@ pub mod serve;
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::Instant;
 
 use crate::balance::{AdaptiveBinarySearch, Monitor};
 use crate::data::vector::ArgValue;
 use crate::error::Result;
+use crate::kb::store::snapshot::KbSnapshot;
 use crate::kb::KnowledgeBase;
 use crate::platform::cpu::FissionLevel;
 use crate::platform::device::Machine;
@@ -108,8 +110,15 @@ pub struct SessionOutcome {
 pub struct SessionStats {
     pub runs: u64,
     pub kb_hits: u64,
+    /// Subset of `kb_hits` whose entry came from the durable store / an
+    /// imported snapshot rather than a local build — the warm-start
+    /// provenance counter (DESIGN.md §2.9).
+    pub warm_hits: u64,
     pub derived: u64,
     pub built: u64,
+    /// Wall seconds spent inside Algorithm 1 cold builds (the cost
+    /// warm-starting eliminates).
+    pub build_secs: f64,
     pub pinned: u64,
     pub balance_ops: u64,
     pub unbalanced_runs: u64,
@@ -301,6 +310,36 @@ impl<E: ExecEnv> Session<E> {
         Ok(self)
     }
 
+    /// Use a durable content-addressed KB store at `dir` (DESIGN.md §2.9),
+    /// created when missing. The store is keyed to this backend's
+    /// [`ExecEnv::manifest_digest`], so records it holds for other
+    /// platforms load as derivation hints, never exact hits; `store()`
+    /// then writes through incrementally, committed by
+    /// [`Session::sync_kb`] / [`Session::save_kb`].
+    pub fn with_kb_store(mut self, dir: &Path) -> Result<Session<E>> {
+        let digest = self.env.lock().unwrap().manifest_digest();
+        self.kb = Arc::new(RwLock::new(KnowledgeBase::open_store(dir, &digest)?));
+        Ok(self)
+    }
+
+    /// Import a KB snapshot: records whose machine manifest digest matches
+    /// this backend become exact (warm-start) entries, the rest derivation
+    /// hints. Returns (exact entries, hints) absorbed.
+    pub fn import_kb_snapshot(&self, snap: &KbSnapshot) -> (usize, usize) {
+        let digest = self.env.lock().unwrap().manifest_digest();
+        let mut kb = self.kb.write().unwrap();
+        kb.ensure_manifest_digest(&digest);
+        kb.import_snapshot(snap)
+    }
+
+    /// Flush write-through KB records to the durable store and absorb
+    /// anything co-located processes flushed since (reload on epoch
+    /// change). Returns records absorbed from disk; a no-op (0) without a
+    /// store backing.
+    pub fn sync_kb(&self) -> Result<usize> {
+        self.kb.write().unwrap().sync_store()
+    }
+
     /// Tuning options for cold-start profile builds.
     pub fn with_tuner(mut self, opts: TunerOpts) -> Session<E> {
         self.tuner = opts;
@@ -403,8 +442,14 @@ impl<E: ExecEnv> Session<E> {
             let kb = self.kb.read().unwrap();
             if let Some(p) = kb.lookup(&id, w) {
                 let cfg = p.config.clone();
+                let warm = kb.is_imported(&id, w);
                 drop(kb);
-                self.bump(|s| s.kb_hits += 1);
+                self.bump(|s| {
+                    s.kb_hits += 1;
+                    if warm {
+                        s.warm_hits += 1;
+                    }
+                });
                 return Ok((cfg, ConfigOrigin::KbHit));
             }
             if let Some(cfg) = kb.derive(&id, w) {
@@ -416,15 +461,20 @@ impl<E: ExecEnv> Session<E> {
         // Cold start: Algorithm 1 on the backend. Two threads racing the
         // same cold pair may both build; the KB's best-time store keeps the
         // better profile — wasteful but correct (documented in DESIGN.md).
+        let t_build = Instant::now();
         let p = {
             let mut env = self.env.lock().unwrap();
             env.set_copy_bytes(comp.get_copy_bytes());
             env.bind_tuning_args(args);
             self.build_unmasked(&mut *env, sct, w, units)?
         };
+        let build_secs = t_build.elapsed().as_secs_f64();
         let cfg = p.config.clone();
         self.kb.write().unwrap().store(p);
-        self.bump(|s| s.built += 1);
+        self.bump(|s| {
+            s.built += 1;
+            s.build_secs += build_secs;
+        });
         Ok((cfg, ConfigOrigin::Built))
     }
 
@@ -588,14 +638,19 @@ impl<E: ExecEnv> Session<E> {
         args: &RequestArgs,
     ) -> Result<Profile> {
         let (sct, w, units) = comp.spec()?;
+        let t_build = Instant::now();
         let p = {
             let mut env = self.env.lock().unwrap();
             env.set_copy_bytes(comp.get_copy_bytes());
             env.bind_tuning_args(args);
             self.build_unmasked(&mut *env, sct, w, units)?
         };
+        let build_secs = t_build.elapsed().as_secs_f64();
         self.kb.write().unwrap().store(p.clone());
-        self.bump(|s| s.built += 1);
+        self.bump(|s| {
+            s.built += 1;
+            s.build_secs += build_secs;
+        });
         Ok(p)
     }
 
@@ -650,9 +705,11 @@ impl<E: ExecEnv> Session<E> {
         }
     }
 
-    /// Persist the knowledge base (no-op for in-memory KBs).
+    /// Persist the knowledge base (no-op for in-memory KBs): an atomic
+    /// whole-file rewrite for JSON-backed KBs, an incremental flush for
+    /// store-backed ones.
     pub fn save_kb(&self) -> Result<()> {
-        self.kb.read().unwrap().save()
+        self.kb.write().unwrap().save()
     }
 
     /// Exclusive access to the backend (blocks while a request runs).

@@ -75,6 +75,11 @@ pub struct ServeOpts {
     /// predicted completion, instead of time-sharing the whole pool. Off
     /// by default (the PR 2 whole-pool behavior).
     pub co_schedule: bool,
+    /// Flush the durable KB store (DESIGN.md §2.9) every N completed
+    /// requests, picking up segments other processes committed in the
+    /// meantime. 0 (the default) syncs once at the end of the run; the
+    /// knob is a no-op when the shared KB has no store backing.
+    pub store_sync_every: usize,
 }
 
 impl Default for ServeOpts {
@@ -85,6 +90,7 @@ impl Default for ServeOpts {
             tasks_per_slot: None,
             drain_mode: None,
             co_schedule: false,
+            store_sync_every: 0,
         }
     }
 }
@@ -136,7 +142,8 @@ impl ServeReport {
     pub fn summary(&self) -> String {
         format!(
             "{} requests in {:.3}s @ concurrency {} -> {:.1} req/s \
-             (p50 {:.2}ms, p99 {:.2}ms; {} kb hits, {} built, {} derived; \
+             (p50 {:.2}ms, p99 {:.2}ms; {} kb hits ({} warm-started), \
+             {} built ({:.2}s cold-build), {} derived; \
              {:.1} MB uploaded, {} uploads avoided, {} steal migrations; \
              mean slot idle {:.1}%; {} device-time {:.3}s)",
             self.completed,
@@ -146,7 +153,9 @@ impl ServeReport {
             self.p50_latency * 1e3,
             self.p99_latency * 1e3,
             self.stats.kb_hits,
+            self.stats.warm_hits,
             self.stats.built,
+            self.stats.build_secs,
             self.stats.derived,
             self.stats.bytes_uploaded as f64 / 1e6,
             self.stats.uploads_avoided,
@@ -297,8 +306,10 @@ impl<E: ExecEnv + Send> SessionPool<E> {
             let st = s.stats();
             stats.runs += st.runs;
             stats.kb_hits += st.kb_hits;
+            stats.warm_hits += st.warm_hits;
             stats.derived += st.derived;
             stats.built += st.built;
+            stats.build_secs += st.build_secs;
             stats.pinned += st.pinned;
             stats.balance_ops += st.balance_ops;
             stats.unbalanced_runs += st.unbalanced_runs;
@@ -349,6 +360,7 @@ impl<E: ExecEnv + Send> SessionPool<E> {
                 let timeline = &timeline;
                 let pace = opts.pace;
                 let co = opts.co_schedule;
+                let sync_every = opts.store_sync_every;
                 scope.spawn(move || loop {
                     if failure.lock().unwrap().is_some() {
                         break;
@@ -408,14 +420,31 @@ impl<E: ExecEnv + Send> SessionPool<E> {
                                 mask.as_ref().unwrap_or(full_mask),
                                 out.exec.total,
                             );
-                            traces.lock().unwrap().push(RequestTrace {
-                                index: i,
-                                worker: w,
-                                latency: admitted.elapsed().as_secs_f64(),
-                                origin: out.origin,
-                                exec_total: out.exec.total,
-                                mask,
-                            });
+                            let done = {
+                                let mut tr = traces.lock().unwrap();
+                                tr.push(RequestTrace {
+                                    index: i,
+                                    worker: w,
+                                    latency: admitted.elapsed().as_secs_f64(),
+                                    origin: out.origin,
+                                    exec_total: out.exec.total,
+                                    mask,
+                                });
+                                tr.len()
+                            };
+                            // Periodic durability: commit staged profiles
+                            // and absorb foreign segments mid-run, so a
+                            // crash loses at most `sync_every` requests'
+                            // learning (DESIGN.md §2.9).
+                            if sync_every > 0 && done % sync_every == 0 {
+                                if let Err(e) = session.sync_kb() {
+                                    let mut f = failure.lock().unwrap();
+                                    if f.is_none() {
+                                        *f = Some(e);
+                                    }
+                                    break;
+                                }
+                            }
                         }
                         Err(e) => {
                             let mut f = failure.lock().unwrap();
@@ -433,6 +462,10 @@ impl<E: ExecEnv + Send> SessionPool<E> {
         if let Some(e) = failure.into_inner().unwrap() {
             return Err(e);
         }
+        // Final durability point: whatever the stream learned is committed
+        // before the report is handed back (no-op without store backing;
+        // the KB is shared, so any one session flushes for the pool).
+        self.sessions[0].sync_kb()?;
         let mut traces = traces.into_inner().unwrap();
         traces.sort_by_key(|t| t.index);
         let latencies: Vec<f64> = traces.iter().map(|t| t.latency).collect();
@@ -445,8 +478,10 @@ impl<E: ExecEnv + Send> SessionPool<E> {
         let stats = SessionStats {
             runs: after.runs - stats_before.runs,
             kb_hits: after.kb_hits - stats_before.kb_hits,
+            warm_hits: after.warm_hits - stats_before.warm_hits,
             derived: after.derived - stats_before.derived,
             built: after.built - stats_before.built,
+            build_secs: after.build_secs - stats_before.build_secs,
             pinned: after.pinned - stats_before.pinned,
             balance_ops: after.balance_ops - stats_before.balance_ops,
             unbalanced_runs: after.unbalanced_runs - stats_before.unbalanced_runs,

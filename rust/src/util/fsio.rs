@@ -1,0 +1,107 @@
+//! Crash-safe filesystem primitives for the durable KB store
+//! (DESIGN.md §2.9): all persistent writes go through
+//! [`atomic_write`] — write a temp file in the destination directory,
+//! fsync it, then rename over the target — so readers only ever observe
+//! either the old complete file or the new complete file, never a torn
+//! prefix.
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::Result;
+
+/// Process-global counter distinguishing concurrent temp files; the pid
+/// in the name distinguishes concurrent *processes* on a shared store.
+static TMP_NONCE: AtomicU64 = AtomicU64::new(0);
+
+/// Atomically replace `path` with `bytes`.
+///
+/// The temp file lives in the same directory as the target (rename must
+/// not cross filesystems) and is fsynced before the rename, so a crash
+/// at any point leaves either the previous contents or the full new
+/// contents at `path` — plus, at worst, an orphaned `.tmp-` file that
+/// [`KbStore::gc`](crate::kb::store::KbStore::gc) sweeps.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let dir = path.parent().filter(|d| !d.as_os_str().is_empty());
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or("file");
+    let tmp_name = format!(
+        ".tmp-{name}-{}-{}",
+        std::process::id(),
+        TMP_NONCE.fetch_add(1, Ordering::Relaxed)
+    );
+    let tmp = match dir {
+        Some(d) => d.join(&tmp_name),
+        None => std::path::PathBuf::from(&tmp_name),
+    };
+    let write = (|| -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        Ok(())
+    })();
+    let renamed = write
+        .and_then(|_| std::fs::rename(&tmp, path).map_err(crate::error::Error::from));
+    if let Err(e) = renamed {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    // Best-effort directory fsync: persists the rename itself. Some
+    // filesystems refuse to open directories for writing — ignore.
+    if let Some(d) = dir {
+        if let Ok(dirf) = std::fs::File::open(d) {
+            let _ = dirf.sync_all();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replaces_existing_contents() {
+        let path = std::env::temp_dir().join(format!(
+            "marrow_fsio_test_{}.txt",
+            std::process::id()
+        ));
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second, longer than the first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second, longer than the first");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn leaves_no_temp_residue() {
+        let dir = std::env::temp_dir().join(format!(
+            "marrow_fsio_residue_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for i in 0..4 {
+            atomic_write(&dir.join("data.json"), format!("v{i}").as_bytes()).unwrap();
+        }
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["data.json".to_string()], "residue: {names:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_parent_dir_is_an_error() {
+        let path = std::env::temp_dir()
+            .join(format!("marrow_fsio_absent_{}", std::process::id()))
+            .join("nested")
+            .join("data.json");
+        assert!(atomic_write(&path, b"x").is_err());
+    }
+}

@@ -1,11 +1,14 @@
-//! Self-contained substrates: JSON, RNG, statistics, dense linear algebra
-//! and a property-testing mini-framework.
+//! Self-contained substrates: JSON, RNG, statistics, dense linear algebra,
+//! SHA-256 hashing, crash-safe file IO and a property-testing
+//! mini-framework.
 //!
 //! The build environment resolves crates offline from a fixed vendor set that
 //! does not include serde/rand/nalgebra/proptest, so the paper's
 //! infrastructure needs (knowledge-base persistence, stochastic simulation,
 //! RBF interpolation, invariant testing) are implemented here from scratch.
 
+pub mod fsio;
+pub mod hash;
 pub mod json;
 pub mod linalg;
 pub mod propcheck;

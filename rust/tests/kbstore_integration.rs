@@ -1,0 +1,306 @@
+//! Durable KB store integration (DESIGN.md §2.9): write-through
+//! persistence across sessions, concurrent multi-store flushing into one
+//! directory, snapshot warm-start end-to-end through `Session::run`, and
+//! property tests over the snapshot merge (idempotent, commutative,
+//! never-worse).
+
+use std::path::PathBuf;
+
+use marrow::bench::workloads;
+use marrow::data::workload::Workload;
+use marrow::kb::store::snapshot::KbSnapshot;
+use marrow::kb::store::{machine_digest, KbStore, StoreRecord};
+use marrow::kb::{mk_profile, KnowledgeBase};
+use marrow::platform::cpu::FissionLevel;
+use marrow::platform::device::i7_hd7950;
+use marrow::runtime::exec::RequestArgs;
+use marrow::scheduler::SimEnv;
+use marrow::session::{Computation, ConfigOrigin, Session};
+use marrow::sim::cost::CostParams;
+use marrow::sim::machine::SimMachine;
+use marrow::tuner::profile::ProfileOrigin;
+use marrow::util::propcheck::forall;
+
+fn quiet_session(seed: u64) -> Session<SimEnv> {
+    let quiet = CostParams {
+        cpu_noise: 0.0,
+        gpu_noise: 0.0,
+        straggler_p: 0.0,
+        ..CostParams::default()
+    };
+    Session::sim(SimMachine::new(i7_hd7950(1), seed).with_params(quiet))
+}
+
+/// Fresh temp dir per test (removed up front so reruns start clean).
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "marrow_kbstore_it_{name}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The digest every `SimEnv` session reports for `i7_hd7950(1)`.
+fn sim_digest() -> String {
+    machine_digest("analytic", &i7_hd7950(1))
+}
+
+#[test]
+fn write_through_persists_profiles_across_sessions() {
+    let dir = tmp("writethrough");
+    let comp = Computation::from(workloads::saxpy(1 << 20));
+    {
+        let session = quiet_session(1).with_kb_store(&dir).unwrap();
+        let out = session.run(&comp, &RequestArgs::default()).unwrap();
+        assert_eq!(out.origin, ConfigOrigin::Built);
+        let st = session.stats();
+        assert_eq!(st.built, 1);
+        assert!(st.build_secs > 0.0, "Algorithm 1 wall time untracked");
+        session.save_kb().unwrap();
+    }
+    // A brand-new session over the same store resolves the same
+    // computation as an exact hit — and knows it came from the store.
+    let session = quiet_session(2).with_kb_store(&dir).unwrap();
+    let out = session.run(&comp, &RequestArgs::default()).unwrap();
+    assert_eq!(out.origin, ConfigOrigin::KbHit);
+    let st = session.stats();
+    assert_eq!(st.built, 0, "warm store must skip Algorithm 1");
+    assert_eq!(st.warm_hits, 1, "store hit not counted as warm");
+    assert_eq!(st.build_secs, 0.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_stores_on_one_directory_lose_nothing() {
+    let dir = tmp("concurrent");
+    std::fs::create_dir_all(&dir).unwrap();
+    const PER_THREAD: usize = 20;
+    std::thread::scope(|scope| {
+        for t in 0..2u64 {
+            let dir = &dir;
+            scope.spawn(move || {
+                let mut store = KbStore::open(dir, "m-conc").unwrap();
+                for i in 0..PER_THREAD {
+                    store.stage(
+                        mk_profile(
+                            &format!("sct_t{t}_{i}"),
+                            Workload::d1(1 << 20),
+                            FissionLevel::L2,
+                            vec![4],
+                            0.5,
+                            1e-3,
+                        ),
+                        None,
+                    );
+                    // Interleaved flushes: each thread commits segments
+                    // while the other is mid-stream.
+                    if (i + 1) % 5 == 0 {
+                        store.flush().unwrap();
+                    }
+                }
+                store.flush().unwrap();
+            });
+        }
+    });
+    let store = KbStore::open(&dir, "m-conc").unwrap();
+    assert_eq!(
+        store.len(),
+        2 * PER_THREAD,
+        "interleaved flushes dropped records"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_start_serve_skips_cold_builds_entirely() {
+    let dir_a = tmp("warmstart_a");
+    let dir_b = tmp("warmstart_b");
+    let comp = Computation::from(workloads::saxpy(1 << 20));
+    // Cold fleet member: builds once, persists into store A.
+    let cold = quiet_session(3).with_kb_store(&dir_a).unwrap();
+    cold.run(&comp, &RequestArgs::default()).unwrap();
+    cold.save_kb().unwrap();
+    assert!(cold.stats().build_secs > 0.0);
+    // Export A, import into a fresh member backed by empty store B.
+    let snap = KbSnapshot::from_store(&KbStore::open(&dir_a, &sim_digest()).unwrap());
+    assert_eq!(snap.len(), 1);
+    let warm = quiet_session(4).with_kb_store(&dir_b).unwrap();
+    let (exact, hints) = warm.import_kb_snapshot(&snap);
+    assert_eq!((exact, hints), (1, 0));
+    let out = warm.run(&comp, &RequestArgs::default()).unwrap();
+    assert_eq!(out.origin, ConfigOrigin::KbHit);
+    let st = warm.stats();
+    assert_eq!(st.built, 0, "warm-started member ran Algorithm 1");
+    assert_eq!(st.warm_hits, 1);
+    assert_eq!(st.build_secs, 0.0);
+    // Idempotent: importing the same snapshot again changes nothing.
+    assert_eq!(warm.import_kb_snapshot(&snap), (0, 0));
+    for d in [&dir_a, &dir_b] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+#[test]
+fn mismatched_manifest_snapshot_feeds_derivation_only() {
+    let dir = tmp("foreign");
+    let comp = Computation::from(workloads::saxpy(1 << 20));
+    let (sct, w, _) = comp.spec().unwrap();
+    // A snapshot recorded on some other machine: same computation, but a
+    // digest this platform does not match.
+    let snap = KbSnapshot::from_records([StoreRecord::new(
+        mk_profile(&sct.id(), w.clone(), FissionLevel::L2, vec![4], 0.4, 1e-3),
+        "some-other-machine",
+    )]);
+    let session = quiet_session(5).with_kb_store(&dir).unwrap();
+    assert_eq!(session.import_kb_snapshot(&snap), (0, 1));
+    let out = session.run(&comp, &RequestArgs::default()).unwrap();
+    // The foreign profile is never an exact hit, but its configuration
+    // seeds derivation — so no cold build, no warm hit.
+    assert_eq!(out.origin, ConfigOrigin::Derived);
+    let st = session.stats();
+    assert_eq!(st.built, 0);
+    assert_eq!(st.warm_hits, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn epoch_change_syncs_between_live_knowledge_bases() {
+    let dir = tmp("epochs");
+    let mut kb1 = KnowledgeBase::open_store(&dir, "m-epoch").unwrap();
+    let mut kb2 = KnowledgeBase::open_store(&dir, "m-epoch").unwrap();
+    kb1.store(mk_profile(
+        "sct_a",
+        Workload::d1(1 << 20),
+        FissionLevel::L2,
+        vec![4],
+        0.5,
+        1e-3,
+    ));
+    kb1.save().unwrap();
+    kb2.store(mk_profile(
+        "sct_b",
+        Workload::d1(1 << 21),
+        FissionLevel::L2,
+        vec![4],
+        0.5,
+        2e-3,
+    ));
+    // kb2's sync commits its own record and absorbs kb1's flush.
+    kb2.save().unwrap();
+    assert_eq!(kb2.len(), 2, "kb2 missed kb1's segment");
+    assert!(kb2.lookup("sct_a", &Workload::d1(1 << 20)).is_some());
+    // And the reverse direction on kb1's next sync.
+    assert!(kb1.sync_store().unwrap() > 0);
+    assert_eq!(kb1.len(), 2, "kb1 missed kb2's segment");
+    // Compaction keeps the merged view intact.
+    let mut store = KbStore::open(&dir, "m-epoch").unwrap();
+    let (live, removed) = store.gc().unwrap();
+    assert_eq!(live, 2);
+    assert!(removed >= 2);
+    assert_eq!(KbStore::open(&dir, "m-epoch").unwrap().len(), 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --- merge property tests -------------------------------------------------
+
+/// Decode one generated tuple into a store record: a handful of (SCT,
+/// workload) pairs so collisions are common, three origins, positive
+/// times. The digest is fixed — merge semantics are per content key.
+fn decode_record(v: &(u64, u64, f64)) -> StoreRecord {
+    let sct = format!("sct{}", v.0 % 3);
+    let wl = Workload::d1(1 << (10 + (v.1 % 4) as u32));
+    let mut p = mk_profile(&sct, wl, FissionLevel::L2, vec![4], 0.5, 1e-5 + v.2.abs());
+    p.origin = match v.0 % 5 {
+        0 => ProfileOrigin::Derived,
+        1 | 2 => ProfileOrigin::Built,
+        _ => ProfileOrigin::Refined,
+    };
+    StoreRecord::new(p, "m-prop")
+}
+
+fn gen_records(r: &mut marrow::util::rng::Rng) -> Vec<(u64, u64, f64)> {
+    let n = 1 + r.below(8) as usize;
+    (0..n)
+        .map(|_| (r.below(64), r.below(64), r.range_f64(0.0, 1.0)))
+        .collect()
+}
+
+fn snapshot_of(tuples: &[(u64, u64, f64)]) -> KbSnapshot {
+    KbSnapshot::from_records(tuples.iter().map(decode_record))
+}
+
+#[test]
+fn merge_is_idempotent() {
+    forall(11, 200, gen_records, |tuples| {
+        let once = snapshot_of(tuples).encode();
+        let doubled: Vec<_> = tuples.iter().chain(tuples.iter()).cloned().collect();
+        let twice = snapshot_of(&doubled).encode();
+        if once == twice {
+            Ok(())
+        } else {
+            Err("merging a snapshot with itself changed it".into())
+        }
+    });
+}
+
+#[test]
+fn merge_is_commutative() {
+    forall(12, 200, gen_records, |tuples| {
+        let forward = snapshot_of(tuples).encode();
+        let reversed: Vec<_> = tuples.iter().rev().cloned().collect();
+        let backward = snapshot_of(&reversed).encode();
+        if forward == backward {
+            Ok(())
+        } else {
+            Err("merge depends on record arrival order".into())
+        }
+    });
+}
+
+#[test]
+fn merge_never_worsens_best_time() {
+    forall(13, 200, gen_records, |tuples| {
+        let snap = snapshot_of(tuples);
+        for t in tuples {
+            let rec = decode_record(t);
+            let kept = snap
+                .records()
+                .find(|r| r.key == rec.key)
+                .ok_or_else(|| format!("key {} vanished in merge", rec.key))?;
+            if kept.profile.best_time > rec.profile.best_time {
+                return Err(format!(
+                    "kept {} but a {} record existed",
+                    kept.profile.best_time, rec.profile.best_time
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn merge_through_stores_matches_snapshot_fold() {
+    // The same fold through two actual store directories, in both orders,
+    // lands on identical exported bytes (the bench-gate invariant).
+    let dir_x = tmp("merge_x");
+    let dir_y = tmp("merge_y");
+    let a = snapshot_of(&[(0, 0, 0.5), (1, 1, 0.25), (3, 2, 0.125)]);
+    let b = snapshot_of(&[(0, 0, 0.0625), (4, 3, 0.75), (3, 2, 0.125)]);
+    let mut x = KbStore::open(&dir_x, "m-prop").unwrap();
+    a.merge_into(&mut x);
+    b.merge_into(&mut x);
+    x.flush().unwrap();
+    let mut y = KbStore::open(&dir_y, "m-prop").unwrap();
+    b.merge_into(&mut y);
+    a.merge_into(&mut y);
+    y.flush().unwrap();
+    assert_eq!(
+        KbSnapshot::from_store(&x).encode(),
+        KbSnapshot::from_store(&y).encode(),
+        "store merge is order-dependent"
+    );
+    for d in [&dir_x, &dir_y] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}

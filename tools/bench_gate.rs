@@ -1,13 +1,17 @@
 //! CI bench regression gate (DESIGN.md §2.8): compares the serve-workload
 //! throughput of freshly-produced `BENCH_*.json` files against the
 //! committed baselines under `benches/baselines/`, failing the job on a
-//! >15% regression, and asserts the co-scheduling invariant of
-//! `BENCH_pr5.json` (the co-scheduled virtual makespan must beat the
-//! serialized baseline). Also emits the merged markdown table the CI
+//! >15% regression, and asserts two baseline-free invariants:
+//! `BENCH_pr5.json`'s co-scheduled virtual makespan must beat the
+//! serialized baseline, and `BENCH_pr6.json`'s warm-started serve must
+//! perform zero cold profile builds, spend strictly less cold-build time
+//! than the cold run, and report order-independent snapshot merges
+//! (DESIGN.md §2.9). Also emits the merged markdown table the CI
 //! `bench-summary` artifact ships.
 //!
 //! Usage:
-//!   bench_gate [--fresh BENCH_pr5.json] [--baselines benches/baselines]
+//!   bench_gate [--fresh BENCH_pr5.json] [--warmstart BENCH_pr6.json]
+//!              [--baselines benches/baselines]
 //!              [--summary bench-summary.md] [--tolerance 0.15]
 //!
 //! Baselines are plain copies of previous runs' bench JSON. A baseline
@@ -22,7 +26,7 @@ use marrow::cli::Args;
 use marrow::util::json::Json;
 
 /// Benches whose throughput the gate enforces: the serve workloads.
-const SERVE_BENCHES: [&str; 2] = ["serve_throughput", "coschedule_serve"];
+const SERVE_BENCHES: [&str; 3] = ["serve_throughput", "coschedule_serve", "kb_warmstart"];
 
 fn main() {
     let args = Args::from_env();
@@ -50,6 +54,7 @@ fn run(args: &Args) -> Result<(), String> {
         write_summary(summary)?;
     }
     check_coschedule_invariant(&fresh_path)?;
+    check_warmstart_invariant(&args.get_or("warmstart", "BENCH_pr6.json"))?;
     check_baselines(&baseline_dir, tolerance)?;
     Ok(())
 }
@@ -71,6 +76,48 @@ fn check_coschedule_invariant(fresh_path: &str) -> Result<(), String> {
         ));
     }
     println!("co-scheduling invariant: {speedup:.2}x over serialized (OK)");
+    Ok(())
+}
+
+/// The KB-store warm-start gate (DESIGN.md §2.9), baseline-free and
+/// deterministic: a serve warm-started from an exported snapshot must run
+/// zero cold profile builds and spend strictly less wall time building
+/// than the cold run it was exported from, and merging two stores in
+/// either order must export byte-identical snapshots.
+fn check_warmstart_invariant(path: &str) -> Result<(), String> {
+    let v = parse_file(Path::new(path))?;
+    let num = |key: &str| {
+        v.get(key)
+            .ok()
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| format!("{path}: missing {key}"))
+    };
+    let warm_builds = num("warm_cold_builds")?;
+    let cold_secs = num("cold_build_secs_cold")?;
+    let warm_secs = num("cold_build_secs_warm")?;
+    let merge_ok = v
+        .get("merge_deterministic")
+        .ok()
+        .and_then(|x| x.as_bool())
+        .ok_or_else(|| format!("{path}: missing merge_deterministic"))?;
+    if warm_builds != 0.0 {
+        return Err(format!(
+            "{path}: warm-started serve ran {warm_builds} cold builds (want 0)"
+        ));
+    }
+    if warm_secs.partial_cmp(&cold_secs) != Some(std::cmp::Ordering::Less) {
+        return Err(format!(
+            "{path}: warm cold-build time {warm_secs:.4}s is not strictly \
+             below the cold run's {cold_secs:.4}s"
+        ));
+    }
+    if !merge_ok {
+        return Err(format!("{path}: snapshot merge is order-dependent"));
+    }
+    println!(
+        "kb warm-start invariant: 0 cold builds, {warm_secs:.4}s vs \
+         {cold_secs:.4}s building, merge order-independent (OK)"
+    );
     Ok(())
 }
 
