@@ -1,0 +1,220 @@
+//! Batching / graph-fusion serve bench (BENCH_pr7.json, DESIGN.md §2.10):
+//! the same mixed request stream drained unbatched (PR 5 behavior, one
+//! graph per request) and batched (`batch_max` > 1: consecutive compatible
+//! requests coalesce into one fused drain paying admission, pacing, and
+//! the virtual-timeline booking once).
+//!
+//! The stream alternates a CPU-leaning and a GPU-leaning saxpy, so fused
+//! batches pack opposite device leanings: the fused makespan is the
+//! busiest device's summed load instead of the serialized per-request sum
+//! ([`ExecOutcome::fused_total`]), which is where the virtual throughput
+//! win comes from. Concurrency is 8 against the machine's 2 devices (CPU
+//! package + 1 GPU) — the ISSUE's "concurrency ≥ 4x slot count" regime.
+//!
+//! The gate (`tools/bench_gate.rs --batch`) enforces two deterministic
+//! invariants from the emitted JSON:
+//!  * batched `virtual_req_per_sec` ≥ 1.3x unbatched,
+//!  * zero correctness drift: the sorted per-request execution totals are
+//!    bit-identical across the two modes (batching changes scheduling,
+//!    never results).
+//!
+//! Sessions run the analytic simulator with zeroed noise and a frozen
+//! balancer (`with_max_dev(10.0)`), so both runs resolve identical
+//! configurations and the bit-identicality check is meaningful.
+
+use marrow::bench::workloads;
+use marrow::kb::mk_profile;
+use marrow::platform::cpu::FissionLevel;
+use marrow::platform::device::i7_hd7950;
+use marrow::scheduler::SimEnv;
+use marrow::session::serve::{ServeOpts, ServeReport, ServeRequest, SessionPool};
+use marrow::session::{Computation, Session};
+use marrow::sim::cost::CostParams;
+use marrow::sim::machine::SimMachine;
+
+const REQUESTS: usize = 32;
+const CONCURRENCY: usize = 8;
+const PACE_MS: f64 = 0.5;
+const BATCH_MAX: usize = 8;
+const BATCH_WINDOW_SECS: f64 = 0.02;
+const DEADLINE_SECS: f64 = 0.05;
+/// CPU-leaning / GPU-leaning workload pair (seeded tuned splits below).
+const CPU_SIZE: u64 = 1 << 20;
+const GPU_SIZE: u64 = 1 << 21;
+
+fn quiet_session(seed: u64) -> Session<SimEnv> {
+    let quiet = CostParams {
+        cpu_noise: 0.0,
+        gpu_noise: 0.0,
+        straggler_p: 0.0,
+        ..CostParams::default()
+    };
+    Session::sim(SimMachine::new(i7_hd7950(1), seed).with_params(quiet)).with_max_dev(10.0)
+}
+
+/// A pool whose shared KB is pre-seeded with opposite tuned splits, so
+/// both modes resolve the same configurations from request one and the
+/// claim-time batch-close estimates are warm.
+fn pool(seed: u64) -> SessionPool<SimEnv> {
+    let pool = SessionPool::build(CONCURRENCY, |i| quiet_session(seed + i as u64));
+    for (size, cpu_share) in [(CPU_SIZE, 0.9), (GPU_SIZE, 0.1)] {
+        let comp = Computation::from(workloads::saxpy(size));
+        let (sct, w, _) = comp.spec().unwrap();
+        pool.shared_kb().write().unwrap().store(mk_profile(
+            &sct.id(),
+            w.clone(),
+            FissionLevel::L2,
+            vec![4],
+            cpu_share,
+            1e-3,
+        ));
+    }
+    pool
+}
+
+fn stream() -> Vec<ServeRequest> {
+    (0..REQUESTS)
+        .map(|i| {
+            let size = if i % 2 == 0 { CPU_SIZE } else { GPU_SIZE };
+            ServeRequest::from(Computation::from(workloads::saxpy(size)))
+        })
+        .collect()
+}
+
+fn run_serve(batch_max: usize, seed: u64) -> ServeReport {
+    pool(seed)
+        .serve(
+            &stream(),
+            &ServeOpts {
+                concurrency: CONCURRENCY,
+                pace: PACE_MS * 1e-3,
+                batch_max,
+                batch_window: BATCH_WINDOW_SECS,
+                deadline_default: Some(DEADLINE_SECS),
+                ..Default::default()
+            },
+        )
+        .expect("serve")
+}
+
+/// Per-request execution totals in a mode-independent order.
+fn sorted_exec_totals(r: &ServeReport) -> Vec<f64> {
+    let mut t: Vec<f64> = r.traces.iter().map(|t| t.exec_total).collect();
+    t.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    t
+}
+
+struct Point {
+    name: &'static str,
+    report: ServeReport,
+}
+
+impl Point {
+    fn miss_rate(&self) -> f64 {
+        self.report.deadline_misses as f64 / self.report.completed.max(1) as f64
+    }
+}
+
+fn main() {
+    println!(
+        "batch fusion: {REQUESTS} alternating cpu/gpu-leaning requests, \
+         concurrency {CONCURRENCY} over 2 devices, pace floor {PACE_MS} ms, \
+         batch_max {BATCH_MAX}, window {:.0} ms, deadline {:.0} ms\n",
+        BATCH_WINDOW_SECS * 1e3,
+        DEADLINE_SECS * 1e3
+    );
+    println!(
+        "{:>16} {:>12} {:>14} {:>8} {:>11} {:>13} {:>13}",
+        "mode", "wall req/s", "virtual req/s", "batches", "miss rate", "p99 admit ms", "p99 drain ms"
+    );
+
+    let unbatched = Point {
+        name: "unbatched_serve",
+        report: run_serve(1, 700),
+    };
+    let batched = Point {
+        name: "batched_serve",
+        report: run_serve(BATCH_MAX, 700),
+    };
+
+    assert_eq!(unbatched.report.completed, REQUESTS);
+    assert_eq!(batched.report.completed, REQUESTS);
+    assert_eq!(
+        unbatched.report.batches, REQUESTS,
+        "unbatched serve must drain one batch per request"
+    );
+    assert!(
+        batched.report.batches < REQUESTS / 2,
+        "batched serve coalesced only {} batches",
+        batched.report.batches
+    );
+
+    for p in [&unbatched, &batched] {
+        println!(
+            "{:>16} {:>12.1} {:>14.1} {:>8} {:>11.3} {:>13.3} {:>13.3}",
+            p.name,
+            p.report.requests_per_sec,
+            p.report.virtual_req_per_sec(),
+            p.report.batches,
+            p.miss_rate(),
+            p.report.p99_admit_wait * 1e3,
+            p.report.p99_drain * 1e3,
+        );
+    }
+
+    // Zero correctness drift: identical per-request executions, bit for
+    // bit (sorted: mode changes which worker serves which request).
+    let a = sorted_exec_totals(&unbatched.report);
+    let b = sorted_exec_totals(&batched.report);
+    let identical = a.len() == b.len()
+        && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits());
+    assert!(identical, "batched execution drifted from unbatched");
+
+    let speedup = batched.report.virtual_req_per_sec()
+        / unbatched.report.virtual_req_per_sec().max(1e-12);
+    println!(
+        "\nvirtual speedup (batched / unbatched): {speedup:.2}x, \
+         exec totals identical: {identical}"
+    );
+    assert!(
+        speedup >= 1.3,
+        "batched serve must beat unbatched by >= 1.3x virtual throughput, got {speedup:.2}x"
+    );
+
+    let workloads_json: Vec<String> = [&unbatched, &batched]
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"name\": \"{}\", \"requests_per_sec\": {:.2}, \
+                 \"virtual_req_per_sec\": {:.2}, \"batches\": {}, \
+                 \"deadline_miss_rate\": {:.4}, \"p99_admit_wait_ms\": {:.4}, \
+                 \"p99_drain_ms\": {:.4}}}",
+                p.name,
+                p.report.requests_per_sec,
+                p.report.virtual_req_per_sec(),
+                p.report.batches,
+                p.miss_rate(),
+                p.report.p99_admit_wait * 1e3,
+                p.report.p99_drain * 1e3,
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"batch_fusion\",\n  \"pr\": 7,\n  \
+         \"requests\": {REQUESTS},\n  \"concurrency\": {CONCURRENCY},\n  \
+         \"pace_ms\": {PACE_MS},\n  \"batch_max\": {BATCH_MAX},\n  \
+         \"batch_window_ms\": {:.1},\n  \"deadline_ms\": {:.1},\n  \
+         \"workloads\": [\n{}\n  ],\n  \
+         \"speedup_virtual\": {:.4},\n  \"exec_totals_identical\": {}\n}}\n",
+        BATCH_WINDOW_SECS * 1e3,
+        DEADLINE_SECS * 1e3,
+        workloads_json.join(",\n"),
+        speedup,
+        identical
+    );
+    let path = "BENCH_pr7.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -148,18 +148,22 @@ pub enum NodeKind {
 #[derive(Clone, Debug)]
 pub struct TaskNode {
     pub id: usize,
-    /// Index into the stage program.
+    /// Index into the stage program (member-local in a fused graph).
     pub stage: u32,
     pub kind: NodeKind,
     /// The chunk this node covers (sync nodes span the whole domain and
     /// are homed on the first slot, freely stealable host work).
     pub partition: Partition,
     /// Unit-order position within the stage: sorting a stage's outputs by
-    /// `seq` reconstructs the domain.
+    /// `seq` reconstructs the domain. [`fuse_graphs`] re-bases seqs into
+    /// disjoint per-member ranges so fused sink partials stay separable.
     pub seq: usize,
     /// Producer node whose first output chains into this node's carried
     /// input (pipeline stages only).
     pub carried_from: Option<usize>,
+    /// Which fused batch member this node belongs to (DESIGN.md §2.10):
+    /// per-request chunk provenance. 0 for a solo (unfused) graph.
+    pub member: usize,
 }
 
 /// The dependency graph of one execution request.
@@ -236,6 +240,7 @@ pub fn build_graph(
                         partition: *chunk,
                         seq: c,
                         carried_from,
+                        member: 0,
                     });
                     g.deps.push(deps);
                     cur.push(id);
@@ -255,6 +260,7 @@ pub fn build_graph(
                     },
                     seq: 0,
                     carried_from: None,
+                    member: 0,
                 });
                 // Fan-in: every chunk of the previous stage gates the sync.
                 g.deps.push(prev.clone());
@@ -346,6 +352,120 @@ impl TaskGraph {
         out.push_str("}\n");
         out
     }
+}
+
+/// Whether a request's stage program can participate in graph fusion and
+/// same-SCT batching (DESIGN.md §2.10): every flattened stage must be
+/// device-side compute. Global-sync loops and reductions keep request-wide
+/// barrier and output semantics a fused graph cannot disentangle per
+/// member, so they serve solo.
+pub fn fusable(sct: &Sct) -> bool {
+    flatten_stages(sct)
+        .map(|stages| stages.iter().all(|op| !op.is_sync()))
+        .unwrap_or(false)
+}
+
+/// One member's slice of a fused graph: the node-id range it contributed
+/// and the offset its chunk seqs were re-based by.
+#[derive(Clone, Debug)]
+pub struct FusedMember {
+    pub nodes: std::ops::Range<usize>,
+    pub seq_base: usize,
+    /// The member's own stage-program length (`TaskNode::stage` stays
+    /// member-local, so a fused runner dispatches on `(member, stage)`).
+    pub n_stages: u32,
+}
+
+/// Several requests' task graphs fused into one schedulable graph
+/// (DESIGN.md §2.10): co-admitted compatible requests drain under a single
+/// ready-set scheduler pass, so a small request's chunks fill slots a
+/// large one leaves idle instead of queuing behind it.
+#[derive(Clone, Debug, Default)]
+pub struct FusedGraph {
+    pub graph: TaskGraph,
+    pub members: Vec<FusedMember>,
+}
+
+impl FusedGraph {
+    /// The member owning a (fused) sink seq, if any.
+    pub fn member_of_seq(&self, seq: usize) -> Option<usize> {
+        self.members
+            .iter()
+            .position(|m| seq >= m.seq_base && seq < m.seq_base + m.nodes.len())
+    }
+
+    /// Split a fused drain's seq-keyed sink partials back into per-member
+    /// result sets, seqs re-based to each member's own numbering — the
+    /// disassembly step that makes fused results bit-identical to solo
+    /// runs per request.
+    pub fn split_partials<T: Clone>(&self, partials: &[(usize, T)]) -> Vec<Vec<(usize, T)>> {
+        let mut out: Vec<Vec<(usize, T)>> = vec![Vec::new(); self.members.len()];
+        for (seq, val) in partials {
+            if let Some(m) = self.member_of_seq(*seq) {
+                out[m].push((*seq - self.members[m].seq_base, val.clone()));
+            }
+        }
+        for member in &mut out {
+            member.sort_by_key(|(s, _)| *s);
+        }
+        out
+    }
+}
+
+/// Fuse several requests' task graphs into one (DESIGN.md §2.10). Node ids
+/// and seqs are offset into disjoint per-member ranges, dependency edges
+/// stay within their member — no cross-request edges; the ready-set
+/// scheduler is what interleaves members onto shared slots — and every
+/// node carries its member index for per-request result disassembly and
+/// trace attribution. Graphs with sync nodes are rejected ([`fusable`] is
+/// the admission-side check): a fused graph has no request-wide barrier or
+/// single output slot.
+pub fn fuse_graphs(parts: Vec<TaskGraph>) -> Result<FusedGraph> {
+    if parts.is_empty() {
+        return Err(Error::Decompose("cannot fuse zero task graphs".into()));
+    }
+    let mut fused = TaskGraph::default();
+    let mut members = Vec::with_capacity(parts.len());
+    for (m, g) in parts.into_iter().enumerate() {
+        if g.nodes.iter().any(|n| n.kind == NodeKind::Sync) {
+            return Err(Error::Decompose(format!(
+                "graph fusion requires sync-free stage programs \
+                 (member {m} has a sync node)"
+            )));
+        }
+        let base = fused.nodes.len();
+        // Seqs are chunk indices within a stage, so every member seq is
+        // below its node count — offsetting by the node base keeps the
+        // ranges disjoint.
+        let seq_base = base;
+        let n_member_stages = g.n_stages;
+        for mut n in g.nodes {
+            n.id += base;
+            n.seq += seq_base;
+            n.member = m;
+            n.carried_from = n.carried_from.map(|c| c + base);
+            fused.nodes.push(n);
+        }
+        for deps in g.deps {
+            fused.deps.push(deps.into_iter().map(|d| d + base).collect());
+        }
+        fused.n_stages = fused.n_stages.max(n_member_stages);
+        members.push(FusedMember {
+            nodes: base..fused.nodes.len(),
+            seq_base,
+            n_stages: n_member_stages,
+        });
+    }
+    fused.consumers = vec![Vec::new(); fused.nodes.len()];
+    for (i, deps) in fused.deps.iter().enumerate() {
+        for &d in deps {
+            fused.consumers[d].push(i);
+        }
+    }
+    Ok(FusedGraph {
+        graph: fused,
+        members,
+    })
 }
 
 #[cfg(test)]
@@ -579,5 +699,82 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn fusion_keeps_members_disjoint_and_tagged() {
+        let a_sct = pipe(2);
+        let b_sct = kernel("solo");
+        let a = build_graph(
+            &flatten_stages(&a_sct).unwrap(),
+            &plan_for(&a_sct, 512, 8),
+            2,
+        )
+        .unwrap();
+        let b = build_graph(
+            &flatten_stages(&b_sct).unwrap(),
+            &plan_for(&b_sct, 256, 8),
+            2,
+        )
+        .unwrap();
+        let (na, nb) = (a.n_nodes(), b.n_nodes());
+        let fused = fuse_graphs(vec![a, b]).unwrap();
+        let g = &fused.graph;
+        assert_eq!(g.n_nodes(), na + nb);
+        assert_eq!(fused.members.len(), 2);
+        assert_eq!(fused.members[0].nodes, 0..na);
+        assert_eq!(fused.members[1].nodes, na..na + nb);
+        assert_eq!(fused.members[0].n_stages, 2);
+        assert_eq!(fused.members[1].n_stages, 1);
+        assert_eq!(g.n_stages, 2);
+        assert!(g.topo_order().is_some());
+        // Provenance: every node tagged with its member, and no edge
+        // crosses the member boundary.
+        for n in &g.nodes {
+            let m = &fused.members[n.member];
+            assert!(m.nodes.contains(&n.id), "node {} outside member range", n.id);
+            for &d in &g.deps[n.id] {
+                assert_eq!(g.nodes[d].member, n.member, "edge {d}->{} crosses members", n.id);
+            }
+            if let Some(c) = n.carried_from {
+                assert_eq!(g.nodes[c].member, n.member);
+            }
+        }
+        // Seqs are globally unique, so sink partials stay separable.
+        let mut seqs: Vec<usize> = g.nodes.iter().map(|n| n.seq).collect();
+        seqs.sort_unstable();
+        seqs.dedup();
+        assert_eq!(seqs.len(), g.n_nodes());
+        // Disassembly re-bases each member's seqs to its own numbering.
+        let sink_partials: Vec<(usize, usize)> =
+            g.sinks().iter().map(|&id| (g.nodes[id].seq, id)).collect();
+        let split = fused.split_partials(&sink_partials);
+        assert_eq!(split.len(), 2);
+        for (m, part) in split.iter().enumerate() {
+            assert!(!part.is_empty(), "member {m} lost its sink partials");
+            for (local_seq, id) in part {
+                assert_eq!(fused.graph.nodes[*id].member, m);
+                assert_eq!(
+                    local_seq + fused.members[m].seq_base,
+                    fused.graph.nodes[*id].seq
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fusion_rejects_sync_programs() {
+        assert!(fusable(&pipe(3)));
+        assert!(fusable(&kernel("k")));
+        let looped = Sct::for_loop(kernel("body"), 2, true);
+        assert!(!fusable(&looped));
+        use crate::data::vector::Merge;
+        let mr = Sct::map_reduce(kernel("m"), Reduction::Host(Merge::Add));
+        assert!(!fusable(&mr));
+
+        let stages = flatten_stages(&looped).unwrap();
+        let g = build_graph(&stages, &plan_for(&looped, 256, 1), 2).unwrap();
+        assert!(fuse_graphs(vec![g]).is_err(), "sync graphs must not fuse");
+        assert!(fuse_graphs(Vec::new()).is_err(), "empty fusion must error");
     }
 }

@@ -427,6 +427,38 @@ impl KnowledgeBase {
             })
         })
     }
+
+    /// Cost estimate for a *fused batch* of requests (DESIGN.md §2.10):
+    /// the fused graph drains every member on the same device set under
+    /// one ready-set pass, so the batch is priced as its critical member
+    /// plus a packed residual ([`pack_estimate`]) — not as the serialized
+    /// sum admission would charge for solo drains. `None` when any member
+    /// is cold (callers fall back to observed means, same as solo
+    /// admission).
+    pub fn estimate_batch(&self, members: &[(&str, &Workload)]) -> Option<f64> {
+        let ests = members
+            .iter()
+            .map(|(id, w)| self.estimate_time(id, w))
+            .collect::<Option<Vec<f64>>>()?;
+        Some(pack_estimate(&ests))
+    }
+}
+
+/// How much of a fused batch's non-critical work the dataflow drain packs
+/// into slots the critical member leaves idle: the residual beyond the
+/// longest member is charged at this fraction. 1.0 would price the batch
+/// as the serialized sum (no fusion benefit); the dataflow drain's
+/// cross-member overlap lands well below that for leaning-diverse members,
+/// so admission prices batches optimistically but still monotonically in
+/// member count.
+pub const BATCH_PACK_FACTOR: f64 = 0.6;
+
+/// Fused-batch completion estimate from per-member solo estimates: the
+/// critical (longest) member plus the packed residual of the rest.
+pub fn pack_estimate(member_secs: &[f64]) -> f64 {
+    let max = member_secs.iter().copied().fold(0.0, f64::max);
+    let sum: f64 = member_secs.iter().sum();
+    max + BATCH_PACK_FACTOR * (sum - max)
 }
 
 /// Interpolate a configuration from scoped profiles: continuous fields
@@ -591,6 +623,25 @@ mod tests {
         assert_eq!(kb.estimate_time("fresh", &wl(1500, 1500)), Some(2.5));
         // Wrong dimensionality stays cold.
         assert!(kb.estimate_time("f", &Workload::d1(64)).is_none());
+    }
+
+    #[test]
+    fn batch_estimate_prices_fusion_below_the_sum() {
+        let mut kb = KnowledgeBase::in_memory();
+        let (a, b) = (wl(1024, 1024), wl(2048, 2048));
+        assert!(kb.estimate_batch(&[("f", &a)]).is_none(), "cold KB");
+        kb.store(mk_profile("f", a.clone(), FissionLevel::L2, vec![4], 0.2, 2.0));
+        kb.store(mk_profile("f", b.clone(), FissionLevel::L2, vec![4], 0.2, 6.0));
+        // A singleton batch is the solo estimate.
+        assert_eq!(kb.estimate_batch(&[("f", &a)]), Some(2.0));
+        // Critical member + packed residual: strictly between max and sum.
+        let est = kb.estimate_batch(&[("f", &a), ("f", &b)]).unwrap();
+        assert!(est > 6.0 && est < 8.0, "est {est}");
+        assert!((est - pack_estimate(&[2.0, 6.0])).abs() < 1e-12);
+        // Any cold member poisons the whole batch estimate.
+        assert!(kb
+            .estimate_batch(&[("f", &a), ("g", &Workload::d1(7))])
+            .is_none());
     }
 
     #[test]

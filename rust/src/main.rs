@@ -12,13 +12,20 @@
 //!       execution monitoring and adaptive rebalancing, per-run trace
 //!       (with --concurrency > 1 the requests drain through a session pool)
 //!   serve --bench <name> --size <n> [--requests <r>] [--concurrency <c>]
-//!       [--pace-ms <m>] [--kb <path>] [--co-schedule]
+//!       [--pace-ms <m>] [--kb <path>] [--co-schedule] [--batch-max <n>]
+//!       [--batch-window <ms>] [--deadline-default <ms>]
 //!       multi-request serve path: a pool of sessions over one shared KB
 //!       drains the request stream under the admission cap; reports
-//!       requests/sec and p50/p99 latency. With --co-schedule each request
-//!       is admitted onto the KB-cost-priced device subset minimizing its
-//!       predicted completion (DESIGN.md 2.8) instead of time-sharing the
-//!       whole pool
+//!       requests/sec, p50/p99 latency, and the admit-wait/drain split.
+//!       With --co-schedule each request is admitted onto the
+//!       KB-cost-priced device subset minimizing its predicted completion
+//!       (DESIGN.md 2.8) instead of time-sharing the whole pool. With
+//!       --batch-max > 1, consecutive compatible requests coalesce into
+//!       one fused drain (DESIGN.md 2.10): --batch-window <ms> bounds the
+//!       fusion stretch the oldest member absorbs (default 2 ms, scaled
+//!       down by request priority), and --deadline-default <ms> attaches
+//!       an SLO to deadline-free requests — batches never stretch past any
+//!       member's slack, and overruns are reported as deadline misses
 //!   graph --bench <name> --size <n> [--gpus <g>] [--tasks-per-slot <t>]
 //!       dump the benchmark's dataflow TaskGraph as GraphViz DOT (nodes
 //!       labelled stage/chunk/slot, sync nodes highlighted)
@@ -87,7 +94,7 @@ usage:
   marrow eval <table2|table3|table4|table5|fig11|ablations|all>
   marrow profile --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--kb <path> | --kb-store <dir>]
   marrow run --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--runs <r>] [--kb <path> | --kb-store <dir>] [--concurrency <c>] [--tasks-per-slot <t>] [--drain <barrier|dataflow>]
-  marrow serve --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--requests <r>] [--concurrency <c>] [--pace-ms <m>] [--kb <path> | --kb-store <dir> [--import <snapshot>] [--store-sync-every <n>]] [--tasks-per-slot <t>] [--drain <barrier|dataflow>] [--co-schedule]
+  marrow serve --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--requests <r>] [--concurrency <c>] [--pace-ms <m>] [--kb <path> | --kb-store <dir> [--import <snapshot>] [--store-sync-every <n>]] [--tasks-per-slot <t>] [--drain <barrier|dataflow>] [--co-schedule] [--batch-max <n>] [--batch-window <ms>] [--deadline-default <ms>]
   marrow kb <export|import|merge|stats|gc> --store <dir> [--from <store|snapshot|kb.json>] [--out <path>] [--gpus <g>]
   marrow graph --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--tasks-per-slot <t>] [--kb <path>]
   marrow shoc
@@ -291,6 +298,17 @@ fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
     let tasks_per_slot = pick_tasks_per_slot(args)?;
     let drain_mode = pick_drain_mode(args)?;
     let co_schedule = args.has("co-schedule");
+    // Batching & fusion knobs (DESIGN.md §2.10): --batch-max > 1 lets a
+    // worker coalesce consecutive compatible requests into one fused
+    // drain; --batch-window bounds the fusion-induced stretch the oldest
+    // member absorbs; --deadline-default attaches an SLO to requests that
+    // carry none (reported as deadline misses when overrun).
+    let batch_max = (args.get_u64("batch-max", 1)? as usize).max(1);
+    let batch_window = args.get_f64("batch-window", 2.0)? * 1e-3;
+    let deadline_default = match args.get("deadline-default") {
+        Some(_) => Some(args.get_f64("deadline-default", 0.0)? * 1e-3),
+        None => None,
+    };
     let name = b.name.clone();
     let comp = Computation::from(b);
     let machine = pick_machine(args)?;
@@ -344,6 +362,16 @@ fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
             "whole-pool"
         }
     );
+    if batch_max > 1 {
+        println!(
+            "batching: up to {batch_max} requests/batch, {:.1} ms window{}",
+            batch_window * 1e3,
+            match deadline_default {
+                Some(d) => format!(", {:.1} ms default deadline", d * 1e3),
+                None => String::new(),
+            }
+        );
+    }
     let report = pool.serve(
         &requests,
         &ServeOpts {
@@ -353,6 +381,10 @@ fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
             drain_mode,
             co_schedule,
             store_sync_every,
+            batch_max,
+            batch_window,
+            deadline_default,
+            ..Default::default()
         },
     )?;
     println!("{}", report.summary());

@@ -1033,6 +1033,40 @@ mod tests {
             assert_eq!(out.executed as usize, graph.n_nodes());
         }
 
+        /// Batch fusion end to end (DESIGN.md §2.10): two distinct stage
+        /// programs fused into one graph drain through the same ready-set
+        /// scheduler, and the per-member disassembly is bit-identical to
+        /// each member's solo run — fusion changes scheduling, never
+        /// results.
+        #[test]
+        fn fused_members_drain_together_and_disassemble_bit_identically() {
+            use crate::decompose::graph::fuse_graphs;
+            let a_sct = Sct::pipeline(vec![kernel("a"), kernel("b")]);
+            let b_sct = kernel("c");
+            let plan_a = two_slot_plan(8, 8);
+            let plan_b = two_slot_plan(4, 4);
+            let ga = build_graph(&flatten_stages(&a_sct).unwrap(), &plan_a, 2).unwrap();
+            let gb = build_graph(&flatten_stages(&b_sct).unwrap(), &plan_b, 2).unwrap();
+            let solo_a = launch_graph(&ga, &StageAdder, LaunchOpts::default()).unwrap();
+            let solo_b = launch_graph(&gb, &StageAdder, LaunchOpts::default()).unwrap();
+            let fused = fuse_graphs(vec![ga, gb]).unwrap();
+            let out = launch_graph(&fused.graph, &StageAdder, LaunchOpts::default()).unwrap();
+            assert!(out.outputs.is_none());
+            assert_eq!(out.executed as usize, fused.graph.n_nodes());
+            let members = fused.split_partials(&out.partials);
+            assert_eq!(members.len(), 2);
+            for (got, want) in members.iter().zip([&solo_a.partials, &solo_b.partials]) {
+                assert_eq!(got.len(), want.len(), "per-member chunk count");
+                for ((gs, gv), (ws, wv)) in got.iter().zip(want.iter()) {
+                    assert_eq!(gs, ws, "member-local seq");
+                    assert_eq!(gv.len(), wv.len());
+                    for (x, y) in gv.iter().zip(wv.iter()) {
+                        assert_eq!(x.as_f32().unwrap(), y.as_f32().unwrap());
+                    }
+                }
+            }
+        }
+
         /// Loop sync that breaks after a fixed iteration, returning the
         /// concatenated body outputs of the final executed iteration.
         struct LoopBreaker {

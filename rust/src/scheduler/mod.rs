@@ -115,6 +115,22 @@ impl ExecOutcome {
             .sum();
         sum / self.slot_times.len() as f64
     }
+
+    /// Completion time of several requests drained as one fused batch
+    /// (DESIGN.md §2.10): each device type serves every member's work for
+    /// that device back to back while the other type runs concurrently, so
+    /// the fused makespan is the busiest device's summed load — the same
+    /// aggregate rule the dataflow drain prices a single request by,
+    /// applied across members. Never below the longest member (fusion
+    /// cannot speed a request up in isolation), and never above the
+    /// serialized sum of totals (each member's own makespan already covers
+    /// both device types).
+    pub fn fused_total(members: &[&ExecOutcome]) -> f64 {
+        let cpu: f64 = members.iter().map(|m| m.cpu_time).sum();
+        let gpu: f64 = members.iter().map(|m| m.gpu_time).sum();
+        let longest = members.iter().map(|m| m.total).fold(0.0, f64::max);
+        cpu.max(gpu).max(longest)
+    }
 }
 
 /// Outputs + timing of one full execution request. Timing-only backends
@@ -728,6 +744,30 @@ mod tests {
             transfers: TransferStats::default(),
         };
         assert_eq!(empty.mean_idle_frac(), 0.0);
+    }
+
+    #[test]
+    fn fused_total_packs_opposite_leanings() {
+        let lean = |cpu: f64, gpu: f64| ExecOutcome {
+            total: cpu.max(gpu),
+            cpu_time: cpu,
+            gpu_time: gpu,
+            slot_times: vec![cpu, gpu],
+            transfers: Default::default(),
+        };
+        // Opposite leanings pack: each member's idle device absorbs the
+        // other's work, so the fused makespan is far below the sum.
+        let (a, b) = (lean(0.9, 0.1), lean(0.1, 0.9));
+        let fused = ExecOutcome::fused_total(&[&a, &b]);
+        assert!((fused - 1.0).abs() < 1e-12, "fused {fused}");
+        assert!(fused < a.total + b.total);
+        // Same leanings cannot pack: the fused time is the serialized sum
+        // on the contended device — never better than honest.
+        let (c, d) = (lean(0.9, 0.1), lean(0.8, 0.2));
+        let fused = ExecOutcome::fused_total(&[&c, &d]);
+        assert!((fused - 1.7).abs() < 1e-12, "fused {fused}");
+        // A singleton batch is exactly the member's own makespan.
+        assert_eq!(ExecOutcome::fused_total(&[&a]), a.total);
     }
 
     #[test]

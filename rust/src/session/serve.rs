@@ -25,26 +25,56 @@
 //! minimizing predicted completion. A CPU-friendly request then runs on
 //! the CPU sub-devices while a GPU-heavy one owns the GPUs, and the
 //! work-stealing launcher never crosses the reservation boundary.
+//!
+//! **Batching & graph fusion** ([`ServeOpts::batch_max`], DESIGN.md
+//! §2.10): at concurrency ≫ slot count, draining every request as its own
+//! graph pays admission, reservation, pacing, and launch overhead N times
+//! over. A worker therefore claims a *batch* of consecutive compatible
+//! requests (sync-free stage programs — [`fusable`]) and drains them as
+//! one fused unit: one admission and reservation priced by the KB's
+//! fused-batch estimate, one pace floor, and one virtual-timeline booking
+//! at the fused makespan ([`ExecOutcome::fused_total`]) — opposite-leaning
+//! members fill each other's idle device time instead of serializing.
+//! Batches close on a size budget, a byte budget, or when the projected
+//! fused drain would overrun the batch window or the oldest member's
+//! deadline slack ([`ServeRequest::deadline`]). Per-request results stay
+//! bit-identical to solo runs: every member executes its own graph with
+//! its own arguments, and traces attribute each member's admission wait
+//! and drain separately.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
+use crate::data::workload::Workload;
+use crate::decompose::graph::fusable;
 use crate::error::Result;
-use crate::kb::KnowledgeBase;
+use crate::kb::{pack_estimate, KnowledgeBase};
 use crate::platform::device::Machine;
 use crate::runtime::exec::RequestArgs;
 use crate::scheduler::{
-    candidate_masks, DrainMode, ExecEnv, SlotMask, SlotReservations, VirtualTimeline,
+    candidate_masks, DrainMode, ExecEnv, ExecOutcome, SlotMask, SlotReservations,
+    VirtualTimeline,
 };
 use crate::session::{Computation, ConfigOrigin, Session, SessionStats};
 use crate::util::stats::percentile;
 
-/// One queued request: a computation plus its arguments.
+/// One queued request: a computation plus its arguments and SLO terms.
 #[derive(Clone, Debug)]
 pub struct ServeRequest {
     pub comp: Computation,
     pub args: RequestArgs,
+    /// Relative completion deadline in seconds from claim (the request's
+    /// SLO budget). Batch assembly never stretches a batch past any
+    /// member's remaining slack; a request whose end-to-end latency
+    /// exceeds the deadline is reported as a miss. `None` falls back to
+    /// [`ServeOpts::deadline_default`].
+    pub deadline: Option<f64>,
+    /// Scheduling priority: higher values shrink the batch window the
+    /// request tolerates (a priority-p member accepts `window / (1 + p)`
+    /// of fusion-induced stretch), so latency-critical requests ride in
+    /// small batches or solo.
+    pub priority: u32,
 }
 
 impl From<Computation> for ServeRequest {
@@ -52,7 +82,21 @@ impl From<Computation> for ServeRequest {
         ServeRequest {
             comp,
             args: RequestArgs::default(),
+            deadline: None,
+            priority: 0,
         }
+    }
+}
+
+impl ServeRequest {
+    pub fn with_deadline(mut self, secs: f64) -> ServeRequest {
+        self.deadline = Some(secs);
+        self
+    }
+
+    pub fn with_priority(mut self, priority: u32) -> ServeRequest {
+        self.priority = priority;
+        self
     }
 }
 
@@ -80,6 +124,22 @@ pub struct ServeOpts {
     /// meantime. 0 (the default) syncs once at the end of the run; the
     /// knob is a no-op when the shared KB has no store backing.
     pub store_sync_every: usize,
+    /// Most requests one batch may coalesce (`--batch-max`, DESIGN.md
+    /// §2.10). 1 (the default) disables batching: every request drains
+    /// solo, the PR 5 behavior.
+    pub batch_max: usize,
+    /// Batch window in seconds (`--batch-window`): the most
+    /// fusion-induced stretch the oldest member's projected completion
+    /// may absorb before the batch closes. Scaled down by member priority
+    /// (see [`ServeRequest::priority`]).
+    pub batch_window: f64,
+    /// Byte budget per batch: assembly stops before the members' summed
+    /// working sets exceed this (keeps a fused drain inside the residency
+    /// pool's working capacity).
+    pub batch_bytes: u64,
+    /// Deadline applied to requests that carry none
+    /// (`--deadline-default`); `None` leaves them deadline-free.
+    pub deadline_default: Option<f64>,
 }
 
 impl Default for ServeOpts {
@@ -91,6 +151,10 @@ impl Default for ServeOpts {
             drain_mode: None,
             co_schedule: false,
             store_sync_every: 0,
+            batch_max: 1,
+            batch_window: 2e-3,
+            batch_bytes: 64 << 20,
+            deadline_default: None,
         }
     }
 }
@@ -102,14 +166,29 @@ pub struct RequestTrace {
     pub index: usize,
     /// Which pool worker served it.
     pub worker: usize,
-    /// Wall seconds from admission to completion (including the pace floor).
+    /// Wall seconds from claim to batch completion (including the pace
+    /// floor): what the client observes end to end.
     pub latency: f64,
+    /// Wall seconds from claim to this request's own drain start:
+    /// admission pricing, reservation wait, and — in a batch — the
+    /// batch-mates drained ahead of it. The batching cost side of the
+    /// ledger; `latency - admit_wait` is never attributable to admission.
+    pub admit_wait: f64,
+    /// Wall seconds this request's own drain took (its `Session::run`).
+    pub drain: f64,
     pub origin: ConfigOrigin,
     /// The execution's own completion time.
     pub exec_total: f64,
     /// The device subset the request was admitted onto (`None` without
     /// co-scheduling: the request implicitly owned the whole pool).
     pub mask: Option<SlotMask>,
+    /// Which batch this request rode in (batch ids are per serve run) and
+    /// how many members that batch coalesced (1 = solo drain).
+    pub batch: usize,
+    pub batch_size: usize,
+    /// Whether end-to-end latency overran the request's effective
+    /// deadline (own, or [`ServeOpts::deadline_default`]).
+    pub deadline_missed: bool,
 }
 
 /// Aggregate outcome of one serve run.
@@ -122,6 +201,17 @@ pub struct ServeReport {
     pub p50_latency: f64,
     pub p99_latency: f64,
     pub mean_latency: f64,
+    /// Latency split (DESIGN.md §2.10): admission/batch-wait vs drain
+    /// percentiles, so batching's amortization gain and the wait it
+    /// introduces are separately visible and gateable.
+    pub p50_admit_wait: f64,
+    pub p99_admit_wait: f64,
+    pub p50_drain: f64,
+    pub p99_drain: f64,
+    /// How many batches the stream drained as (== completed when
+    /// batching is off) and how many requests overran their deadline.
+    pub batches: usize,
+    pub deadline_misses: usize,
     /// Whether this run admitted requests onto device subsets.
     pub co_scheduled: bool,
     /// Completion time of the whole stream on the [`VirtualTimeline`]
@@ -142,7 +232,9 @@ impl ServeReport {
     pub fn summary(&self) -> String {
         format!(
             "{} requests in {:.3}s @ concurrency {} -> {:.1} req/s \
-             (p50 {:.2}ms, p99 {:.2}ms; {} kb hits ({} warm-started), \
+             (p50 {:.2}ms, p99 {:.2}ms; admit p50/p99 {:.2}/{:.2}ms, \
+             drain p50/p99 {:.2}/{:.2}ms; {} batches, {} deadline misses; \
+             {} kb hits ({} warm-started), \
              {} built ({:.2}s cold-build), {} derived; \
              {:.1} MB uploaded, {} uploads avoided, {} steal migrations; \
              mean slot idle {:.1}%; {} device-time {:.3}s)",
@@ -152,6 +244,12 @@ impl ServeReport {
             self.requests_per_sec,
             self.p50_latency * 1e3,
             self.p99_latency * 1e3,
+            self.p50_admit_wait * 1e3,
+            self.p99_admit_wait * 1e3,
+            self.p50_drain * 1e3,
+            self.p99_drain * 1e3,
+            self.batches,
+            self.deadline_misses,
             self.stats.kb_hits,
             self.stats.warm_hits,
             self.stats.built,
@@ -344,115 +442,166 @@ impl<E: ExecEnv + Send> SessionPool<E> {
         let full_mask = SlotMask::full(&machine);
         let reservations = SlotReservations::new();
         let timeline = VirtualTimeline::new();
-        let next = AtomicUsize::new(0);
+        let head = Mutex::new(0usize);
+        let batch_seq = AtomicUsize::new(0);
         let traces: Mutex<Vec<RequestTrace>> = Mutex::new(Vec::with_capacity(requests.len()));
         let failure: Mutex<Option<crate::error::Error>> = Mutex::new(None);
 
         let t0 = Instant::now();
         std::thread::scope(|scope| {
             for (w, session) in self.sessions.iter().take(workers).enumerate() {
-                let next = &next;
+                let head = &head;
+                let batch_seq = &batch_seq;
                 let traces = &traces;
                 let failure = &failure;
                 let machine = &machine;
                 let full_mask = &full_mask;
                 let reservations = &reservations;
                 let timeline = &timeline;
-                let pace = opts.pace;
-                let co = opts.co_schedule;
-                let sync_every = opts.store_sync_every;
+                let opts = &*opts;
                 scope.spawn(move || loop {
                     if failure.lock().unwrap().is_some() {
                         break;
                     }
-                    let i = next.fetch_add(1, Ordering::SeqCst);
-                    if i >= requests.len() {
+                    let fail = |e: crate::error::Error| {
+                        let mut f = failure.lock().unwrap();
+                        if f.is_none() {
+                            *f = Some(e);
+                        }
+                    };
+                    let Some((start, len)) =
+                        Self::claim_batch(head, requests, opts, session)
+                    else {
                         break;
-                    }
-                    let req = &requests[i];
-                    let admitted = Instant::now();
-                    // Admission (DESIGN.md §2.8): price the request on every
-                    // device subset and reserve the cheapest; the guard
-                    // releases on every exit path, including unwinds.
-                    let admission = if co {
-                        match Self::admission_for(session, machine, req, traces, reservations)
-                        {
+                    };
+                    let batch = batch_seq.fetch_add(1, Ordering::SeqCst);
+                    let members = &requests[start..start + len];
+                    let claimed = Instant::now();
+                    // Admission (DESIGN.md §2.8/§2.10): price the batch as
+                    // one fused drain on every device subset and reserve
+                    // the cheapest — one reservation per batch, not per
+                    // member; the guard releases on every exit path,
+                    // including unwinds.
+                    let admission = if opts.co_schedule {
+                        match Self::batch_admission_for(
+                            session,
+                            machine,
+                            members,
+                            traces,
+                            reservations,
+                        ) {
                             Ok(a) => Some(a),
                             Err(e) => {
-                                let mut f = failure.lock().unwrap();
-                                if f.is_none() {
-                                    *f = Some(e);
-                                }
+                                fail(e);
                                 break;
                             }
                         }
                     } else {
                         None
                     };
-                    let result = match &admission {
-                        Some(adm) => {
-                            let _guard =
-                                reservations.acquire(adm.mask.clone(), adm.est_secs);
-                            session.set_slot_mask(Some(adm.mask.clone()));
-                            let r = {
-                                let _mask_reset = MaskReset(session);
-                                session.run(&req.comp, &req.args)
-                            };
-                            if r.is_ok() && pace > 0.0 {
-                                // The pace floor stands in for device
-                                // occupancy, so it holds the reservation.
-                                std::thread::sleep(Duration::from_secs_f64(pace));
-                            }
-                            r
-                        }
-                        None => {
-                            let r = session.run(&req.comp, &req.args);
-                            if r.is_ok() && pace > 0.0 {
-                                std::thread::sleep(Duration::from_secs_f64(pace));
-                            }
-                            r
-                        }
+                    let _guard = admission
+                        .as_ref()
+                        .map(|a| reservations.acquire(a.mask.clone(), a.est_secs));
+                    let mask = admission.map(|a| a.mask);
+                    // Learning quarantine (DESIGN.md §2.10): only a
+                    // *partial* reservation skews slot times, so only a
+                    // partial mask is installed — a batch admitted onto
+                    // the whole machine keeps feeding the monitor and the
+                    // shared knowledge base.
+                    let restricted = mask.as_ref().is_some_and(|m| m != full_mask);
+                    let _mask_reset = if restricted {
+                        session.set_slot_mask(mask.clone());
+                        Some(MaskReset(session))
+                    } else {
+                        None
                     };
-                    match result {
-                        Ok(out) => {
-                            let mask = admission.map(|a| a.mask);
-                            timeline.book(
-                                mask.as_ref().unwrap_or(full_mask),
-                                out.exec.total,
-                            );
-                            let done = {
-                                let mut tr = traces.lock().unwrap();
+
+                    // Drain the members back to back: each runs its own
+                    // graph with its own arguments (bit-identical to a
+                    // solo run), while admission, reservation, the pace
+                    // floor, and the timeline booking are paid once.
+                    let mut drained: Vec<(ConfigOrigin, ExecOutcome, f64, f64)> =
+                        Vec::with_capacity(len);
+                    let mut failed = false;
+                    for req in members {
+                        let waited = claimed.elapsed().as_secs_f64();
+                        let t_run = Instant::now();
+                        match session.run(&req.comp, &req.args) {
+                            Ok(out) => drained.push((
+                                out.origin,
+                                out.exec,
+                                waited,
+                                t_run.elapsed().as_secs_f64(),
+                            )),
+                            Err(e) => {
+                                fail(e);
+                                failed = true;
+                                break;
+                            }
+                        }
+                    }
+                    if !drained.is_empty() {
+                        if opts.pace > 0.0 {
+                            // The pace floor stands in for per-request
+                            // host-side handling and holds the
+                            // reservation; a batch pays it once — the
+                            // wall-clock side of the amortization.
+                            std::thread::sleep(Duration::from_secs_f64(opts.pace));
+                        }
+                        // One booking at the fused makespan: the batch's
+                        // members overlap on the device timeline instead
+                        // of serializing (DESIGN.md §2.10).
+                        let execs: Vec<&ExecOutcome> =
+                            drained.iter().map(|d| &d.1).collect();
+                        timeline.book(
+                            mask.as_ref().unwrap_or(full_mask),
+                            ExecOutcome::fused_total(&execs),
+                        );
+                        let latency = claimed.elapsed().as_secs_f64();
+                        let (done_before, done) = {
+                            let mut tr = traces.lock().unwrap();
+                            let before = tr.len();
+                            for (k, (origin, exec, waited, drain)) in
+                                drained.iter().enumerate()
+                            {
+                                let deadline = members[k]
+                                    .deadline
+                                    .or(opts.deadline_default);
                                 tr.push(RequestTrace {
-                                    index: i,
+                                    index: start + k,
                                     worker: w,
-                                    latency: admitted.elapsed().as_secs_f64(),
-                                    origin: out.origin,
-                                    exec_total: out.exec.total,
-                                    mask,
+                                    latency,
+                                    admit_wait: *waited,
+                                    drain: *drain,
+                                    origin: *origin,
+                                    exec_total: exec.total,
+                                    mask: mask.clone(),
+                                    batch,
+                                    batch_size: len,
+                                    deadline_missed: deadline
+                                        .is_some_and(|d| latency > d),
                                 });
-                                tr.len()
-                            };
-                            // Periodic durability: commit staged profiles
-                            // and absorb foreign segments mid-run, so a
-                            // crash loses at most `sync_every` requests'
-                            // learning (DESIGN.md §2.9).
-                            if sync_every > 0 && done % sync_every == 0 {
-                                if let Err(e) = session.sync_kb() {
-                                    let mut f = failure.lock().unwrap();
-                                    if f.is_none() {
-                                        *f = Some(e);
-                                    }
-                                    break;
-                                }
+                            }
+                            (before, tr.len())
+                        };
+                        // Periodic durability: commit staged profiles and
+                        // absorb foreign segments mid-run, so a crash
+                        // loses at most ~`sync_every` requests' learning
+                        // (DESIGN.md §2.9). Batches land several requests
+                        // at once, so sync on every crossing of the
+                        // interval, not on exact multiples.
+                        let sync_every = opts.store_sync_every;
+                        if sync_every > 0
+                            && done_before / sync_every != done / sync_every
+                        {
+                            if let Err(e) = session.sync_kb() {
+                                fail(e);
+                                break;
                             }
                         }
-                        Err(e) => {
-                            let mut f = failure.lock().unwrap();
-                            if f.is_none() {
-                                *f = Some(e);
-                            }
-                            break;
-                        }
+                    }
+                    if failed {
+                        break;
                     }
                 });
             }
@@ -474,6 +623,14 @@ impl<E: ExecEnv + Send> SessionPool<E> {
         } else {
             latencies.iter().sum::<f64>() / latencies.len() as f64
         };
+        let admit_waits: Vec<f64> = traces.iter().map(|t| t.admit_wait).collect();
+        let drains: Vec<f64> = traces.iter().map(|t| t.drain).collect();
+        let batches = traces
+            .iter()
+            .map(|t| t.batch)
+            .collect::<std::collections::HashSet<_>>()
+            .len();
+        let deadline_misses = traces.iter().filter(|t| t.deadline_missed).count();
         let after = self.summed_stats();
         let stats = SessionStats {
             runs: after.runs - stats_before.runs,
@@ -503,6 +660,12 @@ impl<E: ExecEnv + Send> SessionPool<E> {
             p50_latency: percentile(&latencies, 50.0),
             p99_latency: percentile(&latencies, 99.0),
             mean_latency,
+            p50_admit_wait: percentile(&admit_waits, 50.0),
+            p99_admit_wait: percentile(&admit_waits, 99.0),
+            p50_drain: percentile(&drains, 50.0),
+            p99_drain: percentile(&drains, 99.0),
+            batches,
+            deadline_misses,
             co_scheduled: opts.co_schedule,
             virtual_makespan: timeline.makespan(),
             stats,
@@ -510,22 +673,86 @@ impl<E: ExecEnv + Send> SessionPool<E> {
         })
     }
 
-    /// The co-scheduling admission pipeline for one request: KB cost
-    /// estimate (resolving the configuration first on a cold KB, so the
-    /// profile build runs on the *whole* machine — a reservation mask must
-    /// never leak into a stored profile), falling back to the mean
-    /// observed execution time of this serve run, then the subset pricing
-    /// of [`admit`]. A cold request resolved here is re-resolved inside
+    /// Claim the next batch off the stream head: the first unclaimed
+    /// request, extended while the following requests stay batchable
+    /// (sync-free stage programs, [`batchable_bytes`]), the size and byte
+    /// budgets hold, and the projected fused completion stays inside both
+    /// the (priority-scaled) batch window and every member's deadline
+    /// slack (DESIGN.md §2.10). Estimates come from the shared KB
+    /// ([`COLD_EST_SECS`] for cold members, so a cold stream closes on
+    /// the size/byte budgets alone). Claims are consecutive: request
+    /// order is preserved and no request is skipped over.
+    fn claim_batch(
+        head: &Mutex<usize>,
+        requests: &[ServeRequest],
+        opts: &ServeOpts,
+        session: &Session<E>,
+    ) -> Option<(usize, usize)> {
+        let mut head = head.lock().unwrap();
+        let start = *head;
+        if start >= requests.len() {
+            return None;
+        }
+        let mut len = 1usize;
+        if opts.batch_max > 1 {
+            if let Some(first_bytes) = batchable_bytes(&requests[start].comp) {
+                let est = |i: usize| {
+                    session
+                        .kb_estimate(&requests[i].comp)
+                        .unwrap_or(COLD_EST_SECS)
+                };
+                let deadline = |r: &ServeRequest| {
+                    r.deadline.or(opts.deadline_default).unwrap_or(f64::INFINITY)
+                };
+                let solo = est(start);
+                let mut ests = vec![solo];
+                let mut bytes = first_bytes;
+                let mut slack = deadline(&requests[start]);
+                let mut top_priority = requests[start].priority;
+                while len < opts.batch_max && start + len < requests.len() {
+                    let cand = &requests[start + len];
+                    let Some(cand_bytes) = batchable_bytes(&cand.comp) else {
+                        break;
+                    };
+                    if bytes.saturating_add(cand_bytes) > opts.batch_bytes {
+                        break;
+                    }
+                    ests.push(est(start + len));
+                    let fused = pack_estimate(&ests);
+                    let priority = top_priority.max(cand.priority);
+                    let window = opts.batch_window / (1.0 + priority as f64);
+                    let cand_slack = slack.min(deadline(cand));
+                    // The oldest member absorbs the full stretch over its
+                    // solo estimate; any member's exhausted deadline
+                    // slack closes the batch (SLO-aware close).
+                    if fused - solo > window || fused > cand_slack {
+                        ests.pop();
+                        break;
+                    }
+                    bytes += cand_bytes;
+                    slack = cand_slack;
+                    top_priority = priority;
+                    len += 1;
+                }
+            }
+        }
+        *head = start + len;
+        Some((start, len))
+    }
+
+    /// Per-member admission base: KB cost estimate (resolving the
+    /// configuration first on a cold KB, so the profile build runs on the
+    /// *whole* machine — a reservation mask must never leak into a stored
+    /// profile), falling back to the mean observed execution time of this
+    /// serve run. A cold request resolved here is re-resolved inside
     /// [`Session::run`] as a KB hit, so co-scheduled cold starts book
     /// `built + 1` *and* `kb_hits + 1` — compare hit-rates across modes
     /// accordingly.
-    fn admission_for(
+    fn member_base(
         session: &Session<E>,
-        machine: &Machine,
         req: &ServeRequest,
         traces: &Mutex<Vec<RequestTrace>>,
-        reservations: &SlotReservations,
-    ) -> Result<Admission> {
+    ) -> Result<f64> {
         let base = match session.kb_estimate(&req.comp) {
             Some(t) => Some(t),
             None => {
@@ -533,16 +760,85 @@ impl<E: ExecEnv + Send> SessionPool<E> {
                 session.kb_estimate(&req.comp)
             }
         };
-        let base = base.unwrap_or_else(|| {
+        Ok(base.unwrap_or_else(|| {
             let tr = traces.lock().unwrap();
             if tr.is_empty() {
-                1e-3
+                COLD_EST_SECS
             } else {
                 tr.iter().map(|t| t.exec_total).sum::<f64>() / tr.len() as f64
             }
-        });
-        Ok(admit(session, machine, &req.comp, base, reservations))
+        }))
     }
+
+    /// The co-scheduling admission pipeline for one batch: price every
+    /// member ([`Self::member_base`]), then ask the KB for the
+    /// fused-batch estimate — a batch is priced as *one fused drain*,
+    /// never the sum of its members (DESIGN.md §2.10);
+    /// [`pack_estimate`] over the solo bases stands in when any member is
+    /// cold — and run the subset pricing of [`admit`] with the critical
+    /// (most expensive) member's configuration, whose device leaning
+    /// dominates the fused drain's shape.
+    fn batch_admission_for(
+        session: &Session<E>,
+        machine: &Machine,
+        members: &[ServeRequest],
+        traces: &Mutex<Vec<RequestTrace>>,
+        reservations: &SlotReservations,
+    ) -> Result<Admission> {
+        let mut bases = Vec::with_capacity(members.len());
+        for req in members {
+            bases.push(Self::member_base(session, req, traces)?);
+        }
+        let fused = {
+            let mut ids = Vec::with_capacity(members.len());
+            let mut loads = Vec::with_capacity(members.len());
+            for req in members {
+                let (sct, w, _) = req.comp.spec()?;
+                ids.push(sct.id());
+                loads.push(w);
+            }
+            let items: Vec<(&str, &Workload)> = ids
+                .iter()
+                .map(String::as_str)
+                .zip(loads.iter().copied())
+                .collect();
+            session.kb().estimate_batch(&items)
+        }
+        .unwrap_or_else(|| pack_estimate(&bases));
+        let critical = bases
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Ok(admit(
+            session,
+            machine,
+            &members[critical].comp,
+            fused,
+            reservations,
+        ))
+    }
+}
+
+/// Cold-KB fallback estimate for batch-close decisions (seconds). Keeps
+/// the window math defined on an empty knowledge base; a cold stream
+/// effectively closes batches on the size and byte budgets alone.
+const COLD_EST_SECS: f64 = 1e-3;
+
+/// Whether a request can ride in a batch, and its approximate working-set
+/// bytes charged against [`ServeOpts::batch_bytes`]. `None` marks the
+/// request solo-only: a malformed spec, or a stage program with global
+/// sync points — [`fuse_graphs`](crate::decompose::graph::fuse_graphs)
+/// rejects sync nodes because a fused graph has one final-output slot per
+/// launch, so loops and reductions always drain alone ([`fusable`]).
+fn batchable_bytes(comp: &Computation) -> Option<u64> {
+    let (sct, w, units) = comp.spec().ok()?;
+    if !fusable(sct) {
+        return None;
+    }
+    let elem: u64 = if w.double_precision { 8 } else { 4 };
+    Some(units.saturating_mul(elem) + comp.get_copy_bytes() as u64)
 }
 
 /// Serve a request stream over a pool of simulated sessions for `machine`
@@ -711,6 +1007,167 @@ mod tests {
             .unwrap();
         let a = admit(&s, &machine, &comp, 1.0, &reservations);
         assert_eq!(a.mask, SlotMask::cpu_only(&machine), "got {}", a.mask);
+    }
+
+    #[test]
+    fn batching_coalesces_requests_and_keeps_results_identical() {
+        let machine = i7_hd7950(1);
+        let mk = |seed: u64| {
+            let pool = SessionPool::build(2, |i| {
+                Session::simulated(machine.clone(), seed + i as u64).with_max_dev(10.0)
+            });
+            let (sct, w, _) = Computation::from(workloads::saxpy(1 << 20))
+                .spec()
+                .map(|(s, w, u)| (s.id(), w.clone(), u))
+                .unwrap();
+            pool.shared_kb().write().unwrap().store(mk_profile(
+                &sct,
+                w,
+                FissionLevel::L2,
+                vec![4],
+                0.5,
+                1e-3,
+            ));
+            pool
+        };
+        let reqs = requests(8);
+        let solo = mk(80)
+            .serve(&reqs, &ServeOpts::default())
+            .unwrap();
+        let batched = mk(80)
+            .serve(
+                &reqs,
+                &ServeOpts {
+                    batch_max: 4,
+                    batch_window: 1.0,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(solo.completed, 8);
+        assert_eq!(batched.completed, 8);
+        // Solo: one batch per request. Batched: the stream coalesces.
+        assert_eq!(solo.batches, 8);
+        assert!(solo.traces.iter().all(|t| t.batch_size == 1));
+        assert!(
+            batched.batches < 8,
+            "expected coalescing, got {} batches",
+            batched.batches
+        );
+        assert!(batched.traces.iter().any(|t| t.batch_size > 1));
+        // Bit-identical per-request results: batching changes scheduling,
+        // never execution (both pools are seeded identically and frozen
+        // against ABS adaptation).
+        for (s, b) in solo.traces.iter().zip(batched.traces.iter()) {
+            assert_eq!(s.index, b.index);
+            assert_eq!(s.exec_total.to_bits(), b.exec_total.to_bits());
+        }
+        // The latency split accounts for the wait batching introduces:
+        // admit_wait never exceeds end-to-end latency.
+        for t in batched.traces.iter() {
+            assert!(t.admit_wait <= t.latency + 1e-12);
+            assert!(t.drain >= 0.0);
+            assert!(!t.deadline_missed, "no deadlines were set");
+        }
+    }
+
+    #[test]
+    fn batch_close_honors_deadline_priority_and_compatibility() {
+        let session = Session::simulated(i7_hd7950(1), 91);
+        let comp = Computation::from(workloads::saxpy(1 << 20));
+        let (sct, w, _) = comp.spec().unwrap();
+        session.kb_mut().store(mk_profile(
+            &sct.id(),
+            w.clone(),
+            FissionLevel::L2,
+            vec![4],
+            0.5,
+            1e-2,
+        ));
+        let opts = ServeOpts {
+            batch_max: 8,
+            batch_window: 1.0,
+            ..Default::default()
+        };
+        // Wide window, no deadlines: the whole stream fuses to batch_max.
+        let reqs = requests(8);
+        let head = Mutex::new(0usize);
+        let claimed = SessionPool::claim_batch(&head, &reqs, &opts, &session).unwrap();
+        assert_eq!(claimed, (0, 8));
+        // A member whose deadline is below the fused estimate closes the
+        // batch before that member's slack is overrun: with a 10 ms solo
+        // estimate, a 15 ms deadline admits the first fusion step
+        // (pack of two = 16 ms > 15 ms), so the batch stays solo.
+        let tight: Vec<ServeRequest> = (0..4)
+            .map(|_| {
+                ServeRequest::from(Computation::from(workloads::saxpy(1 << 20)))
+                    .with_deadline(0.015)
+            })
+            .collect();
+        let head = Mutex::new(0usize);
+        let claimed = SessionPool::claim_batch(&head, &tight, &opts, &session).unwrap();
+        assert_eq!(claimed, (0, 1), "deadline slack must close the batch");
+        // Priority shrinks the tolerated window the same way: a high
+        // priority member scales a generous window below the pack stretch.
+        let urgent: Vec<ServeRequest> = (0..4)
+            .map(|_| {
+                ServeRequest::from(Computation::from(workloads::saxpy(1 << 20)))
+                    .with_priority(1_000_000)
+            })
+            .collect();
+        let narrow = ServeOpts {
+            batch_max: 8,
+            batch_window: 1.0,
+            ..Default::default()
+        };
+        let head = Mutex::new(0usize);
+        let claimed = SessionPool::claim_batch(&head, &urgent, &narrow, &session).unwrap();
+        assert_eq!(claimed, (0, 1), "priority must shrink the window");
+        // A sync-bearing program (global-sync loop) never rides in a
+        // batch: the claim stops in front of it, then serves it solo.
+        let mixed = vec![
+            ServeRequest::from(Computation::from(workloads::saxpy(1 << 20))),
+            ServeRequest::from(Computation::from(workloads::saxpy(1 << 20))),
+            ServeRequest::from(Computation::from(workloads::nbody(1 << 10, 3))),
+            ServeRequest::from(Computation::from(workloads::saxpy(1 << 20))),
+        ];
+        let head = Mutex::new(0usize);
+        assert_eq!(
+            SessionPool::claim_batch(&head, &mixed, &opts, &session).unwrap(),
+            (0, 2)
+        );
+        assert_eq!(
+            SessionPool::claim_batch(&head, &mixed, &opts, &session).unwrap(),
+            (2, 1),
+            "sync programs drain solo"
+        );
+        assert_eq!(
+            SessionPool::claim_batch(&head, &mixed, &opts, &session).unwrap(),
+            (3, 1)
+        );
+        assert!(SessionPool::claim_batch(&head, &mixed, &opts, &session).is_none());
+    }
+
+    #[test]
+    fn deadline_misses_are_reported() {
+        // A 2 ms pace floor against a 1 µs deadline: every request misses.
+        let reqs: Vec<ServeRequest> = requests(3);
+        let report = serve_simulated(
+            &i7_hd7950(1),
+            17,
+            &reqs,
+            &ServeOpts {
+                pace: 0.002,
+                deadline_default: Some(1e-6),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(report.deadline_misses, 3);
+        assert!(report.traces.iter().all(|t| t.deadline_missed));
+        // Deadline-free requests never miss.
+        let report = serve_simulated(&i7_hd7950(1), 17, &reqs, &ServeOpts::default()).unwrap();
+        assert_eq!(report.deadline_misses, 0);
     }
 
     #[test]

@@ -1,0 +1,238 @@
+//! Propcheck harness for the serve batching/fusion layer (DESIGN.md
+//! §2.10, ROADMAP item 5b): random mixes of compatible and incompatible
+//! requests — saxpy at three sizes (sync-free, batchable) and the
+//! global-sync nbody loop (solo-only), with randomly attached tiny
+//! deadlines and huge priorities — are driven through `SessionPool::serve`
+//! in batched and unbatched modes.
+//!
+//! Properties:
+//!  * per-request results are bit-identical to solo unbatched runs
+//!    (batching changes scheduling, never execution),
+//!  * no cross-request aliasing: every stream index appears exactly once,
+//!    batch provenance is consistent (members of a batch agree on its
+//!    size; batch members are consecutive stream indices),
+//!  * batch close honors SLO terms: a request whose deadline slack is
+//!    below any fused estimate always drains solo (and is reported
+//!    missed), a maximal-priority request shrinks its window to solo,
+//!    and sync-bearing programs never ride in a batch.
+//!
+//! Failures replay deterministically: `forall` panics with the seed and
+//! the shrunk counterexample, and re-running with that seed reproduces
+//! the exact same case sequence (the simulator and the generator are both
+//! seeded, and serve pools are rebuilt from constants per case).
+
+use std::collections::BTreeMap;
+
+use marrow::bench::workloads;
+use marrow::kb::mk_profile;
+use marrow::platform::cpu::FissionLevel;
+use marrow::platform::device::i7_hd7950;
+use marrow::scheduler::SimEnv;
+use marrow::session::serve::{ServeOpts, ServeReport, ServeRequest, SessionPool};
+use marrow::session::{Computation, Session};
+use marrow::sim::cost::CostParams;
+use marrow::sim::machine::SimMachine;
+use marrow::util::propcheck::forall;
+use marrow::util::rng::Rng;
+
+/// Far below any execution estimate: a request carrying this deadline has
+/// zero batch slack and must always drain solo.
+const TINY_DEADLINE: f64 = 1e-9;
+/// Scales any batch window to effectively zero.
+const HUGE_PRIORITY: u32 = 1_000_000_000;
+
+/// Request kinds 0..=2 are sync-free saxpy sizes (batchable, kinds 1/2
+/// seeded with opposite device leanings); kind 3 is the global-sync nbody
+/// loop (solo-only).
+fn comp(kind: u64) -> Computation {
+    match kind {
+        0 => Computation::from(workloads::saxpy(1 << 19)),
+        1 => Computation::from(workloads::saxpy(1 << 20)),
+        2 => Computation::from(workloads::saxpy(1 << 21)),
+        _ => Computation::from(workloads::nbody(1 << 8, 2)),
+    }
+}
+
+/// Decode one generated code: kind in the low bits, then an SLO flag
+/// (none / tiny deadline / huge priority).
+fn decode(code: u64) -> ServeRequest {
+    let req = ServeRequest::from(comp(code % 4));
+    match (code / 4) % 3 {
+        1 => req.with_deadline(TINY_DEADLINE),
+        2 => req.with_priority(HUGE_PRIORITY),
+        _ => req,
+    }
+}
+
+/// A random request mix: 1..=9 codes, each kind x flag.
+fn gen_mix(r: &mut Rng) -> Vec<u64> {
+    let len = 1 + r.below(9);
+    (0..len).map(|_| r.below(12)).collect()
+}
+
+/// One single-session pool with a pre-seeded KB (no Algorithm 1 inside
+/// the property, so cases are fast and estimates deterministic), zeroed
+/// simulator noise, and a frozen balancer: given the same request
+/// sequence, execution is bit-for-bit reproducible.
+fn pool() -> SessionPool<SimEnv> {
+    let quiet = CostParams {
+        cpu_noise: 0.0,
+        gpu_noise: 0.0,
+        straggler_p: 0.0,
+        ..CostParams::default()
+    };
+    let pool = SessionPool::build(1, |i| {
+        Session::sim(SimMachine::new(i7_hd7950(1), 7 + i as u64).with_params(quiet))
+            .with_max_dev(10.0)
+    });
+    for (kind, cpu_share) in [(0, 0.5), (1, 0.9), (2, 0.1), (3, 0.5)] {
+        let c = comp(kind);
+        let (sct, w, _) = c.spec().unwrap();
+        pool.shared_kb().write().unwrap().store(mk_profile(
+            &sct.id(),
+            w.clone(),
+            FissionLevel::L2,
+            vec![4],
+            cpu_share,
+            1e-3,
+        ));
+    }
+    pool
+}
+
+fn run(requests: &[ServeRequest], batch_max: usize) -> ServeReport {
+    pool()
+        .serve(
+            requests,
+            &ServeOpts {
+                batch_max,
+                batch_window: 10.0,
+                ..Default::default()
+            },
+        )
+        .expect("serve")
+}
+
+/// Provenance sanity shared by both properties: indices complete and
+/// unique, batch members agree on their batch's size, and every batch
+/// covers consecutive stream indices (claims never skip or interleave).
+fn check_provenance(report: &ServeReport, n: usize) -> Result<(), String> {
+    if report.completed != n {
+        return Err(format!("completed {} of {n}", report.completed));
+    }
+    let idx: Vec<usize> = report.traces.iter().map(|t| t.index).collect();
+    if idx != (0..n).collect::<Vec<_>>() {
+        return Err(format!("indices not exactly 0..{n}: {idx:?}"));
+    }
+    let mut by_batch: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for t in &report.traces {
+        by_batch.entry(t.batch).or_default().push(t.index);
+        if t.admit_wait > t.latency + 1e-9 {
+            return Err(format!(
+                "request {}: admit_wait {} exceeds latency {}",
+                t.index, t.admit_wait, t.latency
+            ));
+        }
+    }
+    if by_batch.len() != report.batches {
+        return Err(format!(
+            "report.batches {} != distinct batch ids {}",
+            report.batches,
+            by_batch.len()
+        ));
+    }
+    for (id, members) in &by_batch {
+        for t in report.traces.iter().filter(|t| t.batch == *id) {
+            if t.batch_size != members.len() {
+                return Err(format!(
+                    "batch {id}: member {} claims size {} but batch has {}",
+                    t.index,
+                    t.batch_size,
+                    members.len()
+                ));
+            }
+        }
+        let lo = *members.iter().min().unwrap();
+        let hi = *members.iter().max().unwrap();
+        if hi - lo + 1 != members.len() {
+            return Err(format!(
+                "batch {id}: members {members:?} are not consecutive"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn batched_results_are_bit_identical_to_solo_runs() {
+    forall(41, 10, gen_mix, |codes| {
+        let reqs: Vec<ServeRequest> = codes.iter().map(|&c| decode(c)).collect();
+        let solo = run(&reqs, 1);
+        let batched = run(&reqs, 4);
+        check_provenance(&solo, reqs.len())?;
+        check_provenance(&batched, reqs.len())?;
+        if solo.traces.iter().any(|t| t.batch_size != 1) {
+            return Err("unbatched run produced a multi-request batch".into());
+        }
+        for (s, b) in solo.traces.iter().zip(batched.traces.iter()) {
+            if s.exec_total.to_bits() != b.exec_total.to_bits() {
+                return Err(format!(
+                    "request {}: batched exec {} != solo exec {} (bitwise)",
+                    s.index, b.exec_total, s.exec_total
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batch_close_honors_slo_terms_and_compatibility() {
+    forall(43, 10, gen_mix, |codes| {
+        let reqs: Vec<ServeRequest> = codes.iter().map(|&c| decode(c)).collect();
+        let report = run(&reqs, 4);
+        check_provenance(&report, reqs.len())?;
+        for t in &report.traces {
+            let code = codes[t.index];
+            let (kind, flag) = (code % 4, (code / 4) % 3);
+            if kind == 3 && t.batch_size != 1 {
+                return Err(format!(
+                    "request {}: sync-bearing program rode in a {}-batch",
+                    t.index, t.batch_size
+                ));
+            }
+            if flag == 1 {
+                if t.batch_size != 1 {
+                    return Err(format!(
+                        "request {}: zero deadline slack but batch size {}",
+                        t.index, t.batch_size
+                    ));
+                }
+                if !t.deadline_missed {
+                    return Err(format!(
+                        "request {}: {TINY_DEADLINE}s deadline not reported missed",
+                        t.index
+                    ));
+                }
+            }
+            if flag == 2 && t.batch_size != 1 {
+                return Err(format!(
+                    "request {}: maximal priority but batch size {}",
+                    t.index, t.batch_size
+                ));
+            }
+            if flag == 0 && t.deadline_missed {
+                return Err(format!(
+                    "request {}: deadline-free request reported missed",
+                    t.index
+                ));
+            }
+        }
+        if report.p99_admit_wait < report.p50_admit_wait
+            || report.p99_drain < report.p50_drain
+        {
+            return Err("latency-split percentiles out of order".into());
+        }
+        Ok(())
+    });
+}

@@ -1,16 +1,23 @@
 //! CI bench regression gate (DESIGN.md §2.8): compares the serve-workload
 //! throughput of freshly-produced `BENCH_*.json` files against the
 //! committed baselines under `benches/baselines/`, failing the job on a
-//! >15% regression, and asserts two baseline-free invariants:
-//! `BENCH_pr5.json`'s co-scheduled virtual makespan must beat the
-//! serialized baseline, and `BENCH_pr6.json`'s warm-started serve must
-//! perform zero cold profile builds, spend strictly less cold-build time
-//! than the cold run, and report order-independent snapshot merges
-//! (DESIGN.md §2.9). Also emits the merged markdown table the CI
-//! `bench-summary` artifact ships.
+//! >15% regression, and asserts four baseline-free invariants:
+//!  * `BENCH_pr4.json`: the dataflow drain must beat the barrier drain's
+//!    makespan per workload without inflating slot idle time,
+//!  * `BENCH_pr5.json`: the co-scheduled virtual makespan must beat the
+//!    serialized baseline,
+//!  * `BENCH_pr6.json`: the warm-started serve must perform zero cold
+//!    profile builds, spend strictly less cold-build time than the cold
+//!    run, and report order-independent snapshot merges (DESIGN.md §2.9),
+//!  * `BENCH_pr7.json`: batched serve must beat unbatched virtual
+//!    throughput by >= 1.3x with bit-identical per-request execution
+//!    totals (DESIGN.md §2.10).
+//! Also emits the merged markdown table the CI `bench-summary` artifact
+//! ships.
 //!
 //! Usage:
 //!   bench_gate [--fresh BENCH_pr5.json] [--warmstart BENCH_pr6.json]
+//!              [--dataflow BENCH_pr4.json] [--batch BENCH_pr7.json]
 //!              [--baselines benches/baselines]
 //!              [--summary bench-summary.md] [--tolerance 0.15]
 //!
@@ -26,7 +33,13 @@ use marrow::cli::Args;
 use marrow::util::json::Json;
 
 /// Benches whose throughput the gate enforces: the serve workloads.
-const SERVE_BENCHES: [&str; 3] = ["serve_throughput", "coschedule_serve", "kb_warmstart"];
+const SERVE_BENCHES: [&str; 5] = [
+    "serve_throughput",
+    "coschedule_serve",
+    "kb_warmstart",
+    "locality_residency",
+    "batch_fusion",
+];
 
 fn main() {
     let args = Args::from_env();
@@ -53,9 +66,107 @@ fn run(args: &Args) -> Result<(), String> {
     if let Some(summary) = args.get("summary") {
         write_summary(summary)?;
     }
+    check_dataflow_invariant(&args.get_or("dataflow", "BENCH_pr4.json"))?;
     check_coschedule_invariant(&fresh_path)?;
     check_warmstart_invariant(&args.get_or("warmstart", "BENCH_pr6.json"))?;
+    check_batch_invariant(&args.get_or("batch", "BENCH_pr7.json"))?;
     check_baselines(&baseline_dir, tolerance)?;
+    Ok(())
+}
+
+/// The dataflow-drain gate (DESIGN.md §2.7), baseline-free: per workload
+/// in BENCH_pr4.json, the dataflow drain's makespan must strictly beat
+/// the barrier drain's, without inflating mean slot idle time (small
+/// absolute tolerance: idle is a percentage with bench-level jitter).
+fn check_dataflow_invariant(path: &str) -> Result<(), String> {
+    let v = parse_file(Path::new(path))?;
+    let points = v
+        .get("points")
+        .ok()
+        .and_then(|p| p.as_arr())
+        .ok_or_else(|| format!("{path}: missing points"))?;
+    // (workload, drain) -> (makespan_ms, idle_pct)
+    let mut modes: BTreeMap<(String, String), (f64, f64)> = BTreeMap::new();
+    for p in points {
+        let workload = p.get("workload").ok().and_then(|x| x.as_str());
+        let drain = p.get("drain").ok().and_then(|x| x.as_str());
+        let makespan = p.get("makespan_ms").ok().and_then(|x| x.as_f64());
+        let idle = p.get("idle_pct").ok().and_then(|x| x.as_f64());
+        if let (Some(w), Some(d), Some(m), Some(i)) = (workload, drain, makespan, idle) {
+            modes.insert((w.to_string(), d.to_string()), (m, i));
+        }
+    }
+    let workloads: Vec<String> = modes
+        .keys()
+        .map(|(w, _)| w.clone())
+        .collect::<std::collections::BTreeSet<_>>()
+        .into_iter()
+        .collect();
+    if workloads.is_empty() {
+        return Err(format!("{path}: no (workload, drain) points"));
+    }
+    for w in &workloads {
+        let barrier = modes
+            .get(&(w.clone(), "barrier".to_string()))
+            .ok_or_else(|| format!("{path}: {w} has no barrier point"))?;
+        let dataflow = modes
+            .get(&(w.clone(), "dataflow".to_string()))
+            .ok_or_else(|| format!("{path}: {w} has no dataflow point"))?;
+        if dataflow.0 >= barrier.0 {
+            return Err(format!(
+                "{path}: {w} dataflow makespan {:.3}ms does not beat \
+                 barrier {:.3}ms",
+                dataflow.0, barrier.0
+            ));
+        }
+        if dataflow.1 > barrier.1 + 1.0 {
+            return Err(format!(
+                "{path}: {w} dataflow idle {:.2}% exceeds barrier {:.2}% + 1",
+                dataflow.1, barrier.1
+            ));
+        }
+        println!(
+            "dataflow invariant: {w} {:.2}ms vs barrier {:.2}ms, idle \
+             {:.1}% vs {:.1}% (OK)",
+            dataflow.0, barrier.0, dataflow.1, barrier.1
+        );
+    }
+    Ok(())
+}
+
+/// The batching gate (DESIGN.md §2.10), baseline-free and deterministic:
+/// BENCH_pr7.json's batched serve must beat the unbatched run by >= 1.3x
+/// on virtual (device-time) throughput at concurrency >> slot count, with
+/// zero correctness drift (bit-identical sorted per-request execution
+/// totals across the two modes).
+fn check_batch_invariant(path: &str) -> Result<(), String> {
+    let v = parse_file(Path::new(path))?;
+    let speedup = v
+        .get("speedup_virtual")
+        .ok()
+        .and_then(|s| s.as_f64())
+        .ok_or_else(|| format!("{path}: missing speedup_virtual"))?;
+    let identical = v
+        .get("exec_totals_identical")
+        .ok()
+        .and_then(|x| x.as_bool())
+        .ok_or_else(|| format!("{path}: missing exec_totals_identical"))?;
+    if !identical {
+        return Err(format!(
+            "{path}: batched execution totals drifted from unbatched \
+             (correctness, not a perf tradeoff)"
+        ));
+    }
+    if speedup < 1.3 {
+        return Err(format!(
+            "{path}: batched virtual throughput {speedup:.3}x does not \
+             reach the required 1.3x over unbatched"
+        ));
+    }
+    println!(
+        "batching invariant: {speedup:.2}x over unbatched, exec totals \
+         bit-identical (OK)"
+    );
     Ok(())
 }
 
@@ -208,6 +319,18 @@ fn serve_metrics_in_dir(dir: &Path) -> Result<BTreeMap<String, f64>, String> {
                 let r = p.get("requests_per_sec").ok().and_then(|x| x.as_f64());
                 if let (Some(c), Some(r)) = (c, r) {
                     out.insert(format!("{bench}:c{c}:requests_per_sec"), r);
+                }
+                // Per-workload points (BENCH_pr3 style): keyed by workload
+                // name plus the residency toggle when the point carries one.
+                let w = p.get("workload").ok().and_then(|x| x.as_str());
+                let r = p.get("req_per_sec").ok().and_then(|x| x.as_f64());
+                if let (Some(w), Some(r)) = (w, r) {
+                    let res = match p.get("residency").ok().and_then(|x| x.as_bool()) {
+                        Some(true) => ":res_on",
+                        Some(false) => ":res_off",
+                        None => "",
+                    };
+                    out.insert(format!("{bench}:{w}{res}:req_per_sec"), r);
                 }
             }
         }
