@@ -1,96 +1,229 @@
-//! Real-mode hot-path microbenchmarks (the perf-pass instrument):
-//! PJRT executable-cache behaviour, per-launch overhead across chunk sizes,
-//! and end-to-end request throughput vs a direct single-executable loop.
+//! Native-backend hot-path benchmark (BENCH_pr8.json, DESIGN.md §2.11):
+//! the first BENCH file in the repo that measures *hardware*, not
+//! orchestration over a stub. Four ported kernel families run end-to-end
+//! through the `Session` facade on the compiled CPU backend, twice each:
 //!
-//! Requires `make artifacts`. Results feed EXPERIMENTS.md §Perf.
+//!  * `scalar` leg — `NativeEngine::scalar_reference()` pinned to
+//!    `NoFission` (one slot, one worker thread, lanes=1/block=1): the
+//!    single-thread-scalar baseline.
+//!  * `native` leg — the production engine under the machine baseline
+//!    (L2 fission = one slot per core, wgs 256 -> lanes=8 specialization,
+//!    per-slot core affinity): the multi-core vectorized hot path.
+//!
+//! Both legs use `run_with` (pinned configs, KB and balancer bypassed),
+//! so the A/B is deterministic in everything but wall time. Outputs are
+//! compared element-wise: the kernels vectorize only across independent
+//! elements, so `parity_max_rel_err` is expected to be exactly 0.0 —
+//! any nonzero value is drift, and `tools/bench_gate.rs --native` fails
+//! the gate above 1e-5.
+//!
+//! The gate also enforces the scaling invariant on the compute-bound
+//! family: `nbody_accel` native throughput >= 2x the scalar leg
+//! (SIMD alone buys ~4x there; multi-core multiplies it).
 
-use marrow::bench::harness::{fmt_time, BenchResult, Timer};
+use marrow::bench::harness::{BenchResult, Timer};
 use marrow::bench::workloads;
-use marrow::data::image::randn_vec;
+use marrow::data::image::{bodies, image, randn_vec};
 use marrow::data::vector::VectorArg;
-use marrow::platform::device::i7_hd7950;
-use marrow::runtime::artifacts::Manifest;
-use marrow::runtime::client::{literal_f32, RtClient};
+use marrow::platform::cpu::FissionLevel;
+use marrow::platform::device::host_cpu;
 use marrow::runtime::exec::RequestArgs;
+use marrow::runtime::native::NativeEngine;
+use marrow::scheduler::real::RealScheduler;
 use marrow::session::{Computation, ConfigOverride, Session};
+use std::sync::Arc;
+
+struct Case {
+    name: &'static str,
+    comp: Computation,
+    args: RequestArgs,
+    /// f32 FLOPs per request (the workload's analytic count).
+    flops: f64,
+}
+
+fn cases() -> Vec<Case> {
+    let n_saxpy = 1usize << 20;
+    let (h, w) = (512usize, 512usize);
+    let fft_mib = 1u64; // 256 transforms of 512 points
+    let n_ffts = 256usize;
+    let (n_bodies, iters) = (2048usize, 2u32);
+    vec![
+        Case {
+            name: "saxpy",
+            comp: Computation::from(workloads::saxpy(n_saxpy as u64)),
+            args: RequestArgs {
+                vectors: vec![
+                    VectorArg::partitioned_f32("x", randn_vec(1, n_saxpy), 1),
+                    VectorArg::partitioned_f32("y", randn_vec(2, n_saxpy), 1),
+                ],
+                scalars: vec![2.0],
+            },
+            flops: 2.0 * n_saxpy as f64,
+        },
+        Case {
+            name: "filter_pipeline",
+            comp: Computation::from(workloads::filter_pipeline(h as u64, w as u64, true)),
+            args: RequestArgs {
+                vectors: vec![VectorArg::partitioned_f32("img", image(3, h, w), w as u64)],
+                scalars: vec![12_345.0, 0.0, 96.0],
+            },
+            flops: 60.0 * (h * w) as f64,
+        },
+        Case {
+            name: "fft_roundtrip",
+            comp: Computation::from(workloads::fft(fft_mib)),
+            args: RequestArgs {
+                vectors: vec![
+                    VectorArg::partitioned_f32("re", randn_vec(5, n_ffts * 512), 512),
+                    VectorArg::partitioned_f32("im", randn_vec(6, n_ffts * 512), 512),
+                ],
+                scalars: vec![],
+            },
+            flops: 2.0 * 5.0 * 512.0 * 9.0 * n_ffts as f64,
+        },
+        Case {
+            name: "nbody_accel",
+            comp: Computation::from(workloads::nbody(n_bodies as u64, iters)),
+            args: RequestArgs {
+                vectors: vec![VectorArg::copied_f32("pos", bodies(9, n_bodies))],
+                scalars: vec![0.0],
+            },
+            flops: 20.0 * (n_bodies * n_bodies) as f64 * iters as f64,
+        },
+    ]
+}
+
+type NativeSession = Session<RealScheduler<'static>>;
+
+/// Largest |a-b| / max(|a|, |b|) over every output element. Expected
+/// 0.0: both engines run the identical per-element operation sequence.
+fn max_rel_err(a: &[Vec<f32>], b: &[Vec<f32>]) -> f64 {
+    let mut worst = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.len(), y.len(), "output shape drift between engines");
+        for (u, v) in x.iter().zip(y) {
+            let denom = u.abs().max(v.abs()).max(1e-30) as f64;
+            worst = worst.max((u - v).abs() as f64 / denom);
+        }
+    }
+    worst
+}
+
+fn run_outputs(s: &NativeSession, case: &Case, ovr: &ConfigOverride) -> Vec<Vec<f32>> {
+    let out = s
+        .run_with(&case.comp, &case.args, ovr.clone())
+        .expect("native run");
+    out.outputs
+        .iter()
+        .map(|o| o.as_f32().expect("f32 output").to_vec())
+        .collect()
+}
+
+struct Row {
+    name: &'static str,
+    scalar: BenchResult,
+    native: BenchResult,
+    gflops: f64,
+    parity: f64,
+}
+
+impl Row {
+    fn scalar_rps(&self) -> f64 {
+        1.0 / self.scalar.median_s.max(1e-12)
+    }
+    fn native_rps(&self) -> f64 {
+        1.0 / self.native.median_s.max(1e-12)
+    }
+    fn speedup(&self) -> f64 {
+        self.native_rps() / self.scalar_rps().max(1e-12)
+    }
+}
 
 fn main() {
-    let manifest = match Manifest::load_default() {
-        Ok(m) => m,
-        Err(e) => {
-            eprintln!("skipping real_hotpath: {e}");
-            return;
-        }
-    };
-    let client = RtClient::cpu().expect("pjrt client");
-    let mut results: Vec<BenchResult> = Vec::new();
-    let timer = Timer::new(2, 10);
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let scalar_session: NativeSession =
+        Session::native_with_engine(host_cpu(), Arc::new(NativeEngine::scalar_reference()))
+            .expect("scalar native session");
+    let native_session: NativeSession = Session::native(host_cpu()).expect("native session");
+    // One slot, one worker, lanes=1 — vs — one slot per core, lanes=8.
+    let scalar_cfg = ConfigOverride::new().fission(FissionLevel::NoFission);
+    let native_cfg = ConfigOverride::new();
 
-    // 1. Compile cost (cold) vs cache hit (warm) for the saxpy artifact.
-    let info = &manifest.family("saxpy").unwrap()[0];
-    let cold = Timer::new(0, 3).time("compile saxpy_n4096 (uncached)", || {
-        let _ = client.compile_file(&info.file).unwrap();
-    });
-    results.push(cold);
-    let _ = client.executable(info).unwrap();
-    results.push(timer.time("executable cache hit", || {
-        let _ = client.executable(info).unwrap();
-    }));
-
-    // 2. Per-launch overhead across the chunk menu: same 262,144 elements
-    //    as 64 x 4k, 8 x 32k, 1 x 262k launches.
-    let n: usize = 262_144;
-    let x = randn_vec(1, n);
-    let y = randn_vec(2, n);
-    for info in manifest.family("saxpy").unwrap() {
-        let chunk = info.chunk_units as usize;
-        let launches = n / chunk;
-        let exe = client.executable(info).unwrap();
-        results.push(timer.time(
-            &format!("saxpy 262k via {launches} x {chunk}-elem launches"),
-            || {
-                for c in 0..launches {
-                    let xs =
-                        literal_f32(&x[c * chunk..(c + 1) * chunk], &[chunk as u64]).unwrap();
-                    let ys =
-                        literal_f32(&y[c * chunk..(c + 1) * chunk], &[chunk as u64]).unwrap();
-                    let al = literal_f32(&[2.0], &[1]).unwrap();
-                    let _ = client.run(&exe, &[al, xs, ys]).unwrap();
-                }
-            },
-        ));
+    println!(
+        "native hot path: compiled CPU kernels, hardware measurement \
+         ({cores} cores)\n"
+    );
+    let timer = Timer::new(1, 5);
+    let mut rows: Vec<Row> = Vec::new();
+    for case in cases() {
+        let ref_out = run_outputs(&scalar_session, &case, &scalar_cfg);
+        let nat_out = run_outputs(&native_session, &case, &native_cfg);
+        let parity = max_rel_err(&ref_out, &nat_out);
+        let scalar = timer.time(&format!("{} scalar", case.name), || {
+            let _ = scalar_session
+                .run_with(&case.comp, &case.args, scalar_cfg.clone())
+                .expect("scalar run");
+        });
+        let native = timer.time(&format!("{} native", case.name), || {
+            let _ = native_session
+                .run_with(&case.comp, &case.args, native_cfg.clone())
+                .expect("native run");
+        });
+        rows.push(Row {
+            name: case.name,
+            gflops: case.flops / native.median_s.max(1e-12) / 1e9,
+            scalar,
+            native,
+            parity,
+        });
     }
 
-    // 3. End-to-end request through the full stack, driven by the Session
-    //    facade under a pinned hybrid split (deterministic A/B with the raw
-    //    launch loops above).
-    let comp = Computation::from(workloads::saxpy(n as u64));
-    let args = RequestArgs {
-        vectors: vec![
-            VectorArg::partitioned_f32("x", x.clone(), 1),
-            VectorArg::partitioned_f32("y", y.clone(), 1),
-        ],
-        scalars: vec![2.0],
-    };
-    let session = Session::real(i7_hd7950(1), &client, &manifest);
-    results.push(timer.time("saxpy 262k full session request", || {
-        let _ = session
-            .run_with(&comp, &args, ConfigOverride::new().cpu_share(0.25))
-            .unwrap();
-    }));
-
-    println!("\n{}", BenchResult::header());
-    println!("{}", "-".repeat(94));
-    for r in &results {
-        println!("{}", r.row());
+    println!(
+        "{:>16} {:>14} {:>14} {:>9} {:>9} {:>14}",
+        "kernel", "scalar req/s", "native req/s", "speedup", "GFLOP/s", "parity rel err"
+    );
+    for r in &rows {
+        println!(
+            "{:>16} {:>14.2} {:>14.2} {:>8.2}x {:>9.2} {:>14.2e}",
+            r.name,
+            r.scalar_rps(),
+            r.native_rps(),
+            r.speedup(),
+            r.gflops,
+            r.parity,
+        );
     }
-    println!(
-        "\nthroughput (median, full request): {:.1} Melem/s",
-        n as f64 / results.last().unwrap().median_s / 1e6
+    let best = rows.iter().map(Row::speedup).fold(0.0f64, f64::max);
+    println!("\nbest multi-core-vs-scalar speedup: {best:.2}x");
+
+    let results_json: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"kernel\": \"{}\", \"scalar_req_per_sec\": {:.4}, \
+                 \"native_req_per_sec\": {:.4}, \"speedup\": {:.4}, \
+                 \"gflops\": {:.4}, \"parity_max_rel_err\": {:.3e}}}",
+                r.name,
+                r.scalar_rps(),
+                r.native_rps(),
+                r.speedup(),
+                r.gflops,
+                r.parity,
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"real_hotpath\",\n  \"pr\": 8,\n  \
+         \"backend\": \"native\",\n  \"hardware\": true,\n  \
+         \"cores\": {cores},\n  \"results\": [\n{}\n  ],\n  \
+         \"speedup_best\": {best:.4}\n}}\n",
+        results_json.join(",\n")
     );
-    println!(
-        "compile-once amortization: cold compile {} vs cache hit {}",
-        fmt_time(results[0].median_s),
-        fmt_time(results[1].median_s)
-    );
+    let path = "BENCH_pr8.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

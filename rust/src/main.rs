@@ -44,6 +44,15 @@
 //! to back the knowledge base with the durable store; `serve` additionally
 //! takes `--import <snapshot>` for warm-starting a fleet member and
 //! `--store-sync-every <n>` for mid-stream durability.
+//!
+//! `profile`, `run` and `serve` accept `--backend <sim|native|pjrt>`
+//! (default sim). `native` executes the compiled in-process CPU kernels on
+//! the host machine (DESIGN.md §2.11): timings are real wall-clock
+//! measurements, input buffers are synthesized deterministically, and
+//! `--gpus` is ignored (the host has none). Native sizes are constrained
+//! by the built-in artifact menu: filter needs --size 256|512|1024, nbody
+//! needs --size 512|2048, and segmentation is sim-only. `pjrt` drives AOT
+//! artifacts and needs the `pjrt` feature plus `make artifacts`.
 
 use std::path::{Path, PathBuf};
 
@@ -53,13 +62,15 @@ use marrow::cli::Args;
 use marrow::kb::store::snapshot::KbSnapshot;
 use marrow::kb::store::{machine_digest, KbStore};
 use marrow::kb::KnowledgeBase;
-use marrow::platform::device::{i7_hd7950, opteron_6272_quad, Machine};
+use marrow::platform::device::{host_cpu, i7_hd7950, opteron_6272_quad, Machine};
 use marrow::decompose::graph::{build_graph, flatten_stages};
 use marrow::runtime::artifacts::Manifest;
+use marrow::runtime::client::RtClient;
 use marrow::runtime::exec::RequestArgs;
-use marrow::scheduler::DrainMode;
+use marrow::scheduler::{DrainMode, ExecEnv};
 use marrow::session::serve::{ServeOpts, ServeRequest, SessionPool};
-use marrow::session::{Computation, Session};
+use marrow::session::{Backend, Computation, Session};
+use marrow::tuner::profile::Profile;
 use marrow::sim::shoc;
 use marrow::Result;
 
@@ -92,9 +103,9 @@ const USAGE: &str = "\
 marrow — multi-CPU/multi-GPU execution of compound multi-kernel computations
 usage:
   marrow eval <table2|table3|table4|table5|fig11|ablations|all>
-  marrow profile --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--kb <path> | --kb-store <dir>]
-  marrow run --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--runs <r>] [--kb <path> | --kb-store <dir>] [--concurrency <c>] [--tasks-per-slot <t>] [--drain <barrier|dataflow>]
-  marrow serve --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--requests <r>] [--concurrency <c>] [--pace-ms <m>] [--kb <path> | --kb-store <dir> [--import <snapshot>] [--store-sync-every <n>]] [--tasks-per-slot <t>] [--drain <barrier|dataflow>] [--co-schedule] [--batch-max <n>] [--batch-window <ms>] [--deadline-default <ms>]
+  marrow profile --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--backend <sim|native|pjrt>] [--gpus <g>] [--kb <path> | --kb-store <dir>]
+  marrow run --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--backend <sim|native|pjrt>] [--gpus <g>] [--runs <r>] [--kb <path> | --kb-store <dir>] [--concurrency <c>] [--tasks-per-slot <t>] [--drain <barrier|dataflow>]
+  marrow serve --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--backend <sim|native>] [--requests <r>] [--concurrency <c>] [--pace-ms <m>] [--kb <path> | --kb-store <dir> [--import <snapshot>] [--store-sync-every <n>]] [--tasks-per-slot <t>] [--drain <barrier|dataflow>] [--co-schedule] [--batch-max <n>] [--batch-window <ms>] [--deadline-default <ms>]
   marrow kb <export|import|merge|stats|gc> --store <dir> [--from <store|snapshot|kb.json>] [--out <path>] [--gpus <g>]
   marrow graph --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--tasks-per-slot <t>] [--kb <path>]
   marrow shoc
@@ -174,15 +185,15 @@ fn pick_drain_mode(args: &Args) -> Result<Option<DrainMode>> {
     }
 }
 
-/// Build a simulated session honouring the optional `--kb <path>` (legacy
-/// single-file KB) or `--kb-store <dir>` (durable content-addressed store,
-/// DESIGN.md §2.9) flag.
-fn sim_session(
-    args: &Args,
-    machine: Machine,
-    seed: u64,
-) -> Result<Session<marrow::scheduler::SimEnv>> {
-    let s = Session::simulated(machine, seed);
+/// `--backend <sim|native|pjrt>` (default sim).
+fn pick_backend(args: &Args) -> Result<Backend> {
+    Backend::parse(&args.get_or("backend", "sim"))
+}
+
+/// Honour the optional `--kb <path>` (legacy single-file KB) or
+/// `--kb-store <dir>` (durable content-addressed store, DESIGN.md §2.9)
+/// flag on any backend's session.
+fn apply_kb_flags<E: ExecEnv>(s: Session<E>, args: &Args) -> Result<Session<E>> {
     match (args.get("kb"), args.get("kb-store")) {
         (Some(_), Some(_)) => Err(marrow::Error::Usage(
             "--kb and --kb-store are mutually exclusive".into(),
@@ -193,13 +204,120 @@ fn sim_session(
     }
 }
 
+/// Build a simulated session honouring the KB flags.
+fn sim_session(
+    args: &Args,
+    machine: Machine,
+    seed: u64,
+) -> Result<Session<marrow::scheduler::SimEnv>> {
+    apply_kb_flags(Session::simulated(machine, seed), args)
+}
+
+/// Deterministic real input buffers for the native (and pjrt) backends.
+/// The simulator prices workloads analytically and ignores argument
+/// content; these backends execute kernels over actual memory, so the CLI
+/// synthesizes buffers shaped to the benchmark — validated against the
+/// built-in artifact menu's shape constraints (widths, body counts).
+fn native_request_args(args: &Args) -> Result<RequestArgs> {
+    use marrow::data::image::{bodies, image, randn_vec};
+    use marrow::data::vector::VectorArg;
+    let bench = args.get_or("bench", "saxpy");
+    let size = args.get_u64("size", 10_000_000)?;
+    match bench.as_str() {
+        "saxpy" => {
+            let n = size as usize;
+            Ok(RequestArgs {
+                vectors: vec![
+                    VectorArg::partitioned_f32("x", randn_vec(1, n), 1),
+                    VectorArg::partitioned_f32("y", randn_vec(2, n), 1),
+                ],
+                scalars: vec![2.0],
+            })
+        }
+        "filter" => {
+            let (h, w) = (size, size);
+            if ![256u64, 512, 1024].contains(&w) {
+                return Err(marrow::Error::Usage(format!(
+                    "native filter needs --size 256, 512 or 1024 (built-in \
+                     artifact widths); got {size}"
+                )));
+            }
+            Ok(RequestArgs {
+                vectors: vec![VectorArg::partitioned_f32(
+                    "img",
+                    image(3, h as usize, w as usize),
+                    w,
+                )],
+                // seed, row_off (Offset trait: per-chunk, base ignored), thresh
+                scalars: vec![12345.0, 0.0, 96.0],
+            })
+        }
+        "fft" => {
+            // --size is MiB of 512-point complex FFTs (4 KiB per transform).
+            let n_ffts = (size * 1024 * 1024 / (512 * 8)).max(1) as usize;
+            Ok(RequestArgs {
+                vectors: vec![
+                    VectorArg::partitioned_f32("re", randn_vec(5, n_ffts * 512), 512),
+                    VectorArg::partitioned_f32("im", randn_vec(6, n_ffts * 512), 512),
+                ],
+                scalars: vec![],
+            })
+        }
+        "nbody" => {
+            if size != 512 && size != 2048 {
+                return Err(marrow::Error::Usage(format!(
+                    "native nbody needs --size 512 or 2048 (built-in \
+                     artifact body counts); got {size}"
+                )));
+            }
+            Ok(RequestArgs {
+                vectors: vec![VectorArg::copied_f32("pos", bodies(9, size as usize))],
+                scalars: vec![0.0], // offset: per-chunk value, base ignored
+            })
+        }
+        "segmentation" => Err(marrow::Error::Usage(
+            "segmentation is not in the native artifact menu (its plane epu \
+             has no built-in kernel shape); use --backend sim"
+                .into(),
+        )),
+        other => Err(marrow::Error::Usage(format!("unknown benchmark '{other}'"))),
+    }
+}
+
+/// Run Algorithm 1 on any backend's session and persist the KB.
+fn profile_on<E: ExecEnv>(
+    session: &Session<E>,
+    comp: &Computation,
+    rargs: &RequestArgs,
+) -> Result<Profile> {
+    let p = session.profile_with_args(comp, rargs)?;
+    session.save_kb()?;
+    Ok(p)
+}
+
 fn profile(args: &Args) -> Result<()> {
     let b = pick_benchmark(args)?;
     let name = b.name.clone();
     let comp = Computation::from(b);
-    let session = sim_session(args, pick_machine(args)?, 7)?;
-    let p = session.profile(&comp)?;
-    session.save_kb()?;
+    let (p, clock) = match pick_backend(args)? {
+        Backend::Sim => {
+            let session = sim_session(args, pick_machine(args)?, 7)?;
+            (profile_on(&session, &comp, &RequestArgs::default())?, "sim")
+        }
+        Backend::Native => {
+            let session = apply_kb_flags(Session::native(host_cpu())?, args)?;
+            let rargs = native_request_args(args)?;
+            (profile_on(&session, &comp, &rargs)?, "measured")
+        }
+        Backend::Pjrt => {
+            let manifest = Manifest::load_default()?;
+            let client = RtClient::cpu()?;
+            let session =
+                apply_kb_flags(Session::real(pick_machine(args)?, &client, &manifest), args)?;
+            let rargs = native_request_args(args)?;
+            (profile_on(&session, &comp, &rargs)?, "measured")
+        }
+    };
     println!("benchmark      : {}", name);
     println!("sct id         : {}", p.sct_id);
     println!("workload       : {}", p.workload.id());
@@ -214,14 +332,13 @@ fn profile(args: &Args) -> Result<()> {
         100.0 * p.config.gpu_share(),
         100.0 * p.config.cpu_share
     );
-    println!("best time (sim): {:.4} s", p.best_time);
+    println!("best time ({clock}): {:.4} s", p.best_time);
     Ok(())
 }
 
 /// The seamless path, observable: repeated `Session::run` requests with the
 /// per-run configuration origin and the balancer's refinements.
 fn run_cmd(args: &Args) -> Result<()> {
-    let b = pick_benchmark(args)?;
     let runs = args.get_u64("runs", 8)?;
     let concurrency = args.get_u64("concurrency", 1)? as usize;
     if concurrency > 1 {
@@ -229,23 +346,52 @@ fn run_cmd(args: &Args) -> Result<()> {
         // own request-count default (8 runs, not serve's 32).
         return serve_requests(args, runs);
     }
+    match pick_backend(args)? {
+        Backend::Sim => {
+            let session = sim_session(args, pick_machine(args)?, 11)?;
+            run_loop(args, &session, &RequestArgs::default(), runs, "simulated clock")
+        }
+        Backend::Native => {
+            let session = apply_kb_flags(Session::native(host_cpu())?, args)?;
+            let rargs = native_request_args(args)?;
+            run_loop(args, &session, &rargs, runs, "native measured")
+        }
+        Backend::Pjrt => {
+            let manifest = Manifest::load_default()?;
+            let client = RtClient::cpu()?;
+            let session =
+                apply_kb_flags(Session::real(pick_machine(args)?, &client, &manifest), args)?;
+            let rargs = native_request_args(args)?;
+            run_loop(args, &session, &rargs, runs, "pjrt measured")
+        }
+    }
+}
+
+/// The run-command loop, generic over the backend.
+fn run_loop<E: ExecEnv>(
+    args: &Args,
+    session: &Session<E>,
+    rargs: &RequestArgs,
+    runs: u64,
+    clock: &str,
+) -> Result<()> {
+    let b = pick_benchmark(args)?;
     let name = b.name.clone();
     let comp = Computation::from(b);
-    let session = sim_session(args, pick_machine(args)?, 11)?;
     if let Some(t) = pick_tasks_per_slot(args)? {
         session.set_tasks_per_slot(t);
     }
     let drain = pick_drain_mode(args)?.unwrap_or_default();
     session.set_drain_mode(drain);
     println!(
-        "benchmark: {name} ({} runs, simulated clock, {} drain)",
+        "benchmark: {name} ({} runs, {clock}, {} drain)",
         runs,
         drain.label()
     );
     println!(" run | origin  | GPU share | exec time | idle% | balanced?");
     println!("-----+---------+-----------+-----------+-------+----------");
     for run in 0..runs {
-        let out = session.run(&comp, &RequestArgs::default())?;
+        let out = session.run(&comp, rargs)?;
         println!(
             " {run:>3} | {:<7} |   {:>5.1}%  | {:>7.3}ms | {:>4.1}% | {}",
             out.origin.label(),
@@ -289,8 +435,57 @@ fn serve_cmd(args: &Args) -> Result<()> {
 }
 
 /// Serve with an explicit request-count default (`marrow run --concurrency`
-/// delegates here with run's default of 8).
+/// delegates here with run's default of 8). Builds the backend-specific
+/// session pool, then drains through the generic path.
 fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
+    let concurrency = (args.get_u64("concurrency", 4)? as usize).max(1);
+    match pick_backend(args)? {
+        Backend::Sim => {
+            let machine = pick_machine(args)?;
+            let digest = machine_digest("analytic", &machine);
+            let pool = SessionPool::build(concurrency, |i| {
+                Session::simulated(machine.clone(), 11 + i as u64)
+            });
+            serve_on_pool(
+                args,
+                default_requests,
+                &pool,
+                &digest,
+                RequestArgs::default(),
+                "simulated clock",
+            )
+        }
+        Backend::Native => {
+            let machine = host_cpu();
+            let rargs = native_request_args(args)?;
+            // The KB store is keyed by the backend's own digest so native
+            // profiles stay separate from analytic/sim ones; probe it off
+            // a throwaway session.
+            let digest = Session::native(machine.clone())?.env().manifest_digest();
+            let m = machine.clone();
+            let pool = SessionPool::build(concurrency, move |_| {
+                Session::native(m.clone())
+                    .expect("native session construction succeeded for the probe")
+            });
+            serve_on_pool(args, default_requests, &pool, &digest, rargs, "native measured")
+        }
+        Backend::Pjrt => Err(marrow::Error::Usage(
+            "serve supports --backend sim or native (pjrt sessions borrow \
+             their runtime and cannot be pooled from the CLI)"
+                .into(),
+        )),
+    }
+}
+
+/// The serve path over an already-built pool, generic over the backend.
+fn serve_on_pool<E: ExecEnv + Send>(
+    args: &Args,
+    default_requests: u64,
+    pool: &SessionPool<E>,
+    kb_digest: &str,
+    rargs: RequestArgs,
+    clock: &str,
+) -> Result<()> {
     let b = pick_benchmark(args)?;
     let n_requests = args.get_u64("requests", default_requests)? as usize;
     let concurrency = (args.get_u64("concurrency", 4)? as usize).max(1);
@@ -311,7 +506,6 @@ fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
     };
     let name = b.name.clone();
     let comp = Computation::from(b);
-    let machine = pick_machine(args)?;
     let kb_store_dir = args.get("kb-store").map(PathBuf::from);
     if args.get("kb").is_some() && kb_store_dir.is_some() {
         return Err(marrow::Error::Usage(
@@ -325,24 +519,19 @@ fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
         0
     };
 
-    let pool = SessionPool::build(concurrency, |i| {
-        Session::simulated(machine.clone(), 11 + i as u64)
-    });
     if let Some(path) = args.get("kb") {
         *pool.shared_kb().write().unwrap() = KnowledgeBase::open(&PathBuf::from(path))?;
     }
     if let Some(dir) = &kb_store_dir {
-        let digest = machine_digest("analytic", &machine);
-        *pool.shared_kb().write().unwrap() = KnowledgeBase::open_store(dir, &digest)?;
+        *pool.shared_kb().write().unwrap() = KnowledgeBase::open_store(dir, kb_digest)?;
     }
     if let Some(snap_path) = args.get("import") {
         // Warm-start a fleet member: records matching this platform's
         // digest become exact KB entries, the rest derivation hints.
         let snap = KbSnapshot::read(&PathBuf::from(snap_path))?;
-        let digest = machine_digest("analytic", &machine);
         let kb = pool.shared_kb();
         let mut kb = kb.write().unwrap();
-        kb.ensure_manifest_digest(&digest);
+        kb.ensure_manifest_digest(kb_digest);
         let (exact, hints) = kb.import_snapshot(&snap);
         println!(
             "imported {snap_path}: {exact} exact profiles, {hints} derivation hints"
@@ -350,11 +539,15 @@ fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
     }
 
     let requests: Vec<ServeRequest> = (0..n_requests)
-        .map(|_| ServeRequest::from(comp.clone()))
+        .map(|_| {
+            let mut r = ServeRequest::from(comp.clone());
+            r.args = rargs.clone();
+            r
+        })
         .collect();
     println!(
         "serving {n_requests} x {name} at concurrency {concurrency} \
-         (pace floor {:.1} ms/request, simulated clock, {} admission)",
+         (pace floor {:.1} ms/request, {clock}, {} admission)",
         pace * 1e3,
         if co_schedule {
             "co-scheduled"
@@ -598,6 +791,12 @@ fn info() -> Result<()> {
             }
         }
         Err(e) => println!("artifacts: not built ({e})"),
+    }
+    let native = marrow::runtime::native::builtin_manifest();
+    println!("native kernels ({} families, built-in):", native.by_family.len());
+    for (fam, arts) in &native.by_family {
+        let chunks: Vec<u64> = arts.iter().map(|a| a.chunk_units).collect();
+        println!("  {fam:<18} chunk menu {chunks:?}");
     }
     Ok(())
 }

@@ -222,9 +222,49 @@ pub fn i7_hd7950(n_gpus: usize) -> Machine {
     }
 }
 
+/// The machine the process is actually running on, as far as the
+/// standard library can see: core count from the scheduler-visible
+/// parallelism, flat cache geometry (one core per L2 group, so L2-level
+/// fission yields one execution slot per core), no GPUs. This is the
+/// native backend's default machine — slots then map 1:1 onto pinnable
+/// cores and BENCH numbers describe the host, not a paper testbed.
+/// Cache sizes and per-core throughput are conservative defaults; they
+/// feed the simulator's cost model, never native execution itself.
+pub fn host_cpu() -> Machine {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get() as u32)
+        .unwrap_or(4);
+    Machine {
+        name: format!("host-cpu ({cores} cores)"),
+        cpu: CpuSpec {
+            name: "host".to_string(),
+            sockets: 1,
+            cores_per_socket: cores,
+            l1_kib: 32,
+            l2_kib: 512,
+            cores_per_l2: 1,
+            l3_kib: 16384,
+            cores_per_l3: cores,
+            numa_nodes: 1,
+            gflops_per_core: 32.0,
+            mem_bw_gbps: 40.0,
+            launch_overhead_us: 5.0,
+        },
+        gpus: Vec::new(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn host_cpu_is_cpu_only_with_one_slot_per_core() {
+        let m = host_cpu();
+        assert!(m.gpus.is_empty());
+        assert!(m.cpu.total_cores() >= 1);
+        assert_eq!(m.cpu.cores_per_l2, 1);
+    }
 
     #[test]
     fn opteron_core_count() {

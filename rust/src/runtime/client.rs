@@ -53,6 +53,27 @@ impl RtClient {
         })
     }
 
+    /// A client for backends that never execute through PJRT (the native
+    /// CPU backend, DESIGN.md §2.11). In stub builds this constructs the
+    /// host-side placeholder directly — `ChunkRunner` still wants a client
+    /// for its pjrt paths, but the native dispatch seam branches before
+    /// any compile/execute call, so the placeholder is never entered. In
+    /// `pjrt` builds the real CPU client doubles as the offline one.
+    pub fn offline() -> Result<RtClient> {
+        #[cfg(feature = "pjrt")]
+        {
+            RtClient::cpu()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            Ok(RtClient {
+                client: xla::PjRtClient,
+                cache: Mutex::new(HashMap::new()),
+                gate: Mutex::new(()),
+            })
+        }
+    }
+
     /// Exclusive access to the native binding (see the Send/Sync note
     /// above). Hold the returned guard across compile/execute sequences
     /// that must not interleave with other threads.

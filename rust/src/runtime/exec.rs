@@ -24,6 +24,7 @@ use crate::decompose::ExecSlot;
 use crate::error::{Error, Result};
 use crate::runtime::artifacts::Manifest;
 use crate::runtime::client::{literal_f32, literal_i32, to_vec_f32, RtClient};
+use crate::runtime::native::{NativeArg, NativeEngine};
 use crate::runtime::residency::{ArgKey, ResidencyKey, ResidencyPool};
 use crate::sct::{KernelSpec, ParamSpec, Sct};
 
@@ -63,6 +64,20 @@ pub struct ChunkRunner<'a> {
     /// Request fingerprint the pool keys are scoped by (distinct requests
     /// over different data never alias).
     request_id: u64,
+    /// Native CPU kernel backend (DESIGN.md §2.11). When set, chunk
+    /// launches dispatch to specialized compiled-in kernels instead of
+    /// the PJRT client — same chunk loop, same residency accounting,
+    /// real FLOPs.
+    native: Option<NativeExec>,
+}
+
+/// The native dispatch seam's configuration: the shared engine plus the
+/// tuned work-group size the scheduler resolved for this request (the
+/// specialization key input).
+#[derive(Clone)]
+pub struct NativeExec {
+    pub engine: Arc<NativeEngine>,
+    pub wgs: u32,
 }
 
 /// Shared per-artifact timing knowledge, keyed by artifact name.
@@ -82,6 +97,7 @@ impl<'a> ChunkRunner<'a> {
             timings: TimingCache::default(),
             residency: Arc::new(ResidencyPool::new()),
             request_id: 0,
+            native: None,
         }
     }
 
@@ -103,6 +119,13 @@ impl<'a> ChunkRunner<'a> {
     pub fn with_residency(mut self, pool: Arc<ResidencyPool>, request_id: u64) -> Self {
         self.residency = pool;
         self.request_id = request_id;
+        self
+    }
+
+    /// Dispatch chunk launches to the native CPU backend under the tuned
+    /// work-group size instead of the PJRT client.
+    pub fn with_native(mut self, engine: Arc<NativeEngine>, wgs: u32) -> Self {
+        self.native = Some(NativeExec { engine, wgs });
         self
     }
 
@@ -284,6 +307,23 @@ impl<'a> ChunkRunner<'a> {
         // whose fixed input shapes match the bound arguments (COPY-mode
         // vectors pin the artifact variant, e.g. nbody's body-set size).
         let info = self.pick_artifact(k, args, &param_binds, units)?;
+
+        // The native dispatch seam: everything above (binding, artifact
+        // selection) is backend-independent; from here the launch loop
+        // either enters PJRT or the compiled-in kernels.
+        if let Some(native) = self.native.clone() {
+            return self.run_chunks_native(
+                &native,
+                slot,
+                k,
+                args,
+                &param_binds,
+                carried.as_ref(),
+                info,
+                start_unit,
+                units,
+            );
+        }
         let exe = self.client.executable(info)?;
         let chunk = info.chunk_units;
         let n_chunks = units / chunk;
@@ -394,6 +434,142 @@ impl<'a> ChunkRunner<'a> {
         // NBody-style chunk offsets are relative to the partition for the
         // carried buffer but absolute for Offset scalars — handled above.
         let _ = carried.take();
+        Ok(outputs.into_iter().map(ArgValue::F32).collect())
+    }
+
+    /// The native-backend twin of the PJRT chunk loop above: identical
+    /// binding, chunking, residency accounting, timing-cache feedback and
+    /// launch counting, but each chunk executes a specialized compiled-in
+    /// kernel (DESIGN.md §2.11) instead of a PJRT executable. Staging is
+    /// two-phase per chunk — first acquire/compute holders that keep the
+    /// residency `Arc`s alive, then borrow them as flat `NativeArg` views
+    /// — so staged buffers are shared with the pool, never re-copied for
+    /// the launch.
+    #[allow(clippy::too_many_arguments)]
+    fn run_chunks_native(
+        &self,
+        native: &NativeExec,
+        slot: ExecSlot,
+        k: &KernelSpec,
+        args: &RequestArgs,
+        binds: &[Bind],
+        carried: Option<&ArgValue>,
+        info: &crate::runtime::artifacts::ArtifactInfo,
+        start_unit: u64,
+        units: u64,
+    ) -> Result<Vec<ArgValue>> {
+        enum Staged {
+            Pool(Arc<Vec<f32>>),
+            /// (local offset, len) into the carried stage output.
+            Carried(usize, usize),
+            F32(f32),
+            I32(i32),
+        }
+
+        let carried_f32: Option<&[f32]> = match carried {
+            Some(c) => Some(c.as_f32()?),
+            None => None,
+        };
+        let chunk = info.chunk_units;
+        let n_chunks = units / chunk;
+        let mut outputs: Vec<Vec<f32>> = info
+            .outputs
+            .iter()
+            .map(|o| Vec::with_capacity((o.elems() * n_chunks) as usize))
+            .collect();
+
+        for c in 0..n_chunks {
+            let off = start_unit + c * chunk;
+            let mut staged = Vec::with_capacity(k.params.len());
+            for (p, bind) in k.params.iter().zip(binds) {
+                let s = match (p, bind) {
+                    (ParamSpec::VecIn, Bind::Carried) => {
+                        let epu = k.elems_per_unit as usize;
+                        let local = (off - start_unit) as usize * epu;
+                        let len = chunk as usize * epu;
+                        // Accounting only, as in the PJRT loop: a carried
+                        // intermediate is produced on-device and consumed
+                        // in place.
+                        self.residency.note_reuse(1, (len * 4) as u64);
+                        Staged::Carried(local, len)
+                    }
+                    (ParamSpec::VecIn, Bind::Vector(i)) => {
+                        let v = &args.vectors[*i];
+                        let bytes = chunk * v.elems_per_unit * 4;
+                        let key = ResidencyKey {
+                            arg: ArgKey::Input {
+                                request: self.request_id,
+                                idx: *i as u32,
+                            },
+                            start_unit: off,
+                            units: chunk,
+                            version: v.version,
+                        };
+                        Staged::Pool(self.residency.acquire(slot, key, bytes, || {
+                            Ok(Arc::new(v.slice_units(off, chunk)?.as_f32()?.to_vec()))
+                        })?)
+                    }
+                    (ParamSpec::VecCopy, Bind::Vector(i)) => {
+                        let v = &args.vectors[*i];
+                        let bytes = v.value.len() as u64 * 4;
+                        let key = ResidencyKey {
+                            arg: ArgKey::Input {
+                                request: self.request_id,
+                                idx: *i as u32,
+                            },
+                            start_unit: 0,
+                            units: v.units(),
+                            version: v.version,
+                        };
+                        Staged::Pool(self.residency.acquire(slot, key, bytes, || {
+                            Ok(Arc::new(v.value.as_f32()?.to_vec()))
+                        })?)
+                    }
+                    (ParamSpec::ScalarF32(tr), Bind::Scalar(i)) => {
+                        let base = args.scalars.get(*i).copied().unwrap_or(0.0);
+                        Staged::F32(scalar_value(*tr, base, off, chunk, k) as f32)
+                    }
+                    (ParamSpec::ScalarI32(tr), Bind::Scalar(i)) => {
+                        let base = args.scalars.get(*i).copied().unwrap_or(0.0);
+                        Staged::I32(scalar_value(*tr, base, off, chunk, k) as i32)
+                    }
+                    (p, b) => {
+                        return Err(Error::Spec(format!(
+                            "inconsistent binding {b:?} for param {p:?}"
+                        )))
+                    }
+                };
+                staged.push(s);
+            }
+            let nargs: Vec<NativeArg> = staged
+                .iter()
+                .map(|s| match s {
+                    Staged::Pool(a) => NativeArg::F32(&a[..]),
+                    Staged::Carried(local, len) => {
+                        let buf = carried_f32.expect("Bind::Carried implies carried buffer");
+                        NativeArg::F32(&buf[*local..*local + *len])
+                    }
+                    Staged::F32(v) => NativeArg::ScalarF32(*v),
+                    Staged::I32(v) => NativeArg::ScalarI32(*v),
+                })
+                .collect();
+
+            let t0 = std::time::Instant::now();
+            let outs = native.engine.run_chunk(info, native.wgs, chunk, &nargs)?;
+            let dt = t0.elapsed().as_secs_f64();
+            {
+                let mut tm = self.timings.lock().unwrap();
+                let e = tm.entry(info.name.clone()).or_insert((0.0, 0));
+                e.0 += dt;
+                e.1 += chunk;
+            }
+            self.launches
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            for (out, host) in outputs.iter_mut().zip(outs) {
+                self.residency.note_download(host.len() as u64 * 4);
+                out.extend_from_slice(&host);
+            }
+        }
         Ok(outputs.into_iter().map(ArgValue::F32).collect())
     }
 

@@ -5,6 +5,7 @@
 pub mod artifacts;
 pub mod client;
 pub mod exec;
+pub mod native;
 pub mod residency;
 #[cfg(not(feature = "pjrt"))]
 pub mod stub;
@@ -12,4 +13,5 @@ pub mod stub;
 pub use artifacts::{ArtifactInfo, Manifest};
 pub use client::RtClient;
 pub use exec::{ChunkRunner, ExecMode};
+pub use native::NativeEngine;
 pub use residency::{ResidencyPool, ResidencyView, TransferStats};

@@ -1,0 +1,68 @@
+//! Per-worker core pinning for the native backend (DESIGN.md §2.11).
+//!
+//! Each CPU execution slot maps to one core: worker `CpuSub { idx }` pins
+//! itself to core `idx % ncores` before draining. With the pin in place,
+//! residency keys (which are per-slot) price *physical* cache/NUMA
+//! locality — a steal that migrates a partition really does refill
+//! another core's cache — instead of whatever core the OS scheduler
+//! happened to land the thread on.
+//!
+//! Implemented as a raw `sched_setaffinity` syscall on linux/x86_64 (the
+//! crate is dependency-free); everywhere else it is a no-op returning
+//! `false`, and the backend still runs correctly — pinning is a locality
+//! optimization, never a correctness requirement.
+
+/// Pin the calling thread to `core` (modulo the visible core count).
+/// Returns whether a pin was actually applied.
+pub fn pin_current_thread(core: usize) -> bool {
+    imp::pin(core)
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+mod imp {
+    pub fn pin(core: usize) -> bool {
+        let ncores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        // cpu_set_t here is 1024 bits = 16 u64 words; clamp for hosts
+        // reporting more cores than that.
+        let cpu = (core % ncores).min(1023);
+        let mut mask = [0u64; 16];
+        mask[cpu / 64] |= 1u64 << (cpu % 64);
+        let mut ret: isize;
+        unsafe {
+            // sched_setaffinity(pid=0 -> calling thread, size, mask)
+            core::arch::asm!(
+                "syscall",
+                inlateout("rax") 203isize => ret,
+                in("rdi") 0,
+                in("rsi") mask.len() * 8,
+                in("rdx") mask.as_ptr(),
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack),
+            );
+        }
+        ret == 0
+    }
+}
+
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+mod imp {
+    pub fn pin(_core: usize) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pinning_is_best_effort_and_never_panics() {
+        // On linux/x86_64 this pins and reports true; elsewhere it is a
+        // no-op reporting false. Either way the call must be safe.
+        let _ = pin_current_thread(0);
+        let _ = pin_current_thread(usize::MAX);
+    }
+}

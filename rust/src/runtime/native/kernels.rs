@@ -1,0 +1,502 @@
+//! Native CPU ports of the AOT kernel menu (`python/compile/kernels/`),
+//! monomorphized over the lane width `L` chosen by the specializer
+//! (DESIGN.md §2.11). Every variant of a family computes the *identical*
+//! f32 operation sequence per element — vectorization only ever splits
+//! work across elements that the source kernels treat independently
+//! (saxpy elements, filter pixels, segmentation voxels, n-body `i` rows,
+//! whole FFTs) — so scalar and laned variants are bit-identical and the
+//! backend-parity tests can compare exactly, with no reassociation
+//! tolerance.
+//!
+//! Numerics mirror the JAX definitions closely enough to be their
+//! reference: the same integer hash, the same f64->f32 twiddle rounding,
+//! the same softened-distance epsilon, the same clamp bounds.
+
+use super::{NativeArg, SpecKey};
+use crate::runtime::artifacts::ArtifactInfo;
+use crate::error::{Error, Result};
+
+/// One specialized kernel entry point: `(artifact, spec, units, args)` ->
+/// one `Vec<f32>` per artifact output. `units` is the partition-unit count
+/// of this launch (== `artifact.chunk_units` except on a ragged tail).
+pub type KernelFn = fn(&ArtifactInfo, &SpecKey, u64, &[NativeArg]) -> Result<Vec<Vec<f32>>>;
+
+/// Families the native backend can execute, in manifest order. The
+/// engine fingerprint hashes this list, so adding a port changes the
+/// native manifest digest and re-keys learned profiles.
+pub const FAMILIES: [&str; 8] = [
+    "saxpy",
+    "gaussian_noise",
+    "solarize",
+    "mirror",
+    "filter_pipeline",
+    "fft_roundtrip",
+    "nbody_accel",
+    "segmentation",
+];
+
+/// Resolve a family to the monomorphized variant for `lanes`. The FFT is
+/// lane-independent (its parallel axis is whole transforms; the butterfly
+/// ladder itself is sequential), so every lane width shares one body.
+pub fn select(family: &str, lanes: u32) -> Result<KernelFn> {
+    macro_rules! laned {
+        ($f:ident) => {
+            match lanes {
+                8 => $f::<8>,
+                4 => $f::<4>,
+                _ => $f::<1>,
+            }
+        };
+    }
+    Ok(match family {
+        "saxpy" => laned!(saxpy_entry),
+        "gaussian_noise" => laned!(gaussian_entry),
+        "solarize" => laned!(solarize_entry),
+        "mirror" => mirror_entry,
+        "filter_pipeline" => laned!(filter_pipeline_entry),
+        "fft_roundtrip" => fft_entry,
+        "nbody_accel" => laned!(nbody_entry),
+        "segmentation" => laned!(segmentation_entry),
+        other => {
+            return Err(Error::Artifact(format!(
+                "native backend has no kernel for family '{other}'"
+            )))
+        }
+    })
+}
+
+fn vec_arg<'a>(args: &'a [NativeArg], i: usize, family: &str) -> Result<&'a [f32]> {
+    args.get(i)
+        .ok_or_else(|| Error::Artifact(format!("{family}: missing arg {i}")))?
+        .f32s()
+}
+
+fn scalar_f32(args: &[NativeArg], i: usize, family: &str) -> Result<f32> {
+    args.get(i)
+        .ok_or_else(|| Error::Artifact(format!("{family}: missing arg {i}")))?
+        .scalar_f32()
+}
+
+fn scalar_i32(args: &[NativeArg], i: usize, family: &str) -> Result<i32> {
+    args.get(i)
+        .ok_or_else(|| Error::Artifact(format!("{family}: missing arg {i}")))?
+        .scalar_i32()
+}
+
+/// Trailing dimension of the first input — the image/plane width.
+fn width(info: &ArtifactInfo) -> usize {
+    info.inputs[0].shape.last().copied().unwrap_or(1).max(1) as usize
+}
+
+// --- saxpy ----------------------------------------------------------------
+
+/// `out = alpha * x + y`. Blocked so each tile of x/y/out passes through
+/// cache together; the fixed-`L` stripe is the autovectorizer target.
+fn saxpy_entry<const L: usize>(
+    _info: &ArtifactInfo,
+    key: &SpecKey,
+    _units: u64,
+    args: &[NativeArg],
+) -> Result<Vec<Vec<f32>>> {
+    let a = scalar_f32(args, 0, "saxpy")?;
+    let x = vec_arg(args, 1, "saxpy")?;
+    let y = vec_arg(args, 2, "saxpy")?;
+    if x.len() != y.len() {
+        return Err(Error::Artifact(format!(
+            "saxpy: x has {} elems but y has {}",
+            x.len(),
+            y.len()
+        )));
+    }
+    let n = x.len();
+    let mut out = vec![0.0f32; n];
+    let block = (key.block as usize).max(1) * L.max(1);
+    for start in (0..n).step_by(block) {
+        let end = (start + block).min(n);
+        let mut i = start;
+        while i + L <= end {
+            for l in 0..L {
+                out[i + l] = a * x[i + l] + y[i + l];
+            }
+            i += L;
+        }
+        while i < end {
+            out[i] = a * x[i] + y[i];
+            i += 1;
+        }
+    }
+    Ok(vec![out])
+}
+
+// --- filters --------------------------------------------------------------
+
+/// lowbias32-style avalanche hash — must match `kernels/filters.py`.
+#[inline(always)]
+fn hash_u32(mut x: u32) -> u32 {
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x7feb_352d);
+    x ^= x >> 15;
+    x = x.wrapping_mul(0x846c_a68b);
+    x ^= x >> 16;
+    x
+}
+
+/// Map hash bits to (0, 1): 24-bit mantissa scale plus a half-ulp offset
+/// keeping the value strictly positive for `ln`.
+#[inline(always)]
+fn uniform01(bits: u32) -> f32 {
+    (bits >> 8) as f32 / 16_777_216.0 + 1.0 / 33_554_432.0
+}
+
+/// 2*pi rounded to f32, written at f32 precision to match the Python
+/// kernel's `jnp.float32(2.0 * np.pi)`.
+const TWO_PI: f32 = 6.283_185_5;
+
+/// Box-Muller noise for one pixel, seeded by its *global* coordinates so
+/// chunk decomposition cannot change the image.
+#[inline(always)]
+fn gauss_px(x: f32, local_row: u32, col: u32, seed: u32, row_off: u32, sigma: f32) -> f32 {
+    let global_row = row_off.wrapping_add(local_row);
+    let pix = global_row.wrapping_mul(65_521).wrapping_add(col);
+    let u1 = uniform01(hash_u32(pix ^ seed));
+    let u2 = uniform01(hash_u32(pix.wrapping_add(seed.wrapping_mul(2_654_435_761))));
+    let mag = (-2.0f32 * u1.ln()).sqrt();
+    let noise = mag * (TWO_PI * u2).cos() * sigma;
+    (x + noise).clamp(0.0, 255.0)
+}
+
+/// Threshold inversion — must match `kernels/filters.py`.
+#[inline(always)]
+fn solarize_px(x: f32, thresh: f32) -> f32 {
+    if x > thresh {
+        255.0 - x
+    } else {
+        x
+    }
+}
+
+const SIGMA: f32 = 8.0;
+
+fn gaussian_entry<const L: usize>(
+    info: &ArtifactInfo,
+    _key: &SpecKey,
+    _units: u64,
+    args: &[NativeArg],
+) -> Result<Vec<Vec<f32>>> {
+    let img = vec_arg(args, 0, "gaussian_noise")?;
+    let seed = scalar_i32(args, 1, "gaussian_noise")? as u32;
+    let row_off = scalar_i32(args, 2, "gaussian_noise")? as u32;
+    let w = width(info);
+    let rows = img.len() / w;
+    let mut out = vec![0.0f32; img.len()];
+    for r in 0..rows {
+        let base = r * w;
+        let mut c = 0;
+        while c + L <= w {
+            for l in 0..L {
+                out[base + c + l] = gauss_px(
+                    img[base + c + l],
+                    r as u32,
+                    (c + l) as u32,
+                    seed,
+                    row_off,
+                    SIGMA,
+                );
+            }
+            c += L;
+        }
+        while c < w {
+            out[base + c] = gauss_px(img[base + c], r as u32, c as u32, seed, row_off, SIGMA);
+            c += 1;
+        }
+    }
+    Ok(vec![out])
+}
+
+fn solarize_entry<const L: usize>(
+    _info: &ArtifactInfo,
+    _key: &SpecKey,
+    _units: u64,
+    args: &[NativeArg],
+) -> Result<Vec<Vec<f32>>> {
+    let img = vec_arg(args, 0, "solarize")?;
+    let thresh = scalar_f32(args, 1, "solarize")?;
+    let n = img.len();
+    let mut out = vec![0.0f32; n];
+    let mut i = 0;
+    while i + L <= n {
+        for l in 0..L {
+            out[i + l] = solarize_px(img[i + l], thresh);
+        }
+        i += L;
+    }
+    while i < n {
+        out[i] = solarize_px(img[i], thresh);
+        i += 1;
+    }
+    Ok(vec![out])
+}
+
+/// Horizontal mirror: pure data movement, nothing to specialize.
+fn mirror_entry(
+    info: &ArtifactInfo,
+    _key: &SpecKey,
+    _units: u64,
+    args: &[NativeArg],
+) -> Result<Vec<Vec<f32>>> {
+    let img = vec_arg(args, 0, "mirror")?;
+    let w = width(info);
+    let rows = img.len() / w;
+    let mut out = vec![0.0f32; img.len()];
+    for r in 0..rows {
+        let base = r * w;
+        for c in 0..w {
+            out[base + w - 1 - c] = img[base + c];
+        }
+    }
+    Ok(vec![out])
+}
+
+/// Fused noise -> solarize -> mirror in one pass: each output pixel is
+/// produced from exactly one input pixel, so fusion is exact and saves
+/// two intermediate images.
+fn filter_pipeline_entry<const L: usize>(
+    info: &ArtifactInfo,
+    _key: &SpecKey,
+    _units: u64,
+    args: &[NativeArg],
+) -> Result<Vec<Vec<f32>>> {
+    let img = vec_arg(args, 0, "filter_pipeline")?;
+    let seed = scalar_i32(args, 1, "filter_pipeline")? as u32;
+    let row_off = scalar_i32(args, 2, "filter_pipeline")? as u32;
+    let thresh = scalar_f32(args, 3, "filter_pipeline")?;
+    let w = width(info);
+    let rows = img.len() / w;
+    let mut out = vec![0.0f32; img.len()];
+    for r in 0..rows {
+        let base = r * w;
+        let mut c = 0;
+        while c + L <= w {
+            for l in 0..L {
+                let v = gauss_px(
+                    img[base + c + l],
+                    r as u32,
+                    (c + l) as u32,
+                    seed,
+                    row_off,
+                    SIGMA,
+                );
+                out[base + w - 1 - (c + l)] = solarize_px(v, thresh);
+            }
+            c += L;
+        }
+        while c < w {
+            let v = gauss_px(img[base + c], r as u32, c as u32, seed, row_off, SIGMA);
+            out[base + w - 1 - c] = solarize_px(v, thresh);
+            c += 1;
+        }
+    }
+    Ok(vec![out])
+}
+
+// --- FFT ------------------------------------------------------------------
+
+/// Iterative radix-2 DIT over one `n`-point signal, in place. Twiddle
+/// steps are computed in f64 and rounded once per ladder rung — the same
+/// rounding point as the JAX kernel's `jnp.float32(sign * 2pi / m)` — so
+/// outputs match the AOT artifacts' numerics, not just their shape.
+fn fft_inplace(re: &mut [f32], im: &mut [f32], inverse: bool) {
+    let n = re.len();
+    if n < 2 {
+        return;
+    }
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = ((i as u32).reverse_bits() >> (32 - bits)) as usize;
+        if j > i {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let sign: f64 = if inverse { 1.0 } else { -1.0 };
+    let mut m = 2;
+    while m <= n {
+        let half = m / 2;
+        let step = (sign * 2.0 * std::f64::consts::PI / m as f64) as f32;
+        for base in (0..n).step_by(m) {
+            for k in 0..half {
+                let ang = step * k as f32;
+                let (wr, wi) = (ang.cos(), ang.sin());
+                let (odd_r, odd_i) = (re[base + half + k], im[base + half + k]);
+                let tr = odd_r * wr - odd_i * wi;
+                let ti = odd_r * wi + odd_i * wr;
+                let (even_r, even_i) = (re[base + k], im[base + k]);
+                re[base + k] = even_r + tr;
+                im[base + k] = even_i + ti;
+                re[base + half + k] = even_r - tr;
+                im[base + half + k] = even_i - ti;
+            }
+        }
+        m *= 2;
+    }
+    if inverse {
+        // Division (not reciprocal-multiply) mirrors the JAX `re / n`.
+        for v in re.iter_mut() {
+            *v /= n as f32;
+        }
+        for v in im.iter_mut() {
+            *v /= n as f32;
+        }
+    }
+}
+
+fn fft_entry(
+    info: &ArtifactInfo,
+    _key: &SpecKey,
+    _units: u64,
+    args: &[NativeArg],
+) -> Result<Vec<Vec<f32>>> {
+    let re_in = vec_arg(args, 0, "fft_roundtrip")?;
+    let im_in = vec_arg(args, 1, "fft_roundtrip")?;
+    let n = width(info);
+    if !n.is_power_of_two() || re_in.len() % n != 0 || re_in.len() != im_in.len() {
+        return Err(Error::Artifact(format!(
+            "fft_roundtrip: bad plane shape ({} re, {} im, n={n})",
+            re_in.len(),
+            im_in.len()
+        )));
+    }
+    let mut re = re_in.to_vec();
+    let mut im = im_in.to_vec();
+    for b in 0..re.len() / n {
+        let (r, i) = (&mut re[b * n..(b + 1) * n], &mut im[b * n..(b + 1) * n]);
+        fft_inplace(r, i, false);
+        fft_inplace(r, i, true);
+    }
+    Ok(vec![re, im])
+}
+
+// --- n-body ---------------------------------------------------------------
+
+/// Softening term: the Python kernel squares `1e-3` in f64 and narrows,
+/// which is exactly f32 `1e-6`.
+const EPS2: f32 = 1e-6;
+
+/// All-pairs gravity for `units` bodies starting at `offset`, against the
+/// whole (copied) body set. Lanes tile the `i` axis; each lane keeps its
+/// own accumulator and walks `j` in ascending order, so any tiling
+/// reproduces the scalar sums bit for bit.
+fn nbody_entry<const L: usize>(
+    _info: &ArtifactInfo,
+    _key: &SpecKey,
+    units: u64,
+    args: &[NativeArg],
+) -> Result<Vec<Vec<f32>>> {
+    let pos = vec_arg(args, 0, "nbody_accel")?;
+    let offset = scalar_i32(args, 1, "nbody_accel")?.max(0) as usize;
+    let total = pos.len() / 4;
+    let chunk = units as usize;
+    if offset + chunk > total {
+        return Err(Error::Artifact(format!(
+            "nbody_accel: chunk [{offset}, {}) exceeds {total} bodies",
+            offset + chunk
+        )));
+    }
+    let mut out = vec![0.0f32; chunk * 3];
+    let mut i = 0;
+    while i + L <= chunk {
+        let mut xi = [0.0f32; L];
+        let mut yi = [0.0f32; L];
+        let mut zi = [0.0f32; L];
+        for l in 0..L {
+            let b = (offset + i + l) * 4;
+            xi[l] = pos[b];
+            yi[l] = pos[b + 1];
+            zi[l] = pos[b + 2];
+        }
+        let mut ax = [0.0f32; L];
+        let mut ay = [0.0f32; L];
+        let mut az = [0.0f32; L];
+        for j in 0..total {
+            let (px, py, pz, pm) = (pos[j * 4], pos[j * 4 + 1], pos[j * 4 + 2], pos[j * 4 + 3]);
+            for l in 0..L {
+                let dx = px - xi[l];
+                let dy = py - yi[l];
+                let dz = pz - zi[l];
+                let r2 = dx * dx + dy * dy + dz * dz + EPS2;
+                let w = pm * (1.0 / r2.sqrt()) / r2;
+                ax[l] += w * dx;
+                ay[l] += w * dy;
+                az[l] += w * dz;
+            }
+        }
+        for l in 0..L {
+            out[(i + l) * 3] = ax[l];
+            out[(i + l) * 3 + 1] = ay[l];
+            out[(i + l) * 3 + 2] = az[l];
+        }
+        i += L;
+    }
+    while i < chunk {
+        let b = (offset + i) * 4;
+        let (xi, yi, zi) = (pos[b], pos[b + 1], pos[b + 2]);
+        let (mut ax, mut ay, mut az) = (0.0f32, 0.0f32, 0.0f32);
+        for j in 0..total {
+            let dx = pos[j * 4] - xi;
+            let dy = pos[j * 4 + 1] - yi;
+            let dz = pos[j * 4 + 2] - zi;
+            let r2 = dx * dx + dy * dy + dz * dz + EPS2;
+            let w = pos[j * 4 + 3] * (1.0 / r2.sqrt()) / r2;
+            ax += w * dx;
+            ay += w * dy;
+            az += w * dz;
+        }
+        out[i * 3] = ax;
+        out[i * 3 + 1] = ay;
+        out[i * 3 + 2] = az;
+        i += 1;
+    }
+    Ok(vec![out])
+}
+
+// --- segmentation ---------------------------------------------------------
+
+/// Two-threshold voxel classifier: below -> 0, above -> 255, else 128.
+fn segmentation_entry<const L: usize>(
+    _info: &ArtifactInfo,
+    _key: &SpecKey,
+    _units: u64,
+    args: &[NativeArg],
+) -> Result<Vec<Vec<f32>>> {
+    let vol = vec_arg(args, 0, "segmentation")?;
+    let thresholds = vec_arg(args, 1, "segmentation")?;
+    if thresholds.len() < 2 {
+        return Err(Error::Artifact(
+            "segmentation: thresholds needs [lo, hi]".into(),
+        ));
+    }
+    let (lo, hi) = (thresholds[0], thresholds[1]);
+    let classify = |v: f32| {
+        if v < lo {
+            0.0
+        } else if v > hi {
+            255.0
+        } else {
+            128.0
+        }
+    };
+    let n = vol.len();
+    let mut out = vec![0.0f32; n];
+    let mut i = 0;
+    while i + L <= n {
+        for l in 0..L {
+            out[i + l] = classify(vol[i + l]);
+        }
+        i += L;
+    }
+    while i < n {
+        out[i] = classify(vol[i]);
+        i += 1;
+    }
+    Ok(vec![out])
+}

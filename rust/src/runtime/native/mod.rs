@@ -1,0 +1,429 @@
+//! Native compiled CPU kernel backend (DESIGN.md §2.11, ROADMAP item 3).
+//!
+//! Outside `pjrt` builds the "real" scheduler used to drain a functional
+//! host stub — every BENCH number measured orchestration, never hardware.
+//! This module closes that gap: the AOT kernel menu from
+//! `python/compile/aot.py` is ported to Rust (`kernels`), specialized per
+//! tuned config (work-group size -> cache block, vector width -> const
+//! lane count) and dispatched straight from `ChunkRunner`'s hot path, so
+//! worker threads, residency, stealing, and the tuner/KB chain all price
+//! real FLOPs.
+//!
+//! Specialized variants live in a content-addressed registry keyed like
+//! the PR 6 KB store: `SpecKey { family, chunk_units, block, lanes }`
+//! hashes to a digest, and the engine `fingerprint()` — folded into
+//! `RealScheduler::manifest_digest` — keeps native profiles in a distinct
+//! key space from stub/sim/pjrt ones.
+
+pub mod affinity;
+pub mod kernels;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, RwLock};
+
+use crate::error::{Error, Result};
+use crate::runtime::artifacts::{ArtifactInfo, IoSpec, Manifest};
+use crate::util::hash::sha256_hex;
+
+pub use kernels::KernelFn;
+
+/// One staged kernel argument: a borrowed f32 plane (partition slice,
+/// whole copy, or carried stage output) or an immediate scalar.
+#[derive(Clone, Copy, Debug)]
+pub enum NativeArg<'a> {
+    F32(&'a [f32]),
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+impl<'a> NativeArg<'a> {
+    pub fn f32s(&self) -> Result<&'a [f32]> {
+        match self {
+            NativeArg::F32(v) => Ok(v),
+            other => Err(Error::Artifact(format!(
+                "native arg: expected f32 plane, got {other:?}"
+            ))),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        match self {
+            NativeArg::ScalarF32(v) => Ok(*v),
+            other => Err(Error::Artifact(format!(
+                "native arg: expected f32 scalar, got {other:?}"
+            ))),
+        }
+    }
+
+    pub fn scalar_i32(&self) -> Result<i32> {
+        match self {
+            NativeArg::ScalarI32(v) => Ok(*v),
+            other => Err(Error::Artifact(format!(
+                "native arg: expected i32 scalar, got {other:?}"
+            ))),
+        }
+    }
+}
+
+/// Identity of a specialized kernel variant: the tuned parameters that
+/// were baked into its code shape. Two dispatches with equal keys share
+/// one registry entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpecKey {
+    pub family: String,
+    /// Partition units per launch of the artifact this variant serves.
+    pub chunk_units: u64,
+    /// Cache-block length (elements per tile), derived from the tuner's
+    /// work-group size.
+    pub block: u32,
+    /// Const-generic lane width the body was monomorphized with.
+    pub lanes: u32,
+}
+
+impl SpecKey {
+    /// Content address, in the style of the KB store's profile keys.
+    pub fn digest(&self) -> String {
+        sha256_hex(
+            format!(
+                "native-spec\0{}\0{}\0{}\0{}",
+                self.family, self.chunk_units, self.block, self.lanes
+            )
+            .as_bytes(),
+        )
+    }
+}
+
+/// A registered specialization: its key, content address, and the
+/// monomorphized entry point.
+pub struct SpecVariant {
+    pub key: SpecKey,
+    pub digest: String,
+    pub run: KernelFn,
+}
+
+/// The native backend: resolves `(family, tuned config)` to specialized
+/// variants and executes them. Cheap to share (`Arc`), internally
+/// synchronized; worker threads dispatch concurrently through `&self`.
+pub struct NativeEngine {
+    /// When set, every dispatch uses the lane-1/block-1 variant — the
+    /// single-thread-scalar reference the parity tests and BENCH_pr8's
+    /// baseline leg run against.
+    scalar_only: bool,
+    /// Content-addressed variant registry (digest -> variant), the
+    /// in-process analogue of the KB store's object directory.
+    registry: RwLock<BTreeMap<String, Arc<SpecVariant>>>,
+}
+
+impl Default for NativeEngine {
+    fn default() -> NativeEngine {
+        NativeEngine::new()
+    }
+}
+
+impl NativeEngine {
+    /// The production engine: lane/block specialization enabled.
+    pub fn new() -> NativeEngine {
+        NativeEngine {
+            scalar_only: false,
+            registry: RwLock::new(BTreeMap::new()),
+        }
+    }
+
+    /// The scalar reference engine: every family pinned to lanes=1,
+    /// block=1. Used as the bit-exact baseline for parity tests and the
+    /// single-thread-scalar leg of BENCH_pr8.
+    pub fn scalar_reference() -> NativeEngine {
+        NativeEngine {
+            scalar_only: true,
+            registry: RwLock::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn is_scalar_reference(&self) -> bool {
+        self.scalar_only
+    }
+
+    /// Map a tuned work-group size to (lanes, block) and return the
+    /// registered variant, monomorphizing on first use.
+    pub fn specialize(&self, family: &str, chunk_units: u64, wgs: u32) -> Result<Arc<SpecVariant>> {
+        let lanes = if self.scalar_only {
+            1
+        } else if wgs >= 256 {
+            8
+        } else if wgs >= 64 {
+            4
+        } else {
+            1
+        };
+        let block = if self.scalar_only { 1 } else { wgs.max(1) };
+        let key = SpecKey {
+            family: family.to_string(),
+            chunk_units,
+            block,
+            lanes,
+        };
+        let digest = key.digest();
+        if let Some(v) = self.registry.read().unwrap().get(&digest) {
+            return Ok(v.clone());
+        }
+        let run = kernels::select(family, lanes)?;
+        let variant = Arc::new(SpecVariant {
+            key,
+            digest: digest.clone(),
+            run,
+        });
+        let mut reg = self.registry.write().unwrap();
+        Ok(reg.entry(digest).or_insert(variant).clone())
+    }
+
+    /// Execute one launch: `units` partition units of `info`'s family
+    /// under the tuned work-group size `wgs`. Returns one plane per
+    /// artifact output.
+    pub fn run_chunk(
+        &self,
+        info: &ArtifactInfo,
+        wgs: u32,
+        units: u64,
+        args: &[NativeArg],
+    ) -> Result<Vec<Vec<f32>>> {
+        let variant = self.specialize(&info.family, info.chunk_units, wgs)?;
+        (variant.run)(info, &variant.key, units, args)
+    }
+
+    /// Number of distinct specializations materialized so far.
+    pub fn variants(&self) -> usize {
+        self.registry.read().unwrap().len()
+    }
+
+    /// Digest of the kernel set this engine executes. Folded into the
+    /// scheduler's manifest digest so native profiles never collide with
+    /// stub/sim/pjrt ones, and scalar-reference runs never warm-start a
+    /// vectorized fleet.
+    pub fn fingerprint(&self) -> String {
+        sha256_hex(
+            format!(
+                "native-kernels-v1\0{}\0scalar_only={}",
+                kernels::FAMILIES.join(","),
+                self.scalar_only
+            )
+            .as_bytes(),
+        )
+    }
+}
+
+fn io(name: &str, shape: &[u64], dtype: &str) -> IoSpec {
+    IoSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype: dtype.to_string(),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn art(
+    name: String,
+    family: &str,
+    inputs: Vec<IoSpec>,
+    outputs: Vec<IoSpec>,
+    chunk_units: u64,
+    flops: f64,
+    bytes: f64,
+) -> ArtifactInfo {
+    ArtifactInfo {
+        file: PathBuf::from(format!("{name}.native")),
+        name,
+        family: family.to_string(),
+        inputs,
+        outputs,
+        chunk_units,
+        flops,
+        bytes,
+    }
+}
+
+/// The native artifact menu — the same families, shapes, chunk menus and
+/// analytic costs `python/compile/aot.py` emits for the PJRT path, so
+/// decomposition, the simulator's cost model, and `pick_artifact` behave
+/// identically under either backend. `dir` is a marker path; native
+/// artifacts have no on-disk HLO.
+pub fn builtin_manifest() -> Manifest {
+    let mut by_family: BTreeMap<String, Vec<ArtifactInfo>> = BTreeMap::new();
+    let mut add = |a: ArtifactInfo| by_family.entry(a.family.clone()).or_default().push(a);
+
+    for n in [4096u64, 32_768, 262_144] {
+        add(art(
+            format!("saxpy_n{n}"),
+            "saxpy",
+            vec![
+                io("alpha", &[1], "f32"),
+                io("x", &[n], "f32"),
+                io("y", &[n], "f32"),
+            ],
+            vec![io("out", &[n], "f32")],
+            n,
+            2.0 * n as f64,
+            12.0 * n as f64,
+        ));
+    }
+
+    for rows in [8u64, 64] {
+        for w in [256u64, 512, 1024] {
+            let px = (rows * w) as f64;
+            add(art(
+                format!("filter_pipeline_r{rows}_w{w}"),
+                "filter_pipeline",
+                vec![
+                    io("img", &[rows, w], "f32"),
+                    io("seed", &[1], "i32"),
+                    io("row_off", &[1], "i32"),
+                    io("thresh", &[1], "f32"),
+                ],
+                vec![io("out", &[rows, w], "f32")],
+                rows,
+                60.0 * px,
+                8.0 * px,
+            ));
+        }
+    }
+
+    {
+        let (rows, w) = (8u64, 512u64);
+        let px = (rows * w) as f64;
+        add(art(
+            format!("gaussian_noise_r{rows}_w{w}"),
+            "gaussian_noise",
+            vec![
+                io("img", &[rows, w], "f32"),
+                io("seed", &[1], "i32"),
+                io("row_off", &[1], "i32"),
+            ],
+            vec![io("out", &[rows, w], "f32")],
+            rows,
+            44.0 * px,
+            8.0 * px,
+        ));
+        add(art(
+            format!("solarize_r{rows}_w{w}"),
+            "solarize",
+            vec![io("img", &[rows, w], "f32"), io("thresh", &[1], "f32")],
+            vec![io("out", &[rows, w], "f32")],
+            rows,
+            2.0 * px,
+            8.0 * px,
+        ));
+        add(art(
+            format!("mirror_r{rows}_w{w}"),
+            "mirror",
+            vec![io("img", &[rows, w], "f32")],
+            vec![io("out", &[rows, w], "f32")],
+            rows,
+            0.0,
+            8.0 * px,
+        ));
+    }
+
+    for b in [4u64, 32] {
+        let n = 512u64;
+        add(art(
+            format!("fft_roundtrip_b{b}_n{n}"),
+            "fft_roundtrip",
+            vec![io("re", &[b, n], "f32"), io("im", &[b, n], "f32")],
+            vec![io("re_out", &[b, n], "f32"), io("im_out", &[b, n], "f32")],
+            b,
+            2.0 * (b * 5 * n * 9) as f64,
+            16.0 * (b * n) as f64,
+        ));
+    }
+
+    // Every body count carries a chunk equal to the family quantum (128):
+    // the partitioner aligns task sizes to the smallest chunk of the
+    // *family*, while `pick_artifact`'s COPY shape check filters by body
+    // count — so each N needs a quantum-sized artifact to stay pickable.
+    for (total, chunk) in [(512u64, 128u64), (2048, 128), (2048, 256)] {
+        add(art(
+            format!("nbody_accel_N{total}_c{chunk}"),
+            "nbody_accel",
+            vec![io("pos", &[total, 4], "f32"), io("offset", &[1], "i32")],
+            vec![io("acc", &[chunk, 3], "f32")],
+            chunk,
+            20.0 * (chunk * total) as f64,
+            16.0 * total as f64 + 12.0 * chunk as f64,
+        ));
+    }
+
+    for d in [8u64, 64] {
+        let (h, w) = (32u64, 32u64);
+        let vox = (d * h * w) as f64;
+        add(art(
+            format!("segmentation_d{d}_h{h}_w{w}"),
+            "segmentation",
+            vec![
+                io("vol", &[d, h, w], "f32"),
+                io("thresholds", &[2], "f32"),
+            ],
+            vec![io("out", &[d, h, w], "f32")],
+            d,
+            2.0 * vox,
+            8.0 * vox,
+        ));
+    }
+
+    Manifest {
+        by_family,
+        dir: PathBuf::from("<native-builtin>"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specialization_is_content_addressed_and_cached() {
+        let eng = NativeEngine::new();
+        let a = eng.specialize("saxpy", 4096, 256).unwrap();
+        let b = eng.specialize("saxpy", 4096, 256).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same key must share one variant");
+        let c = eng.specialize("saxpy", 4096, 64).unwrap();
+        assert_ne!(a.digest, c.digest, "different wgs -> different variant");
+        assert_eq!(eng.variants(), 2);
+        assert_eq!(a.key.lanes, 8);
+        assert_eq!(c.key.lanes, 4);
+    }
+
+    #[test]
+    fn scalar_reference_pins_lane_and_block() {
+        let eng = NativeEngine::scalar_reference();
+        let v = eng.specialize("nbody_accel", 256, 256).unwrap();
+        assert_eq!((v.key.lanes, v.key.block), (1, 1));
+        assert_ne!(
+            eng.fingerprint(),
+            NativeEngine::new().fingerprint(),
+            "scalar reference must live in its own digest space"
+        );
+    }
+
+    #[test]
+    fn builtin_manifest_covers_all_native_families() {
+        let m = builtin_manifest();
+        for f in kernels::FAMILIES {
+            assert!(m.family(f).is_ok(), "missing family {f}");
+        }
+        // Chunk menus must be ascending so best_chunk's reverse scan
+        // picks the largest divisor.
+        for arts in m.by_family.values() {
+            for pair in arts.windows(2) {
+                assert!(pair[0].chunk_units <= pair[1].chunk_units);
+            }
+        }
+        assert_eq!(m.family("saxpy").unwrap().len(), 3);
+        assert_eq!(m.family("fft_roundtrip").unwrap()[1].outputs.len(), 2);
+    }
+
+    #[test]
+    fn unknown_family_is_a_clean_error() {
+        let eng = NativeEngine::new();
+        assert!(eng.specialize("sparse_spmv", 64, 256).is_err());
+    }
+}

@@ -149,6 +149,11 @@ pub struct LaunchOpts<'p> {
     /// on) a device another request has reserved. `None` drains on every
     /// slot the plan names.
     pub mask: Option<SlotMask>,
+    /// Pin each CPU worker to the core matching its slot index before it
+    /// drains (native backend, DESIGN.md §2.11): with the pin in place,
+    /// per-slot residency and steal pricing describe physical caches.
+    /// Best-effort — unsupported platforms drain unpinned.
+    pub pin_cores: bool,
 }
 
 impl LaunchOutput {
@@ -217,6 +222,11 @@ pub fn launch_with<R: TaskRunner>(
                 let task_count = &task_count;
                 scope.spawn(move || {
                     let my_slot = shared.slot(i);
+                    if opts.pin_cores {
+                        if let ExecSlot::CpuSub { idx } = my_slot {
+                            crate::runtime::native::affinity::pin_current_thread(idx as usize);
+                        }
+                    }
                     let mut busy = 0.0f64;
                     loop {
                         if stop.load(Ordering::Relaxed) {
@@ -490,6 +500,11 @@ pub fn launch_graph<R: GraphRunner>(
                 let task_count = &task_count;
                 scope.spawn(move || {
                     let my_slot = ready.slot(i);
+                    if opts.pin_cores {
+                        if let ExecSlot::CpuSub { idx } = my_slot {
+                            crate::runtime::native::affinity::pin_current_thread(idx as usize);
+                        }
+                    }
                     let mut busy = 0.0f64;
                     loop {
                         if stop.load(Ordering::Relaxed)

@@ -659,17 +659,9 @@ mod tests {
         // drain's makespan is the sum of per-stage maxima plus a gate per
         // stage boundary, which strictly exceeds the dataflow drain's
         // max-over-slots — and its slots idle strictly more.
-        use crate::sim::cost::CostParams;
-        let quiet = CostParams {
-            cpu_noise: 0.0,
-            gpu_noise: 0.0,
-            straggler_p: 0.0,
-            ..CostParams::default()
-        };
         let b = crate::bench::workloads::filter_pipeline(2048, 2048, false);
-        let mut df =
-            SimEnv::new(SimMachine::new(i7_hd7950(1), 17).with_params(quiet.clone()));
-        let mut bar = SimEnv::new(SimMachine::new(i7_hd7950(1), 17).with_params(quiet));
+        let mut df = SimEnv::new(SimMachine::quiet(i7_hd7950(1), 17));
+        let mut bar = SimEnv::new(SimMachine::quiet(i7_hd7950(1), 17));
         bar.set_drain_mode(DrainMode::Barrier);
         let c = cfg(0.25);
         let d = df.execute(&b.sct, b.total_units, &c).unwrap();
@@ -696,14 +688,7 @@ mod tests {
         // A CPU-only reservation must price exactly like an explicit
         // cpu_share=1 config with no GPU slots — bit-identically, since
         // quiet cost params make the pricing a pure function.
-        use crate::sim::cost::CostParams;
-        let quiet = CostParams {
-            cpu_noise: 0.0,
-            gpu_noise: 0.0,
-            straggler_p: 0.0,
-            ..CostParams::default()
-        };
-        let mk = || SimEnv::new(SimMachine::new(i7_hd7950(1), 5).with_params(quiet.clone()));
+        let mk = || SimEnv::new(SimMachine::quiet(i7_hd7950(1), 5));
         let c = cfg(0.25);
         let mut full = mk();
         let f = full.execute(&saxpy(), 1 << 22, &c).unwrap();

@@ -33,6 +33,7 @@ use crate::platform::device::Machine;
 use crate::runtime::artifacts::Manifest;
 use crate::runtime::client::RtClient;
 use crate::runtime::exec::{ChunkRunner, RequestArgs};
+use crate::runtime::native::NativeEngine;
 use crate::runtime::residency::{self, ArgKey, ResidencyKey, ResidencyPool, TransferStats};
 use crate::scheduler::launcher::{
     launch_graph, launch_with, GraphRunner, LaunchOpts, SlotClock, StealPolicy, SyncOutcome,
@@ -74,6 +75,11 @@ pub struct RealScheduler<'a> {
     /// spawns workers only for granted slots — stealing can never cross
     /// the reservation boundary.
     pub slot_mask: Option<SlotMask>,
+    /// Native CPU kernel backend (DESIGN.md §2.11): when set, every
+    /// [`ChunkRunner`] this scheduler spawns dispatches chunk launches to
+    /// specialized compiled-in kernels under the request's tuned
+    /// work-group size, and CPU workers pin to their slot's core.
+    pub native: Option<Arc<NativeEngine>>,
 }
 
 /// Backwards-compatible name for the outputs+timing of one request.
@@ -142,7 +148,21 @@ impl<'a> RealScheduler<'a> {
             ),
             drain_mode: DrainMode::default(),
             slot_mask: None,
+            native: None,
         }
+    }
+
+    /// Execute through the native CPU backend instead of PJRT/stub. The
+    /// engine is shared (`Arc`) so sessions, pools and benches can reuse
+    /// one specialization registry across schedulers.
+    pub fn with_native(mut self, engine: Arc<NativeEngine>) -> Self {
+        self.native = Some(engine);
+        self
+    }
+
+    /// The native engine, when this scheduler runs the native backend.
+    pub fn native_engine(&self) -> Option<&Arc<NativeEngine>> {
+        self.native.as_ref()
     }
 
     /// The configuration a request actually runs under: the caller's,
@@ -200,12 +220,15 @@ impl<'a> RealScheduler<'a> {
     ) -> Result<RunOutcome> {
         let quantum = self.sct_chunk_quantum(sct);
         let cfg = &self.masked_cfg(cfg);
+        // The tuned work-group size rides to every ChunkRunner: it is the
+        // native backend's specialization key (lane width, cache block).
+        let wgs = cfg.wgs;
         let p = plan(&self.machine, sct, total_units, cfg, quantum)?;
         let request = self.request_id(sct, args, total_units);
         let before = self.residency.stats();
         let mut skipped = 0u64;
         if self.drain_mode == DrainMode::Dataflow {
-            let (outputs, clock, skips) = self.run_graph(sct, args, &p, request)?;
+            let (outputs, clock, skips) = self.run_graph(sct, args, &p, request, wgs)?;
             let mut out = self.outcome(outputs, clock);
             let mut transfers = self.residency.stats().minus(&before);
             transfers.steals_skipped = skips;
@@ -221,7 +244,7 @@ impl<'a> RealScheduler<'a> {
                 let mut clock = SlotClock::default();
                 for it in 0..state.max_iters {
                     let (outs, it_clock, it_skips) =
-                        self.run_plan(body, &local, &p, request)?;
+                        self.run_plan(body, &local, &p, request, wgs)?;
                     clock.accumulate(&it_clock);
                     skipped += it_skips;
                     outputs = outs;
@@ -255,13 +278,13 @@ impl<'a> RealScheduler<'a> {
                 // partition granularity (no chunk splitting): splitting
                 // would change the fold arity for order-sensitive merges.
                 let queues = WorkQueues::from_plan(&p);
-                let (partials, clock, skips) = self.drain(map, args, queues, request)?;
+                let (partials, clock, skips) = self.drain(map, args, queues, request, wgs)?;
                 skipped += skips;
                 let merged = reduce_partials(reduce, &partials)?;
                 self.outcome(merged, clock)
             }
             _ => {
-                let (outs, clock, skips) = self.run_plan(sct, args, &p, request)?;
+                let (outs, clock, skips) = self.run_plan(sct, args, &p, request, wgs)?;
                 skipped += skips;
                 self.outcome(outs, clock)
             }
@@ -284,12 +307,16 @@ impl<'a> RealScheduler<'a> {
         args: &RequestArgs,
         p: &PartitionPlan,
         request: u64,
+        wgs: u32,
     ) -> Result<(Vec<ArgValue>, SlotClock, u64)> {
         let stages = flatten_stages(sct)?;
         let graph = build_graph(&stages, p, self.tasks_per_slot)?;
-        let chunk_runner = ChunkRunner::new(self.client, self.manifest)
+        let mut chunk_runner = ChunkRunner::new(self.client, self.manifest)
             .with_timings(self.timings.clone())
             .with_residency(self.residency.clone(), request);
+        if let Some(engine) = &self.native {
+            chunk_runner = chunk_runner.with_native(engine.clone(), wgs);
+        }
         let runner = GraphTaskRunner {
             runner: &chunk_runner,
             stages: &stages,
@@ -309,6 +336,7 @@ impl<'a> RealScheduler<'a> {
                     default_task_secs: 1e-3,
                 }),
                 mask: self.slot_mask.clone(),
+                pin_cores: self.native.is_some(),
             },
         )?;
         self.launches += chunk_runner.launch_count();
@@ -332,9 +360,10 @@ impl<'a> RealScheduler<'a> {
         args: &RequestArgs,
         p: &PartitionPlan,
         request: u64,
+        wgs: u32,
     ) -> Result<(Vec<ArgValue>, SlotClock, u64)> {
         let queues = WorkQueues::from_plan_chunked(p, self.tasks_per_slot);
-        let (partials, clock, skipped) = self.drain(sct, args, queues, request)?;
+        let (partials, clock, skipped) = self.drain(sct, args, queues, request, wgs)?;
         Ok((assemble_partials(&partials)?, clock, skipped))
     }
 
@@ -347,10 +376,14 @@ impl<'a> RealScheduler<'a> {
         args: &RequestArgs,
         queues: WorkQueues,
         request: u64,
+        wgs: u32,
     ) -> Result<(Vec<Vec<ArgValue>>, SlotClock, u64)> {
-        let runner = ChunkRunner::new(self.client, self.manifest)
+        let mut runner = ChunkRunner::new(self.client, self.manifest)
             .with_timings(self.timings.clone())
             .with_residency(self.residency.clone(), request);
+        if let Some(engine) = &self.native {
+            runner = runner.with_native(engine.clone(), wgs);
+        }
         let task_runner = SlotTaskRunner {
             runner: &runner,
             sct,
@@ -369,6 +402,7 @@ impl<'a> RealScheduler<'a> {
                     default_task_secs: 1e-3,
                 }),
                 mask: self.slot_mask.clone(),
+                pin_cores: self.native.is_some(),
             },
         )?;
         self.launches += runner.launch_count();
@@ -404,16 +438,26 @@ impl<'a> ExecEnv for RealScheduler<'a> {
     /// Real measurements additionally depend on the compiled kernel set:
     /// fold the artifact manifest into the digest so profiles from
     /// different kernel builds (or from the analytic backend) never
-    /// exchange as exact warm-start hits (DESIGN.md §2.9).
+    /// exchange as exact warm-start hits (DESIGN.md §2.9). Native-backend
+    /// schedulers fold the engine fingerprint under a distinct label, so
+    /// hardware-measured profiles never collide with stub/sim/pjrt ones
+    /// — and scalar-reference timings never warm-start a vectorized
+    /// fleet (DESIGN.md §2.11).
     fn manifest_digest(&self) -> String {
-        crate::util::hash::sha256_hex(
-            format!(
+        let digest = match &self.native {
+            Some(engine) => format!(
+                "native\0{}\0{}\0{}",
+                self.machine.manifest_json(),
+                self.manifest.fingerprint_json(),
+                engine.fingerprint()
+            ),
+            None => format!(
                 "real\0{}\0{}",
-                self.machine.manifest_json().to_string(),
-                self.manifest.fingerprint_json().to_string()
-            )
-            .as_bytes(),
-        )
+                self.machine.manifest_json(),
+                self.manifest.fingerprint_json()
+            ),
+        };
+        crate::util::hash::sha256_hex(digest.as_bytes())
     }
 
     fn chunk_quantum(&self, sct: &Sct) -> u64 {

@@ -39,18 +39,21 @@ pub mod serve;
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::sync::{
+    Arc, Mutex, MutexGuard, OnceLock, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
 use std::time::Instant;
 
 use crate::balance::{AdaptiveBinarySearch, Monitor};
 use crate::data::vector::ArgValue;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::kb::store::snapshot::KbSnapshot;
 use crate::kb::KnowledgeBase;
 use crate::platform::cpu::FissionLevel;
 use crate::platform::device::Machine;
 use crate::runtime::artifacts::Manifest;
 use crate::runtime::client::RtClient;
+use crate::runtime::native::NativeEngine;
 use crate::runtime::exec::RequestArgs;
 use crate::scheduler::real::RealScheduler;
 use crate::scheduler::{DrainMode, ExecEnv, ExecOutcome, SimEnv, SlotMask};
@@ -60,6 +63,45 @@ use crate::tuner::profile::{FrameworkConfig, Profile, ProfileOrigin};
 
 pub use computation::Computation;
 pub use serve::{ServeOpts, ServeReport, ServeRequest, SessionPool};
+
+/// Which execution backend a session should be built over — the CLI's
+/// `--backend sim|native|pjrt` flag parses into this (DESIGN.md §2.11).
+/// Backends differ in type ([`SimEnv`] vs [`RealScheduler`]), so selection
+/// happens at construction: [`Session::simulated`], [`Session::native`] or
+/// [`Session::real`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// The analytic simulator — deterministic, no hardware touched.
+    #[default]
+    Sim,
+    /// Compiled in-process CPU kernels: real buffers, real wall-clock
+    /// timing into Algorithm 1 and the knowledge base.
+    Native,
+    /// AOT-compiled PJRT artifacts (needs the `pjrt` feature and
+    /// `make artifacts`; errors at run time in stub builds).
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "sim" => Ok(Backend::Sim),
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => Err(Error::Usage(format!(
+                "unknown backend '{other}' (expected sim|native|pjrt)"
+            ))),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Backend::Sim => "sim",
+            Backend::Native => "native",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
 
 /// How [`Session::run`] obtained the configuration of one request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -274,6 +316,49 @@ impl<'a> Session<RealScheduler<'a>> {
         manifest: &'a Manifest,
     ) -> Session<RealScheduler<'a>> {
         Session::new(RealScheduler::new(machine, client, manifest))
+    }
+}
+
+/// Process-wide runtime state for the native backend. [`RealScheduler`]
+/// borrows its client and manifest, so the zero-setup constructors lean on
+/// `'static` once-initialized instances instead of threading lifetimes
+/// through every CLI call site. The client is the offline handle (the
+/// native engine intercepts execution before any PJRT compile); the
+/// manifest is the built-in specialization menu ported from `aot.py`.
+fn native_runtime() -> Result<(&'static RtClient, &'static Manifest)> {
+    static CLIENT: OnceLock<RtClient> = OnceLock::new();
+    static MANIFEST: OnceLock<Manifest> = OnceLock::new();
+    if CLIENT.get().is_none() {
+        // Fallible init: build outside the cell, ignore a lost set race.
+        let built = RtClient::offline()?;
+        let _ = CLIENT.set(built);
+    }
+    let client = CLIENT.get().expect("client set above");
+    let manifest = MANIFEST.get_or_init(crate::runtime::native::builtin_manifest);
+    Ok((client, manifest))
+}
+
+impl Session<RealScheduler<'static>> {
+    /// A session executing compiled native CPU kernels in-process
+    /// (DESIGN.md §2.11): the scheduler's full chunk/steal/residency
+    /// machinery runs over real buffers, and observed wall-clock timings
+    /// feed Algorithm 1 and the knowledge base. The KB digest is
+    /// native-specific, so learned profiles never cross-contaminate sim
+    /// or PJRT stores.
+    pub fn native(machine: Machine) -> Result<Session<RealScheduler<'static>>> {
+        Session::native_with_engine(machine, Arc::new(NativeEngine::new()))
+    }
+
+    /// [`Session::native`] over an explicit engine — the parity tests and
+    /// the hot-path bench pass [`NativeEngine::scalar_reference`] here to
+    /// get the single-lane baseline on the identical scheduling path.
+    pub fn native_with_engine(
+        machine: Machine,
+        engine: Arc<NativeEngine>,
+    ) -> Result<Session<RealScheduler<'static>>> {
+        let (client, manifest) = native_runtime()?;
+        let sched = RealScheduler::new(machine, client, manifest).with_native(engine);
+        Ok(Session::new(sched))
     }
 }
 
@@ -735,6 +820,63 @@ mod tests {
     use super::*;
     use crate::bench::workloads;
     use crate::platform::device::i7_hd7950;
+
+    #[test]
+    fn backend_parses_and_labels() {
+        assert_eq!(Backend::parse("sim").unwrap(), Backend::Sim);
+        assert_eq!(Backend::parse("native").unwrap(), Backend::Native);
+        assert_eq!(Backend::parse("pjrt").unwrap(), Backend::Pjrt);
+        assert_eq!(Backend::Native.label(), "native");
+        assert!(Backend::parse("opencl").is_err());
+        assert_eq!(Backend::default(), Backend::Sim);
+    }
+
+    #[test]
+    fn native_session_runs_saxpy_end_to_end() {
+        use crate::data::vector::VectorArg;
+        use crate::platform::device::host_cpu;
+        let n = 1u64 << 20;
+        let x: Vec<f32> = (0..n).map(|i| (i % 251) as f32 * 0.5).collect();
+        let y: Vec<f32> = (0..n).map(|i| (i % 13) as f32).collect();
+        let args = RequestArgs {
+            vectors: vec![
+                VectorArg::partitioned_f32("x", x.clone(), 1),
+                VectorArg::partitioned_f32("y", y.clone(), 1),
+            ],
+            scalars: vec![2.0],
+        };
+        let comp = Computation::from(workloads::saxpy(n));
+        let s = Session::native(host_cpu()).unwrap();
+        let out = s.run_with(&comp, &args, ConfigOverride::new()).unwrap();
+        assert!(out.launches > 0, "native run must dispatch real launches");
+        assert!(out.exec.total > 0.0, "native timing must be wall-clock");
+        let got = match &out.outputs[0] {
+            ArgValue::F32(v) => v,
+            other => panic!("expected f32 output, got {other:?}"),
+        };
+        assert_eq!(got.len(), n as usize);
+        // Exact f32 equality: the kernel computes a*x[i]+y[i] with the
+        // same expression, and task outputs merge in unit order.
+        for (i, &g) in got.iter().enumerate() {
+            assert_eq!(g, 2.0f32 * x[i] + y[i], "mismatch at {i}");
+        }
+    }
+
+    #[test]
+    fn native_digest_separates_scalar_and_vector_profiles() {
+        use crate::platform::device::host_cpu;
+        let v = Session::native(host_cpu()).unwrap();
+        let s = Session::native_with_engine(
+            host_cpu(),
+            Arc::new(NativeEngine::scalar_reference()),
+        )
+        .unwrap();
+        let dv = v.env().manifest_digest();
+        let ds = s.env().manifest_digest();
+        assert_ne!(dv, ds, "scalar reference must not warm-start vector KBs");
+        let sim = Session::simulated(host_cpu(), 3);
+        assert_ne!(dv, sim.env().manifest_digest());
+    }
 
     #[test]
     fn override_applies_on_machine_baseline() {

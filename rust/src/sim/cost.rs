@@ -65,6 +65,20 @@ impl Default for CostParams {
     }
 }
 
+impl CostParams {
+    /// The calibrated model with every stochastic term zeroed (no lognormal
+    /// noise, no stragglers) — deterministic simulated timings for tests
+    /// that assert on exact schedules or reproducible balance decisions.
+    pub fn quiet() -> CostParams {
+        CostParams {
+            cpu_noise: 0.0,
+            gpu_noise: 0.0,
+            straggler_p: 0.0,
+            ..CostParams::default()
+        }
+    }
+}
+
 /// Aggregated cost profile of one SCT execution request, per epu unit.
 /// Iteration factors (Loop) are folded in at aggregation time.
 #[derive(Clone, Debug)]

@@ -50,6 +50,13 @@ impl SimMachine {
         self
     }
 
+    /// A noise-free simulated machine ([`CostParams::quiet`]): pricing is
+    /// a pure function of (plan, cost, config), so repeated runs agree to
+    /// the bit. The standard base for deterministic tests and propchecks.
+    pub fn quiet(machine: Machine, seed: u64) -> SimMachine {
+        SimMachine::new(machine, seed).with_params(CostParams::quiet())
+    }
+
     pub fn with_load(mut self, load: LoadProfile) -> SimMachine {
         self.load = load;
         self

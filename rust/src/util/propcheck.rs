@@ -146,10 +146,31 @@ where
             let (min_value, min_msg) = shrink_loop(value, msg, &prop);
             panic!(
                 "property failed (case {case}/{cases}, seed {seed}):\n  \
-                 counterexample: {min_value:?}\n  reason: {min_msg}"
+                 counterexample: {min_value:?}\n  reason: {min_msg}\n  \
+                 replay: propcheck::replay({seed}, {case}, gen, prop)"
             );
         }
     }
+}
+
+/// Replay one case of a failed [`forall`] run: regenerate the exact value
+/// `forall(seed, ..)` drew for `case` (the generator stream is a pure
+/// function of the seed) and apply `prop` to it, returning the verdict
+/// instead of shrinking and panicking. The debugging hook the forall
+/// failure message points at — drop it into a scratch test with the same
+/// `gen`/`prop` to iterate on a single counterexample.
+pub fn replay<T, G, P>(seed: u64, case: usize, mut gen: G, prop: P) -> Result<(), String>
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    let mut value = gen(&mut rng);
+    for _ in 0..case {
+        value = gen(&mut rng);
+    }
+    prop(&value)
 }
 
 fn shrink_loop<T: Shrink, P: Fn(&T) -> Result<(), String>>(
@@ -212,6 +233,34 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn replay_reproduces_the_forall_stream() {
+        // forall and replay must draw the identical value for (seed, case):
+        // collect forall's stream, then spot-check replay against it.
+        let seen = std::cell::RefCell::new(Vec::new());
+        forall(
+            7,
+            20,
+            |r| r.below(1_000_000),
+            |&n| {
+                seen.borrow_mut().push(n);
+                Ok(())
+            },
+        );
+        let seen = seen.into_inner();
+        for case in [0usize, 5, 19] {
+            let expect = seen[case];
+            replay(7, case, |r| r.below(1_000_000), |&n| {
+                if n == expect {
+                    Ok(())
+                } else {
+                    Err(format!("replayed {n}, forall drew {expect}"))
+                }
+            })
+            .unwrap();
+        }
     }
 
     #[test]

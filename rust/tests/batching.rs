@@ -30,7 +30,6 @@ use marrow::platform::device::i7_hd7950;
 use marrow::scheduler::SimEnv;
 use marrow::session::serve::{ServeOpts, ServeReport, ServeRequest, SessionPool};
 use marrow::session::{Computation, Session};
-use marrow::sim::cost::CostParams;
 use marrow::sim::machine::SimMachine;
 use marrow::util::propcheck::forall;
 use marrow::util::rng::Rng;
@@ -75,15 +74,8 @@ fn gen_mix(r: &mut Rng) -> Vec<u64> {
 /// simulator noise, and a frozen balancer: given the same request
 /// sequence, execution is bit-for-bit reproducible.
 fn pool() -> SessionPool<SimEnv> {
-    let quiet = CostParams {
-        cpu_noise: 0.0,
-        gpu_noise: 0.0,
-        straggler_p: 0.0,
-        ..CostParams::default()
-    };
     let pool = SessionPool::build(1, |i| {
-        Session::sim(SimMachine::new(i7_hd7950(1), 7 + i as u64).with_params(quiet))
-            .with_max_dev(10.0)
+        Session::sim(SimMachine::quiet(i7_hd7950(1), 7 + i as u64)).with_max_dev(10.0)
     });
     for (kind, cpu_share) in [(0, 0.5), (1, 0.9), (2, 0.1), (3, 0.5)] {
         let c = comp(kind);

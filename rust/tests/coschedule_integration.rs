@@ -20,22 +20,13 @@ use marrow::scheduler::{
 };
 use marrow::session::serve::{ServeOpts, ServeRequest, SessionPool};
 use marrow::session::{Computation, Session};
-use marrow::sim::cost::CostParams;
 use marrow::sim::machine::SimMachine;
 
-fn quiet() -> CostParams {
-    CostParams {
-        cpu_noise: 0.0,
-        gpu_noise: 0.0,
-        straggler_p: 0.0,
-        ..CostParams::default()
-    }
-}
-
-/// A session over a noise-free simulated machine: pricing is a pure
-/// function of (plan, cost, config), so repeated runs agree to the bit.
+/// A session over a noise-free simulated machine ([`SimMachine::quiet`]):
+/// pricing is a pure function of (plan, cost, config), so repeated runs
+/// agree to the bit.
 fn quiet_session(seed: u64) -> Session<SimEnv> {
-    Session::sim(SimMachine::new(i7_hd7950(1), seed).with_params(quiet()))
+    Session::sim(SimMachine::quiet(i7_hd7950(1), seed))
 }
 
 /// The heterogeneous pair: one CPU-leaning and one GPU-leaning request

@@ -32,7 +32,6 @@ use marrow::scheduler::{
 use marrow::sct::{KernelSpec, ParamSpec, Sct};
 use marrow::session::serve::{ServeOpts, ServeRequest, SessionPool};
 use marrow::session::{Computation, Session};
-use marrow::sim::cost::CostParams;
 use marrow::sim::machine::SimMachine;
 use marrow::tuner::profile::FrameworkConfig;
 use marrow::Result;
@@ -439,13 +438,7 @@ fn graph_steals_admitted_and_booked_when_migration_is_free() {
 // ---------------------------------------------------------------------------
 
 fn quiet_env(seed: u64) -> SimEnv {
-    let quiet = CostParams {
-        cpu_noise: 0.0,
-        gpu_noise: 0.0,
-        straggler_p: 0.0,
-        ..CostParams::default()
-    };
-    SimEnv::new(SimMachine::new(i7_hd7950(1), seed).with_params(quiet))
+    SimEnv::new(SimMachine::quiet(i7_hd7950(1), seed))
 }
 
 fn cfg() -> FrameworkConfig {

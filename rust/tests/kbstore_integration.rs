@@ -16,19 +16,12 @@ use marrow::platform::device::i7_hd7950;
 use marrow::runtime::exec::RequestArgs;
 use marrow::scheduler::SimEnv;
 use marrow::session::{Computation, ConfigOrigin, Session};
-use marrow::sim::cost::CostParams;
 use marrow::sim::machine::SimMachine;
 use marrow::tuner::profile::ProfileOrigin;
 use marrow::util::propcheck::forall;
 
 fn quiet_session(seed: u64) -> Session<SimEnv> {
-    let quiet = CostParams {
-        cpu_noise: 0.0,
-        gpu_noise: 0.0,
-        straggler_p: 0.0,
-        ..CostParams::default()
-    };
-    Session::sim(SimMachine::new(i7_hd7950(1), seed).with_params(quiet))
+    Session::sim(SimMachine::quiet(i7_hd7950(1), seed))
 }
 
 /// Fresh temp dir per test (removed up front so reruns start clean).

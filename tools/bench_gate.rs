@@ -1,7 +1,7 @@
 //! CI bench regression gate (DESIGN.md §2.8): compares the serve-workload
 //! throughput of freshly-produced `BENCH_*.json` files against the
 //! committed baselines under `benches/baselines/`, failing the job on a
-//! >15% regression, and asserts four baseline-free invariants:
+//! >15% regression, and asserts the baseline-free invariants:
 //!  * `BENCH_pr4.json`: the dataflow drain must beat the barrier drain's
 //!    makespan per workload without inflating slot idle time,
 //!  * `BENCH_pr5.json`: the co-scheduled virtual makespan must beat the
@@ -11,15 +11,23 @@
 //!    run, and report order-independent snapshot merges (DESIGN.md §2.9),
 //!  * `BENCH_pr7.json`: batched serve must beat unbatched virtual
 //!    throughput by >= 1.3x with bit-identical per-request execution
-//!    totals (DESIGN.md §2.10).
+//!    totals (DESIGN.md §2.10),
+//!  * `--native BENCH_pr8.json` (opt-in: only meaningful on a runner
+//!    that produced the file with the compiled CPU backend): every
+//!    kernel's native output stays within 1e-5 relative error of the
+//!    single-thread-scalar reference, and the compute-bound
+//!    `nbody_accel` family shows >= 2x multi-core-vs-scalar throughput
+//!    (DESIGN.md §2.11).
 //! Also emits the merged markdown table the CI `bench-summary` artifact
 //! ships.
 //!
 //! Usage:
 //!   bench_gate [--fresh BENCH_pr5.json] [--warmstart BENCH_pr6.json]
 //!              [--dataflow BENCH_pr4.json] [--batch BENCH_pr7.json]
+//!              [--native BENCH_pr8.json]
 //!              [--baselines benches/baselines]
 //!              [--summary bench-summary.md] [--tolerance 0.15]
+//!   bench_gate --native-only [--native BENCH_pr8.json]   # CI native job
 //!
 //! Baselines are plain copies of previous runs' bench JSON. A baseline
 //! file without the compared keys (the committed bootstrap state) gates
@@ -61,6 +69,13 @@ fn run(args: &Args) -> Result<(), String> {
         .transpose()?
         .unwrap_or(0.15);
 
+    // Native-only mode (the CI native job): gate the hardware measurement
+    // alone — that job runs no serve benches, so the serve-invariant
+    // files it would otherwise require are never produced there.
+    if args.has("native-only") {
+        return check_native_invariant(&args.get_or("native", "BENCH_pr8.json"));
+    }
+
     // Summary first: the failing runs are exactly the ones whose numbers
     // a maintainer needs to inspect (and possibly pin as new baselines).
     if let Some(summary) = args.get("summary") {
@@ -70,7 +85,68 @@ fn run(args: &Args) -> Result<(), String> {
     check_coschedule_invariant(&fresh_path)?;
     check_warmstart_invariant(&args.get_or("warmstart", "BENCH_pr6.json"))?;
     check_batch_invariant(&args.get_or("batch", "BENCH_pr7.json"))?;
+    // Opt-in: BENCH_pr8 is a hardware measurement, so the gate runs only
+    // where the caller says the file was produced on this runner.
+    if let Some(native) = args.get("native") {
+        check_native_invariant(native)?;
+    }
     check_baselines(&baseline_dir, tolerance)?;
+    Ok(())
+}
+
+/// The native-backend gate (DESIGN.md §2.11): BENCH_pr8.json's per-kernel
+/// parity against the single-thread-scalar reference must stay within
+/// 1e-5 relative error (the ported kernels vectorize only across
+/// independent elements, so the measured value is expected to be exactly
+/// 0.0 — the tolerance absorbs nothing but a future reassociating
+/// kernel), and `nbody_accel` — compute-bound, SIMD-friendly — must show
+/// >= 2x multi-core-vectorized throughput over the scalar leg.
+fn check_native_invariant(path: &str) -> Result<(), String> {
+    let v = parse_file(Path::new(path))?;
+    let results = v
+        .get("results")
+        .ok()
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| format!("{path}: missing results"))?;
+    if results.is_empty() {
+        return Err(format!("{path}: empty results"));
+    }
+    let mut nbody_speedup = None;
+    for r in results {
+        let kernel = r
+            .get("kernel")
+            .ok()
+            .and_then(|k| k.as_str())
+            .unwrap_or("?")
+            .to_string();
+        let parity = r
+            .get("parity_max_rel_err")
+            .ok()
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| format!("{path}: {kernel} missing parity_max_rel_err"))?;
+        let speedup = r
+            .get("speedup")
+            .ok()
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| format!("{path}: {kernel} missing speedup"))?;
+        if parity > 1e-5 {
+            return Err(format!(
+                "{path}: {kernel} native output drifted {parity:.3e} from \
+                 the scalar reference (limit 1e-5)"
+            ));
+        }
+        println!("native invariant: {kernel} {speedup:.2}x, parity {parity:.2e} (OK)");
+        if kernel == "nbody_accel" {
+            nbody_speedup = Some(speedup);
+        }
+    }
+    let s = nbody_speedup.ok_or_else(|| format!("{path}: no nbody_accel result"))?;
+    if s < 2.0 {
+        return Err(format!(
+            "{path}: nbody_accel multi-core native throughput {s:.2}x is \
+             below the required 2x over single-thread scalar"
+        ));
+    }
     Ok(())
 }
 
