@@ -1,0 +1,186 @@
+//! Transfer/compute-overlap bench: prefetch on vs off (BENCH_pr9.json,
+//! the PR-9 perf-trajectory point).
+//!
+//! Two workloads on the simulated i7+HD7950: the transfer-heavy unfused
+//! 3-stage filter pipeline (PCIe traffic comparable to compute) and the
+//! compute-heavy n-body loop. Each cold request is priced with the
+//! dataflow drain at prefetch depth 0 (uploads exposed, today's drain)
+//! and depth 4 (lookahead uploads ride under compute, DESIGN.md §2.12).
+//! Runs are seed-paired — both arms price the identical noise draw — so
+//! the makespan delta is purely the hidden upload. Reported per
+//! (workload, arm): virtual makespan, overlap% (hidden share of
+//! link-crossing upload bytes) and uploaded MB; plus one native-backend
+//! identity check (depth 0 vs 4, bitwise) feeding `outputs_identical`.
+//! `tools/bench_gate.rs --prefetch` enforces: identical outputs, on-arm
+//! makespan ≤ off everywhere and strictly below on the pipeline.
+
+use marrow::bench::workloads;
+use marrow::data::vector::VectorArg;
+use marrow::platform::cpu::FissionLevel;
+use marrow::platform::device::{host_cpu, i7_hd7950};
+use marrow::runtime::exec::RequestArgs;
+use marrow::scheduler::{DrainMode, ExecEnv, SimEnv};
+use marrow::session::{Computation, ConfigOverride, Session};
+use marrow::sim::machine::SimMachine;
+use marrow::tuner::profile::FrameworkConfig;
+
+const RUNS: usize = 8;
+const DEPTH: u32 = 4;
+
+struct Point {
+    workload: &'static str,
+    prefetch: &'static str,
+    makespan_ms: f64,
+    overlap_pct: f64,
+    uploaded_mb: f64,
+}
+
+fn cfg() -> FrameworkConfig {
+    FrameworkConfig {
+        fission: FissionLevel::L2,
+        overlap: vec![2],
+        wgs: 256,
+        cpu_share: 0.25,
+    }
+}
+
+fn price(
+    name: &'static str,
+    b: &marrow::bench::workloads::Benchmark,
+    depth: u32,
+) -> Point {
+    let (mut makespan, mut overlapped, mut uploaded) = (0.0f64, 0u64, 0u64);
+    for i in 0..RUNS {
+        // Fresh env per run: every request is cold (the residency
+        // discount is PR 6's story, not this bench's), and the seed is
+        // paired across the on/off arms.
+        let mut env = SimEnv::new(SimMachine::new(i7_hd7950(1), 42 + i as u64));
+        env.set_drain_mode(DrainMode::Dataflow);
+        env.set_prefetch_depth(depth);
+        env.set_copy_bytes(b.copy_bytes);
+        let out = env
+            .run_request(&b.sct, &RequestArgs::default(), b.total_units, &cfg())
+            .expect("sim request")
+            .exec;
+        makespan += out.total;
+        overlapped += out.transfers.uploads_overlapped_bytes;
+        uploaded += out.transfers.bytes_uploaded;
+    }
+    let crossed = uploaded + overlapped;
+    Point {
+        workload: name,
+        prefetch: if depth > 0 { "on" } else { "off" },
+        makespan_ms: makespan / RUNS as f64 * 1e3,
+        overlap_pct: if crossed > 0 {
+            100.0 * overlapped as f64 / crossed as f64
+        } else {
+            0.0
+        },
+        uploaded_mb: uploaded as f64 / 1e6 / RUNS as f64,
+    }
+}
+
+/// Native-backend identity check: the same request drained at prefetch
+/// depth 0 and depth `DEPTH` must produce bitwise-equal outputs.
+fn outputs_identical() -> bool {
+    let (h, w) = (128u64, 64u64);
+    let comp = Computation::from(workloads::filter_pipeline(h, w, false));
+    let args = RequestArgs {
+        vectors: vec![VectorArg::partitioned_f32(
+            "img",
+            marrow::data::image::image(3, h as usize, w as usize),
+            w,
+        )],
+        scalars: vec![12_345.0, 0.0, 96.0],
+    };
+    let run = |depth: u32| -> Vec<Vec<f32>> {
+        let s = Session::native(host_cpu())
+            .expect("native session")
+            .with_prefetch_depth(depth);
+        s.set_drain_mode(DrainMode::Dataflow);
+        s.run_with(&comp, &args, ConfigOverride::new())
+            .expect("native run")
+            .outputs
+            .iter()
+            .map(|o| o.as_f32().expect("f32 output").to_vec())
+            .collect()
+    };
+    let (a, b) = (run(0), run(DEPTH));
+    a.len() == b.len()
+        && a.iter().zip(&b).all(|(x, y)| {
+            x.len() == y.len()
+                && x.iter().zip(y.iter()).all(|(u, v)| u.to_bits() == v.to_bits())
+        })
+}
+
+fn main() {
+    let pipeline = workloads::filter_pipeline(1 << 15, 1 << 15, false);
+    let nbody = workloads::nbody(1 << 15, 20);
+
+    println!(
+        "transfer overlap: {RUNS} seed-paired cold runs per arm, \
+         prefetch depth {DEPTH}, i7+HD7950, simulated clock\n"
+    );
+    println!(
+        "{:<18} {:>9} {:>13} {:>9} {:>12}",
+        "workload", "prefetch", "makespan ms", "overlap%", "uploaded MB"
+    );
+
+    let mut points = Vec::new();
+    for (name, b) in [("pipeline_3stage", &pipeline), ("nbody_loop", &nbody)] {
+        for depth in [0u32, DEPTH] {
+            let p = price(name, b, depth);
+            println!(
+                "{:<18} {:>9} {:>13.3} {:>8.1}% {:>12.2}",
+                p.workload, p.prefetch, p.makespan_ms, p.overlap_pct, p.uploaded_mb
+            );
+            points.push(p);
+        }
+    }
+
+    let ratio = |w: &str| {
+        let get = |arm: &str| {
+            points
+                .iter()
+                .find(|p| p.workload == w && p.prefetch == arm)
+                .map(|p| p.makespan_ms)
+                .unwrap_or(0.0)
+        };
+        let on = get("on");
+        if on > 0.0 {
+            get("off") / on
+        } else {
+            f64::INFINITY
+        }
+    };
+    let identical = outputs_identical();
+    println!(
+        "\noff/on makespan ratio: pipeline_3stage {:.3}x, nbody_loop {:.3}x; \
+         native depth-0 vs depth-{DEPTH} outputs identical: {identical}",
+        ratio("pipeline_3stage"),
+        ratio("nbody_loop")
+    );
+
+    let json_points: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"workload\": \"{}\", \"prefetch\": \"{}\", \
+                 \"makespan_ms\": {:.4}, \"overlap_pct\": {:.2}, \
+                 \"uploaded_mb\": {:.3}}}",
+                p.workload, p.prefetch, p.makespan_ms, p.overlap_pct, p.uploaded_mb
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"transfer_overlap\",\n  \"pr\": 9,\n  \
+         \"runs\": {RUNS},\n  \"prefetch_depth\": {DEPTH},\n  \
+         \"outputs_identical\": {identical},\n  \"points\": [\n{}\n  ]\n}}\n",
+        json_points.join(",\n")
+    );
+    let path = "BENCH_pr9.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

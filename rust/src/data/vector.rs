@@ -204,6 +204,24 @@ impl VectorArg {
         let epu = self.elems_per_unit as usize;
         Ok(self.value.slice(start as usize * epu, len as usize * epu))
     }
+
+    /// Copy the units [start, start+len) into `buf` without an
+    /// intermediate allocation (the residency staging path: `buf` is
+    /// arena-recycled and first-touched on the pinned worker, so the
+    /// staged slice lands NUMA-local — DESIGN.md §2.12). Same contract as
+    /// [`VectorArg::slice_units`], f32 Partition vectors only.
+    pub fn fill_units(&self, start: u64, len: u64, buf: &mut Vec<f32>) -> Result<()> {
+        if self.transfer != Transfer::Partition {
+            return Err(Error::Spec(format!(
+                "vector '{}' is COPY mode; cannot slice",
+                self.name
+            )));
+        }
+        let epu = self.elems_per_unit as usize;
+        let all = self.value.as_f32()?;
+        buf.extend_from_slice(&all[start as usize * epu..(start + len) as usize * epu]);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -228,6 +246,17 @@ mod tests {
     fn copy_mode_rejects_slicing() {
         let v = VectorArg::copied_f32("all", vec![1.0; 8]);
         assert!(v.slice_units(0, 1).is_err());
+        let mut buf = Vec::new();
+        assert!(v.fill_units(0, 1, &mut buf).is_err());
+    }
+
+    #[test]
+    fn fill_units_matches_slice_units() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let v = VectorArg::partitioned_f32("m", data, 4);
+        let mut buf = Vec::new();
+        v.fill_units(1, 2, &mut buf).unwrap();
+        assert_eq!(buf.as_slice(), v.slice_units(1, 2).unwrap().as_f32().unwrap());
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //! that both the builder and the executor interpret, so the node a worker
 //! pops always agrees with the subtree it must run.
 
-use crate::decompose::{chunk_partition, Partition, PartitionPlan};
+use crate::decompose::{chunk_partition, ExecSlot, Partition, PartitionPlan};
 use crate::error::{Error, Result};
 use crate::sct::{LoopState, ParamSpec, Reduction, Sct};
 
@@ -352,6 +352,77 @@ impl TaskGraph {
         out.push_str("}\n");
         out
     }
+
+    /// The per-slot prefetch lookahead (DESIGN.md §2.12): the next `depth`
+    /// compute nodes homed on `slot` whose inputs can be staged ahead of
+    /// need. Node ids are already a topological order (the builder only
+    /// ever points deps at earlier ids), so iterating in id order walks
+    /// the graph in execution waves. Initially-ready nodes (no deps) are
+    /// excluded — the drain stages those immediately anyway; the 1:1 edge
+    /// contract pins every later node's placement at build time, which is
+    /// what makes this lookahead sound before the nodes are ready.
+    pub fn prefetch_horizon(&self, slot: ExecSlot, depth: u32) -> Vec<usize> {
+        self.prefetch_horizon_where(slot, depth, |_| true)
+    }
+
+    /// [`TaskGraph::prefetch_horizon`] restricted by a runtime readiness
+    /// predicate: the drain passes `not_ready(id)` so the horizon advances
+    /// past nodes that already became ready (or retired) — prefetching
+    /// those would stage data their execution stages anyway.
+    pub fn prefetch_horizon_where<F: Fn(usize) -> bool>(
+        &self,
+        slot: ExecSlot,
+        depth: u32,
+        not_ready: F,
+    ) -> Vec<usize> {
+        if depth == 0 {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for n in &self.nodes {
+            if n.kind == NodeKind::Compute
+                && n.partition.slot == slot
+                && !self.deps[n.id].is_empty()
+                && not_ready(n.id)
+            {
+                out.push(n.id);
+                if out.len() >= depth as usize {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// [`TaskGraph::to_dot`] plus dashed prefetch-edge annotations: for
+    /// every slot, the nodes inside its `depth`-deep prefetch horizon get
+    /// a `pf` edge from their producer — the upload the prefetch pipeline
+    /// would issue under that producer's compute.
+    pub fn to_dot_with_prefetch(&self, stage_labels: &[String], depth: u32) -> String {
+        let mut out = self.to_dot(stage_labels);
+        if depth == 0 {
+            return out;
+        }
+        out.truncate(out.len() - "}\n".len());
+        let mut slots: Vec<ExecSlot> = Vec::new();
+        for n in &self.nodes {
+            if !slots.contains(&n.partition.slot) {
+                slots.push(n.partition.slot);
+            }
+        }
+        for slot in slots {
+            for id in self.prefetch_horizon(slot, depth) {
+                for &d in &self.deps[id] {
+                    out.push_str(&format!(
+                        "  n{d} -> n{id} [style=dashed, color=royalblue, \
+                         constraint=false, label=\"pf\"];\n"
+                    ));
+                }
+            }
+        }
+        out.push_str("}\n");
+        out
+    }
 }
 
 /// Whether a request's stage program can participate in graph fusion and
@@ -599,6 +670,60 @@ mod tests {
         assert!(dot.contains("doubleoctagon"), "sync nodes highlighted");
         assert!(dot.contains("loop-sync it0"));
         assert!(dot.contains("->"));
+    }
+
+    #[test]
+    fn prefetch_horizon_walks_dependent_compute_nodes_per_slot() {
+        let sct = pipe(3);
+        let stages = flatten_stages(&sct).unwrap();
+        let p = plan_for(&sct, 1024, 8);
+        let g = build_graph(&stages, &p, 2).unwrap();
+        let slot = g.nodes[0].partition.slot;
+        assert!(
+            g.prefetch_horizon(slot, 0).is_empty(),
+            "depth 0 disables the lookahead"
+        );
+        let h = g.prefetch_horizon(slot, 4);
+        assert!(!h.is_empty() && h.len() <= 4);
+        let mut last = 0;
+        for &id in &h {
+            let n = &g.nodes[id];
+            assert_eq!(n.kind, NodeKind::Compute);
+            assert_eq!(n.partition.slot, slot, "horizon is homed on the slot");
+            assert!(
+                !g.deps[id].is_empty(),
+                "initially-ready nodes are staged by the drain itself"
+            );
+            assert!(id >= last, "horizon follows execution waves");
+            last = id;
+        }
+        // A huge depth is clamped to the slot's dependent node count.
+        let all = g.prefetch_horizon(slot, u32::MAX);
+        let expect = g
+            .nodes
+            .iter()
+            .filter(|n| {
+                n.kind == NodeKind::Compute
+                    && n.partition.slot == slot
+                    && !g.deps[n.id].is_empty()
+            })
+            .count();
+        assert_eq!(all.len(), expect);
+    }
+
+    #[test]
+    fn dot_prefetch_annotation_adds_dashed_edges() {
+        let sct = pipe(3);
+        let stages = flatten_stages(&sct).unwrap();
+        let labels: Vec<String> = stages.iter().map(|s| s.label()).collect();
+        let p = plan_for(&sct, 1024, 8);
+        let g = build_graph(&stages, &p, 2).unwrap();
+        let plain = g.to_dot_with_prefetch(&labels, 0);
+        assert_eq!(plain, g.to_dot(&labels), "depth 0 is the plain dump");
+        let dot = g.to_dot_with_prefetch(&labels, 2);
+        assert!(dot.contains("style=dashed"), "prefetch edges annotated");
+        assert!(dot.contains("label=\"pf\""));
+        assert!(dot.ends_with("}\n"));
     }
 
     #[test]

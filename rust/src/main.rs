@@ -104,10 +104,15 @@ marrow — multi-CPU/multi-GPU execution of compound multi-kernel computations
 usage:
   marrow eval <table2|table3|table4|table5|fig11|ablations|all>
   marrow profile --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--backend <sim|native|pjrt>] [--gpus <g>] [--kb <path> | --kb-store <dir>]
-  marrow run --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--backend <sim|native|pjrt>] [--gpus <g>] [--runs <r>] [--kb <path> | --kb-store <dir>] [--concurrency <c>] [--tasks-per-slot <t>] [--drain <barrier|dataflow>]
-  marrow serve --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--backend <sim|native>] [--requests <r>] [--concurrency <c>] [--pace-ms <m>] [--kb <path> | --kb-store <dir> [--import <snapshot>] [--store-sync-every <n>]] [--tasks-per-slot <t>] [--drain <barrier|dataflow>] [--co-schedule] [--batch-max <n>] [--batch-window <ms>] [--deadline-default <ms>]
+  marrow run --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--backend <sim|native|pjrt>] [--gpus <g>] [--runs <r>] [--kb <path> | --kb-store <dir>] [--concurrency <c>] [--tasks-per-slot <t>] [--drain <barrier|dataflow>] [--prefetch-depth <k>]
+  marrow serve --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--backend <sim|native>] [--requests <r>] [--concurrency <c>] [--pace-ms <m>] [--kb <path> | --kb-store <dir> [--import <snapshot>] [--store-sync-every <n>]] [--tasks-per-slot <t>] [--drain <barrier|dataflow>] [--prefetch-depth <k>] [--co-schedule] [--batch-max <n>] [--batch-window <ms>] [--deadline-default <ms>]
   marrow kb <export|import|merge|stats|gc> --store <dir> [--from <store|snapshot|kb.json>] [--out <path>] [--gpus <g>]
-  marrow graph --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--tasks-per-slot <t>] [--kb <path>]
+  marrow graph --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--tasks-per-slot <t>] [--prefetch-depth <k>] [--kb <path>]
+
+--prefetch-depth <k>: dataflow-drain lookahead (DESIGN.md §2.12) — parked
+workers stage uploads for up to k not-yet-ready chunks under earlier
+chunks' compute. 0 (default) disables prefetch; results are bit-identical
+either way. `marrow graph` dashes the prefetch edges into the DOT dump.
   marrow shoc
   marrow info";
 
@@ -169,6 +174,15 @@ fn pick_tasks_per_slot(args: &Args) -> Result<Option<u32>> {
     Ok(match args.get("tasks-per-slot") {
         None => None,
         Some(_) => Some(args.get_u64("tasks-per-slot", 4)?.max(1) as u32),
+    })
+}
+
+/// Optional `--prefetch-depth` (dataflow-drain upload lookahead,
+/// DESIGN.md §2.12; backend default — 0, no prefetch — when absent).
+fn pick_prefetch_depth(args: &Args) -> Result<Option<u32>> {
+    Ok(match args.get("prefetch-depth") {
+        None => None,
+        Some(_) => Some(args.get_u64("prefetch-depth", 0)? as u32),
     })
 }
 
@@ -381,6 +395,9 @@ fn run_loop<E: ExecEnv>(
     if let Some(t) = pick_tasks_per_slot(args)? {
         session.set_tasks_per_slot(t);
     }
+    if let Some(k) = pick_prefetch_depth(args)? {
+        session.set_prefetch_depth(k);
+    }
     let drain = pick_drain_mode(args)?.unwrap_or_default();
     session.set_drain_mode(drain);
     println!(
@@ -413,9 +430,11 @@ fn run_loop<E: ExecEnv>(
         st.runs, st.kb_hits, st.derived, st.built, st.balance_ops
     );
     println!(
-        "transfers: {:.1} MB uploaded, {:.1} MB downloaded, {} uploads \
-         avoided, {} steal migrations; mean slot idle {:.1}%",
+        "transfers: {:.1} MB uploaded ({:.1}% overlapped), {:.1} MB \
+         downloaded, {} uploads avoided, {} steal migrations; mean slot \
+         idle {:.1}%",
         st.bytes_uploaded as f64 / 1e6,
+        st.overlap_pct(),
         st.bytes_downloaded as f64 / 1e6,
         st.uploads_avoided,
         st.steal_migrations,
@@ -492,6 +511,7 @@ fn serve_on_pool<E: ExecEnv + Send>(
     let pace = args.get_f64("pace-ms", 2.0)? * 1e-3;
     let tasks_per_slot = pick_tasks_per_slot(args)?;
     let drain_mode = pick_drain_mode(args)?;
+    let prefetch_depth = pick_prefetch_depth(args)?;
     let co_schedule = args.has("co-schedule");
     // Batching & fusion knobs (DESIGN.md §2.10): --batch-max > 1 lets a
     // worker coalesce consecutive compatible requests into one fused
@@ -572,6 +592,7 @@ fn serve_on_pool<E: ExecEnv + Send>(
             pace,
             tasks_per_slot,
             drain_mode,
+            prefetch_depth,
             co_schedule,
             store_sync_every,
             batch_max,
@@ -753,7 +774,8 @@ fn graph_cmd(args: &Args) -> Result<()> {
         100.0 * cfg.gpu_share(),
         100.0 * cfg.cpu_share
     );
-    println!("{}", g.to_dot(&labels));
+    let prefetch_depth = pick_prefetch_depth(args)?.unwrap_or(0);
+    println!("{}", g.to_dot_with_prefetch(&labels, prefetch_depth));
     Ok(())
 }
 

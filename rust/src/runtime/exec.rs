@@ -284,6 +284,82 @@ impl<'a> ChunkRunner<'a> {
         }
     }
 
+    /// Stage a stage-chunk's request-vector inputs ahead of need (the
+    /// prefetch pipeline, DESIGN.md §2.12): the same binding walk, chunk
+    /// layout and residency keys as the launch loops, but nothing
+    /// executes — data only lands in the pool as in-flight
+    /// [`PendingUpload`](crate::runtime::residency::ResidencyPool)
+    /// entries, to be promoted (and booked as overlapped) by the
+    /// consuming acquire. Carried intermediates are produced on-device
+    /// and scalars never cross the link, so both are skipped; non-kernel
+    /// stages stage nothing (their inner kernels bind dynamically).
+    #[allow(clippy::too_many_arguments)]
+    pub fn prefetch_stage_on(
+        &self,
+        slot: ExecSlot,
+        stage: &Sct,
+        args: &RequestArgs,
+        has_carried: bool,
+        vec_off: usize,
+        scalar_off: usize,
+        start_unit: u64,
+        units: u64,
+    ) -> Result<()> {
+        let Sct::Kernel(k) = stage else {
+            return Ok(());
+        };
+        let mut cursor = ArgCursor {
+            vec: vec_off,
+            scalar: scalar_off,
+        };
+        let binds = self.bind_params(k, args, &mut cursor, has_carried)?;
+        let info = self.pick_artifact(k, args, &binds, units)?;
+        let chunk = info.chunk_units;
+        let n_chunks = units / chunk;
+        for c in 0..n_chunks {
+            let off = start_unit + c * chunk;
+            for (p, bind) in k.params.iter().zip(&binds) {
+                match (p, bind) {
+                    (ParamSpec::VecIn, Bind::Vector(i)) => {
+                        let v = &args.vectors[*i];
+                        let bytes = chunk * v.elems_per_unit * 4;
+                        let key = ResidencyKey {
+                            arg: ArgKey::Input {
+                                request: self.request_id,
+                                idx: *i as u32,
+                            },
+                            start_unit: off,
+                            units: chunk,
+                            version: v.version,
+                        };
+                        self.residency.prefetch_range(slot, key, bytes, |buf| {
+                            v.fill_units(off, chunk, buf)
+                        })?;
+                    }
+                    (ParamSpec::VecCopy, Bind::Vector(i)) => {
+                        let v = &args.vectors[*i];
+                        let bytes = v.value.len() as u64 * 4;
+                        let key = ResidencyKey {
+                            arg: ArgKey::Input {
+                                request: self.request_id,
+                                idx: *i as u32,
+                            },
+                            start_unit: 0,
+                            units: v.units(),
+                            version: v.version,
+                        };
+                        self.residency.prefetch_range(slot, key, bytes, |buf| {
+                            buf.extend_from_slice(v.value.as_f32()?);
+                            Ok(())
+                        })?;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Execute one kernel leaf over the unit range, consuming request args
     /// through `cursor`. When `carried` is set (pipeline chaining), the
     /// kernel's first VecIn binds to it instead of a request vector.
@@ -368,9 +444,9 @@ impl<'a> ChunkRunner<'a> {
                             units: chunk,
                             version: v.version,
                         };
-                        let staged = self.residency.acquire(slot, key, bytes, || {
-                            Ok(Arc::new(v.slice_units(off, chunk)?.as_f32()?.to_vec()))
-                        })?;
+                        let staged = self
+                            .residency
+                            .acquire(slot, key, bytes, |buf| v.fill_units(off, chunk, buf))?;
                         literal_f32(&staged, &spec.shape)?
                     }
                     (ParamSpec::VecCopy, Bind::Vector(i)) => {
@@ -389,8 +465,9 @@ impl<'a> ChunkRunner<'a> {
                             units: v.units(),
                             version: v.version,
                         };
-                        let staged = self.residency.acquire(slot, key, bytes, || {
-                            Ok(Arc::new(v.value.as_f32()?.to_vec()))
+                        let staged = self.residency.acquire(slot, key, bytes, |buf| {
+                            buf.extend_from_slice(v.value.as_f32()?);
+                            Ok(())
                         })?;
                         literal_f32(&staged, &spec.shape)?
                     }
@@ -478,9 +555,12 @@ impl<'a> ChunkRunner<'a> {
             .map(|o| Vec::with_capacity((o.elems() * n_chunks) as usize))
             .collect();
 
+        // Staging holders live across chunks (the per-chunk contents are
+        // rebuilt, the Vec itself is not re-allocated in the hot loop).
+        let mut staged: Vec<Staged> = Vec::with_capacity(k.params.len());
         for c in 0..n_chunks {
             let off = start_unit + c * chunk;
-            let mut staged = Vec::with_capacity(k.params.len());
+            staged.clear();
             for (p, bind) in k.params.iter().zip(binds) {
                 let s = match (p, bind) {
                     (ParamSpec::VecIn, Bind::Carried) => {
@@ -505,8 +585,8 @@ impl<'a> ChunkRunner<'a> {
                             units: chunk,
                             version: v.version,
                         };
-                        Staged::Pool(self.residency.acquire(slot, key, bytes, || {
-                            Ok(Arc::new(v.slice_units(off, chunk)?.as_f32()?.to_vec()))
+                        Staged::Pool(self.residency.acquire(slot, key, bytes, |buf| {
+                            v.fill_units(off, chunk, buf)
                         })?)
                     }
                     (ParamSpec::VecCopy, Bind::Vector(i)) => {
@@ -521,8 +601,9 @@ impl<'a> ChunkRunner<'a> {
                             units: v.units(),
                             version: v.version,
                         };
-                        Staged::Pool(self.residency.acquire(slot, key, bytes, || {
-                            Ok(Arc::new(v.value.as_f32()?.to_vec()))
+                        Staged::Pool(self.residency.acquire(slot, key, bytes, |buf| {
+                            buf.extend_from_slice(v.value.as_f32()?);
+                            Ok(())
                         })?)
                     }
                     (ParamSpec::ScalarF32(tr), Bind::Scalar(i)) => {

@@ -18,6 +18,25 @@ pub fn pin_current_thread(core: usize) -> bool {
     imp::pin(core)
 }
 
+/// First-touch `len` elements of a staging buffer on the *calling* thread
+/// (DESIGN.md §2.12). Linux commits anonymous pages on the NUMA node of
+/// the thread that first writes them, so touching the pages from the
+/// pinned worker — before the fill copy — places the staged slice in the
+/// worker's local memory. A buffer recycled from the per-slot arena
+/// already has its pages committed (and local, since the same worker
+/// touched them), so reuse is a no-op here. The buffer's length is
+/// restored afterwards; only capacity is committed.
+pub fn first_touch_pages(buf: &mut Vec<f32>, len: usize) {
+    if buf.capacity() >= len {
+        return;
+    }
+    buf.reserve(len - buf.len());
+    let prev = buf.len();
+    let cap = buf.capacity();
+    buf.resize(cap.min(len.max(prev)), 0.0);
+    buf.truncate(prev);
+}
+
 #[cfg(all(target_os = "linux", target_arch = "x86_64"))]
 mod imp {
     pub fn pin(core: usize) -> bool {
@@ -64,5 +83,21 @@ mod tests {
         // no-op reporting false. Either way the call must be safe.
         let _ = pin_current_thread(0);
         let _ = pin_current_thread(usize::MAX);
+    }
+
+    #[test]
+    fn first_touch_commits_capacity_without_changing_contents() {
+        let mut buf: Vec<f32> = Vec::new();
+        first_touch_pages(&mut buf, 4096);
+        assert!(buf.capacity() >= 4096);
+        assert!(buf.is_empty(), "length must be restored after the touch");
+        buf.extend_from_slice(&[1.0, 2.0]);
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        // A buffer that is already large enough is left alone entirely.
+        first_touch_pages(&mut buf, 1024);
+        assert_eq!(buf.capacity(), cap);
+        assert_eq!(buf.as_ptr(), ptr);
+        assert_eq!(buf.as_slice(), &[1.0, 2.0]);
     }
 }

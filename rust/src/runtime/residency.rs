@@ -67,6 +67,13 @@ pub struct TransferStats {
     /// re-launches, pipeline intermediates, Loop iterations, repeated
     /// requests).
     pub uploads_avoided: u64,
+    /// Bytes those avoided uploads would have shipped.
+    pub uploads_avoided_bytes: u64,
+    /// Uploads that still crossed the link but were hidden under compute
+    /// by the prefetch pipeline (DESIGN.md §2.12) — off the critical path.
+    pub uploads_overlapped: u64,
+    /// Bytes of those overlapped uploads.
+    pub uploads_overlapped_bytes: u64,
     /// Steals that moved a task away from data it had resident (booked by
     /// the locality-aware launcher).
     pub steal_migrations: u64,
@@ -85,6 +92,10 @@ impl TransferStats {
             bytes_downloaded: self.bytes_downloaded - earlier.bytes_downloaded,
             uploads: self.uploads - earlier.uploads,
             uploads_avoided: self.uploads_avoided - earlier.uploads_avoided,
+            uploads_avoided_bytes: self.uploads_avoided_bytes - earlier.uploads_avoided_bytes,
+            uploads_overlapped: self.uploads_overlapped - earlier.uploads_overlapped,
+            uploads_overlapped_bytes: self.uploads_overlapped_bytes
+                - earlier.uploads_overlapped_bytes,
             steal_migrations: self.steal_migrations - earlier.steal_migrations,
             migrated_bytes: self.migrated_bytes - earlier.migrated_bytes,
             steals_skipped: self.steals_skipped - earlier.steals_skipped,
@@ -97,9 +108,23 @@ impl TransferStats {
         self.bytes_downloaded += other.bytes_downloaded;
         self.uploads += other.uploads;
         self.uploads_avoided += other.uploads_avoided;
+        self.uploads_avoided_bytes += other.uploads_avoided_bytes;
+        self.uploads_overlapped += other.uploads_overlapped;
+        self.uploads_overlapped_bytes += other.uploads_overlapped_bytes;
         self.steal_migrations += other.steal_migrations;
         self.migrated_bytes += other.migrated_bytes;
         self.steals_skipped += other.steals_skipped;
+    }
+
+    /// Conservation quantity of the transfer accounting: every byte a
+    /// request's working set needs on-device is either shipped on the
+    /// critical path (`bytes_uploaded`), already resident
+    /// (`uploads_avoided_bytes`) or shipped hidden under compute
+    /// (`uploads_overlapped_bytes`). For a fixed request this sum is
+    /// invariant across drain modes and prefetch depths — prefetch and
+    /// residency move bytes *between* the three buckets, never in or out.
+    pub fn accounted_upload_bytes(&self) -> u64 {
+        self.bytes_uploaded + self.uploads_avoided_bytes + self.uploads_overlapped_bytes
     }
 }
 
@@ -137,10 +162,47 @@ struct Resident {
     pins: u32,
 }
 
+/// One in-flight prefetched range (DESIGN.md §2.12): the upload was issued
+/// ahead of need under another node's compute and has not been consumed
+/// yet. Pending entries count toward LRU capacity (the bytes are on the
+/// device either way) but are never eviction candidates themselves; a
+/// consuming `acquire` promotes the entry into the normal resident
+/// lifecycle and books it as an *overlapped* upload, a steal of the
+/// consumer cancels it without booking anything.
+struct PendingUpload {
+    bytes: u64,
+    staged: Arc<Vec<f32>>,
+}
+
+/// Cap on per-slot recycled staging buffers (the bump-arena half of the
+/// native locality work: hot chunk loops stop re-allocating).
+const FREE_LIST_CAP: usize = 8;
+
 #[derive(Default)]
 struct SlotPool {
     entries: HashMap<ResidencyKey, Resident>,
     total_bytes: u64,
+    pending: HashMap<ResidencyKey, PendingUpload>,
+    pending_bytes: u64,
+    /// Recycled staging buffers. Pages were first-touched by this slot's
+    /// pinned worker, so reuse keeps the NUMA placement.
+    free: Vec<Vec<f32>>,
+}
+
+impl SlotPool {
+    /// Return a retired staging buffer to the arena if it has no other
+    /// owners; otherwise let it drop.
+    fn reclaim(free: &mut Vec<Vec<f32>>, staged: Option<Arc<Vec<f32>>>) {
+        if free.len() >= FREE_LIST_CAP {
+            return;
+        }
+        if let Some(arc) = staged {
+            if let Ok(mut buf) = Arc::try_unwrap(arc) {
+                buf.clear();
+                free.push(buf);
+            }
+        }
+    }
 }
 
 /// The per-slot residency pool. Shared by reference across the launcher's
@@ -156,6 +218,9 @@ pub struct ResidencyPool {
     bytes_downloaded: AtomicU64,
     uploads: AtomicU64,
     uploads_avoided: AtomicU64,
+    uploads_avoided_bytes: AtomicU64,
+    uploads_overlapped: AtomicU64,
+    uploads_overlapped_bytes: AtomicU64,
     steal_migrations: AtomicU64,
     migrated_bytes: AtomicU64,
     steals_skipped: AtomicU64,
@@ -178,6 +243,9 @@ impl ResidencyPool {
             bytes_downloaded: AtomicU64::new(0),
             uploads: AtomicU64::new(0),
             uploads_avoided: AtomicU64::new(0),
+            uploads_avoided_bytes: AtomicU64::new(0),
+            uploads_overlapped: AtomicU64::new(0),
+            uploads_overlapped_bytes: AtomicU64::new(0),
             steal_migrations: AtomicU64::new(0),
             migrated_bytes: AtomicU64::new(0),
             steals_skipped: AtomicU64::new(0),
@@ -206,6 +274,37 @@ impl ResidencyPool {
     fn count_upload(&self, bytes: u64) {
         self.uploads.fetch_add(1, Ordering::Relaxed);
         self.bytes_uploaded.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    fn count_avoided(&self, bytes: u64) {
+        self.uploads_avoided.fetch_add(1, Ordering::Relaxed);
+        self.uploads_avoided_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    fn count_overlapped(&self, bytes: u64) {
+        self.uploads_overlapped.fetch_add(1, Ordering::Relaxed);
+        self.uploads_overlapped_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Reclassify `count` already-booked uploads (of `bytes` total) as
+    /// overlapped — the simulator's hook: it books uploads first through
+    /// the shared `ensure_resident` path, then moves the portion its
+    /// occupancy model proves hidden under compute into the overlapped
+    /// bucket. The conservation sum
+    /// ([`TransferStats::accounted_upload_bytes`]) is unchanged.
+    pub fn reclassify_overlapped(&self, count: u64, bytes: u64) {
+        if count == 0 && bytes == 0 {
+            return;
+        }
+        let prev_u = self.uploads.fetch_sub(count, Ordering::Relaxed);
+        let prev_b = self.bytes_uploaded.fetch_sub(bytes, Ordering::Relaxed);
+        debug_assert!(
+            prev_u >= count && prev_b >= bytes,
+            "reclassify_overlapped must not exceed booked uploads"
+        );
+        self.uploads_overlapped.fetch_add(count, Ordering::Relaxed);
+        self.uploads_overlapped_bytes
+            .fetch_add(bytes, Ordering::Relaxed);
     }
 
     /// Accounting-only residency check (the simulator's path): records an
@@ -240,7 +339,7 @@ impl ResidencyPool {
             }
         };
         if resident {
-            self.uploads_avoided.fetch_add(1, Ordering::Relaxed);
+            self.count_avoided(bytes);
         } else {
             self.count_upload(bytes);
         }
@@ -248,38 +347,83 @@ impl ResidencyPool {
     }
 
     /// Staged-buffer acquire (the real chunk runner's path): returns the
-    /// cached host-staged buffer for `key` on `slot`, or fills it with
-    /// `stage` and records the upload. A cache hit counts as an avoided
-    /// upload — the range is already resident on the slot.
+    /// cached host-staged buffer for `key` on `slot`, or stages it by
+    /// running `fill` into a (recycled, first-touched) buffer and records
+    /// the upload. A cache hit counts as an avoided upload — the range is
+    /// already resident on the slot. A hit on an in-flight prefetch
+    /// promotes the `PendingUpload` into the resident set and books the
+    /// transfer as *overlapped* — it crossed the link, but under compute.
     pub fn acquire<F>(
         &self,
         slot: ExecSlot,
         key: ResidencyKey,
         bytes: u64,
-        stage: F,
+        fill: F,
     ) -> Result<Arc<Vec<f32>>>
     where
-        F: FnOnce() -> Result<Arc<Vec<f32>>>,
+        F: FnOnce(&mut Vec<f32>) -> Result<()>,
     {
         if !self.enabled() {
             self.count_upload(bytes);
-            return stage();
+            let mut buf = Vec::new();
+            fill(&mut buf)?;
+            return Ok(Arc::new(buf));
         }
         let tick = self.next_tick();
-        let cached: Option<Arc<Vec<f32>>> = {
-            let mut slots = self.slots.lock().unwrap();
-            slots.get_mut(&slot).and_then(|pool| {
-                pool.entries.get_mut(&key).and_then(|e| {
-                    e.tick = tick;
-                    e.staged.clone()
-                })
-            })
-        };
-        if let Some(staged) = cached {
-            self.uploads_avoided.fetch_add(1, Ordering::Relaxed);
-            return Ok(staged);
+        enum Hit {
+            Resident(Arc<Vec<f32>>),
+            Prefetched(Arc<Vec<f32>>),
+            Miss(Vec<f32>),
         }
-        let staged = stage()?;
+        let hit = {
+            let mut slots = self.slots.lock().unwrap();
+            let pool = slots.entry(slot).or_default();
+            if let Some(staged) = pool.entries.get_mut(&key).and_then(|e| {
+                e.tick = tick;
+                e.staged.clone()
+            }) {
+                Hit::Resident(staged)
+            } else if let Some(p) = pool.pending.remove(&key) {
+                // Promote the in-flight prefetch into the normal resident
+                // lifecycle: the bytes were already on the device.
+                pool.pending_bytes -= p.bytes;
+                let staged = p.staged;
+                if pool
+                    .entries
+                    .insert(
+                        key,
+                        Resident {
+                            bytes: p.bytes,
+                            staged: Some(staged.clone()),
+                            tick,
+                            pins: 0,
+                        },
+                    )
+                    .is_none()
+                {
+                    pool.total_bytes += p.bytes;
+                }
+                Hit::Prefetched(staged)
+            } else {
+                Hit::Miss(pool.free.pop().unwrap_or_default())
+            }
+        };
+        let mut buf = match hit {
+            Hit::Resident(staged) => {
+                self.count_avoided(bytes);
+                return Ok(staged);
+            }
+            Hit::Prefetched(staged) => {
+                self.count_overlapped(bytes);
+                return Ok(staged);
+            }
+            Hit::Miss(buf) => buf,
+        };
+        // First-touch the buffer's pages on the calling (pinned) worker's
+        // core before filling, so the staged slice lands NUMA-local.
+        crate::runtime::native::affinity::first_touch_pages(&mut buf, (bytes / 4) as usize);
+        fill(&mut buf)?;
+        let staged = Arc::new(buf);
         {
             let mut slots = self.slots.lock().unwrap();
             let pool = slots.entry(slot).or_default();
@@ -304,13 +448,85 @@ impl ResidencyPool {
         Ok(staged)
     }
 
+    /// Stage `key` ahead of need (the prefetch pipeline, DESIGN.md §2.12):
+    /// fills a recycled buffer and parks it as a `PendingUpload` on `slot`.
+    /// Nothing is booked here — the accounting happens when a consuming
+    /// [`ResidencyPool::acquire`] promotes the entry (overlapped) or a
+    /// cancellation drops it (free). Returns whether a prefetch was
+    /// actually issued; already-resident, already-pending and disabled
+    /// pools are all no-ops.
+    pub fn prefetch_range<F>(
+        &self,
+        slot: ExecSlot,
+        key: ResidencyKey,
+        bytes: u64,
+        fill: F,
+    ) -> Result<bool>
+    where
+        F: FnOnce(&mut Vec<f32>) -> Result<()>,
+    {
+        if !self.enabled() {
+            return Ok(false);
+        }
+        let mut buf = {
+            let mut slots = self.slots.lock().unwrap();
+            let pool = slots.entry(slot).or_default();
+            if pool.entries.contains_key(&key) || pool.pending.contains_key(&key) {
+                return Ok(false);
+            }
+            pool.free.pop().unwrap_or_default()
+        };
+        crate::runtime::native::affinity::first_touch_pages(&mut buf, (bytes / 4) as usize);
+        fill(&mut buf)?;
+        let staged = Arc::new(buf);
+        let mut slots = self.slots.lock().unwrap();
+        let pool = slots.entry(slot).or_default();
+        if pool.entries.contains_key(&key) || pool.pending.contains_key(&key) {
+            // Raced with a concurrent stage of the same range: keep theirs,
+            // recycle ours.
+            SlotPool::reclaim(&mut pool.free, Some(staged));
+            return Ok(false);
+        }
+        pool.pending.insert(key, PendingUpload { bytes, staged });
+        pool.pending_bytes += bytes;
+        Self::evict_over_capacity(pool, self.capacity_bytes.load(Ordering::Relaxed));
+        Ok(true)
+    }
+
+    /// In-flight prefetch entries across every slot (diagnostics + the
+    /// no-leak drain invariant: must be 0 after a request retires).
+    pub fn pending_count(&self) -> usize {
+        self.slots
+            .lock()
+            .unwrap()
+            .values()
+            .map(|p| p.pending.len())
+            .sum()
+    }
+
+    /// Drop every in-flight prefetch (end of a graph drain: speculative
+    /// uploads that no task consumed — a `Loop` broke early, a steal moved
+    /// the consumer — must not leak into the next request). Buffers return
+    /// to the arena; nothing is booked.
+    pub fn clear_pending(&self) {
+        let mut slots = self.slots.lock().unwrap();
+        for pool in slots.values_mut() {
+            for (_, p) in pool.pending.drain() {
+                SlotPool::reclaim(&mut pool.free, Some(p.staged));
+            }
+            pool.pending_bytes = 0;
+        }
+    }
+
     fn evict_over_capacity(pool: &mut SlotPool, capacity: u64) {
         if capacity == 0 {
             return;
         }
-        while pool.total_bytes > capacity && pool.entries.len() > 1 {
-            // Pinned entries (live intermediates) are not eviction
-            // candidates — their consumers have not retired yet.
+        // In-flight prefetches occupy device memory too, so they add to
+        // the pressure — but only resident, unpinned entries are eviction
+        // candidates: a pending entry is about to be consumed, a pinned
+        // one still has live consumers.
+        while pool.total_bytes + pool.pending_bytes > capacity && pool.entries.len() > 1 {
             let oldest = pool
                 .entries
                 .iter()
@@ -321,6 +537,7 @@ impl ResidencyPool {
                 Some(k) => {
                     if let Some(e) = pool.entries.remove(&k) {
                         pool.total_bytes -= e.bytes;
+                        SlotPool::reclaim(&mut pool.free, e.staged);
                     }
                 }
                 None => break,
@@ -391,6 +608,7 @@ impl ResidencyPool {
     pub fn note_reuse(&self, count: u64, bytes: u64) {
         if self.enabled() {
             self.uploads_avoided.fetch_add(count, Ordering::Relaxed);
+            self.uploads_avoided_bytes.fetch_add(bytes, Ordering::Relaxed);
         } else {
             self.uploads.fetch_add(count, Ordering::Relaxed);
             self.bytes_uploaded.fetch_add(bytes, Ordering::Relaxed);
@@ -412,6 +630,21 @@ impl ResidencyPool {
             for k in stale {
                 if let Some(e) = pool.entries.remove(&k) {
                     pool.total_bytes -= e.bytes;
+                    SlotPool::reclaim(&mut pool.free, e.staged);
+                }
+            }
+            // In-flight prefetches of the rewritten argument are stale
+            // speculation: drop them unconsumed, nothing booked.
+            let stale_pending: Vec<ResidencyKey> = pool
+                .pending
+                .keys()
+                .filter(|k| k.arg == arg)
+                .copied()
+                .collect();
+            for k in stale_pending {
+                if let Some(p) = pool.pending.remove(&k) {
+                    pool.pending_bytes -= p.bytes;
+                    SlotPool::reclaim(&mut pool.free, Some(p.staged));
                 }
             }
         }
@@ -447,6 +680,9 @@ impl ResidencyPool {
             bytes_downloaded: self.bytes_downloaded.load(Ordering::Relaxed),
             uploads: self.uploads.load(Ordering::Relaxed),
             uploads_avoided: self.uploads_avoided.load(Ordering::Relaxed),
+            uploads_avoided_bytes: self.uploads_avoided_bytes.load(Ordering::Relaxed),
+            uploads_overlapped: self.uploads_overlapped.load(Ordering::Relaxed),
+            uploads_overlapped_bytes: self.uploads_overlapped_bytes.load(Ordering::Relaxed),
             steal_migrations: self.steal_migrations.load(Ordering::Relaxed),
             migrated_bytes: self.migrated_bytes.load(Ordering::Relaxed),
             steals_skipped: self.steals_skipped.load(Ordering::Relaxed),
@@ -495,6 +731,23 @@ impl ResidencyView for ResidencyPool {
                     if let Some(e) = pool.entries.remove(&k) {
                         pool.total_bytes -= e.bytes;
                         forfeited += e.bytes;
+                        SlotPool::reclaim(&mut pool.free, e.staged);
+                    }
+                }
+                // Cancellation-on-steal (DESIGN.md §2.12): in-flight
+                // prefetches for the migrated range target a consumer that
+                // will now run elsewhere. Cancel them without booking —
+                // they were speculative, not forfeited residency.
+                let stale_pending: Vec<ResidencyKey> = pool
+                    .pending
+                    .keys()
+                    .filter(|k| k.start_unit >= start_unit && k.start_unit + k.units <= q_end)
+                    .copied()
+                    .collect();
+                for k in stale_pending {
+                    if let Some(p) = pool.pending.remove(&k) {
+                        pool.pending_bytes -= p.bytes;
+                        SlotPool::reclaim(&mut pool.free, Some(p.staged));
                     }
                 }
             }
@@ -579,17 +832,203 @@ mod tests {
     fn acquire_caches_staged_buffer() {
         let pool = ResidencyPool::new();
         let a = pool
-            .acquire(gpu(0), key(0, 0, 4, 0), 16, || {
-                Ok(Arc::new(vec![1.0, 2.0, 3.0, 4.0]))
+            .acquire(gpu(0), key(0, 0, 4, 0), 16, |buf| {
+                buf.extend_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+                Ok(())
             })
             .unwrap();
         let b = pool
-            .acquire(gpu(0), key(0, 0, 4, 0), 16, || {
+            .acquire(gpu(0), key(0, 0, 4, 0), 16, |_| {
+                panic!("must not re-stage a resident range")
+            })
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.as_slice(), &[1.0, 2.0, 3.0, 4.0]);
+        let s = pool.stats();
+        assert_eq!(s.uploads_avoided, 1);
+        assert_eq!(s.uploads_avoided_bytes, 16);
+    }
+
+    #[test]
+    fn prefetch_promotes_to_overlapped_on_acquire() {
+        let pool = ResidencyPool::new();
+        let issued = pool
+            .prefetch_range(gpu(0), key(0, 0, 4, 0), 16, |buf| {
+                buf.extend_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+                Ok(())
+            })
+            .unwrap();
+        assert!(issued);
+        assert_eq!(pool.pending_count(), 1);
+        // Nothing booked while in flight.
+        assert_eq!(pool.stats(), TransferStats::default());
+        let a = pool
+            .acquire(gpu(0), key(0, 0, 4, 0), 16, |_| {
+                panic!("prefetched range must not re-stage")
+            })
+            .unwrap();
+        assert_eq!(a.as_slice(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(pool.pending_count(), 0);
+        let s = pool.stats();
+        assert_eq!(s.uploads, 0, "overlapped upload is off the critical path");
+        assert_eq!(s.uploads_overlapped, 1);
+        assert_eq!(s.uploads_overlapped_bytes, 16);
+        // A second acquire is a plain residency hit.
+        let b = pool
+            .acquire(gpu(0), key(0, 0, 4, 0), 16, |_| {
                 panic!("must not re-stage a resident range")
             })
             .unwrap();
         assert!(Arc::ptr_eq(&a, &b));
         assert_eq!(pool.stats().uploads_avoided, 1);
+    }
+
+    #[test]
+    fn prefetch_is_idempotent_against_resident_and_pending() {
+        let pool = ResidencyPool::new();
+        pool.acquire(gpu(0), key(0, 0, 4, 0), 16, |buf| {
+            buf.extend_from_slice(&[1.0; 4]);
+            Ok(())
+        })
+        .unwrap();
+        // Already resident: no prefetch.
+        assert!(!pool
+            .prefetch_range(gpu(0), key(0, 0, 4, 0), 16, |_| panic!(
+                "must not stage over a resident range"
+            ))
+            .unwrap());
+        // First prefetch of a new range goes through, the second is a no-op.
+        assert!(pool
+            .prefetch_range(gpu(0), key(1, 0, 4, 0), 16, |buf| {
+                buf.extend_from_slice(&[2.0; 4]);
+                Ok(())
+            })
+            .unwrap());
+        assert!(!pool
+            .prefetch_range(gpu(0), key(1, 0, 4, 0), 16, |_| panic!(
+                "must not stage over a pending range"
+            ))
+            .unwrap());
+        assert_eq!(pool.pending_count(), 1);
+    }
+
+    #[test]
+    fn steal_cancels_inflight_prefetch_without_booking() {
+        let pool = ResidencyPool::new();
+        pool.prefetch_range(gpu(0), key(0, 0, 64, 0), 256, |buf| {
+            buf.extend_from_slice(&[0.0; 64]);
+            Ok(())
+        })
+        .unwrap();
+        let moved = pool.note_migration(gpu(0), ExecSlot::CpuSub { idx: 0 }, 0, 64);
+        assert_eq!(moved, 0, "a cancelled prefetch is not forfeited residency");
+        assert_eq!(pool.pending_count(), 0);
+        let s = pool.stats();
+        assert_eq!(s.steal_migrations, 0);
+        assert_eq!(s.uploads_overlapped, 0);
+        assert_eq!(s.uploads, 0);
+    }
+
+    #[test]
+    fn clear_pending_drops_inflight_prefetches() {
+        let pool = ResidencyPool::new();
+        pool.prefetch_range(gpu(0), key(0, 0, 64, 0), 256, |buf| {
+            buf.extend_from_slice(&[0.0; 64]);
+            Ok(())
+        })
+        .unwrap();
+        pool.prefetch_range(gpu(1), key(1, 0, 64, 0), 256, |buf| {
+            buf.extend_from_slice(&[0.0; 64]);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(pool.pending_count(), 2);
+        pool.clear_pending();
+        assert_eq!(pool.pending_count(), 0);
+        assert_eq!(pool.stats(), TransferStats::default());
+        // The ranges are stageable again afterwards.
+        assert!(pool
+            .prefetch_range(gpu(0), key(0, 0, 64, 0), 256, |buf| {
+                buf.extend_from_slice(&[0.0; 64]);
+                Ok(())
+            })
+            .unwrap());
+    }
+
+    #[test]
+    fn prefetch_pressure_never_evicts_pinned_entries() {
+        let pool = ResidencyPool::new().with_capacity(1024);
+        let stage_key = ResidencyKey {
+            arg: ArgKey::Stage {
+                request: 1,
+                stage: 0,
+                out: 0,
+            },
+            start_unit: 0,
+            units: 64,
+            version: 0,
+        };
+        pool.pin_range(gpu(0), stage_key, 600, 1);
+        pool.ensure_resident(gpu(0), key(7, 0, 128, 0), 300);
+        // A prefetch pushing the slot over budget evicts the unpinned
+        // resident entry, never the pinned intermediate and never itself.
+        pool.prefetch_range(gpu(0), key(8, 0, 128, 0), 600, |buf| {
+            buf.extend_from_slice(&[0.0; 150]);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(
+            pool.resident_range_bytes(gpu(0), 0, 64),
+            600,
+            "pinned intermediate must survive prefetch pressure"
+        );
+        assert_eq!(pool.pending_count(), 1);
+    }
+
+    #[test]
+    fn arena_recycles_staging_buffers() {
+        let pool = ResidencyPool::new().with_capacity(1024);
+        let a = pool
+            .acquire(gpu(0), key(0, 0, 150, 0), 600, |buf| {
+                buf.extend_from_slice(&[1.0; 150]);
+                Ok(())
+            })
+            .unwrap();
+        let p = a.as_ptr();
+        drop(a); // the pool now holds the only reference
+        // Capacity pressure evicts key 0; its buffer returns to the arena.
+        pool.acquire(gpu(0), key(1, 0, 150, 0), 600, |buf| {
+            buf.extend_from_slice(&[2.0; 150]);
+            Ok(())
+        })
+        .unwrap();
+        // The next stage on this slot reuses the recycled buffer.
+        let c = pool
+            .acquire(gpu(0), key(2, 0, 150, 0), 600, |buf| {
+                buf.extend_from_slice(&[3.0; 150]);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(c.as_ptr(), p, "staging buffer must be recycled in place");
+        assert_eq!(c[0], 3.0);
+    }
+
+    #[test]
+    fn reclassify_keeps_accounting_conserved() {
+        let pool = ResidencyPool::new();
+        pool.ensure_resident(gpu(0), key(0, 0, 128, 0), 512);
+        pool.ensure_resident(gpu(0), key(1, 0, 128, 0), 512);
+        let before = pool.stats();
+        pool.reclassify_overlapped(1, 512);
+        let after = pool.stats();
+        assert_eq!(
+            after.accounted_upload_bytes(),
+            before.accounted_upload_bytes(),
+            "reclassification moves bytes between buckets, never creates them"
+        );
+        assert_eq!(after.uploads, 1);
+        assert_eq!(after.uploads_overlapped, 1);
+        assert_eq!(after.uploads_overlapped_bytes, 512);
     }
 
     #[test]

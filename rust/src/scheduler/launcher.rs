@@ -154,6 +154,13 @@ pub struct LaunchOpts<'p> {
     /// per-slot residency and steal pricing describe physical caches.
     /// Best-effort — unsupported platforms drain unpinned.
     pub pin_cores: bool,
+    /// Graph-drain lookahead (DESIGN.md §2.12): when a worker would
+    /// otherwise park, it stages inputs for up to this many upcoming nodes
+    /// homed on its slot ([`crate::decompose::graph::TaskGraph::prefetch_horizon`])
+    /// via [`GraphRunner::prefetch_node`], hiding uploads under other
+    /// slots' compute. 0 disables prefetch (the pre-PR-9 behavior);
+    /// barrier drains ignore it.
+    pub prefetch_depth: u32,
 }
 
 impl LaunchOutput {
@@ -390,6 +397,16 @@ pub trait GraphRunner: Sync {
     fn retire_output(&self, node: &TaskNode) {
         let _ = node;
     }
+
+    /// Stage `node`'s inputs ahead of need on `slot` (the prefetch
+    /// pipeline, DESIGN.md §2.12). Called by a worker that would otherwise
+    /// park, never for a node that is already ready on a queue. Best
+    /// effort: a runner that cannot prefetch simply ignores the token, and
+    /// errors must be swallowed — a failed prefetch falls back to the
+    /// synchronous stage when the node actually runs.
+    fn prefetch_node(&self, slot: ExecSlot, node: &TaskNode) {
+        let _ = (slot, node);
+    }
 }
 
 /// Everything one dataflow drain produced.
@@ -506,6 +523,11 @@ pub fn launch_graph<R: GraphRunner>(
                         }
                     }
                     let mut busy = 0.0f64;
+                    // Node ids this worker already issued prefetch tokens
+                    // for (the pool is idempotent; this just skips the
+                    // re-staging work on repeated parks).
+                    let mut prefetched: std::collections::HashSet<usize> =
+                        std::collections::HashSet::new();
                     loop {
                         if stop.load(Ordering::Relaxed)
                             || retired.load(Ordering::Relaxed) >= n
@@ -596,6 +618,23 @@ pub fn launch_graph<R: GraphRunner>(
                                 {
                                     ready.wake_all();
                                     break;
+                                }
+                                // About to park: spend the idle window
+                                // staging inputs for upcoming nodes homed
+                                // here (DESIGN.md §2.12), so their uploads
+                                // run under other slots' compute instead of
+                                // on the critical path.
+                                if opts.prefetch_depth > 0 {
+                                    let horizon = graph.prefetch_horizon_where(
+                                        my_slot,
+                                        opts.prefetch_depth,
+                                        |nid| indeg[nid].load(Ordering::Relaxed) > 0,
+                                    );
+                                    for pid in horizon {
+                                        if prefetched.insert(pid) {
+                                            runner.prefetch_node(my_slot, &graph.nodes[pid]);
+                                        }
+                                    }
                                 }
                                 ready.wait_change(epoch);
                                 continue;
@@ -910,6 +949,7 @@ mod tests {
                     default_task_secs: 1e-6,
                 }),
                 mask: None,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -943,6 +983,7 @@ mod tests {
                     default_task_secs: 0.05,
                 }),
                 mask: None,
+                ..Default::default()
             },
         )
         .unwrap();

@@ -225,6 +225,15 @@ pub trait ExecEnv {
         let _ = mode;
     }
 
+    /// Graph-drain prefetch lookahead (DESIGN.md §2.12): parked workers
+    /// stage inputs for up to `depth` upcoming nodes homed on their slot,
+    /// hiding uploads under other slots' compute. 0 (the default)
+    /// disables prefetch; barrier drains and backends without a graph
+    /// structure ignore it.
+    fn set_prefetch_depth(&mut self, depth: u32) {
+        let _ = depth;
+    }
+
     /// Restrict every subsequent request to a device-space subset of the
     /// machine (DESIGN.md §2.8): configurations are projected onto the
     /// mask, excluded devices receive no work, and stealing never crosses
@@ -317,6 +326,10 @@ pub struct SimEnv {
     /// so the simulator prices exactly the hardware the reservation
     /// granted — the analytic twin of the real scheduler's masked drain.
     pub slot_mask: Option<SlotMask>,
+    /// Prefetch lookahead (DESIGN.md §2.12): with a dataflow drain, uploads
+    /// for up to this many not-yet-ready chunks ride under earlier chunks'
+    /// compute. 0 disables overlap modeling (today's exposed-upload cost).
+    pub prefetch_depth: u32,
 }
 
 impl SimEnv {
@@ -331,6 +344,7 @@ impl SimEnv {
                 .with_capacity(crate::scheduler::real::DEFAULT_RESIDENCY_CAPACITY),
             drain_mode: DrainMode::default(),
             slot_mask: None,
+            prefetch_depth: 0,
         }
     }
 
@@ -470,6 +484,9 @@ impl ExecEnv for SimEnv {
 
         let mut gpu_in_bytes = 0u64;
         let mut gpu_resident_bytes = 0u64;
+        // Fresh (non-resident) GPU uploads: (gpu index, units, bytes) —
+        // the only traffic a prefetch lookahead can hide (§2.12).
+        let mut fresh_gpu: Vec<(usize, u64, u64)> = Vec::new();
         for part in p.active() {
             let in_bytes = (part.units as f64 * cost.transfer_bytes_per_unit).ceil() as u64;
             let key = ResidencyKey {
@@ -483,6 +500,8 @@ impl ExecEnv for SimEnv {
                 gpu_in_bytes += in_bytes;
                 if was_resident {
                     gpu_resident_bytes += in_bytes;
+                } else if let crate::decompose::ExecSlot::GpuSlot { gpu, .. } = part.slot {
+                    fresh_gpu.push((gpu as usize, part.units, in_bytes));
                 }
             }
             // Pipeline intermediates stay device-resident between stages;
@@ -509,6 +528,55 @@ impl ExecEnv for SimEnv {
         if gpu_in_bytes > 0 {
             let frac = gpu_resident_bytes as f64 / gpu_in_bytes as f64;
             priced.transfer_bytes_per_unit *= 1.0 - 0.5 * frac;
+        }
+        // Transfer/compute overlap (DESIGN.md §2.12): with a dataflow drain
+        // and a non-zero prefetch depth, uploads for chunks beyond the
+        // first ride under earlier chunks' compute. The hidden share is
+        // bounded by per-link occupancy: each lookahead chunk hides at
+        // most one compute window's worth of upload-seconds, so a
+        // transfer-bound link serializes and hides little, and the first
+        // chunk's upload is always exposed. Hidden bytes move from the
+        // `bytes_uploaded` bucket to `uploads_overlapped_bytes` — the
+        // conservation sum (§2.12) is unchanged.
+        if self.drain_mode == DrainMode::Dataflow
+            && self.prefetch_depth > 0
+            && gpu_in_bytes > 0
+        {
+            let mut hidden_bytes = 0u64;
+            let mut hidden_events = 0u64;
+            for &(gpu, units, in_bytes) in &fresh_gpu {
+                let t = (units / self.chunk_units).max(1);
+                let w = (self.prefetch_depth as u64).min(t - 1);
+                if w == 0 {
+                    continue;
+                }
+                let spec = &self.sim.machine.gpus[gpu];
+                let chunk = units as f64 / t as f64;
+                let up_secs = (in_bytes as f64 / t as f64) / (spec.pcie_gbps.max(1e-9) * 1e9);
+                // Roofline compute window per chunk: the slower of the
+                // flop-bound and memory-bound traversal times.
+                let flop_secs = cost.flops_per_unit * cost.passes * chunk
+                    / (spec.gflops.max(1e-9) * 1e9 * self.sim.params.gpu_eff * occ.max(1e-3));
+                let mem_secs =
+                    cost.bytes_per_unit * cost.passes * chunk / (spec.mem_bw_gbps.max(1e-9) * 1e9);
+                let window = flop_secs.max(mem_secs);
+                let hideable = if up_secs > 0.0 {
+                    (window / up_secs).min(1.0)
+                } else {
+                    1.0
+                };
+                hidden_bytes += ((in_bytes as f64 / t as f64) * w as f64 * hideable) as u64;
+                hidden_events += 1;
+            }
+            if hidden_bytes > 0 {
+                self.residency.reclassify_overlapped(hidden_events, hidden_bytes);
+                // Applied on top of the residency discount: resident and
+                // hidden byte sets are disjoint, and the multiplicative
+                // compose undercounts their union — conservative, and the
+                // download half of the traffic is never discounted.
+                priced.transfer_bytes_per_unit *=
+                    1.0 - 0.5 * (hidden_bytes as f64 / gpu_in_bytes as f64);
+            }
         }
         let out = self.price(&p, &priced, sct, cfg, occ);
         Ok(RunOutcome {
@@ -538,6 +606,10 @@ impl ExecEnv for SimEnv {
 
     fn set_drain_mode(&mut self, mode: DrainMode) {
         self.drain_mode = mode;
+    }
+
+    fn set_prefetch_depth(&mut self, depth: u32) {
+        self.prefetch_depth = depth;
     }
 
     fn set_slot_mask(&mut self, mask: Option<SlotMask>) {

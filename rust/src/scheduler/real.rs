@@ -80,6 +80,10 @@ pub struct RealScheduler<'a> {
     /// specialized compiled-in kernels under the request's tuned
     /// work-group size, and CPU workers pin to their slot's core.
     pub native: Option<Arc<NativeEngine>>,
+    /// Graph-drain prefetch lookahead (DESIGN.md §2.12): parked workers
+    /// stage inputs for up to this many upcoming nodes homed on their
+    /// slot. 0 (default) disables prefetch; barrier drains ignore it.
+    pub prefetch_depth: u32,
 }
 
 /// Backwards-compatible name for the outputs+timing of one request.
@@ -149,6 +153,7 @@ impl<'a> RealScheduler<'a> {
             drain_mode: DrainMode::default(),
             slot_mask: None,
             native: None,
+            prefetch_depth: 0,
         }
     }
 
@@ -337,8 +342,14 @@ impl<'a> RealScheduler<'a> {
                 }),
                 mask: self.slot_mask.clone(),
                 pin_cores: self.native.is_some(),
+                prefetch_depth: self.prefetch_depth,
             },
-        )?;
+        );
+        // Speculative uploads no task consumed (a Loop broke early, a
+        // steal moved the consumer, the drain errored) must not leak into
+        // the next request — drop them before propagating any failure.
+        self.residency.clear_pending();
+        let out = out?;
         self.launches += chunk_runner.launch_count();
         let outputs = match out.outputs {
             Some(o) => o,
@@ -403,6 +414,9 @@ impl<'a> RealScheduler<'a> {
                 }),
                 mask: self.slot_mask.clone(),
                 pin_cores: self.native.is_some(),
+                // Barrier drains never park on dependencies, so there is
+                // no compute window to hide an upload under.
+                prefetch_depth: 0,
             },
         )?;
         self.launches += runner.launch_count();
@@ -502,6 +516,10 @@ impl<'a> ExecEnv for RealScheduler<'a> {
 
     fn set_drain_mode(&mut self, mode: DrainMode) {
         self.drain_mode = mode;
+    }
+
+    fn set_prefetch_depth(&mut self, depth: u32) {
+        self.prefetch_depth = depth;
     }
 
     fn set_slot_mask(&mut self, mask: Option<SlotMask>) {
@@ -708,6 +726,36 @@ impl GraphRunner for GraphTaskRunner<'_, '_, '_> {
             outputs,
             busy: Some(busy),
         })
+    }
+
+    fn prefetch_node(&self, slot: crate::decompose::ExecSlot, node: &TaskNode) {
+        // Stage request-vector inputs for an upcoming node homed on this
+        // (parked) worker's slot — the upload runs under other slots'
+        // compute (DESIGN.md §2.12). Best effort by contract: a failed
+        // prefetch is swallowed, the node stages synchronously when it
+        // runs. Carried-from bindings shift the cursor, so the flag must
+        // match run_node's binding walk exactly.
+        let (stage_sct, vec_off, scalar_off, carried) =
+            match &self.stages[node.stage as usize] {
+                StageOp::Compute {
+                    sct,
+                    vec_off,
+                    scalar_off,
+                    carried,
+                } => (*sct, *vec_off, *scalar_off, *carried),
+                _ => return,
+            };
+        let args = self.args.read().unwrap();
+        let _ = self.runner.prefetch_stage_on(
+            slot,
+            stage_sct,
+            &args,
+            carried && node.carried_from.is_some(),
+            vec_off,
+            scalar_off,
+            node.partition.start_unit,
+            node.partition.units,
+        );
     }
 
     fn absorb(&self, node: &TaskNode, outputs: &[ArgValue]) -> Result<bool> {

@@ -169,6 +169,12 @@ pub struct SessionStats {
     pub bytes_uploaded: u64,
     pub bytes_downloaded: u64,
     pub uploads_avoided: u64,
+    /// Bytes the avoided uploads would have moved (conservation term of
+    /// the transfer-accounting invariant, DESIGN.md §2.12).
+    pub uploads_avoided_bytes: u64,
+    /// Uploads hidden under compute by the prefetch lookahead (§2.12).
+    pub uploads_overlapped: u64,
+    pub uploads_overlapped_bytes: u64,
     pub steal_migrations: u64,
     /// Sum over runs of the request's mean slot-idle fraction
     /// ([`ExecOutcome::mean_idle_frac`]) — divide by `runs` for the mean;
@@ -183,6 +189,18 @@ impl SessionStats {
             0.0
         } else {
             100.0 * self.idle_frac_sum / self.runs as f64
+        }
+    }
+
+    /// Share of link-crossing upload bytes hidden under compute by the
+    /// prefetch lookahead (DESIGN.md §2.12): overlapped / (exposed +
+    /// overlapped). 0 when nothing was uploaded.
+    pub fn overlap_pct(&self) -> f64 {
+        let crossed = self.bytes_uploaded + self.uploads_overlapped_bytes;
+        if crossed == 0 {
+            0.0
+        } else {
+            100.0 * self.uploads_overlapped_bytes as f64 / crossed as f64
         }
     }
 }
@@ -450,6 +468,22 @@ impl<E: ExecEnv> Session<E> {
         self.env.lock().unwrap().set_tasks_per_slot(n);
     }
 
+    /// Prefetch lookahead depth for the dataflow drain (DESIGN.md §2.12):
+    /// parked workers stage uploads for up to `k` not-yet-ready chunks
+    /// under earlier chunks' compute. 0 (the default) disables prefetch;
+    /// barrier drains ignore it. Results are bit-identical either way —
+    /// only when uploads happen (and how they are booked) changes.
+    pub fn with_prefetch_depth(self, k: u32) -> Session<E> {
+        self.set_prefetch_depth(k);
+        self
+    }
+
+    /// Runtime form of [`Session::with_prefetch_depth`] (the serve path
+    /// applies the knob to pooled sessions).
+    pub fn set_prefetch_depth(&self, k: u32) {
+        self.env.lock().unwrap().set_prefetch_depth(k);
+    }
+
     /// Toggle the buffer-residency layer (on by default; off is the A/B
     /// baseline for the locality benches).
     pub fn set_residency_enabled(&self, on: bool) {
@@ -654,6 +688,9 @@ impl<E: ExecEnv> Session<E> {
             s.bytes_uploaded += t.bytes_uploaded;
             s.bytes_downloaded += t.bytes_downloaded;
             s.uploads_avoided += t.uploads_avoided;
+            s.uploads_avoided_bytes += t.uploads_avoided_bytes;
+            s.uploads_overlapped += t.uploads_overlapped;
+            s.uploads_overlapped_bytes += t.uploads_overlapped_bytes;
             s.steal_migrations += t.steal_migrations;
             s.idle_frac_sum += idle;
         });
@@ -695,6 +732,9 @@ impl<E: ExecEnv> Session<E> {
             s.bytes_uploaded += t.bytes_uploaded;
             s.bytes_downloaded += t.bytes_downloaded;
             s.uploads_avoided += t.uploads_avoided;
+            s.uploads_avoided_bytes += t.uploads_avoided_bytes;
+            s.uploads_overlapped += t.uploads_overlapped;
+            s.uploads_overlapped_bytes += t.uploads_overlapped_bytes;
             s.steal_migrations += t.steal_migrations;
             s.idle_frac_sum += idle;
         });

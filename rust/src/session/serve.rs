@@ -114,6 +114,10 @@ pub struct ServeOpts {
     /// Override the drain mode on every pooled session (`--drain`);
     /// `None` keeps the backend default ([`DrainMode::Dataflow`]).
     pub drain_mode: Option<DrainMode>,
+    /// Override the prefetch lookahead on every pooled session
+    /// (`--prefetch-depth`, DESIGN.md §2.12); `None` keeps the backend
+    /// default (0 = no prefetch).
+    pub prefetch_depth: Option<u32>,
     /// Device-space co-scheduling (`--co-schedule`, DESIGN.md §2.8): admit
     /// each request onto the KB-cost-priced device subset minimizing its
     /// predicted completion, instead of time-sharing the whole pool. Off
@@ -149,6 +153,7 @@ impl Default for ServeOpts {
             pace: 0.0,
             tasks_per_slot: None,
             drain_mode: None,
+            prefetch_depth: None,
             co_schedule: false,
             store_sync_every: 0,
             batch_max: 1,
@@ -236,7 +241,8 @@ impl ServeReport {
              drain p50/p99 {:.2}/{:.2}ms; {} batches, {} deadline misses; \
              {} kb hits ({} warm-started), \
              {} built ({:.2}s cold-build), {} derived; \
-             {:.1} MB uploaded, {} uploads avoided, {} steal migrations; \
+             {:.1} MB uploaded ({:.1}% overlapped), {} uploads avoided, \
+             {} steal migrations; \
              mean slot idle {:.1}%; {} device-time {:.3}s)",
             self.completed,
             self.wall_secs,
@@ -256,6 +262,7 @@ impl ServeReport {
             self.stats.build_secs,
             self.stats.derived,
             self.stats.bytes_uploaded as f64 / 1e6,
+            self.stats.overlap_pct(),
             self.stats.uploads_avoided,
             self.stats.steal_migrations,
             self.stats.mean_idle_pct(),
@@ -414,6 +421,9 @@ impl<E: ExecEnv + Send> SessionPool<E> {
             stats.bytes_uploaded += st.bytes_uploaded;
             stats.bytes_downloaded += st.bytes_downloaded;
             stats.uploads_avoided += st.uploads_avoided;
+            stats.uploads_avoided_bytes += st.uploads_avoided_bytes;
+            stats.uploads_overlapped += st.uploads_overlapped;
+            stats.uploads_overlapped_bytes += st.uploads_overlapped_bytes;
             stats.steal_migrations += st.steal_migrations;
             stats.idle_frac_sum += st.idle_frac_sum;
         }
@@ -433,6 +443,11 @@ impl<E: ExecEnv + Send> SessionPool<E> {
         if let Some(mode) = opts.drain_mode {
             for s in &self.sessions {
                 s.set_drain_mode(mode);
+            }
+        }
+        if let Some(k) = opts.prefetch_depth {
+            for s in &self.sessions {
+                s.set_prefetch_depth(k);
             }
         }
         // Snapshot so the report's stats cover this run only, even when the
@@ -645,6 +660,10 @@ impl<E: ExecEnv + Send> SessionPool<E> {
             bytes_uploaded: after.bytes_uploaded - stats_before.bytes_uploaded,
             bytes_downloaded: after.bytes_downloaded - stats_before.bytes_downloaded,
             uploads_avoided: after.uploads_avoided - stats_before.uploads_avoided,
+            uploads_avoided_bytes: after.uploads_avoided_bytes - stats_before.uploads_avoided_bytes,
+            uploads_overlapped: after.uploads_overlapped - stats_before.uploads_overlapped,
+            uploads_overlapped_bytes: after.uploads_overlapped_bytes
+                - stats_before.uploads_overlapped_bytes,
             steal_migrations: after.steal_migrations - stats_before.steal_migrations,
             idle_frac_sum: after.idle_frac_sum - stats_before.idle_frac_sum,
         };

@@ -317,6 +317,7 @@ fn masked_drain_never_executes_outside_the_reservation() {
                 cpu: true,
                 gpus: vec![false],
             }),
+            ..Default::default()
         },
     )
     .unwrap();

@@ -390,6 +390,7 @@ fn graph_steals_skipped_when_resident_data_prices_them_out() {
                 default_task_secs: 1e-6,
             }),
             mask: None,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -425,6 +426,7 @@ fn graph_steals_admitted_and_booked_when_migration_is_free() {
                 default_task_secs: 0.05,
             }),
             mask: None,
+            ..Default::default()
         },
     )
     .unwrap();

@@ -138,6 +138,81 @@ fn disabling_residency_restores_per_request_uploads() {
 }
 
 #[test]
+fn transfer_accounting_is_conserved_across_drain_modes_and_depths() {
+    // The conservation invariant (DESIGN.md §2.12): for a fixed request,
+    // bytes_uploaded + uploads_avoided_bytes + uploads_overlapped_bytes
+    // is a property of the workload — drain mode and prefetch depth only
+    // move bytes between the buckets, never create or destroy them.
+    use marrow::scheduler::DrainMode;
+    let b = workloads::filter_pipeline(1 << 15, 1 << 15, false);
+    let mut baseline: Option<u64> = None;
+    for mode in [DrainMode::Dataflow, DrainMode::Barrier] {
+        for depth in [0u32, 1, 2, 8] {
+            let mut env = SimEnv::new(SimMachine::new(i7_hd7950(1), 13));
+            env.set_drain_mode(mode);
+            env.set_prefetch_depth(depth);
+            let out = env
+                .run_request(&b.sct, &RequestArgs::default(), b.total_units, &cfg(0.25))
+                .unwrap();
+            let t = out.exec.transfers;
+            let sum = t.accounted_upload_bytes();
+            assert_eq!(
+                sum,
+                t.bytes_uploaded + t.uploads_avoided_bytes + t.uploads_overlapped_bytes
+            );
+            match baseline {
+                None => baseline = Some(sum),
+                Some(base) => assert_eq!(
+                    sum, base,
+                    "accounted upload bytes must not depend on \
+                     {mode:?}/depth {depth}: {t:?}"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn prefetch_depth_books_overlapped_uploads_in_sim() {
+    // With a dataflow drain and lookahead, part of the cold upload hides
+    // under compute: booked as overlapped, surfaced as overlap% > 0.
+    let b = workloads::filter_pipeline(1 << 15, 1 << 15, false);
+    let mut env = SimEnv::new(SimMachine::new(i7_hd7950(1), 17));
+    env.set_prefetch_depth(4);
+    let out = env
+        .run_request(&b.sct, &RequestArgs::default(), b.total_units, &cfg(0.25))
+        .unwrap();
+    let t = out.exec.transfers;
+    assert!(
+        t.uploads_overlapped > 0 && t.uploads_overlapped_bytes > 0,
+        "prefetch must hide some of the cold upload: {t:?}"
+    );
+    assert!(t.bytes_uploaded > 0, "the first chunk's upload stays exposed");
+}
+
+#[test]
+fn prefetch_overlap_lowers_dataflow_makespan_in_sim() {
+    // Hidden upload leaves the critical path: with identical noise seeds
+    // the prefetch-on virtual makespan prices strictly below prefetch-off
+    // on a transfer-heavy workload.
+    let b = workloads::filter_pipeline(1 << 15, 1 << 15, false);
+    let run = |depth: u32| {
+        let mut env = SimEnv::new(SimMachine::new(i7_hd7950(1), 19));
+        env.set_prefetch_depth(depth);
+        env.run_request(&b.sct, &RequestArgs::default(), b.total_units, &cfg(0.25))
+            .unwrap()
+            .exec
+            .total
+    };
+    let off = run(0);
+    let on = run(4);
+    assert!(
+        on < off,
+        "prefetch-on makespan must beat prefetch-off: on {on} off {off}"
+    );
+}
+
+#[test]
 fn pool_of_sessions_reports_transfer_stats_in_serve_report() {
     let pool = SessionPool::build(2, |i| Session::simulated(i7_hd7950(1), 50 + i as u64));
     let reqs: Vec<ServeRequest> = (0..6)

@@ -12,6 +12,11 @@
 //!  * `BENCH_pr7.json`: batched serve must beat unbatched virtual
 //!    throughput by >= 1.3x with bit-identical per-request execution
 //!    totals (DESIGN.md §2.10),
+//!  * `BENCH_pr9.json` (`--prefetch`): prefetch-on dataflow makespan
+//!    must not exceed prefetch-off on any workload and must strictly
+//!    beat it on the transfer-heavy pipeline with overlap% > 0, and the
+//!    native depth-0 vs depth-k outputs must be bit-identical
+//!    (DESIGN.md §2.12),
 //!  * `--native BENCH_pr8.json` (opt-in: only meaningful on a runner
 //!    that produced the file with the compiled CPU backend): every
 //!    kernel's native output stays within 1e-5 relative error of the
@@ -24,7 +29,7 @@
 //! Usage:
 //!   bench_gate [--fresh BENCH_pr5.json] [--warmstart BENCH_pr6.json]
 //!              [--dataflow BENCH_pr4.json] [--batch BENCH_pr7.json]
-//!              [--native BENCH_pr8.json]
+//!              [--prefetch BENCH_pr9.json] [--native BENCH_pr8.json]
 //!              [--baselines benches/baselines]
 //!              [--summary bench-summary.md] [--tolerance 0.15]
 //!   bench_gate --native-only [--native BENCH_pr8.json]   # CI native job
@@ -85,6 +90,11 @@ fn run(args: &Args) -> Result<(), String> {
     check_coschedule_invariant(&fresh_path)?;
     check_warmstart_invariant(&args.get_or("warmstart", "BENCH_pr6.json"))?;
     check_batch_invariant(&args.get_or("batch", "BENCH_pr7.json"))?;
+    // Opt-in like --native: BENCH_pr9 exists only after the
+    // transfer_overlap bench has run in the same job.
+    if let Some(prefetch) = args.get("prefetch") {
+        check_prefetch_invariant(prefetch)?;
+    }
     // Opt-in: BENCH_pr8 is a hardware measurement, so the gate runs only
     // where the caller says the file was produced on this runner.
     if let Some(native) = args.get("native") {
@@ -147,6 +157,91 @@ fn check_native_invariant(path: &str) -> Result<(), String> {
              below the required 2x over single-thread scalar"
         ));
     }
+    Ok(())
+}
+
+/// The prefetch-overlap gate (DESIGN.md §2.12), baseline-free and
+/// deterministic (seed-paired sim arms): per workload in BENCH_pr9.json,
+/// the prefetch-on makespan must not exceed prefetch-off; the
+/// transfer-heavy `pipeline_3stage` must improve *strictly* and report
+/// overlap% > 0 (something actually hid); and the native depth-0 vs
+/// depth-k drain must have produced bit-identical outputs — prefetch is
+/// a scheduling change, never a numerics change.
+fn check_prefetch_invariant(path: &str) -> Result<(), String> {
+    let v = parse_file(Path::new(path))?;
+    let identical = v
+        .get("outputs_identical")
+        .ok()
+        .and_then(|x| x.as_bool())
+        .ok_or_else(|| format!("{path}: missing outputs_identical"))?;
+    if !identical {
+        return Err(format!(
+            "{path}: prefetch drain outputs drifted from the depth-0 drain \
+             (correctness, not a perf tradeoff)"
+        ));
+    }
+    let points = v
+        .get("points")
+        .ok()
+        .and_then(|p| p.as_arr())
+        .ok_or_else(|| format!("{path}: missing points"))?;
+    // (workload, arm) -> (makespan_ms, overlap_pct)
+    let mut arms: BTreeMap<(String, String), (f64, f64)> = BTreeMap::new();
+    for p in points {
+        let workload = p.get("workload").ok().and_then(|x| x.as_str());
+        let arm = p.get("prefetch").ok().and_then(|x| x.as_str());
+        let makespan = p.get("makespan_ms").ok().and_then(|x| x.as_f64());
+        let overlap = p.get("overlap_pct").ok().and_then(|x| x.as_f64());
+        if let (Some(w), Some(a), Some(m), Some(o)) = (workload, arm, makespan, overlap) {
+            arms.insert((w.to_string(), a.to_string()), (m, o));
+        }
+    }
+    let workloads: Vec<String> = arms
+        .keys()
+        .map(|(w, _)| w.clone())
+        .collect::<std::collections::BTreeSet<_>>()
+        .into_iter()
+        .collect();
+    if workloads.is_empty() {
+        return Err(format!("{path}: no (workload, prefetch) points"));
+    }
+    for w in &workloads {
+        let off = arms
+            .get(&(w.clone(), "off".to_string()))
+            .ok_or_else(|| format!("{path}: {w} has no prefetch-off point"))?;
+        let on = arms
+            .get(&(w.clone(), "on".to_string()))
+            .ok_or_else(|| format!("{path}: {w} has no prefetch-on point"))?;
+        if on.0 > off.0 {
+            return Err(format!(
+                "{path}: {w} prefetch-on makespan {:.3}ms exceeds \
+                 prefetch-off {:.3}ms",
+                on.0, off.0
+            ));
+        }
+        if w == "pipeline_3stage" {
+            if on.0 >= off.0 {
+                return Err(format!(
+                    "{path}: {w} prefetch-on makespan {:.3}ms does not \
+                     strictly beat prefetch-off {:.3}ms",
+                    on.0, off.0
+                ));
+            }
+            if on.1 <= 0.0 {
+                return Err(format!(
+                    "{path}: {w} reports no overlapped upload bytes \
+                     (overlap {:.2}%)",
+                    on.1
+                ));
+            }
+        }
+        println!(
+            "prefetch invariant: {w} {:.2}ms vs off {:.2}ms, overlap \
+             {:.1}% (OK)",
+            on.0, off.0, on.1
+        );
+    }
+    println!("prefetch invariant: depth-0 vs depth-k outputs bit-identical (OK)");
     Ok(())
 }
 
