@@ -1,0 +1,232 @@
+//! Irregular-workload + trace-replay bench (BENCH_pr10.json, the PR-10
+//! perf-trajectory point).
+//!
+//! Two measurements on the simulated i7+HD7950:
+//!
+//! 1. **Per-class cost models vs size-only interpolation** (DESIGN.md
+//!    §2.13): each irregular family (CSR SpMV / sparse, BFS frontier /
+//!    traversal, Mandelbrot / divergent) trains the KB at two sizes, then
+//!    estimates two *held-out* sizes before running them. The class path
+//!    rescales the observed seconds-per-element mean by the request's
+//!    element count; the size-only path returns the nearest trained
+//!    profile's time unrescaled — which is exactly how the pre-class KB
+//!    mis-priced irregular admission. Reported per family: mean relative
+//!    error of both paths. `tools/bench_gate.rs --irregular` holds the
+//!    class path strictly below size-only on the sparse family.
+//!
+//! 2. **Replay determinism**: a recorded trace (mixed request stream,
+//!    arrival offsets, a fig11-style background-load step, the pinned
+//!    ExecProfile) is serialized to JSON, parsed back, and replayed twice
+//!    on fresh pools. The virtual makespans must be bit-identical and the
+//!    batch count equal — the replay contract `marrow serve --replay`
+//!    ships on.
+
+use marrow::bench::workloads;
+use marrow::platform::device::i7_hd7950;
+use marrow::runtime::exec::RequestArgs;
+use marrow::scheduler::DrainMode;
+use marrow::session::serve::{
+    RecordedRequest, ReplayTrace, ServeOpts, ServeReport, ServeRequest, SessionPool,
+};
+use marrow::session::{Computation, ExecProfile, Session};
+use marrow::sim::{LoadProfile, SimMachine};
+
+const TRAIN_SIZES: [u64; 2] = [4096, 8192];
+const HELDOUT_SIZES: [u64; 2] = [16384, 32768];
+
+struct ClassPoint {
+    workload: &'static str,
+    class: &'static str,
+    class_rel_err: f64,
+    size_only_rel_err: f64,
+}
+
+/// Train the KB on `TRAIN_SIZES`, then estimate each held-out size with
+/// both paths *before* running it; mean relative error per path.
+fn estimate_errors(
+    workload: &'static str,
+    class: &'static str,
+    mk: &dyn Fn(u64) -> workloads::Benchmark,
+    seed: u64,
+) -> ClassPoint {
+    let s = Session::simulated(i7_hd7950(1), seed);
+    for &n in &TRAIN_SIZES {
+        let comp = Computation::from(mk(n));
+        for _ in 0..2 {
+            s.run(&comp, &RequestArgs::default()).expect("train run");
+        }
+    }
+    let (mut class_err, mut size_err) = (0.0f64, 0.0f64);
+    for &n in &HELDOUT_SIZES {
+        let comp = Computation::from(mk(n));
+        let (sct, w, _) = comp.spec().expect("spec");
+        let (class_est, size_est) = {
+            let kb = s.kb();
+            (
+                kb.estimate_time(&sct.id(), w).expect("class estimate"),
+                kb.estimate_time_size_only(&sct.id(), w)
+                    .expect("size-only estimate"),
+            )
+        };
+        let actual = s
+            .run(&comp, &RequestArgs::default())
+            .expect("held-out run")
+            .exec
+            .total;
+        class_err += ((class_est - actual) / actual).abs();
+        size_err += ((size_est - actual) / actual).abs();
+    }
+    let n = HELDOUT_SIZES.len() as f64;
+    ClassPoint {
+        workload,
+        class,
+        class_rel_err: class_err / n,
+        size_only_rel_err: size_err / n,
+    }
+}
+
+/// The CLI's bench-name resolution, as replay re-applies it.
+fn mk_bench(bench: &str, size: u64) -> workloads::Benchmark {
+    match bench {
+        "saxpy" => workloads::saxpy(size),
+        "spmv" => workloads::spmv(size),
+        "bfs" => workloads::bfs(size),
+        "mandelbrot" => workloads::mandelbrot(size, 256),
+        other => panic!("unknown bench in trace: {other}"),
+    }
+}
+
+/// One replay of a parsed trace on a fresh pool: same construction as
+/// `marrow serve --replay` (pool at the trace's concurrency, per-session
+/// seeds, the recorded background load injected into every machine).
+fn replay(trace: &ReplayTrace) -> ServeReport {
+    let load = LoadProfile::new(trace.load.clone());
+    let machine = i7_hd7950(1);
+    let pool = SessionPool::build(trace.opts.concurrency.max(1), |i| {
+        Session::sim(SimMachine::new(machine.clone(), 11 + i as u64).with_load(load.clone()))
+    });
+    let reqs: Vec<ServeRequest> = trace
+        .requests
+        .iter()
+        .map(|r| {
+            let mut req = ServeRequest::from(Computation::from(mk_bench(&r.bench, r.size)))
+                .with_arrival_offset(r.offset)
+                .with_priority(r.priority);
+            req.deadline = r.replay_deadline();
+            req
+        })
+        .collect();
+    pool.serve(&reqs, &trace.opts).expect("replay serve")
+}
+
+fn main() {
+    println!(
+        "irregular replay: per-class KB estimates on held-out sizes \
+         {HELDOUT_SIZES:?} (trained on {TRAIN_SIZES:?}), i7+HD7950, \
+         simulated clock\n"
+    );
+    println!(
+        "{:<16} {:>10} {:>16} {:>20}",
+        "workload", "class", "class rel err", "size-only rel err"
+    );
+
+    let points = [
+        estimate_errors("spmv", "sparse", &workloads::spmv, 101),
+        estimate_errors("bfs", "traversal", &workloads::bfs, 202),
+        estimate_errors(
+            "mandelbrot",
+            "divergent",
+            &|n| workloads::mandelbrot(n, 256),
+            303,
+        ),
+    ];
+    for p in &points {
+        println!(
+            "{:<16} {:>10} {:>15.1}% {:>19.1}%",
+            p.workload,
+            p.class,
+            p.class_rel_err * 100.0,
+            p.size_only_rel_err * 100.0
+        );
+    }
+
+    // The recorded stream: a mixed regular/irregular request mix with
+    // arrival gaps, two requests carrying explicit deadlines, and a
+    // background-load step kicking in mid-stream (fig. 11).
+    let mix: [&str; 4] = ["saxpy", "spmv", "bfs", "mandelbrot"];
+    let trace = ReplayTrace {
+        opts: ServeOpts {
+            concurrency: 2,
+            batch_max: 4,
+            batch_window: 5e-3,
+            deadline_default: Some(30.0),
+            exec: ExecProfile::new()
+                .tasks_per_slot(8)
+                .drain_mode(DrainMode::Dataflow),
+            ..Default::default()
+        },
+        load: vec![(0, 0), (8, 6)],
+        requests: (0..16)
+            .map(|i| RecordedRequest {
+                bench: mix[i % mix.len()].to_string(),
+                size: if mix[i % mix.len()] == "saxpy" {
+                    1 << 20
+                } else {
+                    8192
+                },
+                offset: i as f64 * 1e-3,
+                deadline: if i % 7 == 0 { Some(0.5) } else { None },
+                deadline_explicit: i % 7 == 0,
+                priority: (i % 3) as u32,
+            })
+            .collect(),
+    };
+
+    // Through the wire format both times: what replays is the parsed
+    // trace, not the in-memory one.
+    let text = trace.to_json().to_string_pretty();
+    let parsed = ReplayTrace::parse(&text).expect("trace round-trip");
+    assert_eq!(parsed, trace, "trace JSON round-trip drifted");
+    let a = replay(&parsed);
+    let b = replay(&parsed);
+    let identical =
+        a.virtual_makespan.to_bits() == b.virtual_makespan.to_bits() && a.batches == b.batches;
+    println!(
+        "\nreplay: {} requests, virtual makespan {:.6}s vs {:.6}s, \
+         batches {} vs {}, identical: {identical}",
+        trace.requests.len(),
+        a.virtual_makespan,
+        b.virtual_makespan,
+        a.batches,
+        b.batches
+    );
+
+    let class_json: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"workload\": \"{}\", \"class\": \"{}\", \
+                 \"class_rel_err\": {:.6}, \"size_only_rel_err\": {:.6}}}",
+                p.workload, p.class, p.class_rel_err, p.size_only_rel_err
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"irregular_replay\",\n  \"pr\": 10,\n  \
+         \"classes\": [\n{}\n  ],\n  \"replay\": {{\n    \
+         \"requests\": {},\n    \"makespan_a\": {:.17e},\n    \
+         \"makespan_b\": {:.17e},\n    \"batches_a\": {},\n    \
+         \"batches_b\": {},\n    \"identical\": {identical}\n  }}\n}}\n",
+        class_json.join(",\n"),
+        trace.requests.len(),
+        a.virtual_makespan,
+        b.virtual_makespan,
+        a.batches,
+        b.batches
+    );
+    let path = "BENCH_pr10.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

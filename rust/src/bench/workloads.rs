@@ -4,7 +4,7 @@
 //! analytic counts the AOT manifest records for the real artifacts, so the
 //! simulator and the real runtime price the same computation consistently.
 
-use crate::data::workload::Workload;
+use crate::data::workload::{Workload, WorkloadClass};
 use crate::platform::occupancy::KernelFootprint;
 use crate::sct::{KernelSpec, ParamSpec, Sct};
 use crate::data::vector::ScalarTrait;
@@ -181,6 +181,86 @@ pub fn segmentation(mib: u64) -> Benchmark {
     }
 }
 
+/// CSR SpMV (Map, irregular tier): one epu unit = one matrix row stored
+/// ELL-style (16-slot padded, -1 column sentinel) against a COPY-replicated
+/// dense vector of 4096 entries. Cost follows the row-length distribution,
+/// so the kernel declares a per-chunk cost CV and the workload is tagged
+/// `Sparse` for the KB's per-class model.
+pub fn spmv(rows: u64) -> Benchmark {
+    const K_PAD: u64 = 16;
+    const N_COLS: u64 = 4096;
+    let mut k = KernelSpec::new(
+        "spmv_csr",
+        vec![ParamSpec::VecIn, ParamSpec::VecIn, ParamSpec::VecCopy],
+        K_PAD, // one row spans K_PAD elems of each partitioned vector
+    );
+    k.flops_per_unit = 2.0 * K_PAD as f64;
+    k.bytes_per_unit = 12.0 * K_PAD as f64;
+    k.passes = 1.0;
+    k.footprint = fp(24, 0);
+    k.chunk_cv = 0.6; // row-length skew
+    Benchmark {
+        name: format!("spmv {rows}"),
+        sct: Sct::map(Sct::kernel(k)),
+        workload: Workload::d1(rows).with_class(WorkloadClass::Sparse),
+        total_units: rows,
+        copy_bytes: 4.0 * N_COLS as f64,
+    }
+}
+
+/// BFS frontier expansion (Map, irregular tier): one epu unit = one node
+/// with an 8-slot padded adjacency row; the frontier flag vector (4096
+/// nodes) is COPY-replicated. Cost follows degree/frontier structure —
+/// class `Traversal`.
+pub fn bfs(nodes: u64) -> Benchmark {
+    const DEG_PAD: u64 = 8;
+    const N_NODES: u64 = 4096;
+    let mut k = KernelSpec::new(
+        "bfs_frontier",
+        vec![ParamSpec::VecIn, ParamSpec::VecCopy],
+        DEG_PAD,
+    );
+    k.flops_per_unit = DEG_PAD as f64;
+    k.bytes_per_unit = 8.0 * DEG_PAD as f64;
+    k.passes = 1.0;
+    k.footprint = fp(16, 0);
+    k.chunk_cv = 0.5; // frontier/degree skew
+    Benchmark {
+        name: format!("bfs {nodes}"),
+        sct: Sct::map(Sct::kernel(k)),
+        workload: Workload::d1(nodes).with_class(WorkloadClass::Traversal),
+        total_units: nodes,
+        copy_bytes: 4.0 * N_NODES as f64,
+    }
+}
+
+/// Mandelbrot escape iteration (Map, irregular tier): one epu unit = one
+/// pixel, trip count varies per pixel up to `max_iters` — class
+/// `Divergent`, the strongest per-chunk cost spread of the tier.
+pub fn mandelbrot(px: u64, max_iters: u32) -> Benchmark {
+    let mut k = KernelSpec::new(
+        "mandelbrot",
+        vec![
+            ParamSpec::VecIn,
+            ParamSpec::VecIn,
+            ParamSpec::ScalarI32(ScalarTrait::Bound),
+        ],
+        1,
+    );
+    k.flops_per_unit = 8.0 * (max_iters as f64 / 4.0).max(1.0); // mean-trip guess
+    k.bytes_per_unit = 12.0;
+    k.passes = 1.0;
+    k.footprint = fp(20, 0);
+    k.chunk_cv = 0.8; // escape-time divergence
+    Benchmark {
+        name: format!("mandelbrot {px}"),
+        sct: Sct::map(Sct::kernel(k)),
+        workload: Workload::d1(px).with_class(WorkloadClass::Divergent),
+        total_units: px,
+        copy_bytes: 0.0,
+    }
+}
+
 /// Table 2 / Section 4.1 parameterizations (CPU-only study).
 pub fn table2_suite() -> Vec<Benchmark> {
     let mut v = Vec::new();
@@ -238,6 +318,28 @@ mod tests {
         }
         assert_eq!(table2_suite().len(), 17);
         assert_eq!(table3_suite().len(), 15);
+    }
+
+    #[test]
+    fn irregular_benchmarks_declare_class_and_skew() {
+        let s = spmv(1024);
+        assert_eq!(s.workload.class, WorkloadClass::Sparse);
+        assert_eq!(s.workload.id(), "1d:1024:f32:sparse");
+        let b = bfs(1024);
+        assert_eq!(b.workload.class, WorkloadClass::Traversal);
+        let m = mandelbrot(32_768, 256);
+        assert_eq!(m.workload.class, WorkloadClass::Divergent);
+        for bench in [&s, &b, &m] {
+            for k in bench.sct.kernels() {
+                assert!(k.chunk_cv > 0.0, "{} must declare skew", bench.name);
+            }
+        }
+        // The pinned paper suites stay untouched by the irregular tier.
+        assert!(table2_suite().iter().all(|b| b
+            .sct
+            .kernels()
+            .iter()
+            .all(|k| k.chunk_cv == 0.0)));
     }
 
     #[test]

@@ -1,0 +1,127 @@
+//! Deterministic generators for the irregular-workload tier (ROADMAP
+//! item 4): ELL-padded sparse matrices with skewed row lengths, padded
+//! adjacency lists with skewed degrees, and Mandelbrot coordinate planes.
+//!
+//! All generators are pure functions of their (seed, index) inputs — the
+//! CLI, the propcheck suite and the benches synthesize bit-identical
+//! buffers without sharing state, and chunk decomposition can never
+//! change the data a row/node/pixel sees.
+
+/// splitmix64 avalanche step: uncorrelated 64-bit streams from
+/// (seed, index) pairs.
+fn mix(seed: u64, index: u64) -> u64 {
+    let mut z = seed
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add(index)
+        .wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Uniform f64 in [0, 1) from one hash draw.
+fn unit(seed: u64, index: u64) -> f64 {
+    (mix(seed, index) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Skewed trip count in [1, max]: squaring the uniform draw biases mass
+/// toward short rows with a heavy tail of long ones — the row-length
+/// shape SpMV schedulers actually face.
+pub fn skewed_len(seed: u64, index: u64, max: usize) -> usize {
+    let u = unit(seed, index);
+    1 + (u * u * (max as f64)) as usize % max
+}
+
+/// ELL-padded sparse operand set: `(cols, vals, x)` for `rows` rows with
+/// up to `k_pad` nonzeros each against a dense vector of `n_cols`
+/// entries. Column indices are stored as exact f32 integers, -1.0-padded
+/// past each row's length.
+pub fn spmv_inputs(seed: u64, rows: usize, k_pad: usize, n_cols: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut cols = vec![-1.0f32; rows * k_pad];
+    let mut vals = vec![0.0f32; rows * k_pad];
+    for r in 0..rows {
+        let len = skewed_len(seed, r as u64, k_pad);
+        for k in 0..len {
+            let draw = mix(seed ^ 0x5b_ff, (r * k_pad + k) as u64);
+            cols[r * k_pad + k] = (draw % n_cols as u64) as f32;
+            vals[r * k_pad + k] = (unit(seed ^ 0xa1, (r * k_pad + k) as u64) * 2.0 - 1.0) as f32;
+        }
+    }
+    let x: Vec<f32> = (0..n_cols)
+        .map(|i| (unit(seed ^ 0x77, i as u64) * 2.0 - 1.0) as f32)
+        .collect();
+    (cols, vals, x)
+}
+
+/// Padded adjacency + frontier flags: `(adj, frontier)` for `nodes`
+/// nodes with up to `deg_pad` neighbours each out of `n_nodes`, and a
+/// sparse 0/1 frontier (~1 node in 7).
+pub fn bfs_inputs(seed: u64, nodes: usize, deg_pad: usize, n_nodes: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut adj = vec![-1.0f32; nodes * deg_pad];
+    for v in 0..nodes {
+        let deg = skewed_len(seed ^ 0x13, v as u64, deg_pad);
+        for d in 0..deg {
+            let draw = mix(seed ^ 0x2c_e1, (v * deg_pad + d) as u64);
+            adj[v * deg_pad + d] = (draw % n_nodes as u64) as f32;
+        }
+    }
+    let frontier: Vec<f32> = (0..n_nodes)
+        .map(|i| if mix(seed ^ 0x9d, i as u64) % 7 == 0 { 1.0 } else { 0.0 })
+        .collect();
+    (adj, frontier)
+}
+
+/// Mandelbrot coordinate plane: `px` points scanning the classic
+/// [-2.5, 1] x [-1.25, 1.25] window row-major over a near-square grid, so
+/// escape-iteration cost varies smoothly but drastically across chunks.
+pub fn mandelbrot_plane(px: usize) -> (Vec<f32>, Vec<f32>) {
+    let w = (px as f64).sqrt().ceil() as usize;
+    let mut re = Vec::with_capacity(px);
+    let mut im = Vec::with_capacity(px);
+    for i in 0..px {
+        let (x, y) = (i % w, i / w);
+        re.push((-2.5 + 3.5 * x as f64 / w as f64) as f32);
+        im.push((-1.25 + 2.5 * y as f64 / w as f64) as f32);
+    }
+    (re, im)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_are_deterministic() {
+        assert_eq!(spmv_inputs(42, 64, 16, 256), spmv_inputs(42, 64, 16, 256));
+        assert_eq!(bfs_inputs(42, 64, 8, 256), bfs_inputs(42, 64, 8, 256));
+        assert_eq!(mandelbrot_plane(4096), mandelbrot_plane(4096));
+        assert_ne!(spmv_inputs(42, 64, 16, 256), spmv_inputs(43, 64, 16, 256));
+    }
+
+    #[test]
+    fn row_lengths_are_skewed_and_bounded() {
+        let lens: Vec<usize> = (0..4096).map(|r| skewed_len(7, r, 16)).collect();
+        assert!(lens.iter().all(|&l| (1..=16).contains(&l)));
+        let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
+        // Squared-uniform draw: mean well below the midpoint, tail present.
+        assert!(mean < 8.0, "mean {mean} not skewed short");
+        assert!(lens.iter().any(|&l| l >= 14), "no long-row tail");
+    }
+
+    #[test]
+    fn sparse_indices_stay_in_range() {
+        let (cols, vals, x) = spmv_inputs(3, 128, 16, 512);
+        assert_eq!(x.len(), 512);
+        for (&c, &v) in cols.iter().zip(&vals) {
+            if c >= 0.0 {
+                assert!((c as usize) < 512);
+                assert!(c == c.trunc(), "column index must be an exact f32 int");
+            } else {
+                assert_eq!(v, 0.0, "padding carries zero values");
+            }
+        }
+        let (adj, frontier) = bfs_inputs(3, 128, 8, 512);
+        assert!(adj.iter().all(|&a| a < 512.0));
+        assert!(frontier.iter().any(|&f| f > 0.0));
+    }
+}

@@ -1,6 +1,7 @@
 //! Host-side data containers and synthetic workload generators.
 
 pub mod image;
+pub mod irregular;
 pub mod vector;
 pub mod workload;
 

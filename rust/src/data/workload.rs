@@ -7,6 +7,45 @@
 
 use crate::util::json::Json;
 
+/// Coarse behavioural class of a workload (ROADMAP item 4). Regular
+/// data-parallel kernels have uniform per-chunk cost; the other classes
+/// carry data-dependent cost the per-size interpolation cannot see, so the
+/// KB keys profiles on the class and keeps a per-class cost model as the
+/// interpolation fallback.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum WorkloadClass {
+    /// Uniform per-chunk cost (saxpy, filters, FFT, n-body).
+    #[default]
+    Regular,
+    /// Sparse linear algebra: cost follows the nonzero distribution.
+    Sparse,
+    /// Graph traversal: cost follows frontier/degree structure.
+    Traversal,
+    /// Convergence/escape iteration: cost varies per element.
+    Divergent,
+}
+
+impl WorkloadClass {
+    pub fn label(&self) -> &'static str {
+        match self {
+            WorkloadClass::Regular => "regular",
+            WorkloadClass::Sparse => "sparse",
+            WorkloadClass::Traversal => "traversal",
+            WorkloadClass::Divergent => "divergent",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<WorkloadClass> {
+        match s {
+            "regular" => Some(WorkloadClass::Regular),
+            "sparse" => Some(WorkloadClass::Sparse),
+            "traversal" => Some(WorkloadClass::Traversal),
+            "divergent" => Some(WorkloadClass::Divergent),
+            _ => None,
+        }
+    }
+}
+
 /// Characterization of one submitted workload.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Workload {
@@ -14,6 +53,10 @@ pub struct Workload {
     pub dims: Vec<u64>,
     /// Double-precision data? (all paper benchmarks are single.)
     pub double_precision: bool,
+    /// Behavioural class; non-Regular classes suffix [`Workload::id`] so
+    /// the KB never conflates a sparse profile with a regular one of the
+    /// same shape.
+    pub class: WorkloadClass,
 }
 
 impl Workload {
@@ -21,6 +64,7 @@ impl Workload {
         Workload {
             dims: vec![n],
             double_precision: false,
+            class: WorkloadClass::Regular,
         }
     }
 
@@ -28,6 +72,7 @@ impl Workload {
         Workload {
             dims: vec![h, w],
             double_precision: false,
+            class: WorkloadClass::Regular,
         }
     }
 
@@ -35,7 +80,14 @@ impl Workload {
         Workload {
             dims: vec![h, w, d],
             double_precision: false,
+            class: WorkloadClass::Regular,
         }
+    }
+
+    /// Builder: tag the workload with a behavioural class.
+    pub fn with_class(mut self, class: WorkloadClass) -> Workload {
+        self.class = class;
+        self
     }
 
     /// Dimensionality of the computation's work space.
@@ -58,7 +110,9 @@ impl Workload {
             .collect()
     }
 
-    /// Stable identifier for KB keys, e.g. `2d:2048x2048:f32`.
+    /// Stable identifier for KB keys, e.g. `2d:2048x2048:f32`. Non-Regular
+    /// classes append a `:{class}` suffix so class-tagged profiles never
+    /// alias the regular ones (and existing ids stay byte-stable).
     pub fn id(&self) -> String {
         let dims = self
             .dims
@@ -66,22 +120,32 @@ impl Workload {
             .map(|d| d.to_string())
             .collect::<Vec<_>>()
             .join("x");
-        format!(
+        let base = format!(
             "{}d:{}:{}",
             self.dims.len(),
             dims,
             if self.double_precision { "f64" } else { "f32" }
-        )
+        );
+        match self.class {
+            WorkloadClass::Regular => base,
+            c => format!("{base}:{}", c.label()),
+        }
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             (
                 "dims",
                 Json::arr(self.dims.iter().map(|&d| Json::num(d as f64)).collect()),
             ),
             ("double_precision", Json::Bool(self.double_precision)),
-        ])
+        ];
+        // Only non-default classes are serialized, keeping existing KB
+        // files byte-identical on round-trip.
+        if self.class != WorkloadClass::Regular {
+            fields.push(("class", Json::str(self.class.label())));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(v: &Json) -> crate::Result<Workload> {
@@ -98,6 +162,12 @@ impl Workload {
                 .get("double_precision")?
                 .as_bool()
                 .unwrap_or(false),
+            class: v
+                .get("class")
+                .ok()
+                .and_then(|c| c.as_str())
+                .and_then(WorkloadClass::parse)
+                .unwrap_or(WorkloadClass::Regular),
         })
     }
 }
@@ -130,5 +200,30 @@ mod tests {
     #[test]
     fn elems_product() {
         assert_eq!(Workload::d3(4, 5, 6).elems(), 120);
+    }
+
+    #[test]
+    fn class_suffixes_id_and_roundtrips() {
+        let w = Workload::d1(4096).with_class(WorkloadClass::Sparse);
+        assert_eq!(w.id(), "1d:4096:f32:sparse");
+        assert_eq!(Workload::from_json(&w.to_json()).unwrap(), w);
+        // Regular stays suffix-free and serializes no class field.
+        let r = Workload::d1(4096);
+        assert_eq!(r.id(), "1d:4096:f32");
+        assert!(r.to_json().get("class").is_err());
+        assert_eq!(Workload::from_json(&r.to_json()).unwrap(), r);
+    }
+
+    #[test]
+    fn class_labels_roundtrip() {
+        for c in [
+            WorkloadClass::Regular,
+            WorkloadClass::Sparse,
+            WorkloadClass::Traversal,
+            WorkloadClass::Divergent,
+        ] {
+            assert_eq!(WorkloadClass::parse(c.label()), Some(c));
+        }
+        assert_eq!(WorkloadClass::parse("spicy"), None);
     }
 }

@@ -21,10 +21,10 @@
 pub mod interp;
 pub mod store;
 
-use std::collections::HashSet;
+use std::collections::{BTreeMap, HashSet};
 use std::path::{Path, PathBuf};
 
-use crate::data::workload::Workload;
+use crate::data::workload::{Workload, WorkloadClass};
 use crate::error::{Error, Result};
 use crate::platform::cpu::FissionLevel;
 use crate::tuner::profile::{FrameworkConfig, Profile, ProfileOrigin};
@@ -38,6 +38,68 @@ use store::{KbStore, StoreRecord};
 /// store's digest-qualified content key).
 fn pair_key(sct_id: &str, workload_id: &str) -> String {
     format!("{sct_id}|{workload_id}")
+}
+
+/// Running per-class cost model (ROADMAP item 4): mean and dispersion of
+/// observed seconds-per-element for one [`WorkloadClass`]. Irregular
+/// classes (sparse/traversal/divergent) carry data-dependent cost the
+/// per-size RBF interpolation cannot see — two sparse matrices of equal
+/// shape can differ arbitrarily in work — so the KB accumulates what the
+/// class actually costs per element and estimates unseen sizes by
+/// rescaling that mean.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClassModel {
+    /// Observations folded in.
+    pub count: u64,
+    /// Sum of observed seconds-per-element.
+    pub sum: f64,
+    /// Sum of squared seconds-per-element (for the dispersion).
+    pub sum_sq: f64,
+}
+
+impl ClassModel {
+    /// Fold one observed run: `secs` over `elems` elements.
+    pub fn observe(&mut self, elems: u64, secs: f64) {
+        if elems == 0 || !(secs > 0.0) {
+            return;
+        }
+        let spe = secs / elems as f64;
+        self.count += 1;
+        self.sum += spe;
+        self.sum_sq += spe * spe;
+    }
+
+    /// Mean seconds-per-element over the observations.
+    pub fn mean(&self) -> Option<f64> {
+        (self.count > 0).then(|| self.sum / self.count as f64)
+    }
+
+    /// Coefficient of variation of the observed per-element cost — the
+    /// dispersion bound the propcheck suite asserts estimates within.
+    pub fn dispersion(&self) -> f64 {
+        let Some(m) = self.mean() else { return 0.0 };
+        if self.count < 2 || m <= 0.0 {
+            return 0.0;
+        }
+        let var = (self.sum_sq / self.count as f64 - m * m).max(0.0);
+        var.sqrt() / m
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("sum", Json::num(self.sum)),
+            ("sum_sq", Json::num(self.sum_sq)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<ClassModel> {
+        Ok(ClassModel {
+            count: v.get("count")?.as_u64().unwrap_or(0),
+            sum: v.get("sum")?.as_f64().unwrap_or(0.0),
+            sum_sq: v.get("sum_sq")?.as_f64().unwrap_or(0.0),
+        })
+    }
 }
 
 /// The knowledge base. `Clone` snapshots the current profiles (used when
@@ -59,6 +121,11 @@ pub struct KnowledgeBase {
     imported: HashSet<String>,
     /// Durable write-through backing, if any.
     kb_store: Option<KbStore>,
+    /// Per-class cost models, keyed by [`WorkloadClass::label`] — the
+    /// interpolation fallback for irregular classes (machine-local, so
+    /// persisted with the legacy JSON but never exchanged via store
+    /// records, which carry platform provenance per profile instead).
+    class_models: BTreeMap<String, ClassModel>,
 }
 
 impl Clone for KnowledgeBase {
@@ -70,6 +137,7 @@ impl Clone for KnowledgeBase {
             hints: self.hints.clone(),
             imported: self.imported.clone(),
             kb_store: None,
+            class_models: self.class_models.clone(),
         }
     }
 }
@@ -96,6 +164,16 @@ impl KnowledgeBase {
             })?;
             for e in v.get("profiles")?.as_arr().unwrap_or(&[]) {
                 kb.entries.push(Profile::from_json(e)?);
+            }
+            // Optional (PR 10): per-class cost models. Absent in KBs
+            // written before the irregular tier.
+            if let Ok(models) = v.get("class_models") {
+                if let Some(obj) = models.as_obj() {
+                    for (label, m) in obj {
+                        kb.class_models
+                            .insert(label.clone(), ClassModel::from_json(m)?);
+                    }
+                }
             }
         }
         Ok(kb)
@@ -169,10 +247,24 @@ impl KnowledgeBase {
             return Ok(());
         }
         if let Some(path) = self.path.clone() {
-            let v = Json::obj(vec![(
+            let mut fields = vec![(
                 "profiles",
                 Json::arr(self.entries.iter().map(|p| p.to_json()).collect()),
-            )]);
+            )];
+            // Class models only appear once observed, keeping pre-PR-10
+            // KB files byte-identical on round-trip.
+            if !self.class_models.is_empty() {
+                fields.push((
+                    "class_models",
+                    Json::Obj(
+                        self.class_models
+                            .iter()
+                            .map(|(k, m)| (k.clone(), m.to_json()))
+                            .collect(),
+                    ),
+                ));
+            }
+            let v = Json::obj(fields);
             atomic_write(&path, v.to_string_pretty().as_bytes())?;
         }
         Ok(())
@@ -401,7 +493,29 @@ impl KnowledgeBase {
     /// the smallest workload ever recorded. Entries only: foreign-manifest
     /// hints carry another machine's clock and would mis-price admission.
     /// `None` on a cold KB — callers fall back to an observed mean.
+    ///
+    /// Irregular classes (ROADMAP item 4): when there is no exact entry
+    /// and the workload carries a non-Regular class with an observed
+    /// [`ClassModel`], the class mean rescaled by element count wins over
+    /// the size-only nearest-profile search — per-size interpolation has
+    /// no way to see data-dependent cost, and the bench gate holds the
+    /// class path to a strictly lower estimate error on sparse workloads.
     pub fn estimate_time(&self, sct_id: &str, workload: &Workload) -> Option<f64> {
+        if let Some(p) = self.lookup(sct_id, workload) {
+            return Some(p.best_time);
+        }
+        if workload.class != WorkloadClass::Regular {
+            if let Some(est) = self.class_estimate(workload.class, workload.elems()) {
+                return Some(est);
+            }
+        }
+        self.estimate_time_size_only(sct_id, workload)
+    }
+
+    /// The pre-class estimate path: nearest profile by workload features
+    /// over the derive scopes, blind to per-class cost models. Public so
+    /// the bench gate can compare it against the class-aware estimate.
+    pub fn estimate_time_size_only(&self, sct_id: &str, workload: &Workload) -> Option<f64> {
         if let Some(p) = self.lookup(sct_id, workload) {
             return Some(p.best_time);
         }
@@ -441,6 +555,31 @@ impl KnowledgeBase {
             .map(|(id, w)| self.estimate_time(id, w))
             .collect::<Option<Vec<f64>>>()?;
         Some(pack_estimate(&ests))
+    }
+
+    /// Fold one observed run into the class's cost model. Regular
+    /// workloads are excluded by the caller convention (their per-size
+    /// interpolation is already accurate), but folding them is harmless.
+    pub fn observe_class(&mut self, class: WorkloadClass, elems: u64, secs: f64) {
+        self.class_models
+            .entry(class.label().to_string())
+            .or_default()
+            .observe(elems, secs);
+    }
+
+    /// Class-model completion estimate: observed mean seconds-per-element
+    /// rescaled to `elems`. `None` before any observation of the class.
+    pub fn class_estimate(&self, class: WorkloadClass, elems: u64) -> Option<f64> {
+        self.class_models
+            .get(class.label())
+            .and_then(|m| m.mean())
+            .map(|spe| spe * elems as f64)
+    }
+
+    /// The class's running model, when observed (dispersion inspection
+    /// for tests and the bench gate).
+    pub fn class_model(&self, class: WorkloadClass) -> Option<&ClassModel> {
+        self.class_models.get(class.label())
     }
 }
 
@@ -642,6 +781,61 @@ mod tests {
         assert!(kb
             .estimate_batch(&[("f", &a), ("g", &Workload::d1(7))])
             .is_none());
+    }
+
+    #[test]
+    fn class_model_beats_size_only_on_irregular_workloads() {
+        use crate::data::workload::WorkloadClass;
+        let mut kb = KnowledgeBase::in_memory();
+        // One small sparse profile on record: the size-only nearest search
+        // prices every sparse request at its (tiny) best_time.
+        kb.store(mk_profile(
+            "spmv",
+            Workload::d1(256).with_class(WorkloadClass::Sparse),
+            FissionLevel::L2,
+            vec![4],
+            0.2,
+            0.001,
+        ));
+        // Observed sparse runs: ~2 us/element.
+        for elems in [256u64, 1024, 4096] {
+            kb.observe_class(WorkloadClass::Sparse, elems, elems as f64 * 2e-6);
+        }
+        let big = Workload::d1(65_536).with_class(WorkloadClass::Sparse);
+        let truth = 65_536.0 * 2e-6;
+        let class_aware = kb.estimate_time("spmv", &big).unwrap();
+        let size_only = kb.estimate_time_size_only("spmv", &big).unwrap();
+        assert!(
+            (class_aware - truth).abs() < (size_only - truth).abs(),
+            "class {class_aware} vs size-only {size_only} (truth {truth})"
+        );
+        // Exact entries still win over the model.
+        let small = Workload::d1(256).with_class(WorkloadClass::Sparse);
+        assert_eq!(kb.estimate_time("spmv", &small), Some(0.001));
+        // Regular workloads never consult the class model.
+        assert!(kb.estimate_time("other", &Workload::d1(64)).is_none());
+        // Dispersion of a constant-rate model is ~0.
+        assert!(kb.class_model(WorkloadClass::Sparse).unwrap().dispersion() < 1e-9);
+        assert!(kb.class_estimate(WorkloadClass::Traversal, 100).is_none());
+    }
+
+    #[test]
+    fn class_models_persist_in_legacy_json() {
+        use crate::data::workload::WorkloadClass;
+        let path = tmp("classmodels.json");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut kb = KnowledgeBase::open(&path).unwrap();
+            kb.observe_class(WorkloadClass::Divergent, 1000, 0.004);
+            kb.observe_class(WorkloadClass::Divergent, 1000, 0.008);
+            kb.save().unwrap();
+        }
+        let kb = KnowledgeBase::open(&path).unwrap();
+        let m = kb.class_model(WorkloadClass::Divergent).unwrap();
+        assert_eq!(m.count, 2);
+        assert!((kb.class_estimate(WorkloadClass::Divergent, 1000).unwrap() - 0.006).abs() < 1e-12);
+        assert!(m.dispersion() > 0.0);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

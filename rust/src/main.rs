@@ -25,7 +25,12 @@
 //!       fusion stretch the oldest member absorbs (default 2 ms, scaled
 //!       down by request priority), and --deadline-default <ms> attaches
 //!       an SLO to deadline-free requests — batches never stretch past any
-//!       member's slack, and overruns are reported as deadline misses
+//!       member's slack, and overruns are reported as deadline misses.
+//!       --arrival-gap-ms spaces request arrivals, --load injects a
+//!       fig11-style background CPU-load schedule (sim backend), --record
+//!       writes a replayable trace of the run, and --replay <trace.json>
+//!       re-drains a recorded mix deterministically in virtual time
+//!       (DESIGN.md 2.13)
 //!   graph --bench <name> --size <n> [--gpus <g>] [--tasks-per-slot <t>]
 //!       dump the benchmark's dataflow TaskGraph as GraphViz DOT (nodes
 //!       labelled stage/chunk/slot, sync nodes highlighted)
@@ -67,11 +72,13 @@ use marrow::decompose::graph::{build_graph, flatten_stages};
 use marrow::runtime::artifacts::Manifest;
 use marrow::runtime::client::RtClient;
 use marrow::runtime::exec::RequestArgs;
-use marrow::scheduler::{DrainMode, ExecEnv};
-use marrow::session::serve::{ServeOpts, ServeRequest, SessionPool};
-use marrow::session::{Backend, Computation, Session};
+use marrow::scheduler::ExecEnv;
+use marrow::session::serve::{
+    RecordedRequest, ReplayTrace, ServeOpts, ServeRequest, SessionPool,
+};
+use marrow::session::{Backend, Computation, ExecProfile, Session};
 use marrow::tuner::profile::Profile;
-use marrow::sim::shoc;
+use marrow::sim::{shoc, LoadProfile, SimMachine};
 use marrow::Result;
 
 fn main() {
@@ -103,16 +110,27 @@ const USAGE: &str = "\
 marrow — multi-CPU/multi-GPU execution of compound multi-kernel computations
 usage:
   marrow eval <table2|table3|table4|table5|fig11|ablations|all>
-  marrow profile --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--backend <sim|native|pjrt>] [--gpus <g>] [--kb <path> | --kb-store <dir>]
-  marrow run --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--backend <sim|native|pjrt>] [--gpus <g>] [--runs <r>] [--kb <path> | --kb-store <dir>] [--concurrency <c>] [--tasks-per-slot <t>] [--drain <barrier|dataflow>] [--prefetch-depth <k>]
-  marrow serve --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--backend <sim|native>] [--requests <r>] [--concurrency <c>] [--pace-ms <m>] [--kb <path> | --kb-store <dir> [--import <snapshot>] [--store-sync-every <n>]] [--tasks-per-slot <t>] [--drain <barrier|dataflow>] [--prefetch-depth <k>] [--co-schedule] [--batch-max <n>] [--batch-window <ms>] [--deadline-default <ms>]
+  marrow profile --bench <saxpy|filter|fft|nbody|segmentation|spmv|bfs|mandelbrot> --size <n> [--backend <sim|native|pjrt>] [--gpus <g>] [--kb <path> | --kb-store <dir>]
+  marrow run --bench <name> --size <n> [--backend <sim|native|pjrt>] [--gpus <g>] [--runs <r>] [--kb <path> | --kb-store <dir>] [--concurrency <c>] [--tasks-per-slot <t>] [--drain <barrier|dataflow>] [--prefetch-depth <k>] [--no-residency] [--max-dev <d>]
+  marrow serve --bench <name> --size <n> [--backend <sim|native>] [--requests <r>] [--concurrency <c>] [--pace-ms <m>] [--kb <path> | --kb-store <dir> [--import <snapshot>] [--store-sync-every <n>]] [--tasks-per-slot <t>] [--drain <barrier|dataflow>] [--prefetch-depth <k>] [--co-schedule] [--batch-max <n>] [--batch-window <ms>] [--deadline-default <ms>] [--arrival-gap-ms <g>] [--load <from:threads,...>] [--record <trace.json>]
+  marrow serve --replay <trace.json> [--gpus <g>] [--kb <path>]
   marrow kb <export|import|merge|stats|gc> --store <dir> [--from <store|snapshot|kb.json>] [--out <path>] [--gpus <g>]
-  marrow graph --bench <saxpy|filter|fft|nbody|segmentation> --size <n> [--gpus <g>] [--tasks-per-slot <t>] [--prefetch-depth <k>] [--kb <path>]
+  marrow graph --bench <name> --size <n> [--gpus <g>] [--tasks-per-slot <t>] [--prefetch-depth <k>] [--kb <path>]
+
+benchmarks: saxpy|filter|fft|nbody|segmentation (regular) and
+spmv|bfs|mandelbrot (irregular: data-dependent per-chunk cost; spmv/bfs
+need --size % 256 == 0, mandelbrot --size % 4096 == 0 on native).
 
 --prefetch-depth <k>: dataflow-drain lookahead (DESIGN.md §2.12) — parked
 workers stage uploads for up to k not-yet-ready chunks under earlier
 chunks' compute. 0 (default) disables prefetch; results are bit-identical
 either way. `marrow graph` dashes the prefetch edges into the DOT dump.
+
+--record/--replay (DESIGN.md §2.13): --record writes the served request
+mix (arrival offsets, deadlines, priorities), the run's ExecProfile-bearing
+options, and the --load schedule as a versioned JSON trace; --replay
+re-drains it on the simulated backend — same trace + same starting KB give
+a bit-identical virtual makespan and batch shapes.
   marrow shoc
   marrow info";
 
@@ -147,14 +165,23 @@ fn eval(args: &Args) -> Result<()> {
 }
 
 fn pick_benchmark(args: &Args) -> Result<Benchmark> {
-    let bench = args.get_or("bench", "saxpy");
-    let size = args.get_u64("size", 10_000_000)?;
-    match bench.as_str() {
+    benchmark_by_name(&args.get_or("bench", "saxpy"), args.get_u64("size", 10_000_000)?)
+}
+
+/// Resolve a benchmark by name — the CLI's `--bench` flag and a replay
+/// trace's recorded requests both go through here, so a trace stays a
+/// small portable document (names and sizes, not buffers).
+fn benchmark_by_name(bench: &str, size: u64) -> Result<Benchmark> {
+    match bench {
         "saxpy" => Ok(workloads::saxpy(size)),
         "filter" => Ok(workloads::filter_pipeline(size, size, true)),
         "fft" => Ok(workloads::fft(size)),
         "nbody" => Ok(workloads::nbody(size, 20)),
         "segmentation" => Ok(workloads::segmentation(size)),
+        // Irregular tier (ROADMAP item 4): data-dependent per-chunk cost.
+        "spmv" => Ok(workloads::spmv(size)),
+        "bfs" => Ok(workloads::bfs(size)),
+        "mandelbrot" => Ok(workloads::mandelbrot(size, 256)),
         other => Err(marrow::Error::Usage(format!("unknown benchmark '{other}'"))),
     }
 }
@@ -166,37 +193,6 @@ fn pick_machine(args: &Args) -> Result<Machine> {
     } else {
         i7_hd7950(gpus)
     })
-}
-
-/// Optional `--tasks-per-slot` (steal-slack knob; backend default when
-/// absent).
-fn pick_tasks_per_slot(args: &Args) -> Result<Option<u32>> {
-    Ok(match args.get("tasks-per-slot") {
-        None => None,
-        Some(_) => Some(args.get_u64("tasks-per-slot", 4)?.max(1) as u32),
-    })
-}
-
-/// Optional `--prefetch-depth` (dataflow-drain upload lookahead,
-/// DESIGN.md §2.12; backend default — 0, no prefetch — when absent).
-fn pick_prefetch_depth(args: &Args) -> Result<Option<u32>> {
-    Ok(match args.get("prefetch-depth") {
-        None => None,
-        Some(_) => Some(args.get_u64("prefetch-depth", 0)? as u32),
-    })
-}
-
-/// Optional `--drain <barrier|dataflow>` (backend default — dataflow —
-/// when absent).
-fn pick_drain_mode(args: &Args) -> Result<Option<DrainMode>> {
-    match args.get("drain") {
-        None => Ok(None),
-        Some(s) => DrainMode::parse(s).map(Some).ok_or_else(|| {
-            marrow::Error::Usage(format!(
-                "--drain expects 'barrier' or 'dataflow', got '{s}'"
-            ))
-        }),
-    }
 }
 
 /// `--backend <sim|native|pjrt>` (default sim).
@@ -294,6 +290,58 @@ fn native_request_args(args: &Args) -> Result<RequestArgs> {
              has no built-in kernel shape); use --backend sim"
                 .into(),
         )),
+        "spmv" => {
+            use marrow::data::irregular::spmv_inputs;
+            if size % 256 != 0 {
+                return Err(marrow::Error::Usage(format!(
+                    "native spmv needs --size divisible by 256 (built-in \
+                     artifact chunks); got {size}"
+                )));
+            }
+            let (cols, vals, x) = spmv_inputs(17, size as usize, 16, 4096);
+            Ok(RequestArgs {
+                vectors: vec![
+                    VectorArg::partitioned_f32("cols", cols, 16),
+                    VectorArg::partitioned_f32("vals", vals, 16),
+                    VectorArg::copied_f32("x", x),
+                ],
+                scalars: vec![],
+            })
+        }
+        "bfs" => {
+            use marrow::data::irregular::bfs_inputs;
+            if size % 256 != 0 {
+                return Err(marrow::Error::Usage(format!(
+                    "native bfs needs --size divisible by 256 (built-in \
+                     artifact chunks); got {size}"
+                )));
+            }
+            let (adj, frontier) = bfs_inputs(19, size as usize, 8, 4096);
+            Ok(RequestArgs {
+                vectors: vec![
+                    VectorArg::partitioned_f32("adj", adj, 8),
+                    VectorArg::copied_f32("frontier", frontier),
+                ],
+                scalars: vec![],
+            })
+        }
+        "mandelbrot" => {
+            use marrow::data::irregular::mandelbrot_plane;
+            if size % 4096 != 0 {
+                return Err(marrow::Error::Usage(format!(
+                    "native mandelbrot needs --size divisible by 4096 \
+                     (built-in artifact chunks); got {size}"
+                )));
+            }
+            let (re, im) = mandelbrot_plane(size as usize);
+            Ok(RequestArgs {
+                vectors: vec![
+                    VectorArg::partitioned_f32("c_re", re, 1),
+                    VectorArg::partitioned_f32("c_im", im, 1),
+                ],
+                scalars: vec![256.0], // max_iters
+            })
+        }
         other => Err(marrow::Error::Usage(format!("unknown benchmark '{other}'"))),
     }
 }
@@ -392,14 +440,11 @@ fn run_loop<E: ExecEnv>(
     let b = pick_benchmark(args)?;
     let name = b.name.clone();
     let comp = Computation::from(b);
-    if let Some(t) = pick_tasks_per_slot(args)? {
-        session.set_tasks_per_slot(t);
-    }
-    if let Some(k) = pick_prefetch_depth(args)? {
-        session.set_prefetch_depth(k);
-    }
-    let drain = pick_drain_mode(args)?.unwrap_or_default();
-    session.set_drain_mode(drain);
+    // All execution knobs resolve through one ExecProfile (DESIGN.md
+    // §2.13): parsed once, applied once, recorded as one value.
+    let exec = ExecProfile::from_args(args)?;
+    session.apply_exec(&exec);
+    let drain = exec.drain_mode.unwrap_or_default();
     println!(
         "benchmark: {name} ({} runs, {clock}, {} drain)",
         runs,
@@ -448,9 +493,32 @@ fn run_loop<E: ExecEnv>(
 }
 
 /// The multi-request serve path: drain a request stream through a pool of
-/// simulated sessions sharing one knowledge base.
+/// simulated sessions sharing one knowledge base. `--replay <trace.json>`
+/// re-drains a recorded request mix instead of synthesizing one.
 fn serve_cmd(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("replay") {
+        return replay_cmd(args, Path::new(path));
+    }
     serve_requests(args, args.get_u64("runs", 32)?)
+}
+
+/// Parse `--load from:threads[,from:threads...]` — the fig11-style
+/// background CPU-load schedule (interfering threads from a run index on).
+fn parse_load_steps(spec: &str) -> Result<Vec<(u64, u32)>> {
+    let mut steps = Vec::new();
+    for part in spec.split(',').filter(|p| !p.is_empty()) {
+        let bad = || {
+            marrow::Error::Usage(format!(
+                "--load expects 'from:threads[,from:threads...]', got '{part}'"
+            ))
+        };
+        let (from, threads) = part.split_once(':').ok_or_else(bad)?;
+        steps.push((
+            from.trim().parse().map_err(|_| bad())?,
+            threads.trim().parse().map_err(|_| bad())?,
+        ));
+    }
+    Ok(steps)
 }
 
 /// Serve with an explicit request-count default (`marrow run --concurrency`
@@ -458,12 +526,20 @@ fn serve_cmd(args: &Args) -> Result<()> {
 /// session pool, then drains through the generic path.
 fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
     let concurrency = (args.get_u64("concurrency", 4)? as usize).max(1);
+    let load_steps = match args.get("load") {
+        Some(spec) => parse_load_steps(spec)?,
+        None => Vec::new(),
+    };
     match pick_backend(args)? {
         Backend::Sim => {
             let machine = pick_machine(args)?;
             let digest = machine_digest("analytic", &machine);
+            let load = LoadProfile::new(load_steps.clone());
             let pool = SessionPool::build(concurrency, |i| {
-                Session::simulated(machine.clone(), 11 + i as u64)
+                Session::sim(
+                    SimMachine::new(machine.clone(), 11 + i as u64)
+                        .with_load(load.clone()),
+                )
             });
             serve_on_pool(
                 args,
@@ -472,9 +548,17 @@ fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
                 &digest,
                 RequestArgs::default(),
                 "simulated clock",
+                &load_steps,
             )
         }
         Backend::Native => {
+            if !load_steps.is_empty() {
+                return Err(marrow::Error::Usage(
+                    "--load models interfering CPU threads in the simulator; \
+                     it needs --backend sim"
+                        .into(),
+                ));
+            }
             let machine = host_cpu();
             let rargs = native_request_args(args)?;
             // The KB store is keyed by the backend's own digest so native
@@ -486,7 +570,15 @@ fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
                 Session::native(m.clone())
                     .expect("native session construction succeeded for the probe")
             });
-            serve_on_pool(args, default_requests, &pool, &digest, rargs, "native measured")
+            serve_on_pool(
+                args,
+                default_requests,
+                &pool,
+                &digest,
+                rargs,
+                "native measured",
+                &[],
+            )
         }
         Backend::Pjrt => Err(marrow::Error::Usage(
             "serve supports --backend sim or native (pjrt sessions borrow \
@@ -494,6 +586,69 @@ fn serve_requests(args: &Args, default_requests: u64) -> Result<()> {
                 .into(),
         )),
     }
+}
+
+/// `marrow serve --replay <trace.json>` (DESIGN.md §2.13): re-drain a
+/// recorded request mix — arrival offsets, workload names/sizes, deadlines,
+/// priorities, the run's ExecProfile-bearing ServeOpts, and the background
+/// CPU-load schedule all come from the trace. Replays are deterministic in
+/// virtual time: same trace + same starting KB → bit-identical virtual
+/// makespan and batch shapes (wall-clock latencies still vary with the
+/// host).
+fn replay_cmd(args: &Args, path: &Path) -> Result<()> {
+    match pick_backend(args)? {
+        Backend::Sim => {}
+        _ => {
+            return Err(marrow::Error::Usage(
+                "--replay drains on --backend sim (virtual-time determinism)"
+                    .into(),
+            ))
+        }
+    }
+    let trace = ReplayTrace::parse(&std::fs::read_to_string(path)?)?;
+    let machine = pick_machine(args)?;
+    let load = LoadProfile::new(trace.load.clone());
+    let concurrency = trace.opts.concurrency.max(1);
+    let pool = SessionPool::build(concurrency, |i| {
+        Session::sim(
+            SimMachine::new(machine.clone(), 11 + i as u64).with_load(load.clone()),
+        )
+    });
+    // A warm KB changes admission estimates, so the starting KB is part of
+    // the replay contract: fresh by default, or pinned with --kb.
+    if let Some(p) = args.get("kb") {
+        *pool.shared_kb().write().unwrap() = KnowledgeBase::open(&PathBuf::from(p))?;
+    }
+    let requests: Vec<ServeRequest> = trace
+        .requests
+        .iter()
+        .map(|r| {
+            let b = benchmark_by_name(&r.bench, r.size)?;
+            let mut req = ServeRequest::from(Computation::from(b))
+                .with_arrival_offset(r.offset)
+                .with_priority(r.priority);
+            // Explicit deadlines travel with the request; defaulted ones
+            // re-resolve from the recorded opts' deadline_default.
+            req.deadline = r.replay_deadline();
+            Ok(req)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    println!(
+        "replaying {}: {} requests at concurrency {concurrency}, {} load \
+         steps, exec profile {}",
+        path.display(),
+        requests.len(),
+        trace.load.len(),
+        trace.opts.exec.to_json().to_string()
+    );
+    let report = pool.serve(&requests, &trace.opts)?;
+    println!("{}", report.summary());
+    println!(
+        "virtual makespan: {:.6} s (deterministic across replays of this \
+         trace)",
+        report.virtual_makespan
+    );
+    Ok(())
 }
 
 /// The serve path over an already-built pool, generic over the backend.
@@ -504,14 +659,16 @@ fn serve_on_pool<E: ExecEnv + Send>(
     kb_digest: &str,
     rargs: RequestArgs,
     clock: &str,
+    load: &[(u64, u32)],
 ) -> Result<()> {
     let b = pick_benchmark(args)?;
     let n_requests = args.get_u64("requests", default_requests)? as usize;
     let concurrency = (args.get_u64("concurrency", 4)? as usize).max(1);
     let pace = args.get_f64("pace-ms", 2.0)? * 1e-3;
-    let tasks_per_slot = pick_tasks_per_slot(args)?;
-    let drain_mode = pick_drain_mode(args)?;
-    let prefetch_depth = pick_prefetch_depth(args)?;
+    // All execution knobs resolve through one ExecProfile (DESIGN.md
+    // §2.13), applied pool-wide via ServeOpts and recorded verbatim into
+    // replay traces.
+    let exec = ExecProfile::from_args(args)?;
     let co_schedule = args.has("co-schedule");
     // Batching & fusion knobs (DESIGN.md §2.10): --batch-max > 1 lets a
     // worker coalesce consecutive compatible requests into one fused
@@ -558,9 +715,14 @@ fn serve_on_pool<E: ExecEnv + Send>(
         );
     }
 
+    // --arrival-gap-ms spaces request arrivals (offset i*gap from stream
+    // start): batches close across gaps wider than the batch window, and
+    // recorded traces replay the same spacing deterministically.
+    let arrival_gap = args.get_f64("arrival-gap-ms", 0.0)? * 1e-3;
     let requests: Vec<ServeRequest> = (0..n_requests)
-        .map(|_| {
-            let mut r = ServeRequest::from(comp.clone());
+        .map(|i| {
+            let mut r = ServeRequest::from(comp.clone())
+                .with_arrival_offset(i as f64 * arrival_gap);
             r.args = rargs.clone();
             r
         })
@@ -585,23 +747,47 @@ fn serve_on_pool<E: ExecEnv + Send>(
             }
         );
     }
-    let report = pool.serve(
-        &requests,
-        &ServeOpts {
-            concurrency,
-            pace,
-            tasks_per_slot,
-            drain_mode,
-            prefetch_depth,
-            co_schedule,
-            store_sync_every,
-            batch_max,
-            batch_window,
-            deadline_default,
-            ..Default::default()
-        },
-    )?;
+    let opts = ServeOpts {
+        concurrency,
+        pace,
+        exec,
+        co_schedule,
+        store_sync_every,
+        batch_max,
+        batch_window,
+        deadline_default,
+        ..Default::default()
+    };
+    let report = pool.serve(&requests, &opts)?;
     println!("{}", report.summary());
+    if let Some(out) = args.get("record") {
+        // A replayable trace of this run: the request mix (names, sizes,
+        // arrival offsets, deadlines, priorities), the serve options with
+        // their ExecProfile, and the background load schedule.
+        let bench_key = args.get_or("bench", "saxpy");
+        let size = args.get_u64("size", 10_000_000)?;
+        let trace = ReplayTrace {
+            opts: opts.clone(),
+            load: load.to_vec(),
+            requests: requests
+                .iter()
+                .map(|r| RecordedRequest {
+                    bench: bench_key.clone(),
+                    size,
+                    offset: r.arrival_offset,
+                    deadline: r.deadline,
+                    deadline_explicit: r.deadline.is_some(),
+                    priority: r.priority,
+                })
+                .collect(),
+        };
+        std::fs::write(out, trace.to_json().to_string_pretty())?;
+        println!(
+            "recorded replay trace: {} requests -> {out} (marrow serve \
+             --replay {out})",
+            requests.len()
+        );
+    }
     println!(
         "kb provenance: {} exact hits ({} warm-started), {} derived, \
          {} cold-built ({:.2}s building)",
@@ -753,7 +939,8 @@ fn graph_cmd(args: &Args) -> Result<()> {
     let b = pick_benchmark(args)?;
     let name = b.name.clone();
     let machine = pick_machine(args)?;
-    let tasks_per_slot = pick_tasks_per_slot(args)?.unwrap_or(4);
+    let exec = ExecProfile::from_args(args)?;
+    let tasks_per_slot = exec.tasks_per_slot.unwrap_or(4);
     let comp = Computation::from(b);
     let session = sim_session(args, machine.clone(), 11)?;
     let (cfg, origin) = session.resolve_config(&comp, &RequestArgs::default())?;
@@ -774,7 +961,7 @@ fn graph_cmd(args: &Args) -> Result<()> {
         100.0 * cfg.gpu_share(),
         100.0 * cfg.cpu_share
     );
-    let prefetch_depth = pick_prefetch_depth(args)?.unwrap_or(0);
+    let prefetch_depth = exec.prefetch_depth.unwrap_or(0);
     println!("{}", g.to_dot_with_prefetch(&labels, prefetch_depth));
     Ok(())
 }

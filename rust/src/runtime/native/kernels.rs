@@ -24,7 +24,7 @@ pub type KernelFn = fn(&ArtifactInfo, &SpecKey, u64, &[NativeArg]) -> Result<Vec
 /// Families the native backend can execute, in manifest order. The
 /// engine fingerprint hashes this list, so adding a port changes the
 /// native manifest digest and re-keys learned profiles.
-pub const FAMILIES: [&str; 8] = [
+pub const FAMILIES: [&str; 11] = [
     "saxpy",
     "gaussian_noise",
     "solarize",
@@ -33,6 +33,9 @@ pub const FAMILIES: [&str; 8] = [
     "fft_roundtrip",
     "nbody_accel",
     "segmentation",
+    "spmv_csr",
+    "bfs_frontier",
+    "mandelbrot",
 ];
 
 /// Resolve a family to the monomorphized variant for `lanes`. The FFT is
@@ -57,6 +60,9 @@ pub fn select(family: &str, lanes: u32) -> Result<KernelFn> {
         "fft_roundtrip" => fft_entry,
         "nbody_accel" => laned!(nbody_entry),
         "segmentation" => laned!(segmentation_entry),
+        "spmv_csr" => laned!(spmv_entry),
+        "bfs_frontier" => laned!(bfs_entry),
+        "mandelbrot" => laned!(mandelbrot_entry),
         other => {
             return Err(Error::Artifact(format!(
                 "native backend has no kernel for family '{other}'"
@@ -454,6 +460,182 @@ fn nbody_entry<const L: usize>(
         out[i * 3] = ax;
         out[i * 3 + 1] = ay;
         out[i * 3 + 2] = az;
+        i += 1;
+    }
+    Ok(vec![out])
+}
+
+// --- irregular tier (ROADMAP item 4) --------------------------------------
+//
+// These three families carry data-dependent cost: the work done per
+// partition unit depends on the *contents* of the inputs (nonzeros per
+// row, frontier membership, escape iteration), not just the shape. The
+// native bodies stay bit-identical across lane widths because lanes only
+// tile independent rows/nodes/pixels — each keeps its own scalar inner
+// loop in source order.
+
+/// ELL-style padded sparse row product: `out[r] = sum_k vals[r,K+k] *
+/// x[cols[r,k]]`, where `cols` stores column indices as f32 (exact up to
+/// 2^24) padded with -1.0. The per-row trip count follows the row-length
+/// distribution — the canonical sparse skew.
+fn spmv_entry<const L: usize>(
+    info: &ArtifactInfo,
+    _key: &SpecKey,
+    units: u64,
+    args: &[NativeArg],
+) -> Result<Vec<Vec<f32>>> {
+    let cols = vec_arg(args, 0, "spmv_csr")?;
+    let vals = vec_arg(args, 1, "spmv_csr")?;
+    let x = vec_arg(args, 2, "spmv_csr")?;
+    let k_pad = width(info);
+    let rows = units as usize;
+    if cols.len() < rows * k_pad || vals.len() < rows * k_pad {
+        return Err(Error::Artifact(format!(
+            "spmv_csr: {rows} rows x {k_pad} pad needs {} elems, got cols={} vals={}",
+            rows * k_pad,
+            cols.len(),
+            vals.len()
+        )));
+    }
+    let row = |r: usize, out: &mut f32| -> Result<()> {
+        let base = r * k_pad;
+        let mut sum = 0.0f32;
+        for k in 0..k_pad {
+            let c = cols[base + k];
+            if c < 0.0 {
+                break;
+            }
+            let ci = c as usize;
+            let xv = *x.get(ci).ok_or_else(|| {
+                Error::Artifact(format!("spmv_csr: column {ci} out of x ({})", x.len()))
+            })?;
+            sum += vals[base + k] * xv;
+        }
+        *out = sum;
+        Ok(())
+    };
+    let mut out = vec![0.0f32; rows];
+    let mut r = 0;
+    while r + L <= rows {
+        for l in 0..L {
+            let mut v = 0.0f32;
+            row(r + l, &mut v)?;
+            out[r + l] = v;
+        }
+        r += L;
+    }
+    while r < rows {
+        let mut v = 0.0f32;
+        row(r, &mut v)?;
+        out[r] = v;
+        r += 1;
+    }
+    Ok(vec![out])
+}
+
+/// One BFS frontier-expansion step over a padded adjacency list:
+/// `out[v] = 1.0` iff any neighbour of `v` is in the current frontier
+/// (f32 0/1 flags, COPY-replicated). Neighbour slots are -1.0-padded and
+/// the scan breaks both on padding and on the first hit, so cost follows
+/// degree and frontier structure.
+fn bfs_entry<const L: usize>(
+    info: &ArtifactInfo,
+    _key: &SpecKey,
+    units: u64,
+    args: &[NativeArg],
+) -> Result<Vec<Vec<f32>>> {
+    let adj = vec_arg(args, 0, "bfs_frontier")?;
+    let frontier = vec_arg(args, 1, "bfs_frontier")?;
+    let deg_pad = width(info);
+    let nodes = units as usize;
+    if adj.len() < nodes * deg_pad {
+        return Err(Error::Artifact(format!(
+            "bfs_frontier: {nodes} nodes x {deg_pad} pad needs {} elems, got {}",
+            nodes * deg_pad,
+            adj.len()
+        )));
+    }
+    let expand = |v: usize| -> Result<f32> {
+        let base = v * deg_pad;
+        for d in 0..deg_pad {
+            let u = adj[base + d];
+            if u < 0.0 {
+                break;
+            }
+            let ui = u as usize;
+            let f = *frontier.get(ui).ok_or_else(|| {
+                Error::Artifact(format!(
+                    "bfs_frontier: neighbour {ui} out of frontier ({})",
+                    frontier.len()
+                ))
+            })?;
+            if f > 0.0 {
+                return Ok(1.0);
+            }
+        }
+        Ok(0.0)
+    };
+    let mut out = vec![0.0f32; nodes];
+    let mut v = 0;
+    while v + L <= nodes {
+        for l in 0..L {
+            out[v + l] = expand(v + l)?;
+        }
+        v += L;
+    }
+    while v < nodes {
+        out[v] = expand(v)?;
+        v += 1;
+    }
+    Ok(vec![out])
+}
+
+/// Escape-time iteration count for `z <- z^2 + c` per pixel, the
+/// divergence archetype: neighbouring pixels can differ by orders of
+/// magnitude in trip count. Output is the iteration count as f32
+/// (`max_iters` for points that never escape |z|^2 > 4).
+fn mandelbrot_entry<const L: usize>(
+    _info: &ArtifactInfo,
+    _key: &SpecKey,
+    _units: u64,
+    args: &[NativeArg],
+) -> Result<Vec<Vec<f32>>> {
+    let c_re = vec_arg(args, 0, "mandelbrot")?;
+    let c_im = vec_arg(args, 1, "mandelbrot")?;
+    let max_iters = scalar_i32(args, 2, "mandelbrot")?.max(1) as u32;
+    if c_re.len() != c_im.len() {
+        return Err(Error::Artifact(format!(
+            "mandelbrot: re has {} elems but im has {}",
+            c_re.len(),
+            c_im.len()
+        )));
+    }
+    let escape = |cr: f32, ci: f32| -> f32 {
+        let (mut zr, mut zi) = (0.0f32, 0.0f32);
+        let mut it = 0u32;
+        while it < max_iters {
+            let r2 = zr * zr + zi * zi;
+            if r2 > 4.0 {
+                break;
+            }
+            let nzr = zr * zr - zi * zi + cr;
+            zi = 2.0 * zr * zi + ci;
+            zr = nzr;
+            it += 1;
+        }
+        it as f32
+    };
+    let n = c_re.len();
+    let mut out = vec![0.0f32; n];
+    let mut i = 0;
+    while i + L <= n {
+        for l in 0..L {
+            out[i + l] = escape(c_re[i + l], c_im[i + l]);
+        }
+        i += L;
+    }
+    while i < n {
+        out[i] = escape(c_re[i], c_im[i]);
         i += 1;
     }
     Ok(vec![out])

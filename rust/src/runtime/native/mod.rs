@@ -369,6 +369,59 @@ pub fn builtin_manifest() -> Manifest {
         ));
     }
 
+    // Irregular tier (ROADMAP item 4): shapes carry the *padded* storage;
+    // actual cost is data-dependent, so the analytic flops/bytes here are
+    // upper bounds and the KB's per-class models absorb the spread.
+    for rows in [256u64, 1024] {
+        let (k_pad, n_cols) = (16u64, 4096u64);
+        add(art(
+            format!("spmv_csr_r{rows}_k{k_pad}"),
+            "spmv_csr",
+            vec![
+                io("cols", &[rows, k_pad], "f32"),
+                io("vals", &[rows, k_pad], "f32"),
+                io("x", &[n_cols], "f32"),
+            ],
+            vec![io("out", &[rows], "f32")],
+            rows,
+            2.0 * (rows * k_pad) as f64,
+            12.0 * (rows * k_pad) as f64,
+        ));
+    }
+
+    for nodes in [256u64, 1024] {
+        let (deg_pad, n_nodes) = (8u64, 4096u64);
+        add(art(
+            format!("bfs_frontier_n{nodes}_d{deg_pad}"),
+            "bfs_frontier",
+            vec![
+                io("adj", &[nodes, deg_pad], "f32"),
+                io("frontier", &[n_nodes], "f32"),
+            ],
+            vec![io("out", &[nodes], "f32")],
+            nodes,
+            (nodes * deg_pad) as f64,
+            8.0 * (nodes * deg_pad) as f64,
+        ));
+    }
+
+    for px in [4096u64, 32_768] {
+        add(art(
+            format!("mandelbrot_p{px}"),
+            "mandelbrot",
+            vec![
+                io("c_re", &[px], "f32"),
+                io("c_im", &[px], "f32"),
+                io("max_iters", &[1], "i32"),
+            ],
+            vec![io("out", &[px], "f32")],
+            px,
+            // Mean-iteration estimate; the true count is per-pixel.
+            10.0 * 8.0 * px as f64,
+            12.0 * px as f64,
+        ));
+    }
+
     Manifest {
         by_family,
         dir: PathBuf::from("<native-builtin>"),

@@ -46,6 +46,12 @@ pub struct KernelSpec {
     pub flops_per_unit: f64,
     pub bytes_per_unit: f64,
     pub passes: f64,
+    /// Coefficient of variation of the *per-chunk* cost (0 = uniform,
+    /// the regular data-parallel default). Irregular kernels — sparse
+    /// rows, frontier expansion, escape iteration — declare the spread of
+    /// their data-dependent cost here so the simulator prices chunks
+    /// non-uniformly and the stealing machinery sees genuine imbalance.
+    pub chunk_cv: f64,
 }
 
 impl KernelSpec {
@@ -66,6 +72,7 @@ impl KernelSpec {
             flops_per_unit: 1.0,
             bytes_per_unit: 8.0,
             passes: 1.0,
+            chunk_cv: 0.0,
         }
     }
 

@@ -1,0 +1,249 @@
+//! The unified execution-configuration profile (DESIGN.md §2.13).
+//!
+//! Sessions historically grew one `with_*`/`set_*` pair per runtime knob
+//! (steal slack, prefetch depth, drain mode, residency toggle, balance
+//! threshold), and the serve path mirrored each as an `Option` field on
+//! `ServeOpts` — three places to touch per knob, and no way to record
+//! "the configuration this run executed under" as one value. An
+//! [`ExecProfile`] is that value: every field is an `Option`, `None`
+//! meaning "keep the backend default", so profiles compose by
+//! [`ExecProfile::merge`] and serialize sparsely (only the knobs a run
+//! actually pinned). [`Session::apply_exec`] applies one to a live
+//! session; [`ServeOpts::exec`] applies one to every pooled session; a
+//! recorded replay trace carries the profile its run executed under, so
+//! `marrow serve --replay` reproduces the exact configuration.
+//!
+//! The legacy setters survive as thin delegates routing through
+//! [`Session::apply_exec`] — call sites keep compiling, but new code
+//! should build an `ExecProfile` once and hand it over.
+//!
+//! [`Session::apply_exec`]: crate::session::Session::apply_exec
+//! [`ServeOpts::exec`]: crate::session::ServeOpts::exec
+
+use crate::cli::Args;
+use crate::error::{Error, Result};
+use crate::scheduler::DrainMode;
+use crate::util::json::Json;
+
+/// Balance threshold `maxDev` the monitor falls back to when a profile
+/// leaves [`ExecProfile::max_dev`] unset (the paper's Section 3.3 default).
+pub const DEFAULT_MAX_DEV: f64 = 0.85;
+
+/// One session's pinnable runtime knobs. `None` everywhere (the
+/// [`Default`]) changes nothing — applying it is a no-op.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ExecProfile {
+    /// Stealable tasks generated per execution slot (steal slack;
+    /// backend default 4). CLI: `--tasks-per-slot`.
+    pub tasks_per_slot: Option<u32>,
+    /// Prefetch lookahead depth for the dataflow drain (DESIGN.md §2.12;
+    /// backend default 0 = no prefetch). CLI: `--prefetch-depth`.
+    pub prefetch_depth: Option<u32>,
+    /// Drain mode (backend default [`DrainMode::Dataflow`]; `Barrier` is
+    /// the A/B baseline). CLI: `--drain`.
+    pub drain_mode: Option<DrainMode>,
+    /// Buffer-residency layer toggle (backend default on; off is the A/B
+    /// baseline for the locality benches). CLI: `--no-residency`.
+    pub residency: Option<bool>,
+    /// Balance threshold `maxDev` for the execution monitor
+    /// ([`DEFAULT_MAX_DEV`] when unset). CLI: `--max-dev`.
+    pub max_dev: Option<f64>,
+}
+
+impl ExecProfile {
+    pub fn new() -> ExecProfile {
+        ExecProfile::default()
+    }
+
+    pub fn tasks_per_slot(mut self, n: u32) -> ExecProfile {
+        self.tasks_per_slot = Some(n);
+        self
+    }
+
+    pub fn prefetch_depth(mut self, k: u32) -> ExecProfile {
+        self.prefetch_depth = Some(k);
+        self
+    }
+
+    pub fn drain_mode(mut self, mode: DrainMode) -> ExecProfile {
+        self.drain_mode = Some(mode);
+        self
+    }
+
+    pub fn residency(mut self, on: bool) -> ExecProfile {
+        self.residency = Some(on);
+        self
+    }
+
+    pub fn max_dev(mut self, max_dev: f64) -> ExecProfile {
+        self.max_dev = Some(max_dev);
+        self
+    }
+
+    /// Whether every knob is left at the backend default (applying such a
+    /// profile changes nothing).
+    pub fn is_empty(&self) -> bool {
+        *self == ExecProfile::default()
+    }
+
+    /// Overlay `other`: its pinned knobs win, unset ones keep ours. The
+    /// session's stored profile accumulates setter calls through this.
+    pub fn merge(&mut self, other: &ExecProfile) {
+        if other.tasks_per_slot.is_some() {
+            self.tasks_per_slot = other.tasks_per_slot;
+        }
+        if other.prefetch_depth.is_some() {
+            self.prefetch_depth = other.prefetch_depth;
+        }
+        if other.drain_mode.is_some() {
+            self.drain_mode = other.drain_mode;
+        }
+        if other.residency.is_some() {
+            self.residency = other.residency;
+        }
+        if other.max_dev.is_some() {
+            self.max_dev = other.max_dev;
+        }
+    }
+
+    /// The effective balance threshold (Section 3.3).
+    pub fn max_dev_or_default(&self) -> f64 {
+        self.max_dev.unwrap_or(DEFAULT_MAX_DEV)
+    }
+
+    /// Sparse JSON: only pinned knobs are emitted, so an empty profile is
+    /// `{}` and round-trips to itself.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = Vec::new();
+        if let Some(n) = self.tasks_per_slot {
+            fields.push(("tasks_per_slot", Json::num(n as f64)));
+        }
+        if let Some(k) = self.prefetch_depth {
+            fields.push(("prefetch_depth", Json::num(k as f64)));
+        }
+        if let Some(mode) = self.drain_mode {
+            fields.push(("drain_mode", Json::str(mode.label())));
+        }
+        if let Some(on) = self.residency {
+            fields.push(("residency", Json::Bool(on)));
+        }
+        if let Some(d) = self.max_dev {
+            fields.push(("max_dev", Json::num(d)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<ExecProfile> {
+        let mut p = ExecProfile::default();
+        p.tasks_per_slot = v
+            .get("tasks_per_slot")
+            .ok()
+            .and_then(|x| x.as_u64())
+            .map(|n| n as u32);
+        p.prefetch_depth = v
+            .get("prefetch_depth")
+            .ok()
+            .and_then(|x| x.as_u64())
+            .map(|k| k as u32);
+        if let Ok(mode) = v.get("drain_mode") {
+            let s = mode
+                .as_str()
+                .ok_or_else(|| Error::Kb("drain_mode must be a string".into()))?;
+            p.drain_mode = Some(DrainMode::parse(s).ok_or_else(|| {
+                Error::Kb(format!("unknown drain_mode '{s}' in exec profile"))
+            })?);
+        }
+        p.residency = v.get("residency").ok().and_then(|x| x.as_bool());
+        p.max_dev = v.get("max_dev").ok().and_then(|x| x.as_f64());
+        Ok(p)
+    }
+
+    /// Parse the CLI's execution knobs once (`--tasks-per-slot`,
+    /// `--prefetch-depth`, `--drain`, `--no-residency`, `--max-dev`) —
+    /// `run`, `serve`, and `graph` all resolve their flags through here.
+    pub fn from_args(args: &Args) -> Result<ExecProfile> {
+        let mut p = ExecProfile::default();
+        if args.get("tasks-per-slot").is_some() {
+            p.tasks_per_slot = Some(args.get_u64("tasks-per-slot", 4)?.max(1) as u32);
+        }
+        if args.get("prefetch-depth").is_some() {
+            p.prefetch_depth = Some(args.get_u64("prefetch-depth", 0)? as u32);
+        }
+        if let Some(s) = args.get("drain") {
+            p.drain_mode = Some(DrainMode::parse(s).ok_or_else(|| {
+                Error::Usage(format!(
+                    "--drain expects 'barrier' or 'dataflow', got '{s}'"
+                ))
+            })?);
+        }
+        if args.has("no-residency") {
+            p.residency = Some(false);
+        }
+        if args.get("max-dev").is_some() {
+            p.max_dev = Some(args.get_f64("max-dev", DEFAULT_MAX_DEV)?);
+        }
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_merge_and_empty() {
+        assert!(ExecProfile::new().is_empty());
+        let a = ExecProfile::new().tasks_per_slot(8).max_dev(0.7);
+        let b = ExecProfile::new()
+            .tasks_per_slot(2)
+            .drain_mode(DrainMode::Barrier);
+        let mut merged = a.clone();
+        merged.merge(&b);
+        // b's pinned knobs win; a's unset-in-b knobs survive.
+        assert_eq!(merged.tasks_per_slot, Some(2));
+        assert_eq!(merged.drain_mode, Some(DrainMode::Barrier));
+        assert_eq!(merged.max_dev, Some(0.7));
+        assert!(!merged.is_empty());
+        assert_eq!(ExecProfile::new().max_dev_or_default(), DEFAULT_MAX_DEV);
+    }
+
+    #[test]
+    fn json_round_trip_is_sparse() {
+        assert_eq!(ExecProfile::new().to_json().to_string(), "{}");
+        let p = ExecProfile::new()
+            .tasks_per_slot(8)
+            .prefetch_depth(3)
+            .drain_mode(DrainMode::Barrier)
+            .residency(false)
+            .max_dev(0.9);
+        let back = ExecProfile::from_json(&Json::parse(&p.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back, p);
+        // Unknown drain labels are a clean parse error, not a silent skip.
+        let bad = Json::parse("{\"drain_mode\": \"eager\"}").unwrap();
+        assert!(ExecProfile::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn cli_flags_parse_once() {
+        let args = Args::parse(
+            "serve --tasks-per-slot 8 --drain barrier --prefetch-depth 2 \
+             --no-residency --max-dev 0.7"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let p = ExecProfile::from_args(&args).unwrap();
+        assert_eq!(p.tasks_per_slot, Some(8));
+        assert_eq!(p.drain_mode, Some(DrainMode::Barrier));
+        assert_eq!(p.prefetch_depth, Some(2));
+        assert_eq!(p.residency, Some(false));
+        assert_eq!(p.max_dev, Some(0.7));
+        // Absent flags stay None — the backend defaults rule.
+        let empty = ExecProfile::from_args(&Args::default()).unwrap();
+        assert!(empty.is_empty());
+        let bad = Args::parse(
+            "serve --drain sideways".split_whitespace().map(String::from),
+        );
+        assert!(ExecProfile::from_args(&bad).is_err());
+    }
+}

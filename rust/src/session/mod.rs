@@ -35,6 +35,7 @@
 //! and the benches all go through it.
 
 pub mod computation;
+pub mod exec_profile;
 pub mod serve;
 
 use std::collections::HashMap;
@@ -62,6 +63,7 @@ use crate::tuner::builder::{build_profile, TunerOpts};
 use crate::tuner::profile::{FrameworkConfig, Profile, ProfileOrigin};
 
 pub use computation::Computation;
+pub use exec_profile::ExecProfile;
 pub use serve::{ServeOpts, ServeReport, ServeRequest, SessionPool};
 
 /// Which execution backend a session should be built over — the CLI's
@@ -123,6 +125,17 @@ impl ConfigOrigin {
             ConfigOrigin::Derived => "derived",
             ConfigOrigin::Built => "built",
             ConfigOrigin::Pinned => "pinned",
+        }
+    }
+
+    /// Inverse of [`ConfigOrigin::label`] (serialized request traces).
+    pub fn parse(s: &str) -> Option<ConfigOrigin> {
+        match s {
+            "kb-hit" => Some(ConfigOrigin::KbHit),
+            "derived" => Some(ConfigOrigin::Derived),
+            "built" => Some(ConfigOrigin::Built),
+            "pinned" => Some(ConfigOrigin::Pinned),
+            _ => None,
         }
     }
 }
@@ -201,6 +214,61 @@ impl SessionStats {
             0.0
         } else {
             100.0 * self.uploads_overlapped_bytes as f64 / crossed as f64
+        }
+    }
+
+    /// JSON form (serialized serve reports, DESIGN.md §2.13).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("runs", Json::num(self.runs as f64)),
+            ("kb_hits", Json::num(self.kb_hits as f64)),
+            ("warm_hits", Json::num(self.warm_hits as f64)),
+            ("derived", Json::num(self.derived as f64)),
+            ("built", Json::num(self.built as f64)),
+            ("build_secs", Json::num(self.build_secs)),
+            ("pinned", Json::num(self.pinned as f64)),
+            ("balance_ops", Json::num(self.balance_ops as f64)),
+            ("unbalanced_runs", Json::num(self.unbalanced_runs as f64)),
+            ("bytes_uploaded", Json::num(self.bytes_uploaded as f64)),
+            ("bytes_downloaded", Json::num(self.bytes_downloaded as f64)),
+            ("uploads_avoided", Json::num(self.uploads_avoided as f64)),
+            (
+                "uploads_avoided_bytes",
+                Json::num(self.uploads_avoided_bytes as f64),
+            ),
+            ("uploads_overlapped", Json::num(self.uploads_overlapped as f64)),
+            (
+                "uploads_overlapped_bytes",
+                Json::num(self.uploads_overlapped_bytes as f64),
+            ),
+            ("steal_migrations", Json::num(self.steal_migrations as f64)),
+            ("idle_frac_sum", Json::num(self.idle_frac_sum)),
+        ])
+    }
+
+    /// Inverse of [`SessionStats::to_json`]; absent counters read as 0.
+    pub fn from_json(v: &crate::util::json::Json) -> SessionStats {
+        let u = |k: &str| v.get(k).ok().and_then(|x| x.as_u64()).unwrap_or(0);
+        let f = |k: &str| v.get(k).ok().and_then(|x| x.as_f64()).unwrap_or(0.0);
+        SessionStats {
+            runs: u("runs"),
+            kb_hits: u("kb_hits"),
+            warm_hits: u("warm_hits"),
+            derived: u("derived"),
+            built: u("built"),
+            build_secs: f("build_secs"),
+            pinned: u("pinned"),
+            balance_ops: u("balance_ops"),
+            unbalanced_runs: u("unbalanced_runs"),
+            bytes_uploaded: u("bytes_uploaded"),
+            bytes_downloaded: u("bytes_downloaded"),
+            uploads_avoided: u("uploads_avoided"),
+            uploads_avoided_bytes: u("uploads_avoided_bytes"),
+            uploads_overlapped: u("uploads_overlapped"),
+            uploads_overlapped_bytes: u("uploads_overlapped_bytes"),
+            steal_migrations: u("steal_migrations"),
+            idle_frac_sum: f("idle_frac_sum"),
         }
     }
 }
@@ -302,8 +370,10 @@ pub struct Session<E: ExecEnv> {
     /// The knowledge base, shareable between sessions ([`Session::shared_kb`]).
     kb: Arc<RwLock<KnowledgeBase>>,
     tuner: TunerOpts,
-    /// Balance threshold `maxDev` handed to new monitors (Section 3.3).
-    max_dev: f64,
+    /// The accumulated execution profile (DESIGN.md §2.13): every pinned
+    /// runtime knob this session runs under, including the balance
+    /// threshold `maxDev` handed to new monitors (Section 3.3).
+    exec: Mutex<ExecProfile>,
     states: Mutex<HashMap<String, BalanceState>>,
     stats: Mutex<SessionStats>,
     /// The installed reservation mask (DESIGN.md §2.8). While set, runs
@@ -387,7 +457,7 @@ impl<E: ExecEnv> Session<E> {
             env: Mutex::new(env),
             kb: Arc::new(RwLock::new(KnowledgeBase::in_memory())),
             tuner: TunerOpts::default(),
-            max_dev: 0.85,
+            exec: Mutex::new(ExecProfile::default()),
             states: Mutex::new(HashMap::new()),
             stats: Mutex::new(SessionStats::default()),
             slot_mask: Mutex::new(None),
@@ -449,23 +519,67 @@ impl<E: ExecEnv> Session<E> {
         self
     }
 
+    /// Apply an execution profile (DESIGN.md §2.13): every pinned knob is
+    /// pushed into the backend and merged into the session's stored
+    /// profile (later applications overlay earlier ones; unset knobs
+    /// change nothing). The single configuration entry point — the legacy
+    /// `with_*`/`set_*` setters below all delegate here.
+    pub fn apply_exec(&self, profile: &ExecProfile) {
+        {
+            let mut env = self.env.lock().unwrap();
+            if let Some(n) = profile.tasks_per_slot {
+                env.set_tasks_per_slot(n);
+            }
+            if let Some(k) = profile.prefetch_depth {
+                env.set_prefetch_depth(k);
+            }
+            if let Some(mode) = profile.drain_mode {
+                env.set_drain_mode(mode);
+            }
+            if let Some(on) = profile.residency {
+                env.set_residency_enabled(on);
+            }
+        }
+        self.exec.lock().unwrap().merge(profile);
+    }
+
+    /// Builder form of [`Session::apply_exec`].
+    pub fn with_exec_profile(self, profile: ExecProfile) -> Session<E> {
+        self.apply_exec(&profile);
+        self
+    }
+
+    /// The accumulated execution profile this session runs under — what a
+    /// recorded replay trace carries (DESIGN.md §2.13).
+    pub fn exec_profile(&self) -> ExecProfile {
+        self.exec.lock().unwrap().clone()
+    }
+
     /// Balance threshold for the execution monitor (paper default 0.85).
-    pub fn with_max_dev(mut self, max_dev: f64) -> Session<E> {
-        self.max_dev = max_dev;
+    ///
+    /// Deprecated: prefer [`ExecProfile::max_dev`] via
+    /// [`Session::apply_exec`].
+    pub fn with_max_dev(self, max_dev: f64) -> Session<E> {
+        self.apply_exec(&ExecProfile::new().max_dev(max_dev));
         self
     }
 
     /// Stealable tasks generated per execution slot (steal slack; default
     /// 4 on backends with work queues).
+    ///
+    /// Deprecated: prefer [`ExecProfile::tasks_per_slot`] via
+    /// [`Session::apply_exec`].
     pub fn with_tasks_per_slot(self, n: u32) -> Session<E> {
         self.set_tasks_per_slot(n);
         self
     }
 
-    /// Runtime form of [`Session::with_tasks_per_slot`] (the serve path
-    /// applies the knob to pooled sessions).
+    /// Runtime form of [`Session::with_tasks_per_slot`].
+    ///
+    /// Deprecated: prefer [`ExecProfile::tasks_per_slot`] via
+    /// [`Session::apply_exec`].
     pub fn set_tasks_per_slot(&self, n: u32) {
-        self.env.lock().unwrap().set_tasks_per_slot(n);
+        self.apply_exec(&ExecProfile::new().tasks_per_slot(n));
     }
 
     /// Prefetch lookahead depth for the dataflow drain (DESIGN.md §2.12):
@@ -473,34 +587,47 @@ impl<E: ExecEnv> Session<E> {
     /// under earlier chunks' compute. 0 (the default) disables prefetch;
     /// barrier drains ignore it. Results are bit-identical either way —
     /// only when uploads happen (and how they are booked) changes.
+    ///
+    /// Deprecated: prefer [`ExecProfile::prefetch_depth`] via
+    /// [`Session::apply_exec`].
     pub fn with_prefetch_depth(self, k: u32) -> Session<E> {
         self.set_prefetch_depth(k);
         self
     }
 
-    /// Runtime form of [`Session::with_prefetch_depth`] (the serve path
-    /// applies the knob to pooled sessions).
+    /// Runtime form of [`Session::with_prefetch_depth`].
+    ///
+    /// Deprecated: prefer [`ExecProfile::prefetch_depth`] via
+    /// [`Session::apply_exec`].
     pub fn set_prefetch_depth(&self, k: u32) {
-        self.env.lock().unwrap().set_prefetch_depth(k);
+        self.apply_exec(&ExecProfile::new().prefetch_depth(k));
     }
 
     /// Toggle the buffer-residency layer (on by default; off is the A/B
     /// baseline for the locality benches).
+    ///
+    /// Deprecated: prefer [`ExecProfile::residency`] via
+    /// [`Session::apply_exec`].
     pub fn set_residency_enabled(&self, on: bool) {
-        self.env.lock().unwrap().set_residency_enabled(on);
+        self.apply_exec(&ExecProfile::new().residency(on));
     }
 
     /// Select the drain mode (default [`DrainMode::Dataflow`]; `Barrier`
     /// restores the per-stage drain for A/B comparisons — DESIGN.md §2.7).
+    ///
+    /// Deprecated: prefer [`ExecProfile::drain_mode`] via
+    /// [`Session::apply_exec`].
     pub fn with_drain_mode(self, mode: DrainMode) -> Session<E> {
         self.set_drain_mode(mode);
         self
     }
 
-    /// Runtime form of [`Session::with_drain_mode`] (the serve path
-    /// applies the knob to pooled sessions).
+    /// Runtime form of [`Session::with_drain_mode`].
+    ///
+    /// Deprecated: prefer [`ExecProfile::drain_mode`] via
+    /// [`Session::apply_exec`].
     pub fn set_drain_mode(&self, mode: DrainMode) {
-        self.env.lock().unwrap().set_drain_mode(mode);
+        self.apply_exec(&ExecProfile::new().drain_mode(mode));
     }
 
     /// Restrict (or release, with `None`) the backend to a device-space
@@ -626,10 +753,11 @@ impl<E: ExecEnv> Session<E> {
         if !masked {
             let key = format!("{id}|{}", w.id());
             let mut stored_cfg = cfg.clone();
+            let max_dev = self.exec.lock().unwrap().max_dev_or_default();
             let status = {
                 let mut states = self.states.lock().unwrap();
                 let st = states.entry(key).or_insert_with(|| BalanceState {
-                    monitor: Monitor::new(self.max_dev),
+                    monitor: Monitor::new(max_dev),
                     abs: AdaptiveBinarySearch::new(cfg.cpu_share),
                 });
                 let status = st.monitor.observe(&out.exec.slot_times);
@@ -674,6 +802,12 @@ impl<E: ExecEnv> Session<E> {
                 best_time,
                 origin: store_origin,
             });
+            // Irregular classes additionally feed the per-class cost model
+            // (ROADMAP item 4): the observed whole-run time per element is
+            // what the class-aware estimate path rescales for unseen sizes.
+            if w.class != crate::data::workload::WorkloadClass::Regular {
+                kb.observe_class(w.class, w.elems(), out.exec.total);
+            }
         }
         let t = out.exec.transfers;
         let idle = out.exec.mean_idle_frac();
@@ -951,6 +1085,27 @@ mod tests {
             assert_eq!(out.config.cpu_share, 1.0);
         }
         assert_eq!(s.stats().balance_ops, 0);
+    }
+
+    #[test]
+    fn exec_profile_accumulates_through_setters() {
+        let s = Session::simulated(i7_hd7950(1), 7)
+            .with_max_dev(0.7)
+            .with_tasks_per_slot(8);
+        s.set_drain_mode(DrainMode::Barrier);
+        // Every legacy setter routes through apply_exec, so the stored
+        // profile reflects the accumulated knobs — what a replay trace
+        // records for this session.
+        let p = s.exec_profile();
+        assert_eq!(p.max_dev, Some(0.7));
+        assert_eq!(p.tasks_per_slot, Some(8));
+        assert_eq!(p.drain_mode, Some(DrainMode::Barrier));
+        assert_eq!(p.prefetch_depth, None);
+        // A later overlay wins without clearing unrelated knobs.
+        s.apply_exec(&ExecProfile::new().drain_mode(DrainMode::Dataflow));
+        let p = s.exec_profile();
+        assert_eq!(p.drain_mode, Some(DrainMode::Dataflow));
+        assert_eq!(p.tasks_per_slot, Some(8));
     }
 
     #[test]

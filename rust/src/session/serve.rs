@@ -53,10 +53,12 @@ use crate::kb::{pack_estimate, KnowledgeBase};
 use crate::platform::device::Machine;
 use crate::runtime::exec::RequestArgs;
 use crate::scheduler::{
-    candidate_masks, DrainMode, ExecEnv, ExecOutcome, SlotMask, SlotReservations,
+    candidate_masks, ExecEnv, ExecOutcome, SlotMask, SlotReservations,
     VirtualTimeline,
 };
+use crate::session::exec_profile::ExecProfile;
 use crate::session::{Computation, ConfigOrigin, Session, SessionStats};
+use crate::util::json::Json;
 use crate::util::stats::percentile;
 
 /// One queued request: a computation plus its arguments and SLO terms.
@@ -75,6 +77,14 @@ pub struct ServeRequest {
     /// of fusion-induced stretch), so latency-critical requests ride in
     /// small batches or solo.
     pub priority: u32,
+    /// Arrival offset in seconds from stream start (trace replay,
+    /// DESIGN.md §2.13): a worker claiming this request waits until the
+    /// offset has elapsed before starting admission, and batch assembly
+    /// never fuses a request arriving more than [`ServeOpts::batch_window`]
+    /// after its batch head — so a replayed stream reproduces the recorded
+    /// run's batch boundaries. 0 (the default) is the PR 7 behavior: the
+    /// whole stream is available up front.
+    pub arrival_offset: f64,
 }
 
 impl From<Computation> for ServeRequest {
@@ -84,6 +94,7 @@ impl From<Computation> for ServeRequest {
             args: RequestArgs::default(),
             deadline: None,
             priority: 0,
+            arrival_offset: 0.0,
         }
     }
 }
@@ -98,26 +109,27 @@ impl ServeRequest {
         self.priority = priority;
         self
     }
+
+    pub fn with_arrival_offset(mut self, secs: f64) -> ServeRequest {
+        self.arrival_offset = secs.max(0.0);
+        self
+    }
 }
 
 /// Serving knobs.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ServeOpts {
     /// Admission cap: how many requests may be in flight at once (bounded
     /// by the pool size).
     pub concurrency: usize,
     /// Per-request service floor in seconds (see module docs). 0 disables.
     pub pace: f64,
-    /// Override the stealable-tasks-per-slot knob on every pooled session
-    /// (`--tasks-per-slot`); `None` keeps the backend default.
-    pub tasks_per_slot: Option<u32>,
-    /// Override the drain mode on every pooled session (`--drain`);
-    /// `None` keeps the backend default ([`DrainMode::Dataflow`]).
-    pub drain_mode: Option<DrainMode>,
-    /// Override the prefetch lookahead on every pooled session
-    /// (`--prefetch-depth`, DESIGN.md §2.12); `None` keeps the backend
-    /// default (0 = no prefetch).
-    pub prefetch_depth: Option<u32>,
+    /// Execution profile applied to every pooled session before the
+    /// stream drains (DESIGN.md §2.13) — the one struct that replaced the
+    /// per-knob `tasks_per_slot`/`drain_mode`/`prefetch_depth` options.
+    /// Empty (the default) keeps every backend default; replay traces
+    /// carry the profile their run served under.
+    pub exec: ExecProfile,
     /// Device-space co-scheduling (`--co-schedule`, DESIGN.md §2.8): admit
     /// each request onto the KB-cost-priced device subset minimizing its
     /// predicted completion, instead of time-sharing the whole pool. Off
@@ -151,9 +163,7 @@ impl Default for ServeOpts {
         ServeOpts {
             concurrency: 1,
             pace: 0.0,
-            tasks_per_slot: None,
-            drain_mode: None,
-            prefetch_depth: None,
+            exec: ExecProfile::default(),
             co_schedule: false,
             store_sync_every: 0,
             batch_max: 1,
@@ -161,6 +171,62 @@ impl Default for ServeOpts {
             batch_bytes: 64 << 20,
             deadline_default: None,
         }
+    }
+}
+
+impl ServeOpts {
+    /// JSON form — replay traces embed the opts their run served under.
+    /// Sparse where it can be: the exec profile and the deadline default
+    /// are emitted only when set.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("concurrency", Json::num(self.concurrency as f64)),
+            ("pace", Json::num(self.pace)),
+            ("co_schedule", Json::Bool(self.co_schedule)),
+            ("store_sync_every", Json::num(self.store_sync_every as f64)),
+            ("batch_max", Json::num(self.batch_max as f64)),
+            ("batch_window", Json::num(self.batch_window)),
+            ("batch_bytes", Json::num(self.batch_bytes as f64)),
+        ];
+        if let Some(d) = self.deadline_default {
+            fields.push(("deadline_default", Json::num(d)));
+        }
+        if !self.exec.is_empty() {
+            fields.push(("exec", self.exec.to_json()));
+        }
+        Json::obj(fields)
+    }
+
+    /// Inverse of [`ServeOpts::to_json`]; absent keys keep the defaults.
+    pub fn from_json(v: &Json) -> Result<ServeOpts> {
+        let d = ServeOpts::default();
+        let usize_or = |k: &str, d: usize| {
+            v.get(k).ok().and_then(|x| x.as_u64()).map(|n| n as usize).unwrap_or(d)
+        };
+        let f64_or =
+            |k: &str, d: f64| v.get(k).ok().and_then(|x| x.as_f64()).unwrap_or(d);
+        Ok(ServeOpts {
+            concurrency: usize_or("concurrency", d.concurrency),
+            pace: f64_or("pace", d.pace),
+            exec: match v.get("exec") {
+                Ok(e) => ExecProfile::from_json(e)?,
+                Err(_) => ExecProfile::default(),
+            },
+            co_schedule: v
+                .get("co_schedule")
+                .ok()
+                .and_then(|x| x.as_bool())
+                .unwrap_or(d.co_schedule),
+            store_sync_every: usize_or("store_sync_every", d.store_sync_every),
+            batch_max: usize_or("batch_max", d.batch_max),
+            batch_window: f64_or("batch_window", d.batch_window),
+            batch_bytes: v
+                .get("batch_bytes")
+                .ok()
+                .and_then(|x| x.as_u64())
+                .unwrap_or(d.batch_bytes),
+            deadline_default: v.get("deadline_default").ok().and_then(|x| x.as_f64()),
+        })
     }
 }
 
@@ -194,6 +260,96 @@ pub struct RequestTrace {
     /// Whether end-to-end latency overran the request's effective
     /// deadline (own, or [`ServeOpts::deadline_default`]).
     pub deadline_missed: bool,
+    /// Whether the effective deadline came from
+    /// [`ServeOpts::deadline_default`] rather than the request itself.
+    /// Recorded so a replay can re-apply the default at admission instead
+    /// of baking the resolved value into the request — explicit and
+    /// defaulted deadlines batch identically but must round-trip
+    /// distinguishably (DESIGN.md §2.13).
+    pub deadline_defaulted: bool,
+}
+
+impl RequestTrace {
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("index", Json::num(self.index as f64)),
+            ("worker", Json::num(self.worker as f64)),
+            ("latency", Json::num(self.latency)),
+            ("admit_wait", Json::num(self.admit_wait)),
+            ("drain", Json::num(self.drain)),
+            ("origin", Json::str(self.origin.label())),
+            ("exec_total", Json::num(self.exec_total)),
+            ("batch", Json::num(self.batch as f64)),
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("deadline_missed", Json::Bool(self.deadline_missed)),
+            ("deadline_defaulted", Json::Bool(self.deadline_defaulted)),
+        ];
+        if let Some(m) = &self.mask {
+            fields.push((
+                "mask",
+                Json::obj(vec![
+                    ("cpu", Json::Bool(m.cpu)),
+                    (
+                        "gpus",
+                        Json::arr(m.gpus.iter().map(|&g| Json::Bool(g)).collect()),
+                    ),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<RequestTrace> {
+        let usize_of = |k: &str| -> Result<usize> {
+            Ok(v.get(k)?.as_u64().ok_or_else(|| {
+                crate::error::Error::Kb(format!("trace field '{k}' must be an integer"))
+            })? as usize)
+        };
+        let f64_of = |k: &str| -> Result<f64> {
+            v.get(k)?.as_f64().ok_or_else(|| {
+                crate::error::Error::Kb(format!("trace field '{k}' must be a number"))
+            })
+        };
+        let origin_label = v.get("origin")?.as_str().unwrap_or("").to_string();
+        let origin = ConfigOrigin::parse(&origin_label).ok_or_else(|| {
+            crate::error::Error::Kb(format!("unknown config origin '{origin_label}'"))
+        })?;
+        let mask = match v.get("mask") {
+            Ok(m) => Some(SlotMask {
+                cpu: m.get("cpu")?.as_bool().unwrap_or(false),
+                gpus: m
+                    .get("gpus")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|g| g.as_bool().unwrap_or(false))
+                    .collect(),
+            }),
+            Err(_) => None,
+        };
+        Ok(RequestTrace {
+            index: usize_of("index")?,
+            worker: usize_of("worker")?,
+            latency: f64_of("latency")?,
+            admit_wait: f64_of("admit_wait")?,
+            drain: f64_of("drain")?,
+            origin,
+            exec_total: f64_of("exec_total")?,
+            mask,
+            batch: usize_of("batch")?,
+            batch_size: usize_of("batch_size")?,
+            deadline_missed: v
+                .get("deadline_missed")
+                .ok()
+                .and_then(|x| x.as_bool())
+                .unwrap_or(false),
+            deadline_defaulted: v
+                .get("deadline_defaulted")
+                .ok()
+                .and_then(|x| x.as_bool())
+                .unwrap_or(false),
+        })
+    }
 }
 
 /// Aggregate outcome of one serve run.
@@ -284,6 +440,249 @@ impl ServeReport {
         } else {
             self.completed as f64 / self.virtual_makespan
         }
+    }
+
+    /// Versioned JSON form ([`TRACE_VERSION`]): what `marrow serve
+    /// --record` embeds as the recorded run's outcome.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("trace_version", Json::num(TRACE_VERSION as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("concurrency", Json::num(self.concurrency as f64)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("requests_per_sec", Json::num(self.requests_per_sec)),
+            ("p50_latency", Json::num(self.p50_latency)),
+            ("p99_latency", Json::num(self.p99_latency)),
+            ("mean_latency", Json::num(self.mean_latency)),
+            ("p50_admit_wait", Json::num(self.p50_admit_wait)),
+            ("p99_admit_wait", Json::num(self.p99_admit_wait)),
+            ("p50_drain", Json::num(self.p50_drain)),
+            ("p99_drain", Json::num(self.p99_drain)),
+            ("batches", Json::num(self.batches as f64)),
+            ("deadline_misses", Json::num(self.deadline_misses as f64)),
+            ("co_scheduled", Json::Bool(self.co_scheduled)),
+            ("virtual_makespan", Json::num(self.virtual_makespan)),
+            ("stats", self.stats.to_json()),
+            (
+                "traces",
+                Json::arr(self.traces.iter().map(RequestTrace::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Inverse of [`ServeReport::to_json`]. Rejects newer trace versions.
+    pub fn from_json(v: &Json) -> Result<ServeReport> {
+        check_trace_version(v)?;
+        let usize_or =
+            |k: &str| v.get(k).ok().and_then(|x| x.as_u64()).unwrap_or(0) as usize;
+        let f64_or = |k: &str| v.get(k).ok().and_then(|x| x.as_f64()).unwrap_or(0.0);
+        let traces = v
+            .get("traces")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(RequestTrace::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ServeReport {
+            completed: usize_or("completed"),
+            concurrency: usize_or("concurrency"),
+            wall_secs: f64_or("wall_secs"),
+            requests_per_sec: f64_or("requests_per_sec"),
+            p50_latency: f64_or("p50_latency"),
+            p99_latency: f64_or("p99_latency"),
+            mean_latency: f64_or("mean_latency"),
+            p50_admit_wait: f64_or("p50_admit_wait"),
+            p99_admit_wait: f64_or("p99_admit_wait"),
+            p50_drain: f64_or("p50_drain"),
+            p99_drain: f64_or("p99_drain"),
+            batches: usize_or("batches"),
+            deadline_misses: usize_or("deadline_misses"),
+            co_scheduled: v
+                .get("co_scheduled")
+                .ok()
+                .and_then(|x| x.as_bool())
+                .unwrap_or(false),
+            virtual_makespan: f64_or("virtual_makespan"),
+            stats: match v.get("stats") {
+                Ok(s) => SessionStats::from_json(s),
+                Err(_) => SessionStats::default(),
+            },
+            traces,
+        })
+    }
+}
+
+/// Version tag of the replayable-trace schema: `marrow serve --record`
+/// output, `--replay` input, and serialized [`ServeReport`]s all carry it.
+/// Bumped on incompatible changes; readers reject newer versions with a
+/// clean error instead of misparsing.
+pub const TRACE_VERSION: u64 = 1;
+
+/// Reject documents written by a newer schema than this build understands.
+fn check_trace_version(v: &Json) -> Result<()> {
+    let version = v.get("trace_version")?.as_u64().unwrap_or(0);
+    if version == 0 || version > TRACE_VERSION {
+        return Err(crate::error::Error::Kb(format!(
+            "unsupported trace_version {version} (this build reads <= {TRACE_VERSION})"
+        )));
+    }
+    Ok(())
+}
+
+/// One request of a replayable trace, by benchmark name: the CLI resolves
+/// `bench`/`size` back into a [`Computation`] plus deterministic input
+/// buffers, so traces stay small and portable (no argument payloads).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecordedRequest {
+    pub bench: String,
+    pub size: u64,
+    /// Arrival offset in seconds from stream start
+    /// ([`ServeRequest::arrival_offset`]).
+    pub offset: f64,
+    /// The deadline recorded for the request (explicit, or the resolved
+    /// default of the recorded run).
+    pub deadline: Option<f64>,
+    /// Whether `deadline` was explicit on the request. A defaulted
+    /// deadline is *not* baked into the replayed request — replay leaves
+    /// it `None` and lets [`ServeOpts::deadline_default`] resolve it at
+    /// admission, reproducing the recorded run's admission decisions
+    /// exactly even if the default changes meaning.
+    pub deadline_explicit: bool,
+    pub priority: u32,
+}
+
+impl RecordedRequest {
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("bench", Json::str(self.bench.as_str())),
+            ("size", Json::num(self.size as f64)),
+            ("offset", Json::num(self.offset)),
+            ("deadline_explicit", Json::Bool(self.deadline_explicit)),
+            ("priority", Json::num(self.priority as f64)),
+        ];
+        if let Some(d) = self.deadline {
+            fields.push(("deadline", Json::num(d)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<RecordedRequest> {
+        Ok(RecordedRequest {
+            bench: v
+                .get("bench")?
+                .as_str()
+                .ok_or_else(|| {
+                    crate::error::Error::Kb("request 'bench' must be a string".into())
+                })?
+                .to_string(),
+            size: v.get("size")?.as_u64().ok_or_else(|| {
+                crate::error::Error::Kb("request 'size' must be an integer".into())
+            })?,
+            offset: v.get("offset").ok().and_then(|x| x.as_f64()).unwrap_or(0.0),
+            deadline: v.get("deadline").ok().and_then(|x| x.as_f64()),
+            deadline_explicit: v
+                .get("deadline_explicit")
+                .ok()
+                .and_then(|x| x.as_bool())
+                .unwrap_or(false),
+            priority: v
+                .get("priority")
+                .ok()
+                .and_then(|x| x.as_u64())
+                .unwrap_or(0) as u32,
+        })
+    }
+
+    /// The deadline to put on the replayed [`ServeRequest`]: explicit
+    /// deadlines travel with the request, defaulted ones are re-resolved
+    /// from the replayed opts.
+    pub fn replay_deadline(&self) -> Option<f64> {
+        if self.deadline_explicit {
+            self.deadline
+        } else {
+            None
+        }
+    }
+}
+
+/// A replayable serve trace (DESIGN.md §2.13): the request mix (arrival
+/// offsets, workload names, sizes, deadlines, priorities), the
+/// [`ServeOpts`] — including the [`ExecProfile`] the run served under —
+/// and a fig11-style background CPU load schedule. `marrow serve --record`
+/// writes one; `marrow serve --replay` reconstructs the run from it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplayTrace {
+    pub opts: ServeOpts,
+    /// Piecewise-constant background CPU load, `(from_run, threads)`
+    /// steps injected into the simulated machine's balancer
+    /// ([`crate::sim::cpuload::LoadProfile`]).
+    pub load: Vec<(u64, u32)>,
+    pub requests: Vec<RecordedRequest>,
+}
+
+impl ReplayTrace {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("trace_version", Json::num(TRACE_VERSION as f64)),
+            ("opts", self.opts.to_json()),
+            (
+                "load",
+                Json::arr(
+                    self.load
+                        .iter()
+                        .map(|&(from, threads)| {
+                            Json::arr(vec![
+                                Json::num(from as f64),
+                                Json::num(threads as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "requests",
+                Json::arr(self.requests.iter().map(RecordedRequest::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ReplayTrace> {
+        check_trace_version(v)?;
+        let load = match v.get("load") {
+            Ok(l) => l
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|step| {
+                    let pair = step.as_arr().unwrap_or(&[]);
+                    let from = pair.first().and_then(|x| x.as_u64()).unwrap_or(0);
+                    let threads =
+                        pair.get(1).and_then(|x| x.as_u64()).unwrap_or(0) as u32;
+                    (from, threads)
+                })
+                .collect(),
+            Err(_) => Vec::new(),
+        };
+        let requests = v
+            .get("requests")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(RecordedRequest::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ReplayTrace {
+            opts: match v.get("opts") {
+                Ok(o) => ServeOpts::from_json(o)?,
+                Err(_) => ServeOpts::default(),
+            },
+            load,
+            requests,
+        })
+    }
+
+    /// Parse a trace file's text.
+    pub fn parse(text: &str) -> Result<ReplayTrace> {
+        ReplayTrace::from_json(&Json::parse(text)?)
     }
 }
 
@@ -435,19 +834,12 @@ impl<E: ExecEnv + Send> SessionPool<E> {
     /// remaining stream and is returned.
     pub fn serve(&self, requests: &[ServeRequest], opts: &ServeOpts) -> Result<ServeReport> {
         let workers = opts.concurrency.clamp(1, self.sessions.len());
-        if let Some(n) = opts.tasks_per_slot {
+        // One profile application per pooled session (DESIGN.md §2.13):
+        // every worker serves under the same pinned knobs, and each
+        // session's stored profile records them for trace recording.
+        if !opts.exec.is_empty() {
             for s in &self.sessions {
-                s.set_tasks_per_slot(n);
-            }
-        }
-        if let Some(mode) = opts.drain_mode {
-            for s in &self.sessions {
-                s.set_drain_mode(mode);
-            }
-        }
-        if let Some(k) = opts.prefetch_depth {
-            for s in &self.sessions {
-                s.set_prefetch_depth(k);
+                s.apply_exec(&opts.exec);
             }
         }
         // Snapshot so the report's stats cover this run only, even when the
@@ -491,6 +883,16 @@ impl<E: ExecEnv + Send> SessionPool<E> {
                     };
                     let batch = batch_seq.fetch_add(1, Ordering::SeqCst);
                     let members = &requests[start..start + len];
+                    // Arrival pacing (trace replay, DESIGN.md §2.13): a
+                    // request that "arrives" in the future is held until
+                    // its recorded offset — latency is measured from
+                    // arrival, so a replayed stream reports what the
+                    // original clients observed.
+                    let due = members[0].arrival_offset;
+                    let elapsed = t0.elapsed().as_secs_f64();
+                    if due > elapsed {
+                        std::thread::sleep(Duration::from_secs_f64(due - elapsed));
+                    }
                     let claimed = Instant::now();
                     // Admission (DESIGN.md §2.8/§2.10): price the batch as
                     // one fused drain on every device subset and reserve
@@ -579,6 +981,7 @@ impl<E: ExecEnv + Send> SessionPool<E> {
                             for (k, (origin, exec, waited, drain)) in
                                 drained.iter().enumerate()
                             {
+                                let explicit = members[k].deadline.is_some();
                                 let deadline = members[k]
                                     .deadline
                                     .or(opts.deadline_default);
@@ -595,6 +998,8 @@ impl<E: ExecEnv + Send> SessionPool<E> {
                                     batch_size: len,
                                     deadline_missed: deadline
                                         .is_some_and(|d| latency > d),
+                                    deadline_defaulted: !explicit
+                                        && deadline.is_some(),
                                 });
                             }
                             (before, tr.len())
@@ -730,6 +1135,18 @@ impl<E: ExecEnv + Send> SessionPool<E> {
                 let mut top_priority = requests[start].priority;
                 while len < opts.batch_max && start + len < requests.len() {
                     let cand = &requests[start + len];
+                    // Arrival-gap close (trace replay, DESIGN.md §2.13):
+                    // a candidate arriving more than the batch window
+                    // after the head member would force the head to wait
+                    // for it — the batch closes instead, so replayed
+                    // arrival gaps reproduce the recorded run's batch
+                    // boundaries deterministically (offsets are data, not
+                    // wall clock).
+                    if cand.arrival_offset - requests[start].arrival_offset
+                        > opts.batch_window
+                    {
+                        break;
+                    }
                     let Some(cand_bytes) = batchable_bytes(&cand.comp) else {
                         break;
                     };
@@ -1165,6 +1582,177 @@ mod tests {
             (3, 1)
         );
         assert!(SessionPool::claim_batch(&head, &mixed, &opts, &session).is_none());
+    }
+
+    #[test]
+    fn arrival_gaps_close_batches_and_pace_claims() {
+        let session = Session::simulated(i7_hd7950(1), 93);
+        let comp = Computation::from(workloads::saxpy(1 << 20));
+        let (sct, w, _) = comp.spec().unwrap();
+        session.kb_mut().store(mk_profile(
+            &sct.id(),
+            w.clone(),
+            FissionLevel::L2,
+            vec![4],
+            0.5,
+            1e-4,
+        ));
+        let opts = ServeOpts {
+            batch_max: 8,
+            batch_window: 2e-3,
+            ..Default::default()
+        };
+        // Four requests, the last arriving 50 ms after the first three:
+        // the gap exceeds the 2 ms window, so the batch closes at 3.
+        let reqs: Vec<ServeRequest> = (0..4)
+            .map(|i| {
+                ServeRequest::from(Computation::from(workloads::saxpy(1 << 20)))
+                    .with_arrival_offset(if i == 3 { 0.05 } else { 0.0 })
+            })
+            .collect();
+        let head = Mutex::new(0usize);
+        assert_eq!(
+            SessionPool::claim_batch(&head, &reqs, &opts, &session).unwrap(),
+            (0, 3),
+            "the arrival gap must close the batch"
+        );
+        assert_eq!(
+            SessionPool::claim_batch(&head, &reqs, &opts, &session).unwrap(),
+            (3, 1)
+        );
+        // End to end, the late request's claim waits for its arrival.
+        let report = serve_simulated(&i7_hd7950(1), 93, &reqs, &opts).unwrap();
+        assert_eq!(report.completed, 4);
+        assert!(
+            report.wall_secs >= 0.05,
+            "the stream cannot finish before its last arrival"
+        );
+    }
+
+    #[test]
+    fn serve_report_round_trips_through_json() {
+        let reqs: Vec<ServeRequest> = requests(3)
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| if i == 1 { r.with_deadline(0.5) } else { r })
+            .collect();
+        let report = serve_simulated(
+            &i7_hd7950(1),
+            23,
+            &reqs,
+            &ServeOpts {
+                deadline_default: Some(10.0),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let text = report.to_json().to_string();
+        let back = ServeReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.completed, report.completed);
+        assert_eq!(back.traces.len(), report.traces.len());
+        assert_eq!(
+            back.virtual_makespan.to_bits(),
+            report.virtual_makespan.to_bits()
+        );
+        assert_eq!(back.stats.runs, report.stats.runs);
+        for (a, b) in report.traces.iter().zip(&back.traces) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.origin, b.origin);
+            assert_eq!(a.exec_total.to_bits(), b.exec_total.to_bits());
+            assert_eq!(a.deadline_defaulted, b.deadline_defaulted);
+        }
+        // The explicit deadline is distinguishable from the defaulted ones.
+        assert!(!back.traces[1].deadline_defaulted);
+        assert!(back.traces[0].deadline_defaulted && back.traces[2].deadline_defaulted);
+        // Newer schema versions are a clean error.
+        let newer = text.replacen("\"trace_version\": 1", "\"trace_version\": 99", 1);
+        assert!(ServeReport::from_json(&Json::parse(&newer).unwrap()).is_err());
+    }
+
+    #[test]
+    fn replay_trace_round_trips_through_json() {
+        let trace = ReplayTrace {
+            opts: ServeOpts {
+                concurrency: 3,
+                pace: 1e-3,
+                exec: ExecProfile::new()
+                    .tasks_per_slot(8)
+                    .drain_mode(crate::scheduler::DrainMode::Barrier),
+                batch_max: 4,
+                deadline_default: Some(0.02),
+                ..Default::default()
+            },
+            load: vec![(0, 0), (16, 6)],
+            requests: vec![
+                RecordedRequest {
+                    bench: "spmv".into(),
+                    size: 1024,
+                    offset: 0.0,
+                    deadline: None,
+                    deadline_explicit: false,
+                    priority: 0,
+                },
+                RecordedRequest {
+                    bench: "saxpy".into(),
+                    size: 1 << 20,
+                    offset: 0.004,
+                    deadline: Some(0.015),
+                    deadline_explicit: true,
+                    priority: 2,
+                },
+            ],
+        };
+        let back = ReplayTrace::parse(&trace.to_json().to_string_pretty()).unwrap();
+        assert_eq!(back, trace);
+        // Defaulted deadlines are re-resolved at replay, explicit ones
+        // travel with the request.
+        assert_eq!(back.requests[0].replay_deadline(), None);
+        assert_eq!(back.requests[1].replay_deadline(), Some(0.015));
+        // A versionless document is rejected.
+        assert!(ReplayTrace::parse("{\"requests\": []}").is_err());
+    }
+
+    #[test]
+    fn replay_is_deterministic_in_virtual_time() {
+        // The replay acceptance bar: two serves of the same stream from
+        // identically seeded pools produce bit-identical virtual
+        // makespans and batch shapes (virtual time has no wall-clock
+        // noise; KB state is the only other input, and it starts equal).
+        let reqs: Vec<ServeRequest> = (0..6)
+            .map(|i| {
+                ServeRequest::from(Computation::from(workloads::saxpy(1 << 20)))
+                    .with_arrival_offset(i as f64 * 1e-4)
+            })
+            .collect();
+        let opts = ServeOpts {
+            concurrency: 2,
+            batch_max: 4,
+            batch_window: 1.0,
+            ..Default::default()
+        };
+        let mk = || {
+            let pool =
+                SessionPool::build(2, |i| Session::simulated(i7_hd7950(1), 70 + i as u64));
+            let comp = Computation::from(workloads::saxpy(1 << 20));
+            let (sct, w, _) = comp.spec().unwrap();
+            pool.shared_kb().write().unwrap().store(mk_profile(
+                &sct.id(),
+                w.clone(),
+                FissionLevel::L2,
+                vec![4],
+                0.5,
+                1e-3,
+            ));
+            pool
+        };
+        let a = mk().serve(&reqs, &opts).unwrap();
+        let b = mk().serve(&reqs, &opts).unwrap();
+        assert_eq!(a.virtual_makespan.to_bits(), b.virtual_makespan.to_bits());
+        assert_eq!(a.batches, b.batches);
+        let shape = |r: &ServeReport| {
+            r.traces.iter().map(|t| (t.index, t.batch_size)).collect::<Vec<_>>()
+        };
+        assert_eq!(shape(&a), shape(&b));
     }
 
     #[test]

@@ -97,6 +97,12 @@ pub struct SctCost {
     pub sync_points: u32,
     /// Loop iteration multiplier (for per-iteration costs).
     pub iter_factor: f64,
+    /// Per-chunk cost coefficient of variation (max over kernel leaves).
+    /// 0 for regular kernels; irregular kernels (sparse rows, frontier
+    /// expansion, escape iteration) spread per-partition cost around the
+    /// mean, which SimMachine::execute turns into deterministic per-slot
+    /// skew so stealing sees genuine imbalance.
+    pub chunk_cv: f64,
 }
 
 impl SctCost {
@@ -111,6 +117,7 @@ impl SctCost {
             .map(|k| k.bytes_per_unit)
             .fold(0.0, f64::max);
         let passes: f64 = kernels.iter().map(|k| k.passes).sum();
+        let chunk_cv: f64 = kernels.iter().map(|k| k.chunk_cv).fold(0.0, f64::max);
         SctCost {
             flops_per_unit: flops * iter,
             bytes_per_unit: bytes,
@@ -119,6 +126,7 @@ impl SctCost {
             copy_bytes,
             sync_points: sct.sync_points(),
             iter_factor: iter,
+            chunk_cv,
         }
     }
 
@@ -176,6 +184,7 @@ impl SctCost {
                     copy_bytes: if last { full.copy_bytes } else { 0.0 },
                     sync_points: if last { full.sync_points } else { 0 },
                     iter_factor: full.iter_factor,
+                    chunk_cv: full.chunk_cv,
                 }
             })
             .collect()
@@ -432,6 +441,25 @@ mod tests {
             - SctCost::from_sct(&Sct::kernel(streaming_kernel()), 0.0).flops_per_unit)
             .abs()
             < 1e-9);
+    }
+
+    #[test]
+    fn chunk_cv_aggregates_by_max_and_propagates_to_stages() {
+        let mut a = streaming_kernel();
+        a.family = "a".into();
+        a.chunk_cv = 0.3;
+        let mut b = streaming_kernel();
+        b.family = "b".into();
+        b.chunk_cv = 0.8;
+        let sct = Sct::pipeline(vec![Sct::kernel(a), Sct::kernel(b)]);
+        let full = SctCost::from_sct(&sct, 0.0);
+        assert_eq!(full.chunk_cv, 0.8);
+        for s in SctCost::stage_costs(&sct, 0.0) {
+            assert_eq!(s.chunk_cv, 0.8);
+        }
+        // Regular kernels stay variance-free.
+        let reg = SctCost::from_sct(&Sct::kernel(streaming_kernel()), 0.0);
+        assert_eq!(reg.chunk_cv, 0.0);
     }
 
     #[test]

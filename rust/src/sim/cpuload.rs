@@ -28,6 +28,11 @@ impl LoadProfile {
         LoadProfile::new(vec![(0, 0), (from_run, threads)])
     }
 
+    /// The raw `(from_run, threads)` steps, for recording a replay trace.
+    pub fn steps(&self) -> &[(u64, u32)] {
+        &self.steps
+    }
+
     /// Interfering threads at a run index.
     pub fn threads_at(&self, run: u64) -> u32 {
         let mut t = 0;

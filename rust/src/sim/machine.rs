@@ -34,6 +34,22 @@ pub struct SimMachine {
     rng: Rng,
 }
 
+/// Deterministic per-partition cost multiplier for irregular kernels: a
+/// pure hash of the partition index mapped to a uniform with mean 1 and
+/// standard deviation `cv` (floored away from zero). Being a function of
+/// the index alone — never the noise stream — the same plan prices the
+/// same skew on every run: the imbalance models a property of the *data*,
+/// so replay and seed-reproducibility are untouched.
+fn chunk_skew(index: usize, cv: f64) -> f64 {
+    let mut z = (index as u64).wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    let u = (z >> 11) as f64 / (1u64 << 53) as f64;
+    // Uniform on [1-a, 1+a] has std a/sqrt(3): a = sqrt(3)*cv gives std cv.
+    (1.0 + (2.0 * u - 1.0) * 3f64.sqrt() * cv).max(0.05)
+}
+
 impl SimMachine {
     pub fn new(machine: Machine, seed: u64) -> SimMachine {
         SimMachine {
@@ -101,6 +117,29 @@ impl SimMachine {
                 gpu_units[gpu as usize] += part.units;
             }
         }
+        // Data-dependent cost skew (ROADMAP item 4): partitions of an
+        // irregular kernel (chunk_cv > 0) each carry a deterministic cost
+        // multiplier. CPU slots see their own skew — genuine imbalance the
+        // steal pricing must absorb. A GPU averages the skew of its
+        // partitions, units-weighted (SIMT divergence amortizes across the
+        // whole device's occupancy). chunk_cv == 0 keeps every multiplier
+        // at exactly 1.0 and consumes nothing from the noise stream.
+        let skewed = cost.chunk_cv > 0.0;
+        let mut gpu_skew = vec![1.0f64; self.machine.gpus.len()];
+        if skewed {
+            let mut weighted = vec![0.0f64; self.machine.gpus.len()];
+            for (i, part) in plan.partitions.iter().enumerate() {
+                if let ExecSlot::GpuSlot { gpu, .. } = part.slot {
+                    weighted[gpu as usize] +=
+                        part.units as f64 * chunk_skew(i, cost.chunk_cv);
+                }
+            }
+            for (g, w) in weighted.iter().enumerate() {
+                if gpu_units[g] > 0 {
+                    gpu_skew[g] = w / gpu_units[g] as f64;
+                }
+            }
+        }
         let gpu_dev_time: Vec<f64> = gpu_units
             .iter()
             .enumerate()
@@ -115,13 +154,13 @@ impl SimMachine {
                     overlap,
                     chunk_units,
                 );
-                base * self.rng.lognormal(self.params.gpu_noise)
+                base * gpu_skew[g] * self.rng.lognormal(self.params.gpu_noise)
             })
             .collect();
 
         let mut slot_times = Vec::with_capacity(plan.partitions.len());
         let (mut cpu_t, mut gpu_t) = (0.0f64, 0.0f64);
-        for part in &plan.partitions {
+        for (i, part) in plan.partitions.iter().enumerate() {
             if part.units == 0 {
                 slot_times.push(0.0);
                 continue;
@@ -142,7 +181,12 @@ impl SimMachine {
                     if self.rng.chance(self.params.straggler_p) {
                         noise *= self.params.straggler_mult;
                     }
-                    base * noise
+                    let skew = if skewed {
+                        chunk_skew(i, cost.chunk_cv)
+                    } else {
+                        1.0
+                    };
+                    base * skew * noise
                 }
                 ExecSlot::GpuSlot { gpu, .. } => gpu_dev_time[gpu as usize],
             };
@@ -240,6 +284,52 @@ mod tests {
         let ob = busy.execute(&p, &cost, FissionLevel::L2, 1.0, &[4], 4096);
         assert!(ob.cpu_time > oi.cpu_time * 1.8);
         assert!((ob.gpu_time / oi.gpu_time - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn chunk_skew_spreads_cpu_slots_deterministically() {
+        let p = plan(1 << 22, 0.5);
+        let mut cost = SctCost::from_sct(&saxpy_sct(), 0.0);
+        cost.chunk_cv = 0.6;
+        let price = || {
+            let mut m = SimMachine::quiet(i7_hd7950(1), 9);
+            m.execute(&p, &cost, FissionLevel::L2, 1.0, &[4], 4096)
+        };
+        let (oa, ob) = (price(), price());
+        // Skew is a pure function of the partition index: bit-identical
+        // across runs even though it spreads the quiet CPU slot times.
+        assert_eq!(oa.slot_times, ob.slot_times);
+        let cpu_times: Vec<f64> = p
+            .partitions
+            .iter()
+            .zip(&oa.slot_times)
+            .filter(|(part, _)| part.slot.is_cpu() && part.units > 0)
+            .map(|(_, &t)| t)
+            .collect();
+        let (min, max) = cpu_times
+            .iter()
+            .fold((f64::INFINITY, 0.0f64), |(lo, hi), &t| {
+                (lo.min(t), hi.max(t))
+            });
+        assert!(
+            max > min * 1.2,
+            "cv=0.6 must spread quiet CPU slot times: {min} .. {max}"
+        );
+        // cv = 0 stays exactly uniform (per-slot times equal under quiet
+        // params for equal unit counts) — the regular path is untouched.
+        let mut m = SimMachine::quiet(i7_hd7950(1), 9);
+        let cost0 = SctCost::from_sct(&saxpy_sct(), 0.0);
+        let o0 = m.execute(&p, &cost0, FissionLevel::L2, 1.0, &[4], 4096);
+        let uniform: Vec<f64> = p
+            .partitions
+            .iter()
+            .zip(&o0.slot_times)
+            .filter(|(part, _)| part.slot.is_cpu() && part.units > 0)
+            .map(|(_, &t)| t)
+            .collect();
+        for w in uniform.windows(2) {
+            assert!((w[0] - w[1]).abs() / w[0].max(1e-30) < 0.1);
+        }
     }
 
     #[test]

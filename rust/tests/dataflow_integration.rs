@@ -31,7 +31,7 @@ use marrow::scheduler::{
 };
 use marrow::sct::{KernelSpec, ParamSpec, Sct};
 use marrow::session::serve::{ServeOpts, ServeRequest, SessionPool};
-use marrow::session::{Computation, Session};
+use marrow::session::{Computation, ExecProfile, Session};
 use marrow::sim::machine::SimMachine;
 use marrow::tuner::profile::FrameworkConfig;
 use marrow::Result;
@@ -549,7 +549,7 @@ fn session_and_serve_expose_drain_mode_and_idle_accounting() {
             &reqs,
             &ServeOpts {
                 concurrency: 2,
-                drain_mode: Some(DrainMode::Barrier),
+                exec: ExecProfile::new().drain_mode(DrainMode::Barrier),
                 ..Default::default()
             },
         )

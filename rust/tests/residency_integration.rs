@@ -8,7 +8,7 @@ use marrow::platform::device::i7_hd7950;
 use marrow::runtime::exec::RequestArgs;
 use marrow::scheduler::{ExecEnv, SimEnv};
 use marrow::session::serve::{ServeOpts, ServeRequest, SessionPool};
-use marrow::session::{Computation, Session};
+use marrow::session::{Computation, ExecProfile, Session};
 use marrow::sim::machine::SimMachine;
 use marrow::tuner::profile::FrameworkConfig;
 
@@ -227,7 +227,7 @@ fn pool_of_sessions_reports_transfer_stats_in_serve_report() {
             &reqs,
             &ServeOpts {
                 concurrency: 2,
-                tasks_per_slot: Some(8),
+                exec: ExecProfile::new().tasks_per_slot(8),
                 ..Default::default()
             },
         )

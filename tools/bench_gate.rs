@@ -22,7 +22,13 @@
 //!    kernel's native output stays within 1e-5 relative error of the
 //!    single-thread-scalar reference, and the compute-bound
 //!    `nbody_accel` family shows >= 2x multi-core-vs-scalar throughput
-//!    (DESIGN.md §2.11).
+//!    (DESIGN.md §2.11),
+//!  * `BENCH_pr10.json` (`--irregular`): the per-class KB estimate must
+//!    show strictly lower relative error than the size-only
+//!    nearest-profile path on the sparse family and no worse on every
+//!    other irregular class, and two replays of the same recorded trace
+//!    must report bit-identical virtual makespans with equal batch
+//!    counts (DESIGN.md §2.13).
 //! Also emits the merged markdown table the CI `bench-summary` artifact
 //! ships.
 //!
@@ -30,6 +36,7 @@
 //!   bench_gate [--fresh BENCH_pr5.json] [--warmstart BENCH_pr6.json]
 //!              [--dataflow BENCH_pr4.json] [--batch BENCH_pr7.json]
 //!              [--prefetch BENCH_pr9.json] [--native BENCH_pr8.json]
+//!              [--irregular BENCH_pr10.json]
 //!              [--baselines benches/baselines]
 //!              [--summary bench-summary.md] [--tolerance 0.15]
 //!   bench_gate --native-only [--native BENCH_pr8.json]   # CI native job
@@ -94,6 +101,11 @@ fn run(args: &Args) -> Result<(), String> {
     // transfer_overlap bench has run in the same job.
     if let Some(prefetch) = args.get("prefetch") {
         check_prefetch_invariant(prefetch)?;
+    }
+    // Opt-in like --prefetch: BENCH_pr10 exists only after the
+    // irregular_replay bench has run in the same job.
+    if let Some(irregular) = args.get("irregular") {
+        check_irregular_invariant(irregular)?;
     }
     // Opt-in: BENCH_pr8 is a hardware measurement, so the gate runs only
     // where the caller says the file was produced on this runner.
@@ -242,6 +254,97 @@ fn check_prefetch_invariant(path: &str) -> Result<(), String> {
         );
     }
     println!("prefetch invariant: depth-0 vs depth-k outputs bit-identical (OK)");
+    Ok(())
+}
+
+/// The irregular-tier gate (DESIGN.md §2.13), baseline-free and
+/// deterministic: per class in BENCH_pr10.json, the per-class KB estimate
+/// error must not exceed the size-only nearest-profile error — and must
+/// beat it *strictly* on the sparse family, where per-size interpolation
+/// has no way to see data-dependent cost. The replay block must report
+/// two bit-identical virtual makespans and equal batch counts for the
+/// same recorded trace: replay is a contract, not a best effort.
+fn check_irregular_invariant(path: &str) -> Result<(), String> {
+    let v = parse_file(Path::new(path))?;
+    let classes = v
+        .get("classes")
+        .ok()
+        .and_then(|c| c.as_arr())
+        .ok_or_else(|| format!("{path}: missing classes"))?;
+    let mut saw_sparse = false;
+    for c in classes {
+        let class = c
+            .get("class")
+            .ok()
+            .and_then(|x| x.as_str())
+            .unwrap_or("?")
+            .to_string();
+        let class_err = c
+            .get("class_rel_err")
+            .ok()
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| format!("{path}: {class} missing class_rel_err"))?;
+        let size_err = c
+            .get("size_only_rel_err")
+            .ok()
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| format!("{path}: {class} missing size_only_rel_err"))?;
+        if class == "sparse" {
+            saw_sparse = true;
+            if class_err >= size_err {
+                return Err(format!(
+                    "{path}: sparse class estimate error {:.2}% does not \
+                     strictly beat size-only {:.2}%",
+                    class_err * 100.0,
+                    size_err * 100.0
+                ));
+            }
+        } else if class_err > size_err {
+            return Err(format!(
+                "{path}: {class} class estimate error {:.2}% exceeds \
+                 size-only {:.2}%",
+                class_err * 100.0,
+                size_err * 100.0
+            ));
+        }
+        println!(
+            "irregular invariant: {class} estimate err {:.2}% vs size-only \
+             {:.2}% (OK)",
+            class_err * 100.0,
+            size_err * 100.0
+        );
+    }
+    if !saw_sparse {
+        return Err(format!("{path}: no sparse class point"));
+    }
+    let replay = v
+        .get("replay")
+        .map_err(|_| format!("{path}: missing replay block"))?;
+    let identical = replay
+        .get("identical")
+        .ok()
+        .and_then(|x| x.as_bool())
+        .ok_or_else(|| format!("{path}: replay missing identical"))?;
+    let ms_a = replay.get("makespan_a").ok().and_then(|x| x.as_f64());
+    let ms_b = replay.get("makespan_b").ok().and_then(|x| x.as_f64());
+    let (ms_a, ms_b) = match (ms_a, ms_b) {
+        (Some(a), Some(b)) => (a, b),
+        _ => return Err(format!("{path}: replay missing makespan_a/makespan_b")),
+    };
+    let batches_a = replay.get("batches_a").ok().and_then(|x| x.as_u64());
+    let batches_b = replay.get("batches_b").ok().and_then(|x| x.as_u64());
+    if !identical || ms_a.to_bits() != ms_b.to_bits() || batches_a != batches_b {
+        return Err(format!(
+            "{path}: replaying the same trace diverged — makespan {ms_a:.6e} \
+             vs {ms_b:.6e}, batches {batches_a:?} vs {batches_b:?} \
+             (replay must be deterministic in virtual time)"
+        ));
+    }
+    println!(
+        "irregular invariant: replay makespan {ms_a:.6}s bit-identical \
+         across two runs, {} batches (OK)",
+        batches_a.unwrap_or(0)
+    );
     Ok(())
 }
 
